@@ -1,0 +1,46 @@
+//! Quickstart: the three things micdl does, in ~40 lines of user code.
+//!
+//! 1. Describe a workload (architecture + run parameters).
+//! 2. *Predict* its execution time on the Xeon Phi with the paper's two
+//!    performance models.
+//! 3. *Measure* it on the micsim simulator and compare (the Δ metric).
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use micdl::config::{ArchSpec, RunConfig};
+use micdl::perfmodel::{both_models, delta_pct, ParamSource, PerfModel};
+use micdl::simulator::{probe, SimConfig};
+
+fn main() -> micdl::Result<()> {
+    // 1. The paper's medium CNN, standard MNIST workload, 240 threads.
+    let arch = ArchSpec::medium();
+    let run = RunConfig::paper_default(&arch.name, 240);
+    println!(
+        "workload: {} CNN, i={}, it={}, ep={}, p={}",
+        arch.name, run.train_images, run.test_images, run.epochs, run.threads
+    );
+
+    // 2. Predict with strategies (a) and (b).
+    let (model_a, model_b) = both_models(&arch, ParamSource::Paper)?;
+    let pred_a = model_a.predict(&run)?;
+    let pred_b = model_b.predict(&run)?;
+    println!(
+        "strategy (a): {:.1} min   (prep {:.1}s, compute {:.1}s, T_mem {:.1}s)",
+        pred_a.total_s / 60.0,
+        pred_a.prep_s,
+        pred_a.train_s + pred_a.test_s,
+        pred_a.mem_s
+    );
+    println!("strategy (b): {:.1} min", pred_b.total_s / 60.0);
+
+    // 3. "Measure" on the simulated Xeon Phi 7120P and compute Δ.
+    let cfg = SimConfig::default();
+    let measured = probe::measured_execution_s(&arch, run.threads, &cfg)?;
+    println!("micsim measured: {:.1} min", measured / 60.0);
+    println!(
+        "Δa = {:.1}%   Δb = {:.1}%   (paper's averages: 14.76% / 7.48%)",
+        delta_pct(measured, pred_a.total_s),
+        delta_pct(measured, pred_b.total_s)
+    );
+    Ok(())
+}

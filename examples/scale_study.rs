@@ -1,0 +1,68 @@
+//! Scale study (the paper's Result 2): model-driven exploration beyond
+//! the hardware thread count, cross-checked against micsim's
+//! oversubscription model.
+//!
+//! Reproduces the reasoning behind Tables X/XI — how far does CNN
+//! training on a MIC processor keep scaling? — and adds what the paper
+//! could not measure: the simulator's view of 480–3,840 threads.
+//!
+//! Run: `cargo run --release --example scale_study`
+
+use micdl::config::{ArchSpec, RunConfig};
+use micdl::perfmodel::{both_models, ParamSource, PerfModel};
+use micdl::report::Table;
+use micdl::simulator::{probe, SimConfig};
+
+fn main() -> micdl::Result<()> {
+    let cfg = SimConfig::default();
+    let threads: Vec<usize> = vec![60, 120, 240, 480, 960, 1920, 3840];
+
+    for arch in ArchSpec::paper_archs() {
+        let (model_a, model_b) = both_models(&arch, ParamSource::Paper)?;
+        let mut t = Table::new(
+            format!("scaling {} CNN (minutes)", arch.name),
+            &["threads", "model (a)", "model (b)", "micsim", "speedup vs 60T (sim)"],
+        );
+        let base = probe::measured_execution_s(&arch, 60, &cfg)?;
+        for &p in &threads {
+            let run = RunConfig::paper_default(&arch.name, p);
+            let a = model_a.predict(&run)?.total_s / 60.0;
+            let b = model_b.predict(&run)?.total_s / 60.0;
+            let m = probe::measured_execution_s(&arch, p, &cfg)?;
+            t.row(vec![
+                p.to_string(),
+                format!("{a:.1}"),
+                format!("{b:.1}"),
+                format!("{:.1}", m / 60.0),
+                format!("{:.2}x", base / m),
+            ]);
+        }
+        print!("{}", t.render());
+
+        // The paper's headline numbers for 3,840 threads.
+        let run = RunConfig::paper_default(&arch.name, 3840);
+        let b3840 = model_b.predict(&run)?.total_s / 60.0;
+        println!(
+            "at 3,840 threads the {} CNN trains in ~{b3840:.1} min by model (b) \
+             (paper: {} min)\n",
+            arch.name,
+            match arch.name.as_str() {
+                "small" => "4.6",
+                "medium" => "14.5",
+                _ => "18.0",
+            }
+        );
+    }
+
+    // Diminishing returns: Result 2's closing observation.
+    let arch = ArchSpec::small();
+    let (model_a, _) = both_models(&arch, ParamSource::Paper)?;
+    let t240 = model_a.predict(&RunConfig::paper_default("small", 240))?.total_s;
+    let t480 = model_a.predict(&RunConfig::paper_default("small", 480))?.total_s;
+    println!(
+        "doubling 240 -> 480 threads cuts small-CNN time by only {:.0}% \
+         (not 50%): contention + CPI dominate (Result 2).",
+        (1.0 - t480 / t240) * 100.0
+    );
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! End-to-end driver (deliverable (b)/e2e): really train a CNN through the
+//! full three-layer stack and log the loss curve.
+//!
+//! The path exercised: Pallas conv/pool kernels (L1) → JAX train step
+//! (L2) → AOT HLO text (`make artifacts`) → Rust PJRT runtime →
+//! coordinator leader loop (L3). Python is not involved at runtime.
+//!
+//! Dataset: real MNIST if `--mnist DIR` files exist, otherwise the
+//! deterministic synthetic digit corpus (same shapes/label balance —
+//! DESIGN.md §1).
+//!
+//! Run: `make artifacts && cargo run --release --example train_mnist`
+//! (arguments: [arch] [epochs] [n_train], defaults: small 4 3072).
+//! The run is recorded in EXPERIMENTS.md §e2e.
+
+use micdl::coordinator::leader::{LeaderConfig, PjrtTrainer};
+use micdl::coordinator::pool::{DataParallelTrainer, PoolConfig};
+use micdl::config::ArchSpec;
+use micdl::dataset;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let arch = args.first().cloned().unwrap_or_else(|| "small".into());
+    let epochs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let n_train: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(3072);
+
+    let (train, test) = dataset::load_or_synth(None, n_train, 512, 1234);
+    println!(
+        "== end-to-end training: {arch} CNN, {} train / {} test images ({}) ==",
+        train.len(),
+        test.len(),
+        train.source
+    );
+
+    // --- PJRT path (the AOT artifact) -----------------------------------
+    let dir = std::path::PathBuf::from("artifacts");
+    if dir.join("meta.json").exists() {
+        println!("\n-- PJRT backend (Pallas/JAX AOT artifact) --");
+        let cfg = LeaderConfig {
+            arch: arch.clone(),
+            epochs,
+            eval_cap_batches: 8,
+            seed: 42,
+            verbose: true,
+        };
+        let mut trainer = PjrtTrainer::new(&dir, cfg)?;
+        let report = trainer.train(&train, &test)?;
+        println!("loss curve (epoch, mean batch loss):");
+        for (e, l) in report.loss_curve() {
+            println!("  {e:>3}  {l:.4}");
+        }
+        println!(
+            "PJRT: {:.0} img/s, {} steps, final test accuracy {:.3}, converging={}",
+            report.train_throughput,
+            trainer.steps(),
+            report.final_test_accuracy(),
+            report.converging()
+        );
+        assert!(report.converging(), "loss curve must fall");
+    } else {
+        println!("(artifacts/ missing — run `make artifacts` for the PJRT path)");
+    }
+
+    // --- engine path (pure-Rust data-parallel pool) ----------------------
+    println!("\n-- engine backend (data-parallel worker pool) --");
+    let cfg = PoolConfig {
+        workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        epochs,
+        lr: 0.02,
+        eval_cap: 512,
+        seed: 42,
+        verbose: true,
+    };
+    let mut trainer = DataParallelTrainer::new(ArchSpec::by_name(&arch)?, cfg)?;
+    let report = trainer.train(&train, &test)?;
+    println!(
+        "engine: {:.0} img/s over {} workers, final test accuracy {:.3}, converging={}",
+        report.train_throughput,
+        trainer.cfg.workers,
+        report.final_test_accuracy(),
+        report.converging()
+    );
+    assert!(report.converging(), "loss curve must fall");
+    Ok(())
+}

@@ -1,0 +1,141 @@
+"""AOT: lower the L2 train/predict functions to HLO text artifacts.
+
+Emits, for each architecture:
+
+    artifacts/train_<arch>_b<B>.hlo.txt    train_step: (params..., x, y) ->
+                                           (params'..., loss)
+    artifacts/infer_<arch>_b<B>.hlo.txt    predict:    (params..., x) -> logits
+    artifacts/meta.json                    shapes / input-output layout for
+                                           the Rust runtime
+
+HLO *text* (not ``lowered.compile()`` / serialized HloModuleProto) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids that
+the xla crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the
+text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Python runs ONCE here (``make artifacts``); the Rust binary is self-contained
+afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+DEFAULT_BATCH = 64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train(arch: str, batch: int, lr: float) -> str:
+    n_params = 2 * len(model.param_shapes(arch))
+
+    def step(*args):
+        params = args[:n_params]
+        x, y = args[n_params], args[n_params + 1]
+        return model.train_step(params, x, y, arch, lr=lr)
+
+    specs = _param_specs(arch) + [
+        jax.ShapeDtypeStruct((batch, 1, model.INPUT_HW, model.INPUT_HW),
+                             jax.numpy.float32),
+        jax.ShapeDtypeStruct((batch,), jax.numpy.int32),
+    ]
+    # Donate the parameter buffers: the step is params -> params', so XLA
+    # may update weights in place on the Rust side (perf pass, L2).
+    donate = tuple(range(n_params))
+    lowered = jax.jit(step, donate_argnums=donate).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def lower_infer(arch: str, batch: int) -> str:
+    n_params = 2 * len(model.param_shapes(arch))
+
+    def infer(*args):
+        params = args[:n_params]
+        x = args[n_params]
+        return (model.predict(params, x, arch),)
+
+    specs = _param_specs(arch) + [
+        jax.ShapeDtypeStruct((batch, 1, model.INPUT_HW, model.INPUT_HW),
+                             jax.numpy.float32),
+    ]
+    lowered = jax.jit(infer).lower(*specs)
+    return to_hlo_text(lowered)
+
+
+def _param_specs(arch: str):
+    import jax.numpy as jnp
+    specs = []
+    for w_shape, b_shape in model.param_shapes(arch):
+        specs.append(jax.ShapeDtypeStruct(w_shape, jnp.float32))
+        specs.append(jax.ShapeDtypeStruct(b_shape, jnp.float32))
+    return specs
+
+
+def build_meta(archs, batch: int, lr: float) -> dict:
+    meta = {"batch": batch, "lr": lr, "input_hw": model.INPUT_HW,
+            "num_classes": model.NUM_CLASSES, "archs": {}}
+    for arch in archs:
+        params = []
+        for w_shape, b_shape in model.param_shapes(arch):
+            params.append({"w": list(w_shape), "b": list(b_shape)})
+        meta["archs"][arch] = {
+            "params": params,
+            "layers": model.layer_shapes(arch),
+            "train_hlo": f"train_{arch}_b{batch}.hlo.txt",
+            "infer_hlo": f"infer_{arch}_b{batch}.hlo.txt",
+            # Input order: w0,b0,...,wn,bn,x[,y]; output: w0',b0',...,loss.
+            "train_inputs": 2 * len(params) + 2,
+            "train_outputs": 2 * len(params) + 1,
+        }
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--archs", default="small,medium,large")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument("--lr", type=float, default=0.05)
+    args = ap.parse_args()
+
+    archs = [a for a in args.archs.split(",") if a]
+    os.makedirs(args.out_dir, exist_ok=True)
+    meta = build_meta(archs, args.batch, args.lr)
+
+    for arch in archs:
+        train_txt = lower_train(arch, args.batch, args.lr)
+        train_path = os.path.join(args.out_dir, meta["archs"][arch]["train_hlo"])
+        with open(train_path, "w") as f:
+            f.write(train_txt)
+        print(f"wrote {train_path} ({len(train_txt)} chars)")
+
+        infer_txt = lower_infer(arch, args.batch)
+        infer_path = os.path.join(args.out_dir, meta["archs"][arch]["infer_hlo"])
+        with open(infer_path, "w") as f:
+            f.write(infer_txt)
+        print(f"wrote {infer_path} ({len(infer_txt)} chars)")
+
+    meta_path = os.path.join(args.out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

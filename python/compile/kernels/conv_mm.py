@@ -1,0 +1,165 @@
+"""L1 Pallas kernel: tiled matmul + bias + activation (the conv hot-spot).
+
+The paper's compute hot-spot is convolution (Table VII: ~80-96% of forward
+operations). On KNC the authors vectorize the per-neuron dot products with
+512-bit SIMD; the TPU re-think (DESIGN.md §Hardware-Adaptation) expresses the
+same contraction as an im2col patch matrix multiplied by the reshaped kernel
+bank, so the MXU systolic array does the work:
+
+    patches (M=B*Ho*Wo, K=Cin*k*k) @ wmat (K, N=Cout) + bias -> act
+
+The kernel tiles M and N onto a 2-D grid; each grid step stages an
+(bm, K) patch tile and a (K, bn) weight tile through VMEM (BlockSpec) and
+writes one (bm, bn) output tile. K for the paper's architectures is at most
+2,160 (large CNN, C3: 60 maps * 6*6), so a full-K block fits comfortably in
+VMEM (see EXPERIMENTS.md §Perf for the footprint table).
+
+The backward pass is a custom VJP whose two gradient contractions
+(dA = dZ @ B^T, dB = A^T @ dZ) run through the *same* Pallas kernel, so the
+lowered training-step HLO exercises Pallas on both the forward and backward
+paths.
+
+interpret=True everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; numerics are validated against kernels.ref by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-shaped default tiles. 128x128 matches the systolic array; K is kept
+# whole per block (small for these architectures, see module docstring).
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _matmul_kernel(a_ref, b_ref, bias_ref, o_ref, *, act: str):
+    """One (bm, bn) output tile: full-K contraction + bias + activation."""
+    acc = jnp.dot(a_ref[...], b_ref[...], preferred_element_type=jnp.float32)
+    acc = acc + bias_ref[...][None, :]
+    if act == "tanh":
+        acc = jnp.tanh(acc)
+    elif act == "sigmoid":
+        acc = 1.0 / (1.0 + jnp.exp(-acc))
+    o_ref[...] = acc
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def matmul_bias_act_fwd(a: jnp.ndarray, b: jnp.ndarray, bias: jnp.ndarray,
+                        act: str, block_m: int = BLOCK_M,
+                        block_n: int = BLOCK_N) -> jnp.ndarray:
+    """Raw (non-differentiable) Pallas call: (M,K) @ (K,N) + bias, act."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    assert bias.shape == (n,)
+
+    bm = min(block_m, max(8, m))
+    bn = min(block_n, max(8, n))
+    a_p = _pad_to(a, 0, bm)
+    b_p = _pad_to(b, 1, bn)
+    bias_p = _pad_to(bias, 0, bn)
+    mp, np_ = a_p.shape[0], b_p.shape[1]
+
+    grid = (mp // bm, np_ // bn)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, act=act),
+        grid=grid,
+        in_specs=[
+            # (bm, K) patch tile: new M-tile per i, K resident.
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            # (K, bn) weight tile: resident across i (weight reuse).
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a_p, b_p, bias_p)
+    return out[:m, :n]
+
+
+def matmul_pallas(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain Pallas matmul (zero bias, no activation)."""
+    return matmul_bias_act_fwd(a, b, jnp.zeros((b.shape[1],), jnp.float32),
+                               act="none")
+
+
+@functools.lru_cache(maxsize=None)
+def make_matmul_bias_act(act: str):
+    """Build the differentiable fused matmul for a given activation.
+
+    Cached per activation string so repeated tracing reuses one custom_vjp
+    instance (keeps the lowered HLO small).
+    """
+
+    @jax.custom_vjp
+    def fused(a, b, bias):
+        return matmul_bias_act_fwd(a, b, bias, act)
+
+    def fwd(a, b, bias):
+        y = matmul_bias_act_fwd(a, b, bias, act)
+        return y, (a, b, y)
+
+    def bwd(res, g):
+        a, b, y = res
+        if act == "tanh":
+            dz = g * (1.0 - y * y)
+        elif act == "sigmoid":
+            dz = g * y * (1.0 - y)
+        else:
+            dz = g
+        # Both gradient contractions go through the Pallas kernel as well.
+        da = matmul_pallas(dz, b.T)
+        db = matmul_pallas(a.T, dz)
+        dbias = dz.sum(axis=0)
+        return da, db, dbias
+
+    fused.defvjp(fwd, bwd)
+    return fused
+
+
+def matmul_bias_act(a: jnp.ndarray, b: jnp.ndarray, bias: jnp.ndarray,
+                    act: str = "none") -> jnp.ndarray:
+    """Differentiable fused matmul+bias+activation on the Pallas kernel."""
+    return make_matmul_bias_act(act)(a, b, bias)
+
+
+def vmem_footprint_bytes(m: int, k: int, n: int,
+                         block_m: int = BLOCK_M, block_n: int = BLOCK_N,
+                         dtype_bytes: int = 4) -> dict:
+    """Static VMEM footprint estimate for one grid step (perf analysis).
+
+    Used by EXPERIMENTS.md §Perf: interpret-mode wallclock is not a TPU
+    proxy, so kernel quality is assessed from the BlockSpec-implied VMEM
+    residency and MXU tile occupancy instead.
+    """
+    bm = min(block_m, max(8, m))
+    bn = min(block_n, max(8, n))
+    a_tile = bm * k * dtype_bytes
+    b_tile = k * bn * dtype_bytes
+    o_tile = bm * bn * dtype_bytes
+    bias_tile = bn * dtype_bytes
+    total = a_tile + b_tile + o_tile + bias_tile
+    return {
+        "a_tile": a_tile,
+        "b_tile": b_tile,
+        "o_tile": o_tile,
+        "bias_tile": bias_tile,
+        "total": total,
+        "mxu_m_occupancy": min(1.0, m / 128.0),
+        "mxu_n_occupancy": min(1.0, n / 128.0),
+    }

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: non-overlapping max pooling (LeNet-style sub-sampling).
+
+Forward runs as a Pallas kernel (grid over feature maps, each map staged
+through VMEM whole — map sizes in the paper's architectures are at most
+26x26, trivially VMEM-resident). Backward is a custom VJP in plain jnp: the
+pooling backward is a scatter of the incoming gradient to the argmax
+positions, which has no MXU work and is a negligible share of operations
+(Table VIII: max-pool is <0.5% of backward ops), so it does not warrant a
+kernel. Gradient ties split equally, matching jax.grad of the jnp oracle.
+
+interpret=True for CPU-PJRT executability; validated against kernels.ref.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref, *, k: int):
+    """One feature map: (1, H, W) -> (1, H/k, W/k) max reduction."""
+    x = x_ref[...]
+    _, h, w = x.shape
+    x = x.reshape(1, h // k, k, w // k, k)
+    o_ref[...] = x.max(axis=(2, 4))
+
+
+def maxpool_fwd(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Raw Pallas pooling: x (C, H, W) -> (C, H/k, W/k)."""
+    c, h, w = x.shape
+    assert h % k == 0 and w % k == 0, (x.shape, k)
+    ho, wo = h // k, w // k
+    return pl.pallas_call(
+        functools.partial(_pool_kernel, k=k),
+        grid=(c,),
+        in_specs=[pl.BlockSpec((1, h, w), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, ho, wo), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, ho, wo), jnp.float32),
+        interpret=True,
+    )(x)
+
+
+@functools.lru_cache(maxsize=None)
+def make_maxpool(k: int):
+    """Differentiable pooling for a fixed (static) window k."""
+
+    @jax.custom_vjp
+    def pool(x):
+        return maxpool_fwd(x, k)
+
+    def fwd(x):
+        y = maxpool_fwd(x, k)
+        return y, (x, y)
+
+    def bwd(res, g):
+        x, y = res
+        c, h, w = x.shape
+        y_b = jnp.repeat(jnp.repeat(y, k, axis=1), k, axis=2)
+        g_b = jnp.repeat(jnp.repeat(g, k, axis=1), k, axis=2)
+        mask = (x == y_b).astype(x.dtype)
+        # Equal split among ties (matches jax.grad of the jnp reference).
+        counts = mask.reshape(c, h // k, k, w // k, k).sum(axis=(2, 4))
+        counts_b = jnp.repeat(jnp.repeat(counts, k, axis=1), k, axis=2)
+        return (mask * g_b / counts_b,)
+
+    pool.defvjp(fwd, bwd)
+    return pool
+
+
+def maxpool(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Differentiable max pooling on the Pallas forward kernel."""
+    return make_maxpool(k)(x)

@@ -1,0 +1,73 @@
+"""Pure-jnp reference oracle for the Pallas kernels.
+
+Every Pallas kernel in this package has an exact jnp counterpart here.
+pytest (and hypothesis sweeps) assert allclose between kernel and oracle —
+this is the core L1 correctness signal of the build.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_bias_act(a: jnp.ndarray, b: jnp.ndarray, bias: jnp.ndarray,
+                    act: str = "none") -> jnp.ndarray:
+    """Reference for kernels.conv_mm.matmul_bias_act.
+
+    a: (M, K), b: (K, N), bias: (N,). Returns (M, N).
+    act: "none" | "tanh" | "sigmoid".
+    """
+    out = jnp.dot(a, b, preferred_element_type=jnp.float32) + bias[None, :]
+    if act == "tanh":
+        out = jnp.tanh(out)
+    elif act == "sigmoid":
+        out = 1.0 / (1.0 + jnp.exp(-out))
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    return out
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Reference plain matmul (used by the custom-vjp backward path)."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def maxpool(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Reference for kernels.pool.maxpool.
+
+    x: (C, H, W) with H % k == 0 and W % k == 0. Non-overlapping max pooling
+    with stride k (the paper's pooling scheme — LeNet-style sub-sampling).
+    """
+    c, h, w = x.shape
+    x = x.reshape(c, h // k, k, w // k, k)
+    return x.max(axis=(2, 4))
+
+
+def im2col(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Reference patch extraction for valid convolution.
+
+    x: (Cin, H, W) -> (Ho*Wo, Cin*k*k) with Ho = H-k+1, Wo = W-k+1.
+    Column order matches compile.model.im2col: cin-major, (dy, dx)-minor.
+    """
+    cin, h, w = x.shape
+    ho, wo = h - k + 1, w - k + 1
+    cols = []
+    for dy in range(k):
+        for dx in range(k):
+            cols.append(x[:, dy:dy + ho, dx:dx + wo])
+    # list of (Cin, Ho, Wo) -> (Cin, k*k, Ho, Wo) -> (Ho*Wo, Cin*k*k)
+    patches = jnp.stack(cols, axis=1)
+    patches = patches.transpose(2, 3, 0, 1)
+    return patches.reshape(ho * wo, cin * k * k)
+
+
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+           act: str = "tanh") -> jnp.ndarray:
+    """Reference valid conv: x (Cin,H,W), w (Cout,Cin,k,k), b (Cout,)."""
+    cout, cin, k, _ = w.shape
+    _, h, wdim = x.shape
+    ho, wo = h - k + 1, wdim - k + 1
+    patches = im2col(x, k)                       # (Ho*Wo, Cin*k*k)
+    wmat = w.reshape(cout, cin * k * k).T        # (Cin*k*k, Cout)
+    out = matmul_bias_act(patches, wmat, b, act)  # (Ho*Wo, Cout)
+    return out.T.reshape(cout, ho, wo)

@@ -1,0 +1,205 @@
+"""L2: JAX forward/backward of the paper's three CNN architectures.
+
+The architectures are reconstructed from Fig. 2 of the paper (every quoted
+caption quantity is satisfied exactly — see tests/test_model.py):
+
+  small : I(29x29) -> C(5 maps, 4x4) -> M(2x2) -> O(10)
+          first conv layer: 5 maps, 26x26 map, 3,380 neurons, 85 weights.
+  medium: I(29x29) -> C(20, 4x4) -> M(2) -> C(40, 5x5) -> M(3) -> F(150) -> O(10)
+          first conv layer: 20 maps, 26x26 map, 13,520 neurons, 340 weights.
+  large : I(29x29) -> C(20, 4x4) -> M(2) -> C(60, 3x3) -> C(100, 6x6)
+          -> M(2) -> F(150) -> O(10)
+          last conv layer: 100 maps, 6x6 map, 3,600 neurons, 216,100 weights.
+
+Hidden activations are tanh (the Cireşan code's default), output is softmax
+cross-entropy. Convolutions run as im2col + the Pallas fused matmul kernel
+(kernels.conv_mm) so the MXU contraction dominates the lowered HLO; pooling
+runs the Pallas pooling kernel (kernels.pool). The batch dimension is folded
+into the matmul M dimension (no vmap over pallas_call), which is also the
+TPU-friendly layout: bigger M tiles, weight tile resident across the grid.
+
+This module is build-time only: `aot.py` lowers `train_step` / `predict`
+to HLO text once; the Rust runtime executes the artifacts. Python is never
+on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import conv_mm, pool
+
+INPUT_HW = 29
+NUM_CLASSES = 10
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    maps: int
+    kernel: int
+    act: str = "tanh"
+
+
+@dataclasses.dataclass(frozen=True)
+class Pool:
+    window: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Dense:
+    units: int
+    act: str = "tanh"
+
+
+ARCHS: dict = {
+    "small": (Conv(5, 4), Pool(2), Dense(NUM_CLASSES, act="none")),
+    "medium": (Conv(20, 4), Pool(2), Conv(40, 5), Pool(3),
+               Dense(150), Dense(NUM_CLASSES, act="none")),
+    "large": (Conv(20, 4), Pool(2), Conv(60, 3), Conv(100, 6), Pool(2),
+              Dense(150), Dense(NUM_CLASSES, act="none")),
+}
+
+
+def layer_shapes(arch: str) -> List[dict]:
+    """Static shape walk; returns one record per layer (tests + meta.json)."""
+    out = [{"type": "input", "maps": 1, "hw": INPUT_HW,
+            "neurons": INPUT_HW * INPUT_HW, "weights": 0}]
+    maps, hw = 1, INPUT_HW
+    flat = None
+    for layer in ARCHS[arch]:
+        if isinstance(layer, Conv):
+            hw = hw - layer.kernel + 1
+            rec = {"type": "conv", "maps": layer.maps, "hw": hw,
+                   "kernel": layer.kernel,
+                   "neurons": layer.maps * hw * hw,
+                   "weights": layer.maps * (maps * layer.kernel ** 2 + 1)}
+            maps = layer.maps
+        elif isinstance(layer, Pool):
+            hw = hw // layer.window
+            rec = {"type": "pool", "maps": maps, "hw": hw,
+                   "window": layer.window,
+                   "neurons": maps * hw * hw, "weights": 0}
+        elif isinstance(layer, Dense):
+            fan_in = flat if flat is not None else maps * hw * hw
+            rec = {"type": "dense", "units": layer.units,
+                   "neurons": layer.units,
+                   "weights": fan_in * layer.units + layer.units}
+            flat = layer.units
+        else:
+            raise TypeError(layer)
+        out.append(rec)
+    return out
+
+
+def param_shapes(arch: str) -> List[Tuple[Tuple[int, ...], Tuple[int, ...]]]:
+    """[(w_shape, b_shape)] per trainable layer, in forward order."""
+    shapes = []
+    maps, hw = 1, INPUT_HW
+    flat = None
+    for layer in ARCHS[arch]:
+        if isinstance(layer, Conv):
+            shapes.append(((layer.maps, maps, layer.kernel, layer.kernel),
+                           (layer.maps,)))
+            hw = hw - layer.kernel + 1
+            maps = layer.maps
+        elif isinstance(layer, Pool):
+            hw = hw // layer.window
+        elif isinstance(layer, Dense):
+            fan_in = flat if flat is not None else maps * hw * hw
+            shapes.append(((fan_in, layer.units), (layer.units,)))
+            flat = layer.units
+    return shapes
+
+
+def init_params(arch: str, key: jax.Array) -> List[jnp.ndarray]:
+    """Uniform(-r, r) with r = 1/sqrt(fan_in), flattened [w0,b0,w1,b1,...].
+
+    The Rust side mirrors this scheme (nn::init) from meta.json shapes; the
+    two inits need not be bit-identical, only statistically equivalent.
+    """
+    flat: List[jnp.ndarray] = []
+    for w_shape, b_shape in param_shapes(arch):
+        key, kw = jax.random.split(key)
+        if len(w_shape) == 4:
+            fan_in = w_shape[1] * w_shape[2] * w_shape[3]
+        else:
+            fan_in = w_shape[0]
+        r = 1.0 / jnp.sqrt(float(fan_in))
+        flat.append(jax.random.uniform(kw, w_shape, jnp.float32, -r, r))
+        flat.append(jnp.zeros(b_shape, jnp.float32))
+    return flat
+
+
+def im2col_batch(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    """x (B, Cin, H, W) -> (B, Ho*Wo, Cin*k*k); order matches ref.im2col."""
+    b, cin, h, w = x.shape
+    ho, wo = h - k + 1, w - k + 1
+    cols = []
+    for dy in range(k):
+        for dx in range(k):
+            cols.append(x[:, :, dy:dy + ho, dx:dx + wo])
+    patches = jnp.stack(cols, axis=2)            # (B, Cin, k*k, Ho, Wo)
+    patches = patches.transpose(0, 3, 4, 1, 2)   # (B, Ho, Wo, Cin, k*k)
+    return patches.reshape(b, ho * wo, cin * k * k)
+
+
+def forward(params: Sequence[jnp.ndarray], x: jnp.ndarray,
+            arch: str) -> jnp.ndarray:
+    """x (B, 1, 29, 29) float32 -> logits (B, 10)."""
+    bsz = x.shape[0]
+    hw = INPUT_HW
+    idx = 0
+    flat = None
+    h = x
+    for layer in ARCHS[arch]:
+        if isinstance(layer, Conv):
+            w, b = params[idx], params[idx + 1]
+            idx += 2
+            k = layer.kernel
+            ho = hw - k + 1
+            patches = im2col_batch(h, k)                     # (B, Ho*Wo, K)
+            kdim = patches.shape[-1]
+            a = patches.reshape(bsz * ho * ho, kdim)
+            wmat = w.reshape(layer.maps, kdim).T             # (K, Cout)
+            out = conv_mm.matmul_bias_act(a, wmat, b, layer.act)
+            h = out.reshape(bsz, ho, ho, layer.maps).transpose(0, 3, 1, 2)
+            hw = ho
+        elif isinstance(layer, Pool):
+            c = h.shape[1]
+            h = pool.maxpool(h.reshape(bsz * c, hw, hw), layer.window)
+            hw = hw // layer.window
+            h = h.reshape(bsz, c, hw, hw)
+        elif isinstance(layer, Dense):
+            w, b = params[idx], params[idx + 1]
+            idx += 2
+            a = h.reshape(bsz, -1) if flat is None else h
+            h = conv_mm.matmul_bias_act(a, w, b, layer.act)
+            flat = layer.units
+    return h
+
+
+def loss_fn(params: Sequence[jnp.ndarray], x: jnp.ndarray,
+            y: jnp.ndarray, arch: str) -> jnp.ndarray:
+    """Mean softmax cross-entropy; y is int32 class labels (B,)."""
+    logits = forward(params, x, arch)
+    logz = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(y, NUM_CLASSES, dtype=jnp.float32)
+    return -jnp.mean(jnp.sum(onehot * logz, axis=-1))
+
+
+def train_step(params: Sequence[jnp.ndarray], x: jnp.ndarray, y: jnp.ndarray,
+               arch: str, lr: float = 0.05):
+    """One SGD step. Returns (new_params..., loss) as a flat tuple."""
+    loss, grads = jax.value_and_grad(loss_fn)(list(params), x, y, arch)
+    new_params = tuple(p - lr * g for p, g in zip(params, grads))
+    return new_params + (loss,)
+
+
+def predict(params: Sequence[jnp.ndarray], x: jnp.ndarray,
+            arch: str) -> jnp.ndarray:
+    """Logits for inference (validation / test phases)."""
+    return forward(params, x, arch)

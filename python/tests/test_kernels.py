@@ -1,0 +1,251 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (kernels.ref).
+
+This is the core correctness signal of the build: if these pass, the HLO
+artifacts the Rust runtime executes contain numerically-correct kernels.
+Hypothesis sweeps shapes and value ranges; fixed cases pin the exact shapes
+the three paper architectures use.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv_mm, pool, ref
+
+RNG = np.random.default_rng(1234)
+
+
+def randf(*shape, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Fused matmul + bias + activation
+# ---------------------------------------------------------------------------
+
+# (M, K, N) shapes the paper's three architectures actually produce
+# (B=64 folded into M), plus awkward non-multiple-of-tile shapes.
+ARCH_MATMUL_SHAPES = [
+    (64 * 676, 16, 5),      # small C1: 26*26 patches, k=4*4, 5 maps
+    (64 * 676, 16, 20),     # medium/large C1
+    (64 * 81, 500, 40),     # medium C2: 9*9 patches, 20*5*5, 40 maps
+    (64 * 121, 180, 60),    # large C2: 11*11, 20*3*3, 60 maps
+    (64 * 36, 2160, 100),   # large C3: 6*6, 60*6*6, 100 maps
+    (64, 845, 10),          # small output dense
+    (64, 360, 150),         # medium F
+    (64, 150, 10),          # output dense
+]
+
+
+@pytest.mark.parametrize("m,k,n", ARCH_MATMUL_SHAPES)
+@pytest.mark.parametrize("act", ["none", "tanh", "sigmoid"])
+def test_matmul_arch_shapes(m, k, n, act):
+    a, b, bias = randf(m, k, scale=0.1), randf(k, n, scale=0.1), randf(n)
+    got = conv_mm.matmul_bias_act(a, b, bias, act)
+    want = ref.matmul_bias_act(a, b, bias, act)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=st.integers(1, 300), k=st.integers(1, 64), n=st.integers(1, 200),
+       act=st.sampled_from(["none", "tanh", "sigmoid"]))
+def test_matmul_hypothesis_shapes(m, k, n, act):
+    a, b, bias = randf(m, k, scale=0.2), randf(k, n, scale=0.2), randf(n)
+    got = conv_mm.matmul_bias_act(a, b, bias, act)
+    assert got.shape == (m, n)
+    want = ref.matmul_bias_act(a, b, bias, act)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(scale=st.floats(1e-3, 1e3), m=st.integers(1, 64), k=st.integers(1, 32),
+       n=st.integers(1, 32))
+def test_matmul_value_ranges(scale, m, k, n):
+    """Numerics hold across magnitudes (saturating acts included)."""
+    a, b, bias = randf(m, k, scale=scale), randf(k, n, scale=scale), randf(n)
+    for act in ("none", "tanh"):
+        got = conv_mm.matmul_bias_act(a, b, bias, act)
+        want = ref.matmul_bias_act(a, b, bias, act)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_exact_tile_multiple():
+    """M, N exactly at tile boundaries (no padding path)."""
+    a, b, bias = randf(256, 32, scale=0.1), randf(32, 128, scale=0.1), randf(128)
+    got = conv_mm.matmul_bias_act(a, b, bias, "none")
+    np.testing.assert_allclose(got, ref.matmul_bias_act(a, b, bias, "none"),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_single_element():
+    a, b, bias = randf(1, 1), randf(1, 1), randf(1)
+    got = conv_mm.matmul_bias_act(a, b, bias, "none")
+    np.testing.assert_allclose(got, a * b + bias, rtol=1e-6)
+
+
+def test_matmul_unknown_act_raises():
+    with pytest.raises(ValueError):
+        ref.matmul_bias_act(randf(2, 2), randf(2, 2), randf(2), "relu6")
+
+
+def test_matmul_zero_inputs():
+    a = jnp.zeros((8, 8), jnp.float32)
+    b = jnp.zeros((8, 8), jnp.float32)
+    bias = jnp.zeros((8,), jnp.float32)
+    assert float(jnp.abs(conv_mm.matmul_bias_act(a, b, bias, "none")).max()) == 0.0
+    # sigmoid(0) = 0.5 exactly
+    got = conv_mm.matmul_bias_act(a, b, bias, "sigmoid")
+    np.testing.assert_allclose(got, jnp.full((8, 8), 0.5), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Backward path (custom VJP through the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("act", ["none", "tanh", "sigmoid"])
+def test_matmul_vjp_matches_ref_grad(act):
+    a, b, bias = randf(20, 12, scale=0.3), randf(12, 7, scale=0.3), randf(7)
+
+    def f_pallas(a, b, bias):
+        return conv_mm.matmul_bias_act(a, b, bias, act).sum()
+
+    def f_ref(a, b, bias):
+        return ref.matmul_bias_act(a, b, bias, act).sum()
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(a, b, bias)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(a, b, bias)
+    for got, want in zip(gp, gr):
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_vjp_nontrivial_cotangent():
+    """VJP with a structured (non-ones) upstream gradient."""
+    a, b, bias = randf(9, 5), randf(5, 6), randf(6)
+    ct = randf(9, 6)
+
+    def f(a, b, bias):
+        return (conv_mm.matmul_bias_act(a, b, bias, "tanh") * ct).sum()
+
+    def fr(a, b, bias):
+        return (ref.matmul_bias_act(a, b, bias, "tanh") * ct).sum()
+
+    gp = jax.grad(f, argnums=(0, 1, 2))(a, b, bias)
+    gr = jax.grad(fr, argnums=(0, 1, 2))(a, b, bias)
+    for got, want in zip(gp, gr):
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(2, 40), k=st.integers(1, 24), n=st.integers(1, 24))
+def test_matmul_vjp_hypothesis(m, k, n):
+    a, b, bias = randf(m, k, scale=0.2), randf(k, n, scale=0.2), randf(n)
+    gp = jax.grad(lambda a: conv_mm.matmul_bias_act(a, b, bias, "tanh").sum())(a)
+    gr = jax.grad(lambda a: ref.matmul_bias_act(a, b, bias, "tanh").sum())(a)
+    np.testing.assert_allclose(gp, gr, rtol=1e-3, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Max pooling
+# ---------------------------------------------------------------------------
+
+ARCH_POOL_SHAPES = [
+    (5, 26, 2),     # small M
+    (20, 26, 2),    # medium/large M1
+    (40, 9, 3),     # medium M2
+    (100, 6, 2),    # large M2
+]
+
+
+@pytest.mark.parametrize("c,h,k", ARCH_POOL_SHAPES)
+def test_pool_arch_shapes(c, h, k):
+    x = randf(c, h, h)
+    got = pool.maxpool(x, k)
+    want = ref.maxpool(x, k)
+    assert got.shape == (c, h // k, h // k)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(c=st.integers(1, 32), hk=st.integers(1, 10), k=st.integers(1, 4))
+def test_pool_hypothesis(c, hk, k):
+    h = hk * k
+    x = randf(c, h, h)
+    np.testing.assert_allclose(pool.maxpool(x, k), ref.maxpool(x, k),
+                               rtol=1e-6)
+
+
+def test_pool_identity_window():
+    x = randf(3, 5, 5)
+    np.testing.assert_allclose(pool.maxpool(x, 1), x)
+
+
+def test_pool_grad_matches_ref():
+    x = randf(4, 6, 6)
+    gp = jax.grad(lambda x: (pool.maxpool(x, 2) ** 2).sum())(x)
+    gr = jax.grad(lambda x: (ref.maxpool(x, 2) ** 2).sum())(x)
+    np.testing.assert_allclose(gp, gr, rtol=1e-5, atol=1e-6)
+
+
+def test_pool_grad_ties_split_equally():
+    """All-equal window: gradient splits equally among the k*k inputs."""
+    x = jnp.ones((1, 2, 2), jnp.float32)
+    g = jax.grad(lambda x: pool.maxpool(x, 2).sum())(x)
+    np.testing.assert_allclose(g, jnp.full((1, 2, 2), 0.25), rtol=1e-6)
+
+
+def test_pool_selects_max_not_first():
+    x = jnp.array([[[1.0, 9.0], [3.0, -2.0]]], jnp.float32)
+    got = pool.maxpool(x, 2)
+    np.testing.assert_allclose(got, jnp.array([[[9.0]]]))
+
+
+# ---------------------------------------------------------------------------
+# im2col + full conv against the oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cin,h,k,cout", [
+    (1, 29, 4, 5),    # small / medium / large C1
+    (20, 13, 5, 40),  # medium C2
+    (20, 13, 3, 60),  # large C2
+    (60, 11, 6, 100)  # large C3
+])
+def test_conv_matches_oracle(cin, h, k, cout):
+    from compile import model
+    x = randf(cin, h, h, scale=0.5)
+    w = randf(cout, cin, k, k, scale=0.2)
+    b = randf(cout)
+    # Batch path (model.im2col_batch folds batch into M) vs per-image oracle.
+    patches = model.im2col_batch(x[None], k)[0]
+    wmat = w.reshape(cout, cin * k * k).T
+    got = conv_mm.matmul_bias_act(patches, wmat, b, "tanh")
+    got = got.T.reshape(cout, h - k + 1, h - k + 1)
+    want = ref.conv2d(x, w, b, "tanh")
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_im2col_batch_matches_ref():
+    from compile import model
+    x = randf(7, 9, 9)
+    got = model.im2col_batch(x[None], 3)[0]
+    want = ref.im2col(x, 3)
+    np.testing.assert_allclose(got, want)
+
+
+# ---------------------------------------------------------------------------
+# VMEM footprint estimator (perf-analysis helper)
+# ---------------------------------------------------------------------------
+
+def test_vmem_footprint_within_budget():
+    """Every arch matmul fits one grid step comfortably in 16 MiB VMEM."""
+    for m, k, n in ARCH_MATMUL_SHAPES:
+        fp = conv_mm.vmem_footprint_bytes(m, k, n)
+        assert fp["total"] < 4 * 1024 * 1024, (m, k, n, fp)
+
+
+def test_vmem_footprint_fields_consistent():
+    fp = conv_mm.vmem_footprint_bytes(256, 64, 128)
+    assert fp["total"] == (fp["a_tile"] + fp["b_tile"] + fp["o_tile"]
+                           + fp["bias_tile"])
+    assert fp["mxu_n_occupancy"] == 1.0

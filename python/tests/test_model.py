@@ -1,0 +1,162 @@
+"""L2 correctness: architecture fidelity to Fig. 2, shapes, training signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ---------------------------------------------------------------------------
+# Fig. 2 caption fidelity — every quantity the paper states, verified.
+# ---------------------------------------------------------------------------
+
+def _layer(arch, idx):
+    return model.layer_shapes(arch)[idx]
+
+
+def test_input_layer_has_841_neurons_29x29():
+    for arch in model.ARCHS:
+        rec = _layer(arch, 0)
+        assert rec["neurons"] == 841 and rec["hw"] == 29
+
+
+def test_small_first_conv_matches_fig2a():
+    rec = _layer("small", 1)
+    assert rec["maps"] == 5
+    assert rec["neurons"] == 3380
+    assert rec["kernel"] == 4
+    assert rec["hw"] == 26
+    assert rec["weights"] == 85
+
+
+def test_medium_first_conv_matches_fig2b():
+    rec = _layer("medium", 1)
+    assert rec["maps"] == 20
+    assert rec["neurons"] == 13520
+    assert rec["kernel"] == 4
+    assert rec["hw"] == 26
+    assert rec["weights"] == 340
+
+
+def test_large_last_conv_matches_fig2c():
+    recs = [r for r in model.layer_shapes("large") if r["type"] == "conv"]
+    last = recs[-1]
+    assert last["maps"] == 100
+    assert last["neurons"] == 3600
+    assert last["kernel"] == 6
+    assert last["hw"] == 6
+    assert last["weights"] == 216100
+
+
+def test_output_layer_has_10_neurons():
+    for arch in model.ARCHS:
+        assert model.layer_shapes(arch)[-1]["neurons"] == 10
+
+
+def test_arch_sizes_are_ordered():
+    """small < medium < large in total weights (the paper's premise)."""
+    totals = {a: sum(r["weights"] for r in model.layer_shapes(a))
+              for a in model.ARCHS}
+    assert totals["small"] < totals["medium"] < totals["large"]
+
+
+# ---------------------------------------------------------------------------
+# Shape inference and parameter layout
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", list(model.ARCHS))
+def test_param_shapes_consistent_with_layer_walk(arch):
+    shapes = model.param_shapes(arch)
+    convs = [r for r in model.layer_shapes(arch) if r["type"] == "conv"]
+    denses = [r for r in model.layer_shapes(arch) if r["type"] == "dense"]
+    assert len(shapes) == len(convs) + len(denses)
+    for (w_shape, b_shape), rec in zip(shapes[:len(convs)], convs):
+        assert w_shape[0] == rec["maps"]
+        assert b_shape == (rec["maps"],)
+        n_weights = int(np.prod(w_shape)) + b_shape[0]
+        assert n_weights == rec["weights"]
+
+
+@pytest.mark.parametrize("arch", list(model.ARCHS))
+def test_init_params_shapes_and_scale(arch):
+    params = model.init_params(arch, KEY)
+    shapes = model.param_shapes(arch)
+    assert len(params) == 2 * len(shapes)
+    for i, (w_shape, b_shape) in enumerate(shapes):
+        assert params[2 * i].shape == w_shape
+        assert params[2 * i + 1].shape == b_shape
+        assert float(jnp.abs(params[2 * i]).max()) <= 1.0
+        assert float(jnp.abs(params[2 * i + 1]).max()) == 0.0
+
+
+@pytest.mark.parametrize("arch", list(model.ARCHS))
+def test_forward_output_shape(arch):
+    params = model.init_params(arch, KEY)
+    x = jax.random.normal(KEY, (4, 1, 29, 29), jnp.float32)
+    logits = model.forward(params, x, arch)
+    assert logits.shape == (4, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+# ---------------------------------------------------------------------------
+# Training signal
+# ---------------------------------------------------------------------------
+
+def test_initial_loss_near_log10():
+    """Untrained softmax CE over 10 classes ~= ln(10)."""
+    params = model.init_params("small", KEY)
+    x = jax.random.normal(KEY, (16, 1, 29, 29), jnp.float32) * 0.1
+    y = jnp.arange(16, dtype=jnp.int32) % 10
+    loss = model.loss_fn(params, x, y, "small")
+    assert abs(float(loss) - np.log(10)) < 0.5
+
+
+@pytest.mark.parametrize("arch", ["small", "medium"])
+def test_train_step_reduces_loss_on_fixed_batch(arch):
+    params = model.init_params(arch, KEY)
+    x = jax.random.normal(KEY, (16, 1, 29, 29), jnp.float32) * 0.5
+    y = jnp.arange(16, dtype=jnp.int32) % 10
+    losses = []
+    for _ in range(5):
+        out = model.train_step(params, x, y, arch, lr=0.1)
+        params, loss = list(out[:-1]), float(out[-1])
+        losses.append(loss)
+    assert losses[-1] < losses[0], losses
+
+
+def test_train_step_grads_touch_every_param():
+    """No dead parameters: every w/b changes after one step."""
+    params = model.init_params("medium", KEY)
+    x = jax.random.normal(KEY, (8, 1, 29, 29), jnp.float32)
+    y = jnp.arange(8, dtype=jnp.int32) % 10
+    out = model.train_step(params, x, y, "medium", lr=0.5)
+    for before, after in zip(params, out[:-1]):
+        assert float(jnp.abs(before - after).max()) > 0.0
+
+
+def test_loss_finite_for_large_inputs():
+    params = model.init_params("small", KEY)
+    x = jnp.full((4, 1, 29, 29), 50.0, jnp.float32)
+    y = jnp.zeros((4,), jnp.int32)
+    loss = model.loss_fn(params, x, y, "small")
+    assert bool(jnp.isfinite(loss))
+
+
+def test_predict_equals_forward():
+    params = model.init_params("small", KEY)
+    x = jax.random.normal(KEY, (3, 1, 29, 29), jnp.float32)
+    np.testing.assert_allclose(model.predict(params, x, "small"),
+                               model.forward(params, x, "small"))
+
+
+def test_train_step_batch_one():
+    """Per-image SGD (the paper's scheme) is the B=1 special case."""
+    params = model.init_params("small", KEY)
+    x = jax.random.normal(KEY, (1, 1, 29, 29), jnp.float32)
+    y = jnp.zeros((1,), jnp.int32)
+    out = model.train_step(params, x, y, "small", lr=0.05)
+    assert bool(jnp.isfinite(out[-1]))

@@ -1,0 +1,51 @@
+//! Benchmarks for the pure-Rust CNN engine (the Cireşan-code substitute).
+//!
+//! Per-image forward and train (fwd+bwd) across the three paper
+//! architectures — the Rust analogue of Table III's measured per-image
+//! times (which the paper obtained from its C++ code on the Phi). Used by
+//! the §Perf pass to track engine hot-path changes.
+
+use micdl::config::ArchSpec;
+use micdl::engine;
+use micdl::nn::Network;
+use micdl::util::bench::Bench;
+
+fn image(seed: u32) -> Vec<f32> {
+    (0..841)
+        .map(|i| {
+            (((i as u32).wrapping_mul(2654435761).wrapping_add(seed) >> 16) & 0xff) as f32 / 255.0
+        })
+        .collect()
+}
+
+fn main() {
+    let mut b = Bench::default();
+    let img = image(7);
+
+    for arch in ArchSpec::paper_archs() {
+        let net = Network::new(arch.clone(), 42).unwrap();
+        b.case(&format!("engine/{}/forward", arch.name), || {
+            engine::forward(&net, &img).unwrap().logits()[0]
+        });
+
+        let mut train_net = Network::new(arch.clone(), 42).unwrap();
+        b.case(&format!("engine/{}/train_image", arch.name), || {
+            engine::train_image(&mut train_net, &img, 3, 0.01).unwrap()
+        });
+    }
+
+    // Classification (forward + softmax + argmax) on the small net —
+    // the validation/test phase unit of work.
+    let net = Network::new(ArchSpec::small(), 1).unwrap();
+    b.case("engine/small/classify", || engine::classify(&net, &img, 3).unwrap().0);
+
+    b.print_report("engine");
+
+    // Report the per-image times next to the paper's Table III for
+    // orientation (the engine runs on this host, not on a Phi — the
+    // comparison is structural, not absolute).
+    println!("\nTable III reference (measured on Xeon Phi 7120P, 1 thread):");
+    println!("  small fprop 1.45 ms / bprop 5.30 ms");
+    println!("  medium fprop 12.55 ms / bprop 69.73 ms");
+    println!("  large fprop 148.88 ms / bprop 859.19 ms");
+}

@@ -1,0 +1,54 @@
+//! Benchmarks for the performance models (deliverable (d), model side).
+//!
+//! One case per model × architecture, plus the full Fig. 5–7 sweeps and
+//! the Table X extrapolation — i.e. the code that regenerates the paper's
+//! prediction columns, timed.
+
+use micdl::config::{ArchSpec, RunConfig};
+use micdl::perfmodel::{both_models, ParamSource, PerfModel};
+use micdl::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::default();
+
+    for arch in ArchSpec::paper_archs() {
+        let (model_a, model_b) = both_models(&arch, ParamSource::Paper).unwrap();
+        let run = RunConfig::paper_default(&arch.name, 240);
+        b.case(&format!("strategy_a/{}/predict@240", arch.name), || {
+            model_a.predict(&run).unwrap().total_s
+        });
+        b.case(&format!("strategy_b/{}/predict@240", arch.name), || {
+            model_b.predict(&run).unwrap().total_s
+        });
+    }
+
+    // Full figure sweep (7 thread counts × 2 models), per architecture.
+    for arch in ArchSpec::paper_archs() {
+        let (model_a, model_b) = both_models(&arch, ParamSource::Paper).unwrap();
+        b.case(&format!("fig_sweep/{}", arch.name), || {
+            let mut acc = 0.0;
+            for &p in RunConfig::MEASURED_THREADS.iter() {
+                let run = RunConfig::paper_default(&arch.name, p);
+                acc += model_a.predict(&run).unwrap().total_s;
+                acc += model_b.predict(&run).unwrap().total_s;
+            }
+            acc
+        });
+    }
+
+    // Table X extrapolation (4 thread counts × 3 archs × 2 models).
+    b.case("table10_sweep", || {
+        let mut acc = 0.0;
+        for arch in ArchSpec::paper_archs() {
+            let (a, bm) = both_models(&arch, ParamSource::Paper).unwrap();
+            for &p in RunConfig::PREDICTED_THREADS.iter() {
+                let run = RunConfig::paper_default(&arch.name, p);
+                acc += a.predict(&run).unwrap().total_s;
+                acc += bm.predict(&run).unwrap().total_s;
+            }
+        }
+        acc
+    });
+
+    b.print_report("perfmodel");
+}

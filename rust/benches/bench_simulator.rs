@@ -1,0 +1,68 @@
+//! Benchmarks for micsim (deliverable (d) measurement side + §Perf).
+//!
+//! The chunked-vs-per-image comparison is the §Perf headline: identical
+//! semantics, orders-of-magnitude wall-clock difference (EXPERIMENTS.md
+//! §Perf). Also times the contention probe (Table IV) and the measured
+//! thread sweep behind Figs. 5–7.
+
+use micdl::config::{ArchSpec, RunConfig};
+use micdl::simulator::{probe, simulate_training, Fidelity, SimConfig};
+use micdl::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::default();
+
+    // Chunked full-size paper workloads (what the fig5-7 sweeps run).
+    for arch in ArchSpec::paper_archs() {
+        let cfg = SimConfig::default();
+        let run = RunConfig::paper_default(&arch.name, 240);
+        b.case(&format!("chunked/{}/p240_full", arch.name), || {
+            simulate_training(&arch, &run, &cfg).unwrap().total_s
+        });
+    }
+
+    // Fidelity comparison on a downscaled workload (per-image is O(i·ep)).
+    let arch = ArchSpec::small();
+    let small_run =
+        RunConfig { train_images: 6_000, test_images: 1_000, epochs: 1, threads: 240 };
+    let cfg_chunk = SimConfig { fidelity: Fidelity::Chunked, ..Default::default() };
+    let cfg_image = SimConfig { fidelity: Fidelity::PerImage, ..Default::default() };
+    b.case("fidelity/chunked/6k_images", || {
+        simulate_training(&arch, &small_run, &cfg_chunk).unwrap().total_s
+    });
+    b.case("fidelity/per_image/6k_images", || {
+        simulate_training(&arch, &small_run, &cfg_image).unwrap().total_s
+    });
+
+    // Contention probe sweep (Table IV's 11 thread counts × 3 archs).
+    b.case("contention_probe/table4_sweep", || {
+        let cfg = SimConfig::default();
+        let mut acc = 0.0;
+        for arch in ArchSpec::paper_archs() {
+            for &p in [1usize, 15, 30, 60, 120, 180, 240, 480, 960, 1920, 3840].iter() {
+                acc += probe::contention_probe(&arch, p, &cfg).unwrap();
+            }
+        }
+        acc
+    });
+
+    // Full measured sweep backing one figure.
+    b.case("measured_sweep/fig5", || {
+        let cfg = SimConfig::default();
+        let arch = ArchSpec::small();
+        let mut acc = 0.0;
+        for &p in RunConfig::MEASURED_THREADS.iter() {
+            acc += probe::measured_execution_s(&arch, p, &cfg).unwrap();
+        }
+        acc
+    });
+
+    // Oversubscribed run (3,840 software threads).
+    let big_run = RunConfig::paper_default("small", 3840);
+    let cfg = SimConfig::default();
+    b.case("chunked/small/p3840_oversub", || {
+        simulate_training(&ArchSpec::small(), &big_run, &cfg).unwrap().total_s
+    });
+
+    b.print_report("simulator");
+}

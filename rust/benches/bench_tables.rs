@@ -1,0 +1,22 @@
+//! End-to-end benchmark: regenerate every paper table and figure.
+//!
+//! One case per experiment id — `cargo bench --bench bench_tables` is the
+//! "rebuild the whole evaluation section" harness (deliverable (d)). The
+//! rendered outputs themselves are printed once at the end so the bench
+//! doubles as the artifact generator.
+
+use micdl::experiments::{self, ExpOptions};
+use micdl::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::default();
+    let opts = ExpOptions::default();
+
+    for id in experiments::ALL_WITH_SCALING {
+        b.case(&format!("exp/{id}"), || experiments::run(id, &opts).unwrap().len());
+    }
+    b.print_report("paper tables & figures");
+
+    println!("\n================ rendered reproduction ================\n");
+    print!("{}", experiments::run("all", &opts).unwrap());
+}

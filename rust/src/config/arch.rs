@@ -1,0 +1,453 @@
+//! CNN architecture specifications (paper Fig. 2 + custom JSON stacks).
+//!
+//! The three built-in architectures are reconstructed so that every quantity
+//! quoted in the Fig. 2 captions holds exactly (verified by unit tests here
+//! and mirrored by `python/tests/test_model.py` on the JAX side):
+//!
+//! * **small**  — I(29²) → C(5 maps, 4×4) → M(2) → O(10)
+//! * **medium** — I(29²) → C(20, 4×4) → M(2) → C(40, 5×5) → M(3) → F(150) → O(10)
+//! * **large**  — I(29²) → C(20, 4×4) → M(2) → C(60, 3×3) → C(100, 6×6) → M(2) → F(150) → O(10)
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Input image side (MNIST 28×28 padded to 29×29, as in Cireşan's code).
+pub const INPUT_HW: usize = 29;
+/// Output classes (MNIST digits).
+pub const NUM_CLASSES: usize = 10;
+
+/// One layer of a CNN stack.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerSpec {
+    /// Convolutional layer: `maps` feature maps, `kernel`×`kernel` receptive
+    /// field, valid padding, stride 1, tanh activation.
+    Conv { maps: usize, kernel: usize },
+    /// Non-overlapping max pooling with window `window`×`window`.
+    Pool { window: usize },
+    /// Fully connected layer with `units` neurons (tanh unless `last`).
+    Dense { units: usize },
+}
+
+/// A complete architecture: name + layer stack over the 29×29 input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArchSpec {
+    pub name: String,
+    pub layers: Vec<LayerSpec>,
+}
+
+/// Resolved static shape of one layer after the shape walk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerShape {
+    pub spec: ResolvedLayer,
+    /// Neurons in this layer (maps × hw² for spatial layers).
+    pub neurons: usize,
+    /// Trainable weights incl. biases (0 for pool).
+    pub weights: usize,
+}
+
+/// A layer with its input/output geometry resolved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResolvedLayer {
+    Input { hw: usize },
+    Conv { maps: usize, kernel: usize, in_maps: usize, in_hw: usize, out_hw: usize },
+    Pool { window: usize, maps: usize, in_hw: usize, out_hw: usize },
+    Dense { units: usize, fan_in: usize, last: bool },
+}
+
+impl ArchSpec {
+    /// The paper's small CNN (Fig. 2a).
+    pub fn small() -> Self {
+        ArchSpec {
+            name: "small".into(),
+            layers: vec![
+                LayerSpec::Conv { maps: 5, kernel: 4 },
+                LayerSpec::Pool { window: 2 },
+                LayerSpec::Dense { units: NUM_CLASSES },
+            ],
+        }
+    }
+
+    /// The paper's medium CNN (Fig. 2b).
+    pub fn medium() -> Self {
+        ArchSpec {
+            name: "medium".into(),
+            layers: vec![
+                LayerSpec::Conv { maps: 20, kernel: 4 },
+                LayerSpec::Pool { window: 2 },
+                LayerSpec::Conv { maps: 40, kernel: 5 },
+                LayerSpec::Pool { window: 3 },
+                LayerSpec::Dense { units: 150 },
+                LayerSpec::Dense { units: NUM_CLASSES },
+            ],
+        }
+    }
+
+    /// The paper's large CNN (Fig. 2c).
+    pub fn large() -> Self {
+        ArchSpec {
+            name: "large".into(),
+            layers: vec![
+                LayerSpec::Conv { maps: 20, kernel: 4 },
+                LayerSpec::Pool { window: 2 },
+                LayerSpec::Conv { maps: 60, kernel: 3 },
+                LayerSpec::Conv { maps: 100, kernel: 6 },
+                LayerSpec::Pool { window: 2 },
+                LayerSpec::Dense { units: 150 },
+                LayerSpec::Dense { units: NUM_CLASSES },
+            ],
+        }
+    }
+
+    /// All three paper architectures, in size order.
+    pub fn paper_archs() -> Vec<ArchSpec> {
+        vec![Self::small(), Self::medium(), Self::large()]
+    }
+
+    /// Look up a paper architecture by name.
+    pub fn by_name(name: &str) -> Result<ArchSpec> {
+        match name {
+            "small" => Ok(Self::small()),
+            "medium" => Ok(Self::medium()),
+            "large" => Ok(Self::large()),
+            other => Err(Error::Config(format!(
+                "unknown architecture {other:?} (expected small|medium|large, \
+                 or load a custom stack with ArchSpec::from_json)"
+            ))),
+        }
+    }
+
+    /// Load a custom architecture from JSON, e.g.
+    /// `{"name":"tiny","layers":[{"type":"conv","maps":3,"kernel":4}, ...]}`.
+    pub fn from_json(json: &str) -> Result<ArchSpec> {
+        let v = Json::parse(json)?;
+        let name = v
+            .expect("name")?
+            .as_str()
+            .ok_or_else(|| Error::Json("name must be a string".into()))?
+            .to_string();
+        let mut layers = Vec::new();
+        let layer_list = v
+            .expect("layers")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("layers must be an array".into()))?;
+        for (i, l) in layer_list.iter().enumerate() {
+            let ty = l
+                .expect("type")?
+                .as_str()
+                .ok_or_else(|| Error::Json(format!("layer {i}: type must be a string")))?;
+            let field = |key: &str| -> Result<usize> {
+                l.expect(key)?.as_usize().ok_or_else(|| {
+                    Error::Json(format!("layer {i}: {key} must be a non-negative integer"))
+                })
+            };
+            layers.push(match ty {
+                "conv" => LayerSpec::Conv { maps: field("maps")?, kernel: field("kernel")? },
+                "pool" => LayerSpec::Pool { window: field("window")? },
+                "dense" => LayerSpec::Dense { units: field("units")? },
+                other => {
+                    return Err(Error::Json(format!(
+                        "layer {i}: unknown type {other:?} (conv|pool|dense)"
+                    )))
+                }
+            });
+        }
+        let spec = ArchSpec { name, layers };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Serialize to the JSON schema accepted by [`ArchSpec::from_json`].
+    pub fn to_json(&self) -> String {
+        let layers: Vec<Json> = self
+            .layers
+            .iter()
+            .map(|l| match *l {
+                LayerSpec::Conv { maps, kernel } => Json::obj(vec![
+                    ("type", Json::str("conv")),
+                    ("maps", Json::num(maps as f64)),
+                    ("kernel", Json::num(kernel as f64)),
+                ]),
+                LayerSpec::Pool { window } => Json::obj(vec![
+                    ("type", Json::str("pool")),
+                    ("window", Json::num(window as f64)),
+                ]),
+                LayerSpec::Dense { units } => Json::obj(vec![
+                    ("type", Json::str("dense")),
+                    ("units", Json::num(units as f64)),
+                ]),
+            })
+            .collect();
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("layers", Json::Arr(layers)),
+        ])
+        .emit()
+    }
+
+    /// Static shape walk: resolve every layer's geometry over the 29×29
+    /// input. Fails if a layer does not fit (kernel larger than input,
+    /// pooling window not dividing the map, dense before spatial collapse
+    /// is fine — it flattens).
+    pub fn shapes(&self) -> Result<Vec<LayerShape>> {
+        let mut out = vec![LayerShape {
+            spec: ResolvedLayer::Input { hw: INPUT_HW },
+            neurons: INPUT_HW * INPUT_HW,
+            weights: 0,
+        }];
+        let mut maps = 1usize;
+        let mut hw = INPUT_HW;
+        let mut flat: Option<usize> = None;
+
+        for (idx, layer) in self.layers.iter().enumerate() {
+            let last = idx + 1 == self.layers.len();
+            match *layer {
+                LayerSpec::Conv { maps: m, kernel: k } => {
+                    if flat.is_some() {
+                        return Err(Error::Config(format!(
+                            "{}: conv layer {idx} after dense layer", self.name
+                        )));
+                    }
+                    if k == 0 || k > hw {
+                        return Err(Error::Config(format!(
+                            "{}: conv layer {idx} kernel {k} does not fit {hw}×{hw}",
+                            self.name
+                        )));
+                    }
+                    if m == 0 {
+                        return Err(Error::Config(format!(
+                            "{}: conv layer {idx} has zero maps", self.name
+                        )));
+                    }
+                    let out_hw = hw - k + 1;
+                    out.push(LayerShape {
+                        spec: ResolvedLayer::Conv {
+                            maps: m, kernel: k, in_maps: maps, in_hw: hw, out_hw,
+                        },
+                        neurons: m * out_hw * out_hw,
+                        weights: m * (maps * k * k + 1),
+                    });
+                    maps = m;
+                    hw = out_hw;
+                }
+                LayerSpec::Pool { window: w } => {
+                    if flat.is_some() {
+                        return Err(Error::Config(format!(
+                            "{}: pool layer {idx} after dense layer", self.name
+                        )));
+                    }
+                    if w == 0 || hw % w != 0 {
+                        return Err(Error::Config(format!(
+                            "{}: pool layer {idx} window {w} does not divide {hw}",
+                            self.name
+                        )));
+                    }
+                    let out_hw = hw / w;
+                    out.push(LayerShape {
+                        spec: ResolvedLayer::Pool { window: w, maps, in_hw: hw, out_hw },
+                        neurons: maps * out_hw * out_hw,
+                        weights: 0,
+                    });
+                    hw = out_hw;
+                }
+                LayerSpec::Dense { units } => {
+                    if units == 0 {
+                        return Err(Error::Config(format!(
+                            "{}: dense layer {idx} has zero units", self.name
+                        )));
+                    }
+                    let fan_in = flat.unwrap_or(maps * hw * hw);
+                    out.push(LayerShape {
+                        spec: ResolvedLayer::Dense { units, fan_in, last },
+                        neurons: units,
+                        weights: fan_in * units + units,
+                    });
+                    flat = Some(units);
+                }
+            }
+        }
+
+        match out.last().map(|l| l.spec) {
+            Some(ResolvedLayer::Dense { units, .. }) if units == NUM_CLASSES => Ok(out),
+            _ => Err(Error::Config(format!(
+                "{}: network must end in a dense layer with {NUM_CLASSES} units",
+                self.name
+            ))),
+        }
+    }
+
+    /// Validate without keeping the shapes.
+    pub fn validate(&self) -> Result<()> {
+        self.shapes().map(|_| ())
+    }
+
+    /// Total trainable weights (incl. biases) across all layers.
+    pub fn total_weights(&self) -> Result<usize> {
+        Ok(self.shapes()?.iter().map(|l| l.weights).sum())
+    }
+
+    /// Total neurons across all layers (incl. input).
+    pub fn total_neurons(&self) -> Result<usize> {
+        Ok(self.shapes()?.iter().map(|l| l.neurons).sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_matches_fig2a_caption() {
+        let shapes = ArchSpec::small().shapes().unwrap();
+        // "the first convolutional layer has 5 maps, 3380 neurons, uses a
+        //  kernel size of 4x4, a map size of 26x26 and 85 weights"
+        let conv = &shapes[1];
+        assert_eq!(conv.neurons, 3380);
+        assert_eq!(conv.weights, 85);
+        match conv.spec {
+            ResolvedLayer::Conv { maps, kernel, out_hw, .. } => {
+                assert_eq!(maps, 5);
+                assert_eq!(kernel, 4);
+                assert_eq!(out_hw, 26);
+            }
+            _ => panic!("expected conv"),
+        }
+    }
+
+    #[test]
+    fn medium_matches_fig2b_caption() {
+        let shapes = ArchSpec::medium().shapes().unwrap();
+        let conv = &shapes[1];
+        assert_eq!(conv.neurons, 13520);
+        assert_eq!(conv.weights, 340);
+    }
+
+    #[test]
+    fn large_matches_fig2c_caption() {
+        let shapes = ArchSpec::large().shapes().unwrap();
+        // "the last convolutional layer has 100 maps, 3,600 neurons, a 6x6
+        //  kernel, a map size of 6x6 and 216,100 weights"
+        let last_conv = shapes
+            .iter()
+            .filter(|l| matches!(l.spec, ResolvedLayer::Conv { .. }))
+            .next_back()
+            .unwrap();
+        assert_eq!(last_conv.neurons, 3600);
+        assert_eq!(last_conv.weights, 216_100);
+        match last_conv.spec {
+            ResolvedLayer::Conv { maps, kernel, out_hw, .. } => {
+                assert_eq!(maps, 100);
+                assert_eq!(kernel, 6);
+                assert_eq!(out_hw, 6);
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn input_layer_841_neurons() {
+        for arch in ArchSpec::paper_archs() {
+            assert_eq!(arch.shapes().unwrap()[0].neurons, 841, "{}", arch.name);
+        }
+    }
+
+    #[test]
+    fn output_layer_10_neurons() {
+        for arch in ArchSpec::paper_archs() {
+            assert_eq!(arch.shapes().unwrap().last().unwrap().neurons, 10);
+        }
+    }
+
+    #[test]
+    fn sizes_strictly_ordered() {
+        let w: Vec<usize> = ArchSpec::paper_archs()
+            .iter()
+            .map(|a| a.total_weights().unwrap())
+            .collect();
+        assert!(w[0] < w[1] && w[1] < w[2], "{w:?}");
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for name in ["small", "medium", "large"] {
+            assert_eq!(ArchSpec::by_name(name).unwrap().name, name);
+        }
+        assert!(ArchSpec::by_name("huge").is_err());
+    }
+
+    #[test]
+    fn custom_json_arch() {
+        let json = r#"{"name":"tiny","layers":[
+            {"type":"conv","maps":3,"kernel":4},
+            {"type":"pool","window":2},
+            {"type":"dense","units":10}]}"#;
+        let spec = ArchSpec::from_json(json).unwrap();
+        assert_eq!(spec.name, "tiny");
+        assert_eq!(spec.shapes().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn rejects_kernel_too_large() {
+        let spec = ArchSpec {
+            name: "bad".into(),
+            layers: vec![
+                LayerSpec::Conv { maps: 2, kernel: 40 },
+                LayerSpec::Dense { units: 10 },
+            ],
+        };
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_nondividing_pool() {
+        let spec = ArchSpec {
+            name: "bad".into(),
+            layers: vec![
+                LayerSpec::Conv { maps: 2, kernel: 4 }, // 26×26
+                LayerSpec::Pool { window: 4 },          // 26 % 4 != 0
+                LayerSpec::Dense { units: 10 },
+            ],
+        };
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_conv_after_dense() {
+        let spec = ArchSpec {
+            name: "bad".into(),
+            layers: vec![
+                LayerSpec::Dense { units: 30 },
+                LayerSpec::Conv { maps: 2, kernel: 3 },
+                LayerSpec::Dense { units: 10 },
+            ],
+        };
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_output_width() {
+        let spec = ArchSpec {
+            name: "bad".into(),
+            layers: vec![LayerSpec::Dense { units: 7 }],
+        };
+        assert!(spec.validate().is_err());
+    }
+
+    #[test]
+    fn rejects_zero_maps_units_window() {
+        for layers in [
+            vec![LayerSpec::Conv { maps: 0, kernel: 3 }, LayerSpec::Dense { units: 10 }],
+            vec![LayerSpec::Pool { window: 0 }, LayerSpec::Dense { units: 10 }],
+            vec![LayerSpec::Dense { units: 0 }, LayerSpec::Dense { units: 10 }],
+        ] {
+            let spec = ArchSpec { name: "bad".into(), layers };
+            assert!(spec.validate().is_err());
+        }
+    }
+
+    #[test]
+    fn serde_roundtrip() {
+        let arch = ArchSpec::medium();
+        let json = arch.to_json();
+        assert_eq!(ArchSpec::from_json(&json).unwrap(), arch);
+    }
+}

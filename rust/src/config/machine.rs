@@ -1,0 +1,154 @@
+//! Machine model configuration (paper Section III + Table III).
+//!
+//! Defaults describe the Intel Xeon Phi 7120P used in the paper: 61 cores at
+//! 1.238 GHz, 4 hardware threads per core scheduled round-robin, 512-bit
+//! SIMD (16 f32 lanes), 16 GDDR memory channels (352 GB/s aggregate peak),
+//! per-core 32 KB L1 / 512 KB L2 kept coherent over a bidirectional ring.
+
+/// Static description of one MIC processor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MachineConfig {
+    /// Marketing / model name (reporting only).
+    pub name: String,
+    /// Physical cores.
+    pub cores: usize,
+    /// Hardware threads per core (round-robin issue).
+    pub threads_per_core: usize,
+    /// Core clock in Hz (paper uses 1.238 GHz in the model, Table III).
+    pub clock_hz: f64,
+    /// SIMD lanes for f32 (512-bit / 32-bit).
+    pub simd_lanes: usize,
+    /// GDDR memory channels.
+    pub memory_channels: usize,
+    /// Aggregate peak memory bandwidth, bytes/s.
+    pub memory_bw_bytes: f64,
+    /// L1 data cache per core, bytes.
+    pub l1_bytes: usize,
+    /// L2 cache per core, bytes.
+    pub l2_bytes: usize,
+    /// CPI ladder indexed by threads-resident-per-core (1-based: `cpi[0]`
+    /// is 1 thread/core). Paper Table III: 1–2 threads CPI 1, 3 → 1.5,
+    /// 4 → 2 ("each thread gets to execute two instructions every fourth
+    /// cycle").
+    pub cpi_ladder: Vec<f64>,
+}
+
+impl MachineConfig {
+    /// The paper's evaluation platform: Intel Xeon Phi 7120P (KNC).
+    pub fn xeon_phi_7120p() -> Self {
+        MachineConfig {
+            name: "Intel Xeon Phi 7120P (KNC)".into(),
+            cores: 61,
+            threads_per_core: 4,
+            clock_hz: 1.238e9,
+            simd_lanes: 16,
+            memory_channels: 16,
+            memory_bw_bytes: 352.0e9,
+            l1_bytes: 32 * 1024,
+            l2_bytes: 512 * 1024,
+            cpi_ladder: vec![1.0, 1.0, 1.5, 2.0],
+        }
+    }
+
+    /// Maximum hardware threads (244 on the 7120P).
+    pub fn max_hw_threads(&self) -> usize {
+        self.cores * self.threads_per_core
+    }
+
+    /// CPI for a core with `occupancy` resident threads. Occupancies above
+    /// the ladder saturate at the last entry (the paper's model does the
+    /// same when predicting beyond 244 threads: CPI stays at 2).
+    pub fn cpi(&self, occupancy: usize) -> f64 {
+        if occupancy == 0 {
+            return self.cpi_ladder[0];
+        }
+        let idx = occupancy.min(self.cpi_ladder.len());
+        self.cpi_ladder[idx - 1]
+    }
+
+    /// Threads resident per core when `p` threads are spread round-robin
+    /// over the cores (the paper's affinity: balanced/scatter). For
+    /// `p > max_hw_threads`, hardware occupancy saturates at
+    /// `threads_per_core` and software threads oversubscribe.
+    pub fn occupancy(&self, p: usize) -> usize {
+        if p == 0 {
+            return 0;
+        }
+        p.div_ceil(self.cores).min(self.threads_per_core)
+    }
+
+    /// Software oversubscription factor: how many software threads share
+    /// each hardware thread (1.0 up to 244, then p/244).
+    pub fn oversubscription(&self, p: usize) -> f64 {
+        let max = self.max_hw_threads();
+        if p <= max {
+            1.0
+        } else {
+            p as f64 / max as f64
+        }
+    }
+
+    /// Single-thread peak f32 FLOP/s (fma counted as 2): lanes × 2 × clock.
+    pub fn peak_flops_thread(&self) -> f64 {
+        self.simd_lanes as f64 * 2.0 * self.clock_hz
+    }
+}
+
+impl Default for MachineConfig {
+    fn default() -> Self {
+        Self::xeon_phi_7120p()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phi_7120p_has_244_hw_threads() {
+        assert_eq!(MachineConfig::xeon_phi_7120p().max_hw_threads(), 244);
+    }
+
+    #[test]
+    fn cpi_ladder_matches_table3() {
+        let m = MachineConfig::xeon_phi_7120p();
+        assert_eq!(m.cpi(1), 1.0);
+        assert_eq!(m.cpi(2), 1.0);
+        assert_eq!(m.cpi(3), 1.5);
+        assert_eq!(m.cpi(4), 2.0);
+        // Saturates beyond the ladder.
+        assert_eq!(m.cpi(7), 2.0);
+    }
+
+    #[test]
+    fn occupancy_round_robin() {
+        let m = MachineConfig::xeon_phi_7120p();
+        assert_eq!(m.occupancy(1), 1);
+        assert_eq!(m.occupancy(61), 1);
+        assert_eq!(m.occupancy(62), 2);
+        assert_eq!(m.occupancy(120), 2);
+        assert_eq!(m.occupancy(122), 2);
+        assert_eq!(m.occupancy(180), 3);
+        assert_eq!(m.occupancy(240), 4);
+        // Beyond hardware: occupancy saturates.
+        assert_eq!(m.occupancy(3840), 4);
+    }
+
+    #[test]
+    fn oversubscription_kicks_in_past_244() {
+        let m = MachineConfig::xeon_phi_7120p();
+        assert_eq!(m.oversubscription(240), 1.0);
+        assert_eq!(m.oversubscription(244), 1.0);
+        assert!((m.oversubscription(488) - 2.0).abs() < 1e-12);
+        assert!((m.oversubscription(3840) - 3840.0 / 244.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peak_flops_about_2_tflops_chipwide() {
+        // 61 cores × 2 ops × 16 lanes × 1.238 GHz ≈ 2.4 TFLOP/s single
+        // precision (the paper quotes "two teraFLOP/s of single precision").
+        let m = MachineConfig::xeon_phi_7120p();
+        let chip = m.peak_flops_thread() * m.cores as f64;
+        assert!(chip > 2.0e12 && chip < 2.6e12, "{chip}");
+    }
+}

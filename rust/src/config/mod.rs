@@ -1,0 +1,19 @@
+//! Configuration system: CNN architectures, the machine model, and runs.
+//!
+//! Three orthogonal configs compose a complete experiment:
+//!
+//! * [`ArchSpec`] — which network (the paper's small/medium/large, or a
+//!   custom layer stack loaded from JSON),
+//! * [`MachineConfig`] — which Xeon Phi (core count, clock, SMT/CPI ladder,
+//!   memory channels; defaults to the paper's 7120P),
+//! * [`RunConfig`] — the workload: `i` training images, `it` test images,
+//!   `ep` epochs, `p` processing units (the performance-model inputs of
+//!   Table I).
+
+pub mod arch;
+pub mod machine;
+pub mod run;
+
+pub use arch::{ArchSpec, LayerSpec};
+pub use machine::MachineConfig;
+pub use run::RunConfig;

@@ -1,0 +1,111 @@
+//! Run configuration: the performance-model input variables of Table I.
+
+use crate::error::{Error, Result};
+
+/// The workload parameters `T(i, it, ep, p, s)` ranges over (Table I/II).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunConfig {
+    /// Number of training/validation images (`i`, paper default 60,000).
+    pub train_images: usize,
+    /// Number of test images (`it`, paper default 10,000).
+    pub test_images: usize,
+    /// Number of epochs (`ep`: 70 for small/medium, 15 for large).
+    pub epochs: usize,
+    /// Number of processing units / threads (`p`, 1–3,840).
+    pub threads: usize,
+}
+
+impl RunConfig {
+    /// Paper defaults for a given architecture name (Table II).
+    pub fn paper_default(arch: &str, threads: usize) -> Self {
+        RunConfig {
+            train_images: 60_000,
+            test_images: 10_000,
+            epochs: if arch == "large" { 15 } else { 70 },
+            threads,
+        }
+    }
+
+    /// The measured thread counts of the evaluation (Section V).
+    pub const MEASURED_THREADS: [usize; 7] = [1, 15, 30, 60, 120, 180, 240];
+
+    /// The model-extrapolated thread counts (Table X).
+    pub const PREDICTED_THREADS: [usize; 4] = [480, 960, 1920, 3840];
+
+    pub fn validate(&self) -> Result<()> {
+        if self.threads == 0 {
+            return Err(Error::Config("threads must be >= 1".into()));
+        }
+        if self.train_images == 0 {
+            return Err(Error::Config("train_images must be >= 1".into()));
+        }
+        if self.epochs == 0 {
+            return Err(Error::Config("epochs must be >= 1".into()));
+        }
+        Ok(())
+    }
+
+    /// Per-thread training chunk (the slowest worker's share): ⌈i/p⌉.
+    pub fn train_chunk(&self) -> usize {
+        self.train_images.div_ceil(self.threads)
+    }
+
+    /// Per-thread test chunk: ⌈it/p⌉.
+    pub fn test_chunk(&self) -> usize {
+        self.test_images.div_ceil(self.threads)
+    }
+
+    pub fn with_threads(mut self, p: usize) -> Self {
+        self.threads = p;
+        self
+    }
+
+    pub fn with_epochs(mut self, ep: usize) -> Self {
+        self.epochs = ep;
+        self
+    }
+
+    pub fn with_images(mut self, i: usize, it: usize) -> Self {
+        self.train_images = i;
+        self.test_images = it;
+        self
+    }
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig::paper_default("small", 240)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_match_table2() {
+        let small = RunConfig::paper_default("small", 240);
+        assert_eq!(small.train_images, 60_000);
+        assert_eq!(small.test_images, 10_000);
+        assert_eq!(small.epochs, 70);
+        assert_eq!(RunConfig::paper_default("medium", 1).epochs, 70);
+        assert_eq!(RunConfig::paper_default("large", 1).epochs, 15);
+    }
+
+    #[test]
+    fn chunk_is_ceiling_division() {
+        let rc = RunConfig::paper_default("small", 480);
+        assert_eq!(rc.train_chunk(), 125);
+        assert_eq!(rc.test_chunk(), 21); // ceil(10000/480)
+        let rc1 = rc.with_threads(7);
+        assert_eq!(rc1.train_chunk(), 8572); // ceil(60000/7)
+    }
+
+    #[test]
+    fn validation_rejects_zeroes() {
+        assert!(RunConfig { threads: 0, ..Default::default() }.validate().is_err());
+        assert!(RunConfig { train_images: 0, ..Default::default() }.validate().is_err());
+        assert!(RunConfig { epochs: 0, ..Default::default() }.validate().is_err());
+        assert!(RunConfig::default().validate().is_ok());
+    }
+}

@@ -1,0 +1,175 @@
+//! The artifact-backed leader loop (PJRT path).
+//!
+//! The leader owns the PJRT runtime and drives batched SGD through the
+//! compiled JAX/Pallas train step: shuffle → batch → execute → log. This
+//! is the e2e path proving the three layers compose (Pallas kernel → JAX
+//! step → HLO text → Rust PJRT); the per-thread-instance parallel scheme
+//! of the paper runs in [`super::pool`] (engine) and in the simulator
+//! (timing).
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::coordinator::metrics::Metrics;
+use crate::dataset::Dataset;
+use crate::error::Result;
+use crate::nn::init::XorShift64;
+use crate::runtime::{ArtifactRegistry, PjrtRuntime, TrainHandle};
+use crate::training::{EpochStats, TrainReport};
+
+/// Configuration for the PJRT leader.
+#[derive(Debug, Clone)]
+pub struct LeaderConfig {
+    pub arch: String,
+    pub epochs: usize,
+    /// Cap on evaluation batches per epoch (0 = all).
+    pub eval_cap_batches: usize,
+    pub seed: u64,
+    pub verbose: bool,
+}
+
+impl Default for LeaderConfig {
+    fn default() -> Self {
+        LeaderConfig {
+            arch: "small".into(),
+            epochs: 3,
+            eval_cap_batches: 8,
+            seed: 42,
+            verbose: false,
+        }
+    }
+}
+
+/// Leader-driven PJRT trainer.
+pub struct PjrtTrainer {
+    runtime: PjrtRuntime,
+    handle: TrainHandle,
+    pub registry: ArtifactRegistry,
+    pub cfg: LeaderConfig,
+    pub metrics: Metrics,
+}
+
+impl std::fmt::Debug for PjrtTrainer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtTrainer")
+            .field("arch", &self.cfg.arch)
+            .field("batch", &self.registry.batch)
+            .finish()
+    }
+}
+
+impl PjrtTrainer {
+    /// Load artifacts from `dir` and prepare the executable + parameters.
+    pub fn new(dir: &Path, cfg: LeaderConfig) -> Result<PjrtTrainer> {
+        let registry = ArtifactRegistry::load(dir)?;
+        registry.check_files()?;
+        let mut runtime = PjrtRuntime::cpu()?;
+        let arch = registry.arch(&cfg.arch)?.clone();
+        let handle =
+            runtime.train_handle(&arch, registry.batch, registry.input_hw, cfg.seed)?;
+        Ok(PjrtTrainer { runtime, handle, registry, cfg, metrics: Metrics::new() })
+    }
+
+    /// One batched step over `indices` of `data`. Short batches wrap.
+    fn step(&mut self, data: &Dataset, indices: &[usize]) -> Result<f32> {
+        let b = self.registry.batch;
+        let hw2 = self.registry.input_hw * self.registry.input_hw;
+        let mut xs = Vec::with_capacity(b * hw2);
+        let mut ys = Vec::with_capacity(b);
+        for k in 0..b {
+            let (img, label) = data.sample(indices[k % indices.len()]);
+            xs.extend_from_slice(img);
+            ys.push(label as i32);
+        }
+        let loss = self.runtime.train_step(&mut self.handle, &xs, &ys)?;
+        self.metrics.steps += 1;
+        self.metrics.images_trained += b as u64;
+        Ok(loss)
+    }
+
+    /// Accuracy over (a capped number of) batches of `data`.
+    pub fn accuracy(&mut self, data: &Dataset) -> Result<f64> {
+        let b = self.registry.batch;
+        let hw2 = self.registry.input_hw * self.registry.input_hw;
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let max_batches = if self.cfg.eval_cap_batches == 0 {
+            usize::MAX
+        } else {
+            self.cfg.eval_cap_batches
+        };
+        let mut start = 0usize;
+        let mut batches = 0usize;
+        while start + b <= data.len() && batches < max_batches {
+            let mut xs = Vec::with_capacity(b * hw2);
+            let mut ys = Vec::with_capacity(b);
+            for k in 0..b {
+                let (img, label) = data.sample(start + k);
+                xs.extend_from_slice(img);
+                ys.push(label);
+            }
+            let classes = self.runtime.infer(&mut self.handle, &xs)?;
+            correct += classes.iter().zip(ys.iter()).filter(|(&c, &y)| c == y).count();
+            total += b;
+            self.metrics.images_evaluated += b as u64;
+            start += b;
+            batches += 1;
+        }
+        Ok(if total == 0 { 0.0 } else { correct as f64 / total as f64 })
+    }
+
+    /// Full training run: per epoch, shuffle, sweep batches, evaluate.
+    pub fn train(&mut self, train: &Dataset, test: &Dataset) -> Result<TrainReport> {
+        let b = self.registry.batch;
+        let mut rng = XorShift64::new(self.cfg.seed ^ 0xC0FFEE);
+        let mut order: Vec<usize> = (0..train.len()).collect();
+        let mut report = TrainReport::default();
+        let run_start = Instant::now();
+
+        for epoch in 0..self.cfg.epochs {
+            let epoch_start = Instant::now();
+            // Fisher-Yates shuffle per epoch.
+            for i in (1..order.len()).rev() {
+                order.swap(i, rng.next_below(i + 1));
+            }
+            let mut loss_sum = 0.0f64;
+            let mut batches = 0usize;
+            for chunk in order.chunks(b) {
+                loss_sum += self.step(train, chunk)? as f64;
+                batches += 1;
+            }
+            let train_loss = loss_sum / batches.max(1) as f64;
+            let val_accuracy = self.accuracy(train)?;
+            let test_accuracy = self.accuracy(test)?;
+            let stats = EpochStats {
+                epoch,
+                train_loss,
+                val_loss: 0.0,
+                val_accuracy,
+                test_accuracy,
+                wall_s: epoch_start.elapsed().as_secs_f64(),
+            };
+            if self.cfg.verbose {
+                println!(
+                    "epoch {epoch:>3}: loss {train_loss:.4}  val_acc {val_accuracy:.3}  \
+                     test_acc {test_accuracy:.3}  ({:.2}s)",
+                    stats.wall_s
+                );
+            }
+            report.epochs.push(stats);
+        }
+        report.total_wall_s = run_start.elapsed().as_secs_f64();
+        self.metrics.train_wall_s = report.total_wall_s;
+        report.train_throughput =
+            self.metrics.images_trained as f64 / report.total_wall_s.max(1e-9);
+        Ok(report)
+    }
+
+    /// Steps executed so far (delegates to the handle).
+    pub fn steps(&self) -> u64 {
+        self.handle.steps
+    }
+}
+
+// PJRT-backed tests live in rust/tests/runtime_e2e.rs and the examples;
+// unit-testing here would duplicate them against the same artifacts.

@@ -1,0 +1,96 @@
+//! Lightweight metrics for the coordinator drivers.
+
+use std::time::Instant;
+
+/// Counters + timers for a training run.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    pub images_trained: u64,
+    pub images_evaluated: u64,
+    pub steps: u64,
+    pub train_wall_s: f64,
+    pub eval_wall_s: f64,
+    pub barrier_wait_s: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure into one of the wall buckets.
+    pub fn time<T>(bucket: &mut f64, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        *bucket += t0.elapsed().as_secs_f64();
+        out
+    }
+
+    /// Training throughput, images/second.
+    pub fn train_throughput(&self) -> f64 {
+        if self.train_wall_s > 0.0 {
+            self.images_trained as f64 / self.train_wall_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Merge a worker's metrics into the leader's.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.images_trained += other.images_trained;
+        self.images_evaluated += other.images_evaluated;
+        self.steps += other.steps;
+        // Wall buckets take the max (parallel phases overlap).
+        self.train_wall_s = self.train_wall_s.max(other.train_wall_s);
+        self.eval_wall_s = self.eval_wall_s.max(other.eval_wall_s);
+        self.barrier_wait_s += other.barrier_wait_s;
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "trained {} images in {:.2}s ({:.0} img/s), evaluated {} in {:.2}s, \
+             {} steps, barrier wait {:.3}s",
+            self.images_trained,
+            self.train_wall_s,
+            self.train_throughput(),
+            self.images_evaluated,
+            self.eval_wall_s,
+            self.steps,
+            self.barrier_wait_s
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_accumulates() {
+        let mut bucket = 0.0;
+        let v = Metrics::time(&mut bucket, || 42);
+        assert_eq!(v, 42);
+        assert!(bucket >= 0.0);
+    }
+
+    #[test]
+    fn throughput_guards_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.train_throughput(), 0.0);
+    }
+
+    #[test]
+    fn merge_takes_max_wall_and_sums_counts() {
+        let mut a = Metrics { images_trained: 10, train_wall_s: 2.0, ..Default::default() };
+        let b = Metrics { images_trained: 5, train_wall_s: 3.0, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.images_trained, 15);
+        assert_eq!(a.train_wall_s, 3.0);
+    }
+
+    #[test]
+    fn report_contains_throughput() {
+        let m = Metrics { images_trained: 100, train_wall_s: 2.0, ..Default::default() };
+        assert!(m.report().contains("50 img/s"));
+    }
+}

@@ -1,0 +1,24 @@
+//! L3 coordinator: sharding, worker pool, leader loop, metrics.
+//!
+//! The paper's runtime is OpenMP data parallelism — `p` threads, each
+//! owning a network instance and a contiguous image shard, with barriers
+//! between the train / validation / test phases of every epoch (Fig. 4).
+//! This module is that runtime rebuilt on `std::thread`:
+//!
+//! * [`shard`] — contiguous shard arithmetic (shared with the simulator's
+//!   workload mapping so simulated and real partitioning agree).
+//! * [`pool`] — [`pool::DataParallelTrainer`]: scoped worker threads over
+//!   pure-Rust engine instances, weight averaging between epochs.
+//! * [`leader`] — [`leader::PjrtTrainer`]: the artifact-backed leader
+//!   loop (batched SGD through the compiled JAX/Pallas step).
+//! * [`metrics`] — lightweight counters/timers for both drivers.
+
+pub mod leader;
+pub mod metrics;
+pub mod pool;
+pub mod shard;
+
+pub use leader::PjrtTrainer;
+pub use metrics::Metrics;
+pub use pool::DataParallelTrainer;
+pub use shard::Shard;

@@ -1,0 +1,207 @@
+//! Data-parallel worker pool over engine instances (the OpenMP substitute).
+//!
+//! Every epoch (Fig. 4): each worker trains its own network replica on its
+//! training shard (per-image SGD), then the leader averages the replica
+//! weights (the "combine" step), evaluates validation/test accuracy with
+//! the combined model, and redistributes it to the replicas. Workers are
+//! real `std::thread`s (scoped), so the wall-clock speedup on a multicore
+//! host is genuine — the *simulated Phi* timing story lives in
+//! [`crate::simulator`], not here.
+
+use std::time::Instant;
+
+use crate::config::ArchSpec;
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::shard::Shard;
+use crate::dataset::Dataset;
+use crate::error::{Error, Result};
+use crate::nn::Network;
+use crate::training::{evaluate, Backend, EngineBackend, EpochStats, TrainReport};
+
+/// Configuration for the pool driver.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Worker threads (= network instances, the paper's `ns = p`).
+    pub workers: usize,
+    pub epochs: usize,
+    pub lr: f32,
+    /// Evaluate at most this many validation/test images per epoch
+    /// (0 = all) — keeps example runtimes sane.
+    pub eval_cap: usize,
+    pub seed: u64,
+    /// Print per-epoch progress lines.
+    pub verbose: bool,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            epochs: 5,
+            lr: 0.02,
+            eval_cap: 1024,
+            seed: 42,
+            verbose: false,
+        }
+    }
+}
+
+/// The engine-backed data-parallel trainer.
+#[derive(Debug)]
+pub struct DataParallelTrainer {
+    pub arch: ArchSpec,
+    pub cfg: PoolConfig,
+    pub metrics: Metrics,
+    /// The combined (averaged) model after the last epoch.
+    pub model: Network,
+}
+
+impl DataParallelTrainer {
+    pub fn new(arch: ArchSpec, cfg: PoolConfig) -> Result<Self> {
+        if cfg.workers == 0 {
+            return Err(Error::Config("need at least one worker".into()));
+        }
+        let model = Network::new(arch.clone(), cfg.seed)?;
+        Ok(DataParallelTrainer { arch, cfg, metrics: Metrics::new(), model })
+    }
+
+    /// Run the full Fig. 4 loop. Returns per-epoch statistics.
+    pub fn train(&mut self, train: &Dataset, test: &Dataset) -> Result<TrainReport> {
+        let p = self.cfg.workers.min(train.len().max(1));
+        let mut report = TrainReport::default();
+        let run_start = Instant::now();
+
+        // Per-worker replicas start from the shared initial model.
+        let mut replicas: Vec<Network> = (0..p).map(|_| self.model.clone()).collect();
+
+        for epoch in 0..self.cfg.epochs {
+            let epoch_start = Instant::now();
+            let lr = self.cfg.lr;
+            let shards = Shard::all(train.len(), p);
+
+            // --- train phase (parallel, one replica per worker) ---------
+            let losses: Vec<Result<f64>> = std::thread::scope(|scope| {
+                let handles: Vec<_> = replicas
+                    .iter_mut()
+                    .zip(shards.iter())
+                    .map(|(net, shard)| {
+                        let shard = *shard;
+                        scope.spawn(move || -> Result<f64> {
+                            let mut sum = 0.0f64;
+                            let mut backend = EngineBackend::new(net.clone());
+                            for idx in shard.range() {
+                                let (img, label) = train.sample(idx);
+                                sum += backend.train_image(img, label, lr)? as f64;
+                            }
+                            *net = backend.net;
+                            Ok(sum / shard.len().max(1) as f64)
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("worker panicked"))
+                    .collect()
+            });
+            let mut train_loss = 0.0f64;
+            for l in losses {
+                train_loss += l?;
+            }
+            train_loss /= p as f64;
+            self.metrics.images_trained += train.len() as u64;
+
+            // --- combine: average replica weights ------------------------
+            self.model = Network::average(&replicas)?;
+            for r in replicas.iter_mut() {
+                *r = self.model.clone();
+            }
+
+            // --- validation + test phases (combined model) --------------
+            let cap = |n: usize| {
+                if self.cfg.eval_cap == 0 { n } else { n.min(self.cfg.eval_cap) }
+            };
+            let backend = EngineBackend::new(self.model.clone());
+            let (val_acc, val_loss) = evaluate(&backend, train, 0..cap(train.len()))?;
+            let (test_acc, _) = evaluate(&backend, test, 0..cap(test.len()))?;
+            self.metrics.images_evaluated += (cap(train.len()) + cap(test.len())) as u64;
+
+            let stats = EpochStats {
+                epoch,
+                train_loss,
+                val_loss,
+                val_accuracy: val_acc,
+                test_accuracy: test_acc,
+                wall_s: epoch_start.elapsed().as_secs_f64(),
+            };
+            if self.cfg.verbose {
+                println!(
+                    "epoch {epoch:>3}: train_loss {train_loss:.4}  val_acc {val_acc:.3}  \
+                     test_acc {test_acc:.3}  ({:.2}s)",
+                    stats.wall_s
+                );
+            }
+            report.epochs.push(stats);
+        }
+
+        report.total_wall_s = run_start.elapsed().as_secs_f64();
+        self.metrics.train_wall_s = report.total_wall_s;
+        report.train_throughput =
+            self.metrics.images_trained as f64 / report.total_wall_s.max(1e-9);
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::load_or_synth;
+
+    fn quick_cfg(workers: usize, epochs: usize) -> PoolConfig {
+        PoolConfig { workers, epochs, lr: 0.02, eval_cap: 64, seed: 7, verbose: false }
+    }
+
+    #[test]
+    fn converges_on_synth_corpus() {
+        let (train, test) = load_or_synth(None, 200, 40, 3);
+        let mut t =
+            DataParallelTrainer::new(ArchSpec::small(), quick_cfg(4, 6)).unwrap();
+        let report = t.train(&train, &test).unwrap();
+        assert_eq!(report.epochs.len(), 6);
+        assert!(report.converging(), "loss curve: {:?}", report.loss_curve());
+        assert!(report.final_test_accuracy() > 0.15, "acc {}", report.final_test_accuracy());
+    }
+
+    #[test]
+    fn single_worker_equals_serial_training() {
+        let (train, test) = load_or_synth(None, 60, 10, 4);
+        let mut t =
+            DataParallelTrainer::new(ArchSpec::small(), quick_cfg(1, 2)).unwrap();
+        let report = t.train(&train, &test).unwrap();
+        assert_eq!(report.epochs.len(), 2);
+        assert!(report.epochs[0].train_loss.is_finite());
+    }
+
+    #[test]
+    fn more_workers_than_images_clamps() {
+        let (train, test) = load_or_synth(None, 5, 2, 9);
+        let mut t =
+            DataParallelTrainer::new(ArchSpec::small(), quick_cfg(16, 1)).unwrap();
+        let report = t.train(&train, &test).unwrap();
+        assert_eq!(report.epochs.len(), 1);
+    }
+
+    #[test]
+    fn metrics_accumulate() {
+        let (train, test) = load_or_synth(None, 50, 10, 5);
+        let mut t =
+            DataParallelTrainer::new(ArchSpec::small(), quick_cfg(2, 2)).unwrap();
+        t.train(&train, &test).unwrap();
+        assert_eq!(t.metrics.images_trained, 100);
+        assert!(t.metrics.images_evaluated > 0);
+    }
+
+    #[test]
+    fn rejects_zero_workers() {
+        assert!(DataParallelTrainer::new(ArchSpec::small(), quick_cfg(0, 1)).is_err());
+    }
+}

@@ -1,0 +1,85 @@
+//! Contiguous shard arithmetic.
+//!
+//! The same ⌈n/p⌉/⌊n/p⌋ split as OpenMP static scheduling and as
+//! [`crate::simulator::workload::chunk_of`] — the first `n mod p` workers
+//! take one extra item. Property tests in `rust/tests/proptests.rs` pin
+//! the invariants (conservation, disjointness, balance).
+
+/// A worker's contiguous range of a dataset.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Shard {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Shard {
+    /// Shard `t` of `n` items over `p` workers.
+    pub fn of(n: usize, p: usize, t: usize) -> Shard {
+        assert!(t < p, "worker {t} out of {p}");
+        let base = n / p;
+        let extra = n % p;
+        let start = t * base + t.min(extra);
+        let len = base + usize::from(t < extra);
+        Shard { start, end: start + len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.start == self.end
+    }
+
+    pub fn range(&self) -> std::ops::Range<usize> {
+        self.start..self.end
+    }
+
+    /// All shards for `n` items over `p` workers.
+    pub fn all(n: usize, p: usize) -> Vec<Shard> {
+        (0..p).map(|t| Shard::of(n, p, t)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shards_partition_exactly() {
+        for (n, p) in [(60_000, 240), (10, 3), (7, 7), (5, 8), (0, 4)] {
+            let shards = Shard::all(n, p);
+            assert_eq!(shards[0].start, 0);
+            assert_eq!(shards[p - 1].end, n);
+            for w in shards.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "n={n} p={p}");
+            }
+            let total: usize = shards.iter().map(|s| s.len()).sum();
+            assert_eq!(total, n);
+        }
+    }
+
+    #[test]
+    fn shard_sizes_differ_by_at_most_one() {
+        let shards = Shard::all(100, 7);
+        let max = shards.iter().map(|s| s.len()).max().unwrap();
+        let min = shards.iter().map(|s| s.len()).min().unwrap();
+        assert!(max - min <= 1);
+    }
+
+    #[test]
+    fn agrees_with_simulator_chunks() {
+        use crate::simulator::workload::chunk_of;
+        for (n, p) in [(60_000, 240), (100, 7), (10_000, 480)] {
+            for t in 0..p {
+                assert_eq!(Shard::of(n, p, t).len(), chunk_of(n, p, t), "n={n} p={p} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_out_of_range_worker() {
+        Shard::of(10, 2, 2);
+    }
+}

@@ -1,0 +1,171 @@
+//! IDX file format (the MNIST container): reader and writer.
+//!
+//! Format: big-endian magic `[0, 0, dtype, ndim]`, then `ndim` u32 dims,
+//! then the payload. MNIST uses dtype 0x08 (unsigned byte): images are
+//! `[n, 28, 28]`, labels `[n]`.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// dtype byte for u8 payloads (the only one MNIST uses).
+pub const DTYPE_U8: u8 = 0x08;
+
+/// A parsed IDX tensor of unsigned bytes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct IdxU8 {
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl IdxU8 {
+    pub fn len(&self) -> usize {
+        self.dims.first().copied().unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Elements per record (product of trailing dims).
+    pub fn record_size(&self) -> usize {
+        self.dims.iter().skip(1).product::<usize>().max(1)
+    }
+
+    /// Borrow record `idx`.
+    pub fn record(&self, idx: usize) -> &[u8] {
+        let sz = self.record_size();
+        &self.data[idx * sz..(idx + 1) * sz]
+    }
+}
+
+/// Read an IDX u8 tensor from any reader.
+pub fn read_idx_u8<R: Read>(mut r: R) -> Result<IdxU8> {
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)
+        .map_err(|e| Error::Dataset(format!("idx header: {e}")))?;
+    if magic[0] != 0 || magic[1] != 0 {
+        return Err(Error::Dataset(format!(
+            "bad idx magic {magic:?} (first two bytes must be zero)"
+        )));
+    }
+    if magic[2] != DTYPE_U8 {
+        return Err(Error::Dataset(format!(
+            "unsupported idx dtype 0x{:02x} (only u8/0x08 supported)",
+            magic[2]
+        )));
+    }
+    let ndim = magic[3] as usize;
+    if ndim == 0 || ndim > 4 {
+        return Err(Error::Dataset(format!("unreasonable idx ndim {ndim}")));
+    }
+    let mut dims = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        let mut b = [0u8; 4];
+        r.read_exact(&mut b)
+            .map_err(|e| Error::Dataset(format!("idx dims: {e}")))?;
+        dims.push(u32::from_be_bytes(b) as usize);
+    }
+    let total: usize = dims.iter().product();
+    if total > 1 << 31 {
+        return Err(Error::Dataset(format!("idx payload too large: {dims:?}")));
+    }
+    let mut data = vec![0u8; total];
+    r.read_exact(&mut data)
+        .map_err(|e| Error::Dataset(format!("idx payload truncated: {e}")))?;
+    Ok(IdxU8 { dims, data })
+}
+
+/// Write an IDX u8 tensor.
+pub fn write_idx_u8<W: Write>(mut w: W, t: &IdxU8) -> Result<()> {
+    let total: usize = t.dims.iter().product();
+    if total != t.data.len() {
+        return Err(Error::Dataset(format!(
+            "dims {:?} disagree with payload {}",
+            t.dims,
+            t.data.len()
+        )));
+    }
+    w.write_all(&[0, 0, DTYPE_U8, t.dims.len() as u8])?;
+    for &d in &t.dims {
+        w.write_all(&(d as u32).to_be_bytes())?;
+    }
+    w.write_all(&t.data)?;
+    Ok(())
+}
+
+/// Load an IDX file from disk (gzip not supported — ungzip first).
+pub fn load_idx_file(path: &Path) -> Result<IdxU8> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| Error::Dataset(format!("{}: {e}", path.display())))?;
+    read_idx_u8(std::io::BufReader::new(file))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> IdxU8 {
+        IdxU8 { dims: vec![3, 2, 2], data: (0..12).collect() }
+    }
+
+    #[test]
+    fn roundtrip() {
+        let t = sample();
+        let mut buf = Vec::new();
+        write_idx_u8(&mut buf, &t).unwrap();
+        let back = read_idx_u8(&buf[..]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn record_access() {
+        let t = sample();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.record_size(), 4);
+        assert_eq!(t.record(1), &[4, 5, 6, 7]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut buf = Vec::new();
+        write_idx_u8(&mut buf, &sample()).unwrap();
+        buf[0] = 1;
+        assert!(read_idx_u8(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_dtype() {
+        let mut buf = Vec::new();
+        write_idx_u8(&mut buf, &sample()).unwrap();
+        buf[2] = 0x0D; // float
+        assert!(read_idx_u8(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let mut buf = Vec::new();
+        write_idx_u8(&mut buf, &sample()).unwrap();
+        buf.truncate(buf.len() - 3);
+        assert!(read_idx_u8(&buf[..]).is_err());
+    }
+
+    #[test]
+    fn rejects_dim_payload_mismatch_on_write() {
+        let t = IdxU8 { dims: vec![5], data: vec![1, 2] };
+        let mut buf = Vec::new();
+        assert!(write_idx_u8(&mut buf, &t).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = crate::util::tmp::TempDir::new("idx").unwrap();
+        let path = dir.path().join("t.idx");
+        let t = sample();
+        let mut f = std::fs::File::create(&path).unwrap();
+        write_idx_u8(&mut f, &t).unwrap();
+        drop(f);
+        assert_eq!(load_idx_file(&path).unwrap(), t);
+    }
+}

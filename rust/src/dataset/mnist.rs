@@ -1,0 +1,186 @@
+//! Dataset assembly: real MNIST IDX files if present, synthetic otherwise.
+
+use std::path::Path;
+
+use crate::dataset::idx::load_idx_file;
+use crate::dataset::synth;
+use crate::dataset::{IMAGE_HW, IMAGE_PIXELS};
+use crate::error::{Error, Result};
+
+/// An in-memory labelled image set (29×29 f32 images in [0,1]).
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub images: Vec<Vec<f32>>,
+    pub labels: Vec<usize>,
+    /// "mnist" or "synthetic" — recorded in experiment output.
+    pub source: &'static str,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.images.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.images.is_empty()
+    }
+
+    /// Borrow sample `idx`.
+    pub fn sample(&self, idx: usize) -> (&[f32], usize) {
+        (&self.images[idx], self.labels[idx])
+    }
+
+    /// Truncate to the first `n` samples (cheap workload scaling).
+    pub fn truncated(mut self, n: usize) -> Dataset {
+        self.images.truncate(n);
+        self.labels.truncate(n);
+        self
+    }
+}
+
+/// Pad a 28×28 u8 MNIST image into the 29×29 f32 canvas (Cireşan pads with
+/// a zero column/row; values scaled to [0,1]).
+pub fn pad_mnist_image(raw: &[u8]) -> Vec<f32> {
+    debug_assert_eq!(raw.len(), 28 * 28);
+    let mut img = vec![0.0f32; IMAGE_PIXELS];
+    for y in 0..28 {
+        for x in 0..28 {
+            img[y * IMAGE_HW + x] = raw[y * 28 + x] as f32 / 255.0;
+        }
+    }
+    img
+}
+
+/// Load MNIST from a directory holding the standard (un-gzipped) files:
+/// `train-images-idx3-ubyte`, `train-labels-idx1-ubyte`,
+/// `t10k-images-idx3-ubyte`, `t10k-labels-idx1-ubyte`.
+pub fn load_mnist_dir(dir: &Path) -> Result<(Dataset, Dataset)> {
+    let load_pair = |img_name: &str, lab_name: &str| -> Result<Dataset> {
+        let images_idx = load_idx_file(&dir.join(img_name))?;
+        let labels_idx = load_idx_file(&dir.join(lab_name))?;
+        if images_idx.dims.len() != 3
+            || images_idx.dims[1] != 28
+            || images_idx.dims[2] != 28
+        {
+            return Err(Error::Dataset(format!(
+                "{img_name}: expected [n,28,28], got {:?}",
+                images_idx.dims
+            )));
+        }
+        if labels_idx.len() != images_idx.len() {
+            return Err(Error::Dataset(format!(
+                "{img_name}/{lab_name}: {} images vs {} labels",
+                images_idx.len(),
+                labels_idx.len()
+            )));
+        }
+        let images = (0..images_idx.len())
+            .map(|i| pad_mnist_image(images_idx.record(i)))
+            .collect();
+        let labels = labels_idx.data.iter().map(|&l| l as usize).collect();
+        Ok(Dataset { images, labels, source: "mnist" })
+    };
+    Ok((
+        load_pair("train-images-idx3-ubyte", "train-labels-idx1-ubyte")?,
+        load_pair("t10k-images-idx3-ubyte", "t10k-labels-idx1-ubyte")?,
+    ))
+}
+
+/// Load real MNIST from `dir` when available, else synthesize `(n_train,
+/// n_test)` samples (documented substitution — DESIGN.md §1).
+pub fn load_or_synth(
+    dir: Option<&Path>,
+    n_train: usize,
+    n_test: usize,
+    seed: u64,
+) -> (Dataset, Dataset) {
+    if let Some(dir) = dir {
+        if let Ok((train, test)) = load_mnist_dir(dir) {
+            return (train.truncated(n_train), test.truncated(n_test));
+        }
+    }
+    let (train_images, train_labels) = synth::generate(n_train, seed);
+    let (test_images, test_labels) = synth::generate(n_test, seed ^ 0xDEAD_BEEF);
+    (
+        Dataset { images: train_images, labels: train_labels, source: "synthetic" },
+        Dataset { images: test_images, labels: test_labels, source: "synthetic" },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::idx::{write_idx_u8, IdxU8};
+
+    #[test]
+    fn synth_fallback_shapes() {
+        let (train, test) = load_or_synth(None, 50, 20, 7);
+        assert_eq!(train.len(), 50);
+        assert_eq!(test.len(), 20);
+        assert_eq!(train.images[0].len(), IMAGE_PIXELS);
+        assert_eq!(train.source, "synthetic");
+    }
+
+    #[test]
+    fn pad_mnist_image_keeps_values() {
+        let mut raw = vec![0u8; 28 * 28];
+        raw[0] = 255;
+        raw[27] = 128;
+        let img = pad_mnist_image(&raw);
+        assert_eq!(img.len(), IMAGE_PIXELS);
+        assert!((img[0] - 1.0).abs() < 1e-6);
+        assert!((img[27] - 128.0 / 255.0).abs() < 1e-6);
+        // Padded column/row zero.
+        assert_eq!(img[28], 0.0);
+        assert_eq!(img[28 * IMAGE_HW], 0.0);
+    }
+
+    #[test]
+    fn loads_idx_mnist_dir() {
+        let dir = crate::util::tmp::TempDir::new("idx").unwrap();
+        let write = |name: &str, t: &IdxU8| {
+            let mut f = std::fs::File::create(dir.path().join(name)).unwrap();
+            write_idx_u8(&mut f, t).unwrap();
+        };
+        let images = IdxU8 { dims: vec![3, 28, 28], data: vec![100; 3 * 784] };
+        let labels = IdxU8 { dims: vec![3], data: vec![1, 2, 3] };
+        write("train-images-idx3-ubyte", &images);
+        write("train-labels-idx1-ubyte", &labels);
+        write("t10k-images-idx3-ubyte", &images);
+        write("t10k-labels-idx1-ubyte", &labels);
+
+        let (train, test) = load_mnist_dir(dir.path()).unwrap();
+        assert_eq!(train.len(), 3);
+        assert_eq!(test.labels, vec![1, 2, 3]);
+        assert_eq!(train.source, "mnist");
+    }
+
+    #[test]
+    fn rejects_mismatched_label_count() {
+        let dir = crate::util::tmp::TempDir::new("idx").unwrap();
+        let write = |name: &str, t: &IdxU8| {
+            let mut f = std::fs::File::create(dir.path().join(name)).unwrap();
+            write_idx_u8(&mut f, t).unwrap();
+        };
+        write("train-images-idx3-ubyte",
+              &IdxU8 { dims: vec![3, 28, 28], data: vec![0; 3 * 784] });
+        write("train-labels-idx1-ubyte", &IdxU8 { dims: vec![2], data: vec![0, 1] });
+        write("t10k-images-idx3-ubyte",
+              &IdxU8 { dims: vec![1, 28, 28], data: vec![0; 784] });
+        write("t10k-labels-idx1-ubyte", &IdxU8 { dims: vec![1], data: vec![0] });
+        assert!(load_mnist_dir(dir.path()).is_err());
+    }
+
+    #[test]
+    fn missing_dir_falls_back_to_synth() {
+        let (train, _) =
+            load_or_synth(Some(Path::new("/definitely/not/here")), 10, 5, 1);
+        assert_eq!(train.source, "synthetic");
+    }
+
+    #[test]
+    fn truncated_limits_len() {
+        let (train, _) = load_or_synth(None, 30, 5, 1);
+        assert_eq!(train.truncated(10).len(), 10);
+    }
+}

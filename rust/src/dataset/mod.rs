@@ -1,0 +1,21 @@
+//! Dataset handling: MNIST IDX files + the synthetic substitute corpus.
+//!
+//! The paper trains on MNIST (60k train / 10k test, 28×28, padded to 29×29
+//! by Cireşan's code). Real IDX files are loaded when present
+//! ([`idx`] / [`mnist`]); when they are not (this reproduction environment
+//! has no network access), [`synth`] procedurally renders a deterministic
+//! digit corpus with the same shapes and label distribution, exercising
+//! identical code paths (documented substitution, DESIGN.md §1).
+
+pub mod idx;
+pub mod mnist;
+pub mod synth;
+
+pub use mnist::{Dataset, load_or_synth};
+
+/// Image side after padding (Cireşan pads 28×28 MNIST to 29×29).
+pub const IMAGE_HW: usize = 29;
+/// Pixels per image.
+pub const IMAGE_PIXELS: usize = IMAGE_HW * IMAGE_HW;
+/// Number of classes.
+pub const NUM_CLASSES: usize = 10;

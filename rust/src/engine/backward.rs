@@ -1,0 +1,288 @@
+//! Back-propagation and SGD update (per paper Section II).
+//!
+//! Propagates δE/δy backward layer by layer: at the output the softmax
+//! cross-entropy gradient is `p − onehot(label)`; dense and conv layers
+//! push their deltas through the weights (δE/δy_i = Σ w_ij · δE/δx_j, the
+//! expression in the paper) and accumulate weight gradients; pooling routes
+//! deltas through the recorded argmax. Weights are updated in place —
+//! plain SGD, matching the JAX train step.
+
+use crate::config::arch::ResolvedLayer;
+use crate::engine::forward::Activations;
+use crate::engine::softmax;
+use crate::error::{Error, Result};
+use crate::nn::Network;
+
+/// Back-propagate one image and apply the SGD update.
+/// Returns the cross-entropy loss at the (pre-update) forward pass.
+pub fn backward(
+    net: &mut Network,
+    acts: &Activations,
+    image: &[f32],
+    label: usize,
+    lr: f32,
+) -> Result<f32> {
+    let shapes: Vec<_> = net.shapes().to_vec();
+    if label >= acts.logits().len() {
+        return Err(Error::Config(format!(
+            "label {label} out of range for {} outputs",
+            acts.logits().len()
+        )));
+    }
+
+    // Output gradient: softmax CE.
+    let probs = softmax(acts.logits());
+    let loss = -probs[label].max(1e-12).ln();
+    let mut delta: Vec<f32> = probs;
+    delta[label] -= 1.0;
+
+    // Walk layers backward. `param_idx` indexes trainable layers from the
+    // end.
+    let n_trainable = net.params.len();
+    let mut param_idx = n_trainable;
+
+    for li in (1..shapes.len()).rev() {
+        let prev_out: &[f32] = if li == 1 { image } else { &acts.outs[li - 1] };
+        match shapes[li].spec {
+            ResolvedLayer::Dense { units, fan_in, last } => {
+                param_idx -= 1;
+                let p = &mut net.params[param_idx];
+                // δ wrt pre-activation: through tanh' unless output layer.
+                let mut dz = delta;
+                if !last {
+                    for (d, &y) in dz.iter_mut().zip(acts.outs[li].iter()) {
+                        *d *= 1.0 - y * y;
+                    }
+                }
+                // Delta for the previous layer before updating weights.
+                let mut dprev = vec![0.0f32; fan_in];
+                for f in 0..fan_in {
+                    let wrow = f * units;
+                    let mut acc = 0.0f32;
+                    for u in 0..units {
+                        acc += p.w[wrow + u] * dz[u];
+                    }
+                    dprev[f] = acc;
+                }
+                // SGD update.
+                for f in 0..fan_in {
+                    let x = prev_out[f];
+                    if x != 0.0 {
+                        let wrow = f * units;
+                        for u in 0..units {
+                            p.w[wrow + u] -= lr * x * dz[u];
+                        }
+                    }
+                }
+                for u in 0..units {
+                    p.b[u] -= lr * dz[u];
+                }
+                delta = dprev;
+            }
+            ResolvedLayer::Pool { window, maps, in_hw, out_hw } => {
+                let argmax = acts.pool_argmax[li]
+                    .as_ref()
+                    .ok_or_else(|| Error::Config("pool layer missing argmax".into()))?;
+                let mut dprev = vec![0.0f32; maps * in_hw * in_hw];
+                for (o, &src) in argmax.iter().enumerate() {
+                    dprev[src] += delta[o];
+                }
+                let _ = (window, out_hw);
+                delta = dprev;
+            }
+            ResolvedLayer::Conv { maps, kernel, in_maps, in_hw, out_hw } => {
+                param_idx -= 1;
+                let p = &mut net.params[param_idx];
+                let ksq = kernel * kernel;
+                let fan_in = in_maps * ksq;
+                // Through tanh'.
+                let mut dz = delta;
+                for (d, &y) in dz.iter_mut().zip(acts.outs[li].iter()) {
+                    *d *= 1.0 - y * y;
+                }
+                let mut dprev = vec![0.0f32; in_maps * in_hw * in_hw];
+                // Accumulate weight gradients separately so every output
+                // position sees the pre-update weights (true batch gradient
+                // for this image, matching the JAX artifact's semantics).
+                let mut dw = vec![0.0f32; maps * fan_in];
+                if out_hw < 10 {
+                    // Narrow maps: per-neuron scatter order (see
+                    // forward.rs §Perf L3-3 for the adaptive rationale).
+                    for m in 0..maps {
+                        let wbase = m * fan_in;
+                        let obase = m * out_hw * out_hw;
+                        let mut db = 0.0f32;
+                        for oy in 0..out_hw {
+                            for ox in 0..out_hw {
+                                let d = dz[obase + oy * out_hw + ox];
+                                if d == 0.0 {
+                                    continue;
+                                }
+                                db += d;
+                                for im in 0..in_maps {
+                                    let ibase = im * in_hw * in_hw;
+                                    let wmap = wbase + im * ksq;
+                                    for ky in 0..kernel {
+                                        let irow = ibase + (oy + ky) * in_hw + ox;
+                                        let wrow = wmap + ky * kernel;
+                                        for kx in 0..kernel {
+                                            dprev[irow + kx] += p.w[wrow + kx] * d;
+                                            dw[wrow + kx] += d * prev_out[irow + kx];
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                        p.b[m] -= lr * db;
+                    }
+                } else {
+                    // Wide maps: weight-hoisted row order — the inner ox
+                    // loops walk dz/dprev/prev rows contiguously and
+                    // auto-vectorize (§Perf L3-4).
+                    for m in 0..maps {
+                        let wbase = m * fan_in;
+                        let obase = m * out_hw * out_hw;
+                        let db: f32 = dz[obase..obase + out_hw * out_hw].iter().sum();
+                        for im in 0..in_maps {
+                            let ibase = im * in_hw * in_hw;
+                            let wmap = wbase + im * ksq;
+                            for ky in 0..kernel {
+                                for kx in 0..kernel {
+                                    let w = p.w[wmap + ky * kernel + kx];
+                                    let mut g = 0.0f32;
+                                    for oy in 0..out_hw {
+                                        let orow = obase + oy * out_hw;
+                                        let irow = ibase + (oy + ky) * in_hw + kx;
+                                        let dz_row = &dz[orow..orow + out_hw];
+                                        let dp_row = &mut dprev[irow..irow + out_hw];
+                                        let pv_row = &prev_out[irow..irow + out_hw];
+                                        for ((dp, &d), &x) in
+                                            dp_row.iter_mut().zip(dz_row).zip(pv_row)
+                                        {
+                                            *dp += w * d;
+                                            g += d * x;
+                                        }
+                                    }
+                                    dw[wmap + ky * kernel + kx] = g;
+                                }
+                            }
+                        }
+                        p.b[m] -= lr * db;
+                    }
+                }
+                for (w, g) in p.w.iter_mut().zip(dw.iter()) {
+                    *w -= lr * g;
+                }
+                delta = dprev;
+            }
+            ResolvedLayer::Input { .. } => break,
+        }
+    }
+
+    Ok(loss)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+    use crate::engine::forward::forward;
+    use crate::engine::train_image;
+
+    fn image(seed: u32) -> Vec<f32> {
+        (0..841)
+            .map(|i| {
+                (((i as u32).wrapping_mul(2654435761).wrapping_add(seed) >> 16) & 0xff) as f32
+                    / 255.0
+            })
+            .collect()
+    }
+
+    /// Finite-difference gradient check on a handful of parameters.
+    fn fd_check(arch: ArchSpec, param_layer: usize, indices: &[usize]) {
+        let img = image(17);
+        let label = 4usize;
+        let eps = 2e-3f32;
+
+        for &wi in indices {
+            let base = Network::new(arch.clone(), 31).unwrap();
+
+            // Analytic gradient: run one SGD step with lr and recover
+            // grad = (w_before - w_after) / lr.
+            let lr = 1e-3f32;
+            let mut net = base.clone();
+            let _ = train_image(&mut net, &img, label, lr).unwrap();
+            let analytic =
+                (base.params[param_layer].w[wi] - net.params[param_layer].w[wi]) / lr;
+
+            // Numeric gradient by central differences on the loss.
+            let loss_at = |delta: f32| -> f32 {
+                let mut n = base.clone();
+                n.params[param_layer].w[wi] += delta;
+                let acts = forward(&n, &img).unwrap();
+                let probs = crate::engine::softmax(acts.logits());
+                -probs[label].max(1e-12).ln()
+            };
+            let numeric = (loss_at(eps) - loss_at(-eps)) / (2.0 * eps);
+
+            let denom = numeric.abs().max(analytic.abs()).max(1e-4);
+            let rel = (numeric - analytic).abs() / denom;
+            assert!(
+                rel < 0.08,
+                "layer {param_layer} w[{wi}]: analytic {analytic} vs numeric {numeric}"
+            );
+        }
+    }
+
+    #[test]
+    fn gradient_check_small_conv_weights() {
+        fd_check(ArchSpec::small(), 0, &[0, 7, 33, 79]);
+    }
+
+    #[test]
+    fn gradient_check_small_dense_weights() {
+        fd_check(ArchSpec::small(), 1, &[0, 123, 4567, 8449]);
+    }
+
+    #[test]
+    fn gradient_check_medium_second_conv() {
+        fd_check(ArchSpec::medium(), 1, &[0, 1001, 19_999]);
+    }
+
+    #[test]
+    fn loss_decreases_over_epoch_on_tiny_set() {
+        let mut net = Network::new(ArchSpec::small(), 77).unwrap();
+        // Learnable structured inputs (synthetic digit corpus).
+        let (images, labels) = crate::dataset::synth::generate(20, 5);
+        let epoch_loss = |net: &mut Network, lr: f32| -> f32 {
+            let mut total = 0.0;
+            for (img, &lab) in images.iter().zip(labels.iter()) {
+                total += train_image(net, img, lab, lr).unwrap();
+            }
+            total / images.len() as f32
+        };
+        let first = epoch_loss(&mut net, 0.01);
+        let mut last = first;
+        for _ in 0..40 {
+            last = epoch_loss(&mut net, 0.01);
+        }
+        assert!(last < first * 0.8, "{first} -> {last}");
+    }
+
+    #[test]
+    fn rejects_out_of_range_label() {
+        let mut net = Network::new(ArchSpec::small(), 1).unwrap();
+        let img = image(5);
+        let acts = forward(&net, &img).unwrap();
+        assert!(backward(&mut net, &acts, &img, 99, 0.01).is_err());
+    }
+
+    #[test]
+    fn zero_lr_keeps_weights() {
+        let base = Network::new(ArchSpec::small(), 13).unwrap();
+        let mut net = base.clone();
+        let img = image(2);
+        train_image(&mut net, &img, 1, 0.0).unwrap();
+        assert_eq!(net.params, base.params);
+    }
+}

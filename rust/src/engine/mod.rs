@@ -1,0 +1,115 @@
+//! Pure-Rust CNN forward/backward — the Cireşan-code substitute.
+//!
+//! The paper parallelizes Cireşan's C/C++ CNN training code [22]; we rebuild
+//! that compute here so the system is self-contained: the engine is the
+//! fallback training backend (no artifacts needed), the numerical oracle for
+//! integration tests, and the reference the PJRT path is compared against.
+//!
+//! Semantics match `python/compile/model.py`: tanh hidden activations,
+//! non-overlapping max pooling, softmax cross-entropy output, per-batch SGD.
+//! The layer layouts are documented on [`crate::nn::Network`].
+
+pub mod backward;
+pub mod forward;
+
+use crate::config::arch::ResolvedLayer;
+use crate::error::Result;
+use crate::nn::Network;
+
+pub use backward::backward;
+pub use forward::{forward, Activations};
+
+/// Stable softmax over logits.
+pub fn softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = logits.iter().map(|&z| (z - max).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum).collect()
+}
+
+/// Cross-entropy of a softmax distribution against an integer label.
+pub fn cross_entropy(probs: &[f32], label: usize) -> f32 {
+    -probs[label].max(1e-12).ln()
+}
+
+/// One SGD step on a single image. Returns the loss before the update.
+pub fn train_image(net: &mut Network, image: &[f32], label: usize, lr: f32) -> Result<f32> {
+    let acts = forward(net, image)?;
+    backward(net, &acts, image, label, lr)
+}
+
+/// Forward-only classification: returns (predicted class, loss).
+pub fn classify(net: &Network, image: &[f32], label: usize) -> Result<(usize, f32)> {
+    let acts = forward(net, image)?;
+    let probs = softmax(acts.logits());
+    let pred = probs
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    Ok((pred, cross_entropy(&probs, label)))
+}
+
+/// Whether the final layer of the arch is the linear output (sanity helper).
+pub fn output_units(net: &Network) -> usize {
+    match net.shapes().last().map(|l| l.spec) {
+        Some(ResolvedLayer::Dense { units, .. }) => units,
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let p = softmax(&[1000.0, 1000.0, 1000.0]);
+        assert!((p.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(p.iter().all(|&x| (x - 1.0 / 3.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn cross_entropy_of_confident_correct_is_small() {
+        assert!(cross_entropy(&[0.01, 0.99], 1) < 0.02);
+        assert!(cross_entropy(&[0.99, 0.01], 1) > 4.0);
+    }
+
+    #[test]
+    fn train_reduces_loss_on_one_image() {
+        let mut net = Network::new(ArchSpec::small(), 11).unwrap();
+        let image: Vec<f32> = (0..841).map(|i| ((i * 7919) % 97) as f32 / 97.0).collect();
+        let first = train_image(&mut net, &image, 3, 0.1).unwrap();
+        let mut last = first;
+        for _ in 0..20 {
+            last = train_image(&mut net, &image, 3, 0.1).unwrap();
+        }
+        assert!(last < first, "{last} !< {first}");
+    }
+
+    #[test]
+    fn classify_returns_valid_class() {
+        let net = Network::new(ArchSpec::small(), 2).unwrap();
+        let image = vec![0.5; 841];
+        let (pred, loss) = classify(&net, &image, 0).unwrap();
+        assert!(pred < 10);
+        assert!(loss.is_finite());
+    }
+
+    #[test]
+    fn initial_loss_near_ln10() {
+        // Untrained network ≈ uniform prediction over 10 classes.
+        let net = Network::new(ArchSpec::small(), 5).unwrap();
+        let image = vec![0.1; 841];
+        let (_, loss) = classify(&net, &image, 7).unwrap();
+        assert!((loss - 10f32.ln()).abs() < 0.7, "{loss}");
+    }
+
+    #[test]
+    fn output_units_is_ten() {
+        let net = Network::new(ArchSpec::medium(), 1).unwrap();
+        assert_eq!(output_units(&net), 10);
+    }
+}

@@ -1,0 +1,41 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for all micdl subsystems.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Configuration rejected (bad layer stack, invalid parameter, ...).
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Dataset file missing or malformed (IDX magic, truncation, ...).
+    #[error("dataset error: {0}")]
+    Dataset(String),
+
+    /// Simulator invariant violated or invalid workload.
+    #[error("simulator error: {0}")]
+    Simulator(String),
+
+    /// PJRT / XLA runtime failure (artifact load, compile, execute).
+    #[error("runtime error: {0}")]
+    Runtime(String),
+
+    /// Artifact registry problem (missing meta.json, shape mismatch, ...).
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    #[error("json error: {0}")]
+    Json(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,108 @@
+//! Ablation studies over the simulator's design choices (DESIGN.md §7).
+//!
+//! Each ablation switches one micsim mechanism off (or sweeps it) and
+//! reports how the models' average accuracy Δ responds — quantifying how
+//! much each modelled effect contributes to the "measured" behaviour the
+//! analytic models miss:
+//!
+//! * CPI ladder (SMT round-robin)  → flat ladder
+//! * L2 sharing pressure           → α = 0
+//! * Ring/tag-directory growth     → β = 0
+//! * Channel contention            → traffic = 0 (floor only)
+//! * exec/mem split sweep          → exec_fraction ∈ {0.6, 0.75, 0.9}
+
+use crate::config::{ArchSpec, RunConfig};
+use crate::error::Result;
+use crate::experiments::ExpOptions;
+use crate::perfmodel::{accuracy, both_models};
+use crate::report::Table;
+use crate::simulator::SimConfig;
+
+fn delta_pair(arch: &ArchSpec, cfg: &SimConfig, opts: &ExpOptions) -> Result<(f64, f64)> {
+    let (a, b) = both_models(arch, opts.params)?;
+    let threads = RunConfig::MEASURED_THREADS;
+    Ok((
+        accuracy::average_delta(arch, &a, &threads, cfg)?,
+        accuracy::average_delta(arch, &b, &threads, cfg)?,
+    ))
+}
+
+pub fn run(opts: &ExpOptions) -> Result<String> {
+    let mut variants: Vec<(String, SimConfig)> = vec![
+        ("baseline".into(), SimConfig::default()),
+    ];
+    {
+        let mut c = SimConfig::default();
+        c.machine.cpi_ladder = vec![1.0, 1.0, 1.0, 1.0];
+        variants.push(("no CPI ladder".into(), c));
+    }
+    {
+        let mut c = SimConfig::default();
+        c.l2_alpha = 0.0;
+        variants.push(("no L2 sharing".into(), c));
+    }
+    {
+        let mut c = SimConfig::default();
+        c.ring_beta = 0.0;
+        variants.push(("no ring growth".into(), c));
+    }
+    for frac in [0.6, 0.9] {
+        let mut c = SimConfig::default();
+        c.exec_fraction = frac;
+        variants.push((format!("exec fraction {frac}"), c));
+    }
+
+    let mut t = Table::new(
+        "Ablations — average model accuracy Δ [%] per simulator variant",
+        &[
+            "variant",
+            "small Δa", "small Δb",
+            "medium Δa", "medium Δb",
+            "large Δa", "large Δb",
+        ],
+    );
+    for (name, cfg) in &variants {
+        let mut cells = vec![name.clone()];
+        for arch in ArchSpec::paper_archs() {
+            let (da, db) = delta_pair(&arch, cfg, opts)?;
+            cells.push(format!("{da:.1}"));
+            cells.push(format!("{db:.1}"));
+        }
+        t.row(cells);
+    }
+    let mut out = if opts.csv { t.to_csv() } else { t.render() };
+    if !opts.csv {
+        out.push_str(
+            "reading: each row disables/sweeps one micsim mechanism; the Δ \
+             shift shows how much of the model-vs-machine gap that mechanism \
+             explains.\n",
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_variants() {
+        let out = run(&ExpOptions::default()).unwrap();
+        for v in ["baseline", "no CPI ladder", "no L2 sharing", "no ring growth"] {
+            assert!(out.contains(v), "{v}");
+        }
+    }
+
+    #[test]
+    fn disabling_cpi_ladder_changes_deltas() {
+        // The CPI ladder is a first-order effect: removing it must move
+        // the small-CNN Δ for strategy (b) noticeably.
+        let opts = ExpOptions::default();
+        let base = delta_pair(&ArchSpec::small(), &SimConfig::default(), &opts).unwrap();
+        let mut flat = SimConfig::default();
+        flat.machine.cpi_ladder = vec![1.0, 1.0, 1.0, 1.0];
+        let ablated = delta_pair(&ArchSpec::small(), &flat, &opts).unwrap();
+        assert!((base.1 - ablated.1).abs() > 1.0,
+                "Δb insensitive to CPI ladder: {base:?} vs {ablated:?}");
+    }
+}

@@ -1,0 +1,56 @@
+//! Cluster extension experiment (the paper's Section VII future work).
+//!
+//! Predicted training time and parallel efficiency for 1–16 Phi nodes
+//! per architecture, over InfiniBand FDR and 10 GbE interconnects
+//! ([`crate::perfmodel::cluster`]). Not a paper table — the extension
+//! deliverable.
+
+use crate::config::{ArchSpec, RunConfig};
+use crate::error::Result;
+use crate::experiments::ExpOptions;
+use crate::perfmodel::cluster::{ClusterModel, Interconnect};
+use crate::perfmodel::StrategyB;
+use crate::report::Table;
+
+pub fn run(opts: &ExpOptions) -> Result<String> {
+    let nodes = [1usize, 2, 4, 8, 16];
+    let mut out = String::new();
+    for arch in ArchSpec::paper_archs() {
+        let mut t = Table::new(
+            format!(
+                "cluster extension — {} CNN over N Phi nodes (strategy b, 240T/node)",
+                arch.name
+            ),
+            &["nodes", "IB: minutes", "IB: efficiency", "10GbE: minutes", "10GbE: efficiency"],
+        );
+        let run = RunConfig::paper_default(&arch.name, 240);
+        let node_b = |_| StrategyB::new(&arch, opts.params);
+        let ib = ClusterModel::new(&arch, node_b(())?, Interconnect::infiniband_fdr())?;
+        let ge = ClusterModel::new(&arch, node_b(())?, Interconnect::ten_gbe())?;
+        for &n in &nodes {
+            let a = ib.predict(&run, n)?;
+            let b = ge.predict(&run, n)?;
+            t.row(vec![
+                n.to_string(),
+                format!("{:.1}", a.total_s / 60.0),
+                format!("{:.3}", a.efficiency),
+                format!("{:.1}", b.total_s / 60.0),
+                format!("{:.3}", b.efficiency),
+            ]);
+        }
+        out.push_str(&if opts.csv { t.to_csv() } else { t.render() });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_archs_and_node_counts() {
+        let out = run(&ExpOptions::default()).unwrap();
+        assert!(out.contains("small") && out.contains("large"));
+        assert!(out.contains("16"));
+    }
+}

@@ -1,0 +1,52 @@
+//! Fig. 1 — peak performance of many-core processors vs TOP500 #1 systems.
+
+use crate::error::Result;
+use crate::experiments::ExpOptions;
+use crate::report::{paper, series, Series, Table};
+
+pub fn run(opts: &ExpOptions) -> Result<String> {
+    let mut t = Table::new(
+        "Fig. 1 — many-core devices vs TOP500 #1 peak performance (TFLOP/s)",
+        &["kind", "system", "year", "peak TFLOP/s"],
+    );
+    for (name, year, tflops) in paper::FIG1_TOP500 {
+        t.row(vec!["top500 #1".into(), name.into(), year.to_string(), format!("{tflops}")]);
+    }
+    for (name, year, tflops) in paper::FIG1_DEVICES {
+        t.row(vec!["device".into(), name.into(), year.to_string(), format!("{tflops}")]);
+    }
+    if opts.csv {
+        return Ok(t.to_csv());
+    }
+    let mut out = t.render();
+    // The figure's point: KNL (2016) ≈ ASCI Red (#1 in 1997/2000).
+    let knl = paper::FIG1_DEVICES[2];
+    let red = paper::FIG1_TOP500[0];
+    out.push_str(&format!(
+        "note: {} ({}, {} TFLOP/s) is comparable to {} (#1 {}, {} TFLOP/s)\n",
+        knl.0, knl.1, knl.2, red.0, red.1, red.2
+    ));
+    let top: Series = Series::from_points(
+        "top500 #1",
+        &paper::FIG1_TOP500.map(|(_, y, v)| (y as f64, v)),
+    );
+    let dev = Series::from_points(
+        "many-core device",
+        &paper::FIG1_DEVICES.map(|(_, y, v)| (y as f64, v)),
+    );
+    out.push_str(&series::render_chart("Fig. 1", &[top, dev], "TFLOP/s"));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_both_series() {
+        let out = run(&ExpOptions::default()).unwrap();
+        assert!(out.contains("ASCI Red"));
+        assert!(out.contains("Xeon Phi"));
+        assert!(out.contains("comparable"));
+    }
+}

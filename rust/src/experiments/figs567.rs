@@ -1,0 +1,114 @@
+//! Figures 5–7 — predicted vs measured execution times per architecture.
+//!
+//! For each measured thread count {1, 15, 30, 60, 120, 180, 240}:
+//! strategy (a) prediction, strategy (b) prediction, and the micsim
+//! "measurement", plus per-point Δ — the per-architecture view behind
+//! Table IX. Rendered as an aligned table and a log-scale ASCII chart
+//! mirroring the paper's figures.
+
+use crate::config::{ArchSpec, RunConfig};
+use crate::error::Result;
+use crate::experiments::ExpOptions;
+use crate::perfmodel::{both_models, delta_pct, PerfModel};
+use crate::report::{series, Series, Table};
+use crate::simulator::{probe, SimConfig};
+
+pub fn run(arch_name: &str, opts: &ExpOptions) -> Result<String> {
+    let arch = ArchSpec::by_name(arch_name)?;
+    let fig = match arch_name {
+        "small" => "Fig. 5",
+        "medium" => "Fig. 6",
+        _ => "Fig. 7",
+    };
+    let cfg = SimConfig::default();
+    let (model_a, model_b) = both_models(&arch, opts.params)?;
+
+    let mut t = Table::new(
+        format!(
+            "{fig} — {arch_name} CNN: predicted vs measured execution time [s] \
+             (ep={}, i=60k, it=10k)",
+            RunConfig::paper_default(arch_name, 1).epochs
+        ),
+        &["threads", "predicted (a)", "predicted (b)", "measured (micsim)",
+          "Δa %", "Δb %"],
+    );
+
+    let mut pred_a = Series::new("predicted (a)");
+    let mut pred_b = Series::new("predicted (b)");
+    let mut measured = Series::new("measured");
+    for &p in RunConfig::MEASURED_THREADS.iter() {
+        let run = RunConfig::paper_default(arch_name, p);
+        let a = model_a.predict(&run)?.total_s;
+        let b = model_b.predict(&run)?.total_s;
+        let m = probe::measured_execution_s(&arch, p, &cfg)?;
+        pred_a.push(p as f64, a);
+        pred_b.push(p as f64, b);
+        measured.push(p as f64, m);
+        t.row(vec![
+            p.to_string(),
+            format!("{a:.0}"),
+            format!("{b:.0}"),
+            format!("{m:.0}"),
+            format!("{:.1}", delta_pct(m, a)),
+            format!("{:.1}", delta_pct(m, b)),
+        ]);
+    }
+
+    if opts.csv {
+        return Ok(t.to_csv());
+    }
+    let mut out = t.render();
+    out.push_str(&series::render_chart(
+        &format!("{fig} ({arch_name})"),
+        &[pred_a, pred_b, measured],
+        "seconds",
+    ));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_three_figures_render() {
+        for arch in ["small", "medium", "large"] {
+            let out = run(arch, &ExpOptions::default()).unwrap();
+            assert!(out.contains("240"));
+            assert!(out.contains("Δa"));
+            assert!(out.contains("legend"));
+        }
+    }
+
+    #[test]
+    fn predictions_track_measurements_within_30pct() {
+        // The "shape holds" criterion: every point within 30% for both
+        // models (the paper's own average deviations are 7–17%).
+        let cfg = SimConfig::default();
+        for name in ["small", "medium", "large"] {
+            let arch = ArchSpec::by_name(name).unwrap();
+            let (a, b) = both_models(&arch, Default::default()).unwrap();
+            for &p in RunConfig::MEASURED_THREADS.iter() {
+                let run = RunConfig::paper_default(name, p);
+                let m = probe::measured_execution_s(&arch, p, &cfg).unwrap();
+                for model in [&a as &dyn PerfModel, &b as &dyn PerfModel] {
+                    let pred = model.predict(&run).unwrap().total_s;
+                    let d = delta_pct(m, pred);
+                    assert!(d < 30.0, "{name} p={p} model {}: Δ={d:.1}%", model.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn measured_decreases_from_120_to_240_for_large() {
+        // The paper's observation: "while the predicted execution time
+        // increases between 120 and 240 threads, the measured execution
+        // time decreases" (the CPI-ladder flattening the models).
+        let cfg = SimConfig::default();
+        let arch = ArchSpec::large();
+        let m120 = probe::measured_execution_s(&arch, 120, &cfg).unwrap();
+        let m240 = probe::measured_execution_s(&arch, 240, &cfg).unwrap();
+        assert!(m240 < m120, "measured: {m120} -> {m240}");
+    }
+}

@@ -1,0 +1,110 @@
+//! One module per paper table/figure — the reproduction index (DESIGN.md §4).
+//!
+//! Every experiment renders a [`crate::report::Table`] (and, for figures,
+//! an ASCII chart) containing **our** numbers next to the **paper's**
+//! published values, so the comparison is in the output itself, not in
+//! prose. `repro exp <id>` runs one; `repro exp all` runs the lot; the
+//! bench harness (`cargo bench`) times them.
+
+pub mod ablations;
+pub mod cluster;
+pub mod fig1;
+pub mod figs567;
+pub mod table10;
+pub mod table11;
+pub mod table4;
+pub mod table7_8;
+pub mod roofline;
+pub mod table9;
+
+use crate::error::{Error, Result};
+use crate::perfmodel::ParamSource;
+
+/// Options shared by all experiments.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExpOptions {
+    /// Emit CSV instead of aligned text.
+    pub csv: bool,
+    /// Parameter provenance for the models (paper tables vs simulator).
+    pub params: ParamSource,
+}
+
+/// All experiment ids, in paper order.
+pub const ALL: [&str; 9] = [
+    "fig1", "table4", "table7", "table8", "fig5", "fig6", "fig7", "table9",
+    "table10",
+];
+/// table11 is included in `all` too; listed separately because it is the
+/// scaling study (longer to print).
+pub const ALL_WITH_SCALING: [&str; 10] = [
+    "fig1", "table4", "table7", "table8", "fig5", "fig6", "fig7", "table9",
+    "table10", "table11",
+];
+
+/// Extension experiments (not paper artifacts): ablations over micsim
+/// mechanisms, the multi-node future-work model, roofline/MXU analysis.
+pub const EXTENSIONS: [&str; 3] = ["ablations", "cluster", "roofline"];
+
+/// Run one experiment by id, returning its rendered output.
+pub fn run(id: &str, opts: &ExpOptions) -> Result<String> {
+    match id {
+        "fig1" => fig1::run(opts),
+        "table4" => table4::run(opts),
+        "table7" => table7_8::run_fprop(opts),
+        "table8" => table7_8::run_bprop(opts),
+        "fig5" => figs567::run("small", opts),
+        "fig6" => figs567::run("medium", opts),
+        "fig7" => figs567::run("large", opts),
+        "table9" => table9::run(opts),
+        "ablations" => ablations::run(opts),
+        "cluster" => cluster::run(opts),
+        "roofline" => roofline::run(opts),
+        "table10" => table10::run(opts),
+        "table11" => table11::run(opts),
+        "all" => {
+            let mut out = String::new();
+            for id in ALL_WITH_SCALING {
+                out.push_str(&run(id, opts)?);
+                out.push('\n');
+            }
+            Ok(out)
+        }
+        "extensions" => {
+            let mut out = String::new();
+            for id in EXTENSIONS {
+                out.push_str(&run(id, opts)?);
+                out.push('\n');
+            }
+            Ok(out)
+        }
+        other => Err(Error::Config(format!(
+            "unknown experiment {other:?}; available: {ALL_WITH_SCALING:?} or 'all'"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_listed_experiment_runs() {
+        let opts = ExpOptions::default();
+        for id in ALL_WITH_SCALING.iter().chain(EXTENSIONS.iter()).copied() {
+            let out = run(id, &opts).unwrap_or_else(|e| panic!("{id}: {e}"));
+            assert!(!out.is_empty(), "{id}");
+        }
+    }
+
+    #[test]
+    fn unknown_experiment_rejected() {
+        assert!(run("table99", &ExpOptions::default()).is_err());
+    }
+
+    #[test]
+    fn csv_mode_produces_commas() {
+        let opts = ExpOptions { csv: true, ..Default::default() };
+        let out = run("table10", &opts).unwrap();
+        assert!(out.contains(','));
+    }
+}

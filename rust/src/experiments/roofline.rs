@@ -1,0 +1,84 @@
+//! Roofline experiment: KNC efficiency + the Pallas/MXU mapping.
+//!
+//! Part of the §Perf deliverable: situates the paper's measured per-image
+//! times against the KNC roofline (how far from peak the original code
+//! ran) and reports the MXU-tile occupancy + VMEM residency of every
+//! matmul the Pallas kernel executes (the TPU Hardware-Adaptation view —
+//! interpret-mode wallclock is not a TPU proxy, DESIGN.md).
+
+use crate::config::{ArchSpec, MachineConfig};
+use crate::error::Result;
+use crate::experiments::ExpOptions;
+use crate::nn::roofline;
+use crate::report::{paper, Table};
+
+pub fn run(opts: &ExpOptions) -> Result<String> {
+    let machine = MachineConfig::xeon_phi_7120p();
+    let mut out = String::new();
+
+    // --- KNC roofline ---------------------------------------------------
+    let mut t = Table::new(
+        "KNC roofline — forward pass per image vs Table III measurement",
+        &["arch", "roofline ms", "measured ms (Table III)", "efficiency"],
+    );
+    for arch in ArchSpec::paper_archs() {
+        let idx = paper::arch_index(&arch.name).unwrap();
+        let measured = paper::T_FPROP_S[idx];
+        let rt = roofline::knc_roofline_time_s(&arch, &machine)?;
+        t.row(vec![
+            arch.name.clone(),
+            format!("{:.4}", rt * 1e3),
+            format!("{:.2}", measured * 1e3),
+            format!("{:.2e}", rt / measured),
+        ]);
+    }
+    out.push_str(&if opts.csv { t.to_csv() } else { t.render() });
+
+    // --- per-layer intensity for the large CNN ---------------------------
+    let mut t = Table::new(
+        "per-layer roofline — large CNN",
+        &["layer", "MFLOPs/img", "KB/img", "flop/byte", "attainable GF/s"],
+    );
+    for l in roofline::knc_roofline(&ArchSpec::large(), &machine)? {
+        t.row(vec![
+            l.name.clone(),
+            format!("{:.2}", l.flops / 1e6),
+            format!("{:.1}", l.bytes / 1e3),
+            format!("{:.1}", l.intensity),
+            format!("{:.0}", l.attainable_gflops),
+        ]);
+    }
+    out.push_str(&if opts.csv { t.to_csv() } else { t.render() });
+
+    // --- Pallas/MXU mapping ----------------------------------------------
+    let mut t = Table::new(
+        "Pallas kernel MXU mapping (batch 64 folded into M) — large CNN",
+        &["matmul", "M", "K", "N", "MXU occupancy", "VMEM KiB/step"],
+    );
+    for m in roofline::mxu_mapping(&ArchSpec::large(), 64)? {
+        t.row(vec![
+            m.name.clone(),
+            m.m.to_string(),
+            m.k.to_string(),
+            m.n.to_string(),
+            format!("{:.3}", m.mxu_occupancy),
+            format!("{:.0}", m.vmem_bytes as f64 / 1024.0),
+        ]);
+    }
+    out.push_str(&if opts.csv { t.to_csv() } else { t.render() });
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_three_sections() {
+        let out = run(&ExpOptions::default()).unwrap();
+        assert!(out.contains("KNC roofline"));
+        assert!(out.contains("per-layer roofline"));
+        assert!(out.contains("MXU mapping"));
+        assert!(out.contains("conv6x6x100"));
+    }
+}

@@ -1,0 +1,55 @@
+//! Table X — predicted execution times beyond the hardware thread count.
+
+use crate::config::{ArchSpec, RunConfig};
+use crate::error::Result;
+use crate::experiments::ExpOptions;
+use crate::perfmodel::{both_models, PerfModel};
+use crate::report::{paper, Table};
+
+pub fn run(opts: &ExpOptions) -> Result<String> {
+    let mut t = Table::new(
+        "Table X — predicted minutes for 480–3,840 threads (ours | paper)",
+        &[
+            "threads",
+            "small a", "(paper)", "small b", "(paper)",
+            "medium a", "(paper)", "medium b", "(paper)",
+            "large a", "(paper)", "large b", "(paper)",
+        ],
+    );
+    for (row, &p) in paper::TABLE10_THREADS.iter().enumerate() {
+        let mut cells = vec![p.to_string()];
+        for (col, arch) in ArchSpec::paper_archs().iter().enumerate() {
+            let (a, b) = both_models(arch, opts.params)?;
+            let run = RunConfig::paper_default(&arch.name, p);
+            let ta = a.predict(&run)?.total_s / 60.0;
+            let tb = b.predict(&run)?.total_s / 60.0;
+            cells.push(format!("{ta:.1}"));
+            cells.push(format!("{:.1}", paper::TABLE10_MINUTES[row][col * 2]));
+            cells.push(format!("{tb:.1}"));
+            cells.push(format!("{:.1}", paper::TABLE10_MINUTES[row][col * 2 + 1]));
+        }
+        t.row(cells);
+    }
+    Ok(if opts.csv { t.to_csv() } else { t.render() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_all_thread_rows() {
+        let out = run(&ExpOptions::default()).unwrap();
+        for p in ["480", "960", "1920", "3840"] {
+            assert!(out.contains(p));
+        }
+    }
+
+    #[test]
+    fn paper_small_3840_value_present() {
+        // small b @ 3840 = 4.6 minutes in the paper; our prediction is in
+        // the same cell format.
+        let out = run(&ExpOptions::default()).unwrap();
+        assert!(out.contains("4.6"));
+    }
+}

@@ -1,0 +1,82 @@
+//! Table XI — scaling epochs and images (small CNN, strategy (a)).
+
+use crate::config::{ArchSpec, RunConfig};
+use crate::error::Result;
+use crate::experiments::ExpOptions;
+use crate::perfmodel::{ParamSource, PerfModel, StrategyA};
+use crate::report::{paper, Table};
+
+pub fn run(opts: &ExpOptions) -> Result<String> {
+    let arch = ArchSpec::small();
+    let model = StrategyA::new(&arch, opts.params)?;
+    let _ = ParamSource::Paper;
+    let mut t = Table::new(
+        "Table XI — minutes when scaling epochs/images, small CNN, model (a) \
+         (ours | paper)",
+        &[
+            "i", "it",
+            "240T ep70", "(paper)", "240T ep140", "(paper)", "240T ep280", "(paper)",
+            "480T ep70", "(paper)", "480T ep140", "(paper)", "480T ep280", "(paper)",
+        ],
+    );
+    for (row, &(i, it)) in paper::TABLE11_IMAGES.iter().enumerate() {
+        let mut cells = vec![format!("{}k", i / 1000), format!("{}k", it / 1000)];
+        for (tcol, &p) in paper::TABLE11_THREADS.iter().enumerate() {
+            for (ecol, &ep) in paper::TABLE11_EPOCHS.iter().enumerate() {
+                let run = RunConfig { train_images: i, test_images: it, epochs: ep, threads: p };
+                let got = model.predict(&run)?.total_s / 60.0;
+                cells.push(format!("{got:.1}"));
+                cells.push(format!("{:.1}", paper::TABLE11_MINUTES[row][tcol * 3 + ecol]));
+            }
+        }
+        t.row(cells);
+    }
+    let mut out = if opts.csv { t.to_csv() } else { t.render() };
+    if !opts.csv {
+        out.push_str(
+            "note: doubling images or epochs ≈ doubles time; doubling threads \
+             does not halve it (Result 2 of the paper).\n",
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn doubling_images_doubles_time() {
+        let arch = ArchSpec::small();
+        let model = StrategyA::new(&arch, ParamSource::Paper).unwrap();
+        let base = RunConfig {
+            train_images: 60_000, test_images: 10_000, epochs: 70, threads: 240,
+        };
+        let t1 = model.predict(&base).unwrap().total_s;
+        let t2 = model
+            .predict(&RunConfig { train_images: 120_000, test_images: 20_000, ..base })
+            .unwrap()
+            .total_s;
+        let ratio = t2 / t1;
+        assert!((ratio - 2.0).abs() < 0.05, "{ratio}");
+    }
+
+    #[test]
+    fn doubling_threads_does_not_halve_time() {
+        let arch = ArchSpec::small();
+        let model = StrategyA::new(&arch, ParamSource::Paper).unwrap();
+        let base = RunConfig {
+            train_images: 60_000, test_images: 10_000, epochs: 70, threads: 240,
+        };
+        let t240 = model.predict(&base).unwrap().total_s;
+        let t480 = model.predict(&base.with_threads(480)).unwrap().total_s;
+        assert!(t480 > t240 / 2.0 * 1.2, "{t240} -> {t480}");
+    }
+
+    #[test]
+    fn renders_with_paper_cells() {
+        let out = run(&ExpOptions::default()).unwrap();
+        assert!(out.contains("139.3")); // paper 240k/280ep/240T cell
+        assert!(out.contains("101.9")); // paper 240k/280ep/480T cell
+    }
+}

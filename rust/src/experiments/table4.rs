@@ -1,0 +1,67 @@
+//! Table IV — measured and predicted memory contention, seconds.
+//!
+//! "Ours" is the micsim contention probe ([`crate::simulator::probe`]);
+//! "paper" is the published Table IV (rows above 240 threads were
+//! model-predicted in the paper too — starred here as there).
+
+use crate::config::ArchSpec;
+use crate::error::Result;
+use crate::experiments::ExpOptions;
+use crate::report::{paper, table, Table};
+use crate::simulator::{probe, SimConfig};
+
+pub fn run(opts: &ExpOptions) -> Result<String> {
+    let cfg = SimConfig::default();
+    let archs = ArchSpec::paper_archs();
+    let mut t = Table::new(
+        "Table IV — memory contention [s] (ours = micsim probe | paper)",
+        &[
+            "# threads",
+            "small ours", "small paper",
+            "medium ours", "medium paper",
+            "large ours", "large paper",
+        ],
+    );
+    for (row, &p) in paper::CONTENTION_THREADS.iter().enumerate() {
+        let star = if row >= paper::CONTENTION_PREDICTED_FROM { "*" } else { "" };
+        let mut cells = vec![format!("{p}{star}")];
+        for (col, arch) in archs.iter().enumerate() {
+            let ours = probe::contention_probe(arch, p, &cfg)?;
+            cells.push(table::sci(ours));
+            cells.push(table::sci(paper::CONTENTION_S[row][col]));
+        }
+        t.row(cells);
+    }
+    Ok(if opts.csv { t.to_csv() } else { t.render() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn has_all_11_thread_rows() {
+        let out = run(&ExpOptions::default()).unwrap();
+        for p in ["1 ", "240", "3840*"] {
+            assert!(out.contains(p), "{p}");
+        }
+        assert_eq!(out.lines().count(), 14); // title + header + rule + 11 rows
+    }
+
+    #[test]
+    fn anchors_match_paper_at_240() {
+        // The calibrated probe must agree with the paper at the anchor.
+        let out = run(&ExpOptions::default()).unwrap();
+        let row240: Vec<&str> = out
+            .lines()
+            .find(|l| l.trim_start().starts_with("240"))
+            .unwrap()
+            .split_whitespace()
+            .collect();
+        // small ours vs small paper
+        assert_eq!(row240[2], row240[2]);
+        let ours: f64 = row240[1].parse().unwrap();
+        let paper_v: f64 = row240[2].parse().unwrap();
+        assert!((ours - paper_v).abs() / paper_v < 0.02);
+    }
+}

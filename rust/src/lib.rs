@@ -1,0 +1,52 @@
+//! # micdl — Performance Modelling of Deep Learning on Intel MIC Architectures
+//!
+//! A full reproduction of Viebke et al., *"Performance Modelling of Deep
+//! Learning on Intel Many Integrated Core Architectures"* (HPCS 2019), built
+//! as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator and every substrate the paper
+//!   depends on: the parallel CNN training orchestrator (Fig. 4), the two
+//!   analytic performance models (Tables V and VI), a discrete-event
+//!   simulator of the Intel Xeon Phi 7120P ([`simulator`]) that stands in
+//!   for the hardware we do not have, the operation counters behind
+//!   Tables VII/VIII ([`nn::opcount`]), dataset handling, and the PJRT
+//!   runtime that executes the AOT-compiled JAX/Pallas training step.
+//! * **L2 (python/compile/model.py)** — the CNN forward/backward in JAX,
+//!   lowered once to HLO text artifacts.
+//! * **L1 (python/compile/kernels/)** — the Pallas conv-as-matmul and
+//!   pooling kernels inside that HLO.
+//!
+//! Python never runs on the request path: `make artifacts` emits HLO text,
+//! and everything else is this self-contained Rust binary.
+//!
+//! ## Module map
+//!
+//! | Module | Role |
+//! |---|---|
+//! | [`config`] | Architecture / machine / run configuration system |
+//! | [`nn`] | Layer graph, shape walk, weight init, operation counting |
+//! | [`engine`] | Pure-Rust CNN forward/backward (oracle + fallback backend) |
+//! | [`dataset`] | MNIST IDX loader + deterministic synthetic digit corpus |
+//! | [`simulator`] | `micsim`: discrete-event Xeon Phi model (cores, SMT/CPI, VPU, ring + memory channels) |
+//! | [`perfmodel`] | The paper's contribution: strategies (a) and (b), contention, accuracy |
+//! | [`training`] | The Fig. 4 parallel training algorithm over a pluggable backend |
+//! | [`coordinator`] | Worker pool, image sharding, epoch barriers, metrics |
+//! | [`runtime`] | xla/PJRT client: load HLO text artifacts, compile, execute |
+//! | [`report`] | Paper-style table/series rendering + embedded paper data |
+//! | [`experiments`] | One entry per paper table/figure (the reproduction index) |
+
+pub mod config;
+pub mod coordinator;
+pub mod dataset;
+pub mod engine;
+pub mod error;
+pub mod experiments;
+pub mod nn;
+pub mod perfmodel;
+pub mod report;
+pub mod runtime;
+pub mod simulator;
+pub mod training;
+pub mod util;
+
+pub use error::{Error, Result};

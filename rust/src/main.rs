@@ -1,0 +1,386 @@
+//! `repro` — the micdl command-line launcher.
+//!
+//! Subcommands map onto the library's subsystems:
+//!
+//! ```text
+//! repro exp <id|all> [--csv] [--params paper|sim]   reproduce a paper table/figure
+//! repro arch [--name N | --json FILE]               architecture summary (Fig. 2)
+//! repro simulate --arch A --threads P [...]         run micsim on a workload
+//! repro predict --arch A --threads P [...]          run the performance models
+//! repro probe --arch A                              Table IV contention probe
+//! repro train [...]                                 really train (engine or PJRT backend)
+//! repro selfcheck                                   invariant + artifact checks
+//! ```
+//!
+//! Argument parsing is hand-rolled (offline build — no clap); see
+//! [`micdl::util`] for the rationale.
+
+use anyhow::{anyhow, bail, Result};
+
+use micdl::config::{ArchSpec, RunConfig};
+use micdl::coordinator::leader::{LeaderConfig, PjrtTrainer};
+use micdl::coordinator::pool::{DataParallelTrainer, PoolConfig};
+use micdl::dataset;
+use micdl::experiments::{self, ExpOptions};
+use micdl::nn::opcount;
+use micdl::perfmodel::{both_models, ParamSource, PerfModel};
+use micdl::report::Table;
+use micdl::simulator::{probe, simulate_training, Fidelity, SimConfig};
+
+/// Minimal flag parser: positionals + `--key value` + boolean `--flag`.
+#[derive(Debug, Default)]
+struct Args {
+    positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(name) = a.strip_prefix("--") {
+                let value = argv
+                    .get(i + 1)
+                    .filter(|v| !v.starts_with("--"))
+                    .cloned();
+                if value.is_some() {
+                    i += 1;
+                }
+                out.flags.push((name.to_string(), value));
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    fn get(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(k, _)| k == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == name)
+    }
+
+    fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name} wants an integer, got {v:?}")),
+        }
+    }
+}
+
+const USAGE: &str = "\
+repro — Performance Modelling of Deep Learning on Intel MIC Architectures (HPCS'19 reproduction)
+
+USAGE:
+  repro exp <fig1|table4|table7|table8|fig5|fig6|fig7|table9|table10|table11|all>
+            [--csv] [--params paper|sim]
+  repro arch [--name small|medium|large] [--json FILE]
+  repro simulate --arch A [--threads P] [--epochs E] [--images I] [--test-images IT]
+                 [--fidelity chunked|image]
+  repro predict  --arch A [--threads P] [--epochs E] [--images I] [--test-images IT]
+                 [--strategy a|b|both] [--params paper|sim]
+  repro probe    [--arch A]
+  repro train    [--backend engine|pjrt] [--arch A] [--epochs E] [--images N]
+                 [--test-images N] [--workers W] [--lr F] [--artifacts DIR]
+                 [--mnist DIR] [--seed S]
+  repro selfcheck [--artifacts DIR]
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e}");
+        eprintln!("{USAGE}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_params(args: &Args) -> Result<ParamSource> {
+    match args.get("params").unwrap_or("paper") {
+        "paper" => Ok(ParamSource::Paper),
+        "sim" | "simulator" => Ok(ParamSource::Simulator),
+        other => bail!("--params must be paper|sim, got {other:?}"),
+    }
+}
+
+fn parse_arch(args: &Args) -> Result<ArchSpec> {
+    if let Some(path) = args.get("json") {
+        let text = std::fs::read_to_string(path)?;
+        return Ok(ArchSpec::from_json(&text)?);
+    }
+    Ok(ArchSpec::by_name(args.get("name").or(args.get("arch")).unwrap_or("small"))?)
+}
+
+fn parse_run(args: &Args, arch: &str) -> Result<RunConfig> {
+    let default = RunConfig::paper_default(arch, 240);
+    Ok(RunConfig {
+        train_images: args.get_usize("images", default.train_images)?,
+        test_images: args.get_usize("test-images", default.test_images)?,
+        epochs: args.get_usize("epochs", default.epochs)?,
+        threads: args.get_usize("threads", default.threads)?,
+    })
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first().map(String::as_str) else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..]);
+    match cmd {
+        "exp" => cmd_exp(&args),
+        "arch" => cmd_arch(&args),
+        "simulate" => cmd_simulate(&args),
+        "predict" => cmd_predict(&args),
+        "probe" => cmd_probe(&args),
+        "train" => cmd_train(&args),
+        "selfcheck" => cmd_selfcheck(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}"),
+    }
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .ok_or_else(|| anyhow!("exp needs an id (or 'all')"))?;
+    let opts = ExpOptions { csv: args.has("csv"), params: parse_params(args)? };
+    print!("{}", experiments::run(id, &opts)?);
+    Ok(())
+}
+
+fn cmd_arch(args: &Args) -> Result<()> {
+    let archs = if args.has("name") || args.has("json") {
+        vec![parse_arch(args)?]
+    } else {
+        ArchSpec::paper_archs()
+    };
+    for arch in archs {
+        let mut t = Table::new(
+            format!("architecture {} (Fig. 2)", arch.name),
+            &["layer", "maps/units", "map", "neurons", "weights"],
+        );
+        for shape in arch.shapes()? {
+            use micdl::config::arch::ResolvedLayer::*;
+            let (kind, m, hw) = match shape.spec {
+                Input { hw } => ("input".to_string(), 1, format!("{hw}x{hw}")),
+                Conv { maps, kernel, out_hw, .. } => {
+                    (format!("conv {kernel}x{kernel}"), maps, format!("{out_hw}x{out_hw}"))
+                }
+                Pool { window, maps, out_hw, .. } => {
+                    (format!("maxpool {window}x{window}"), maps, format!("{out_hw}x{out_hw}"))
+                }
+                Dense { units, .. } => ("dense".to_string(), units, "-".to_string()),
+            };
+            t.row(vec![
+                kind,
+                m.to_string(),
+                hw,
+                shape.neurons.to_string(),
+                shape.weights.to_string(),
+            ]);
+        }
+        print!("{}", t.render());
+        let ops = opcount::count(&arch)?;
+        println!(
+            "computed ops/image: fprop {} bprop {}  |  total weights {}\n",
+            ops.fprop.total(),
+            ops.bprop.total(),
+            arch.total_weights()?
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let arch = parse_arch(args)?;
+    let run = parse_run(args, &arch.name)?;
+    let mut cfg = SimConfig::default();
+    cfg.fidelity = match args.get("fidelity").unwrap_or("chunked") {
+        "chunked" => Fidelity::Chunked,
+        "image" | "per-image" => Fidelity::PerImage,
+        other => bail!("--fidelity must be chunked|image, got {other:?}"),
+    };
+    let r = simulate_training(&arch, &run, &cfg)?;
+    println!(
+        "micsim: arch={} threads={} epochs={} i={} it={}",
+        arch.name, run.threads, run.epochs, run.train_images, run.test_images
+    );
+    println!(
+        "  execution {:.1}s ({:.1} min) | total {:.1}s | prep {:.1}s",
+        r.execution_s,
+        r.execution_s / 60.0,
+        r.total_s,
+        r.phases.prep_s
+    );
+    println!(
+        "  phases: train {:.1}s  validation {:.1}s  test {:.1}s  serial {:.2}s",
+        r.phases.train_s, r.phases.validation_s, r.phases.test_s, r.phases.serial_s
+    );
+    println!("  imbalance {:.4} | events {}", r.imbalance(), r.events);
+    Ok(())
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let arch = parse_arch(args)?;
+    let run = parse_run(args, &arch.name)?;
+    let (a, b) = both_models(&arch, parse_params(args)?)?;
+    let which = args.get("strategy").unwrap_or("both");
+    let mut t = Table::new(
+        format!(
+            "prediction: arch={} threads={} epochs={}",
+            arch.name, run.threads, run.epochs
+        ),
+        &["strategy", "prep s", "train+val s", "test s", "T_mem s", "total s", "minutes"],
+    );
+    for model in [&a as &dyn PerfModel, &b as &dyn PerfModel] {
+        if which != "both" && model.name() != which {
+            continue;
+        }
+        let p = model.predict(&run)?;
+        t.row(vec![
+            model.name().into(),
+            format!("{:.2}", p.prep_s),
+            format!("{:.1}", p.train_s),
+            format!("{:.1}", p.test_s),
+            format!("{:.1}", p.mem_s),
+            format!("{:.1}", p.total_s),
+            format!("{:.1}", p.total_s / 60.0),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_probe(args: &Args) -> Result<()> {
+    let arch = parse_arch(args)?;
+    let cfg = SimConfig::default();
+    let mut t = Table::new(
+        format!("contention probe — {} (Table IV analogue)", arch.name),
+        &["threads", "contention s/image"],
+    );
+    for p in [1usize, 15, 30, 60, 120, 180, 240, 480, 960, 1920, 3840] {
+        t.row(vec![
+            p.to_string(),
+            format!("{:.3e}", probe::contention_probe(&arch, p, &cfg)?),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let backend = args.get("backend").unwrap_or("engine");
+    let epochs = args.get_usize("epochs", 3)?;
+    let n_train = args.get_usize("images", 2000)?;
+    let n_test = args.get_usize("test-images", 400)?;
+    let seed = args.get_usize("seed", 42)? as u64;
+    let mnist_dir = args.get("mnist").map(std::path::PathBuf::from);
+    let (train, test) = dataset::load_or_synth(mnist_dir.as_deref(), n_train, n_test, seed);
+    println!(
+        "dataset: {} train / {} test images ({})",
+        train.len(),
+        test.len(),
+        train.source
+    );
+    match backend {
+        "engine" => {
+            let arch = parse_arch(args)?;
+            let cfg = PoolConfig {
+                workers: args.get_usize("workers", 8)?,
+                epochs,
+                lr: args
+                    .get("lr")
+                    .map(|v| v.parse())
+                    .transpose()
+                    .map_err(|_| anyhow!("--lr wants a float"))?
+                    .unwrap_or(0.02),
+                eval_cap: 1024,
+                seed,
+                verbose: true,
+            };
+            let mut trainer = DataParallelTrainer::new(arch, cfg)?;
+            let report = trainer.train(&train, &test)?;
+            println!(
+                "done: {:.1} img/s, final test accuracy {:.3}, converging={}",
+                report.train_throughput,
+                report.final_test_accuracy(),
+                report.converging()
+            );
+            println!("metrics: {}", trainer.metrics.report());
+        }
+        "pjrt" => {
+            let dir = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+            let cfg = LeaderConfig {
+                arch: args.get("arch").unwrap_or("small").to_string(),
+                epochs,
+                eval_cap_batches: 8,
+                seed,
+                verbose: true,
+            };
+            let mut trainer = PjrtTrainer::new(&dir, cfg)?;
+            let report = trainer.train(&train, &test)?;
+            println!(
+                "done: {:.1} img/s through PJRT, {} steps, final test accuracy {:.3}",
+                report.train_throughput,
+                trainer.steps(),
+                report.final_test_accuracy()
+            );
+        }
+        other => bail!("--backend must be engine|pjrt, got {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    // 1. Simulator fidelity crosscheck.
+    let cfg = SimConfig::default();
+    for arch in ArchSpec::paper_archs() {
+        let rel = probe::fidelity_crosscheck(&arch, 61, &cfg)?;
+        println!(
+            "fidelity crosscheck {}: per-image vs chunked rel err {rel:.2e}",
+            arch.name
+        );
+        if rel > 1e-6 {
+            bail!("fidelity mismatch for {}", arch.name);
+        }
+    }
+    // 2. Model sanity: Table X anchor.
+    let (a, b) = both_models(&ArchSpec::small(), ParamSource::Paper)?;
+    let run = RunConfig::paper_default("small", 480);
+    let ta = a.predict(&run)?.total_s / 60.0;
+    let tb = b.predict(&run)?.total_s / 60.0;
+    println!("model anchor small@480: a={ta:.1} min (paper 6.6), b={tb:.1} min (paper 6.7)");
+    if (ta - 6.6).abs() > 0.3 || (tb - 6.7).abs() > 0.3 {
+        bail!("model anchor drifted");
+    }
+    // 3. Artifacts (optional).
+    let dir = std::path::PathBuf::from(args.get("artifacts").unwrap_or("artifacts"));
+    match micdl::runtime::ArtifactRegistry::load(&dir) {
+        Ok(reg) => {
+            reg.check_files()?;
+            println!(
+                "artifacts: {} archs at batch {} ({})",
+                reg.archs.len(),
+                reg.batch,
+                dir.display()
+            );
+        }
+        Err(e) => println!("artifacts: not available ({e}) — run `make artifacts`"),
+    }
+    println!("selfcheck OK");
+    Ok(())
+}

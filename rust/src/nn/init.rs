@@ -1,0 +1,122 @@
+//! Deterministic weight initialization (no external RNG dependency).
+//!
+//! Mirrors the scheme of `python/compile/model.py::init_params`:
+//! weights ~ Uniform(−r, r) with r = 1/√fan_in, biases zero. The streams
+//! need not match the JAX init bit-for-bit — only the distribution matters —
+//! but they must be reproducible from a seed, which this xorshift64* stream
+//! guarantees across platforms.
+
+/// Minimal xorshift64* PRNG — deterministic, seedable, dependency-free.
+#[derive(Debug, Clone)]
+pub struct XorShift64 {
+    state: u64,
+}
+
+impl XorShift64 {
+    pub fn new(seed: u64) -> Self {
+        // splitmix64 finalizer decorrelates nearby seeds (1 vs 2 must not
+        // collide) and avoids the all-zero fixed point.
+        let mut z = seed.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^= z >> 31;
+        XorShift64 { state: z | 1 }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u64 << 24) as f32
+    }
+
+    /// Uniform f32 in [-r, r).
+    #[inline]
+    pub fn uniform_sym(&mut self, r: f32) -> f32 {
+        (self.next_f32() * 2.0 - 1.0) * r
+    }
+
+    /// Uniform usize in [0, n).
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+}
+
+/// Fill a weight buffer with Uniform(−1/√fan_in, 1/√fan_in).
+pub fn init_weights(rng: &mut XorShift64, buf: &mut [f32], fan_in: usize) {
+    let r = 1.0 / (fan_in.max(1) as f32).sqrt();
+    for w in buf.iter_mut() {
+        *w = rng.uniform_sym(r);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_from_seed() {
+        let mut a = XorShift64::new(42);
+        let mut b = XorShift64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let mut a = XorShift64::new(1);
+        let mut b = XorShift64::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f32_in_unit_interval() {
+        let mut rng = XorShift64::new(7);
+        for _ in 0..10_000 {
+            let v = rng.next_f32();
+            assert!((0.0..1.0).contains(&v), "{v}");
+        }
+    }
+
+    #[test]
+    fn uniform_sym_bounded_and_centered() {
+        let mut rng = XorShift64::new(9);
+        let mut sum = 0.0f64;
+        const N: usize = 50_000;
+        for _ in 0..N {
+            let v = rng.uniform_sym(0.5);
+            assert!(v.abs() <= 0.5);
+            sum += v as f64;
+        }
+        assert!((sum / N as f64).abs() < 0.01, "mean {}", sum / N as f64);
+    }
+
+    #[test]
+    fn init_scale_respects_fan_in() {
+        let mut rng = XorShift64::new(3);
+        let mut buf = vec![0.0f32; 1000];
+        init_weights(&mut rng, &mut buf, 100);
+        let r = 0.1f32;
+        assert!(buf.iter().all(|w| w.abs() <= r));
+        assert!(buf.iter().any(|w| w.abs() > r * 0.5));
+    }
+
+    #[test]
+    fn next_below_in_range() {
+        let mut rng = XorShift64::new(5);
+        for _ in 0..1000 {
+            assert!(rng.next_below(10) < 10);
+        }
+    }
+}

@@ -1,0 +1,16 @@
+//! Neural-network structure: layer graph, parameters, op counting.
+//!
+//! This module owns the *static* view of a CNN — geometry, parameter
+//! layout, weight initialization, and the per-image operation counts that
+//! drive both the performance models ([`crate::perfmodel`]) and the
+//! simulator's workload costs ([`crate::simulator`]). The *dynamic* compute
+//! (actual forward/backward arithmetic) lives in [`crate::engine`] (pure
+//! Rust) and in the AOT JAX/Pallas artifacts run by [`crate::runtime`].
+
+pub mod init;
+pub mod network;
+pub mod opcount;
+pub mod roofline;
+
+pub use network::Network;
+pub use opcount::{ArchOpCounts, LayerClass, OpCounts, OpSource};

@@ -1,0 +1,259 @@
+//! A network instance: resolved architecture + owned parameter buffers.
+//!
+//! In the paper's parallel scheme (Fig. 4) *each thread owns one network
+//! instance* and trains it on its image chunk. `Network` is that instance:
+//! cheap to clone (for spawning per-worker copies), deterministic to
+//! initialize, and serializable for checkpointing.
+
+use crate::config::arch::{ArchSpec, LayerShape, ResolvedLayer};
+use crate::error::{Error, Result};
+use crate::nn::init::{init_weights, XorShift64};
+use crate::util::json::Json;
+
+/// Parameters of one trainable layer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerParams {
+    /// Flattened weights; layout documented per layer type in [`Network`].
+    pub w: Vec<f32>,
+    /// Biases, one per map/unit.
+    pub b: Vec<f32>,
+}
+
+/// A CNN instance with owned weights.
+///
+/// Weight layouts (row-major):
+/// * conv: `w[map][in_map][ky][kx]`, `b[map]`
+/// * dense: `w[fan_in][unit]` (input-major, matching the JAX artifact), `b[unit]`
+#[derive(Debug, Clone)]
+pub struct Network {
+    pub arch: ArchSpec,
+    pub params: Vec<LayerParams>,
+    shapes: Vec<LayerShape>,
+}
+
+impl Network {
+    /// Build with deterministic initialization from `seed`.
+    pub fn new(arch: ArchSpec, seed: u64) -> Result<Self> {
+        let shapes = arch.shapes()?;
+        let mut rng = XorShift64::new(seed);
+        let mut params = Vec::new();
+        for shape in &shapes {
+            match shape.spec {
+                ResolvedLayer::Conv { maps, kernel, in_maps, .. } => {
+                    let fan_in = in_maps * kernel * kernel;
+                    let mut w = vec![0.0; maps * fan_in];
+                    init_weights(&mut rng, &mut w, fan_in);
+                    params.push(LayerParams { w, b: vec![0.0; maps] });
+                }
+                ResolvedLayer::Dense { units, fan_in, .. } => {
+                    let mut w = vec![0.0; fan_in * units];
+                    init_weights(&mut rng, &mut w, fan_in);
+                    params.push(LayerParams { w, b: vec![0.0; units] });
+                }
+                _ => {}
+            }
+        }
+        Ok(Network { arch, params, shapes })
+    }
+
+    /// Resolved layer shapes (cached at construction).
+    pub fn shapes(&self) -> &[LayerShape] {
+        &self.shapes
+    }
+
+    /// Serialize to JSON (checkpointing).
+    pub fn to_json(&self) -> String {
+        let params: Vec<Json> = self
+            .params
+            .iter()
+            .map(|p| {
+                Json::obj(vec![
+                    ("w", Json::Arr(p.w.iter().map(|&x| Json::Num(x as f64)).collect())),
+                    ("b", Json::Arr(p.b.iter().map(|&x| Json::Num(x as f64)).collect())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("arch", Json::parse(&self.arch.to_json()).expect("own json")),
+            ("params", Json::Arr(params)),
+        ])
+        .emit()
+    }
+
+    /// Deserialize a checkpoint written by [`Network::to_json`]. Validates
+    /// that every parameter buffer matches the architecture's shape walk.
+    pub fn from_json(text: &str) -> Result<Network> {
+        let v = Json::parse(text)?;
+        let arch = ArchSpec::from_json(&v.expect("arch")?.emit())?;
+        let shapes = arch.shapes()?;
+        let mut net = Network::new(arch, 0)?;
+        let params = v
+            .expect("params")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("params must be an array".into()))?;
+        if params.len() != net.params.len() {
+            return Err(Error::Json(format!(
+                "checkpoint has {} param layers, arch wants {}",
+                params.len(),
+                net.params.len()
+            )));
+        }
+        for (i, p) in params.iter().enumerate() {
+            let read = |key: &str| -> Result<Vec<f32>> {
+                p.expect(key)?
+                    .as_arr()
+                    .ok_or_else(|| Error::Json(format!("params[{i}].{key} not array")))?
+                    .iter()
+                    .map(|x| {
+                        x.as_f64()
+                            .map(|f| f as f32)
+                            .ok_or_else(|| Error::Json(format!("params[{i}].{key}: non-number")))
+                    })
+                    .collect()
+            };
+            let w = read("w")?;
+            let b = read("b")?;
+            if w.len() != net.params[i].w.len() || b.len() != net.params[i].b.len() {
+                return Err(Error::Json(format!(
+                    "params[{i}]: shape mismatch ({}/{} weights, {}/{} biases)",
+                    w.len(),
+                    net.params[i].w.len(),
+                    b.len(),
+                    net.params[i].b.len()
+                )));
+            }
+            net.params[i] = LayerParams { w, b };
+        }
+        let _ = shapes;
+        Ok(net)
+    }
+
+    /// Total parameter count (weights + biases).
+    pub fn num_params(&self) -> usize {
+        self.params.iter().map(|p| p.w.len() + p.b.len()).sum()
+    }
+
+    /// Parameter memory footprint in bytes (f32).
+    pub fn param_bytes(&self) -> usize {
+        self.num_params() * 4
+    }
+
+    /// Average the parameters of several instances into a fresh network
+    /// (the coordinator's model-combine step after data-parallel training).
+    pub fn average(instances: &[Network]) -> Result<Network> {
+        assert!(!instances.is_empty());
+        let mut out = instances[0].clone();
+        let n = instances.len() as f32;
+        for layer in 0..out.params.len() {
+            for other in &instances[1..] {
+                for (acc, v) in out.params[layer]
+                    .w
+                    .iter_mut()
+                    .zip(other.params[layer].w.iter())
+                {
+                    *acc += v;
+                }
+                for (acc, v) in out.params[layer]
+                    .b
+                    .iter_mut()
+                    .zip(other.params[layer].b.iter())
+                {
+                    *acc += v;
+                }
+            }
+            for v in out.params[layer].w.iter_mut() {
+                *v /= n;
+            }
+            for v in out.params[layer].b.iter_mut() {
+                *v /= n;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_counts_match_shape_walk() {
+        for arch in ArchSpec::paper_archs() {
+            let expected: usize = arch.shapes().unwrap().iter().map(|l| l.weights).sum();
+            let net = Network::new(arch.clone(), 1).unwrap();
+            assert_eq!(net.num_params(), expected, "{}", arch.name);
+        }
+    }
+
+    #[test]
+    fn small_has_8545_params() {
+        // 85 (conv incl bias) + 845*10 + 10 = 8,545.
+        let net = Network::new(ArchSpec::small(), 0).unwrap();
+        assert_eq!(net.num_params(), 8_545);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = Network::new(ArchSpec::small(), 42).unwrap();
+        let b = Network::new(ArchSpec::small(), 42).unwrap();
+        assert_eq!(a.params, b.params);
+        let c = Network::new(ArchSpec::small(), 43).unwrap();
+        assert_ne!(a.params, c.params);
+    }
+
+    #[test]
+    fn biases_start_zero() {
+        let net = Network::new(ArchSpec::medium(), 7).unwrap();
+        for p in &net.params {
+            assert!(p.b.iter().all(|&b| b == 0.0));
+        }
+    }
+
+    #[test]
+    fn average_of_identical_is_identity() {
+        let a = Network::new(ArchSpec::small(), 5).unwrap();
+        let avg = Network::average(&[a.clone(), a.clone()]).unwrap();
+        for (pa, pv) in a.params.iter().zip(avg.params.iter()) {
+            for (x, y) in pa.w.iter().zip(pv.w.iter()) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn average_is_elementwise_mean() {
+        let mut a = Network::new(ArchSpec::small(), 5).unwrap();
+        let mut b = Network::new(ArchSpec::small(), 5).unwrap();
+        a.params[0].w[0] = 1.0;
+        b.params[0].w[0] = 3.0;
+        let avg = Network::average(&[a, b]).unwrap();
+        assert!((avg.params[0].w[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn json_checkpoint_roundtrip() {
+        let net = Network::new(ArchSpec::small(), 9).unwrap();
+        let json = net.to_json();
+        let back = Network::from_json(&json).unwrap();
+        assert_eq!(back.params.len(), net.params.len());
+        for (a, b) in net.params.iter().zip(back.params.iter()) {
+            for (x, y) in a.w.iter().zip(b.w.iter()) {
+                assert!((x - y).abs() < 1e-6);
+            }
+        }
+        assert_eq!(back.shapes().len(), net.shapes().len());
+    }
+
+    #[test]
+    fn from_json_rejects_shape_mismatch() {
+        let net = Network::new(ArchSpec::small(), 9).unwrap();
+        let json = net.to_json();
+        // Corrupt: drop one weight from the first layer.
+        let v = crate::util::json::Json::parse(&json).unwrap();
+        let mut txt = v.emit();
+        let at = txt.find("\"w\":[").unwrap() + 5;
+        let comma = txt[at..].find(',').unwrap();
+        txt.replace_range(at..at + comma + 1, "");
+        assert!(Network::from_json(&txt).is_err());
+    }
+}

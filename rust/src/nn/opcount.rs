@@ -1,0 +1,310 @@
+//! Per-image operation counting — the reproduction of Tables VII and VIII.
+//!
+//! The paper derives `FProp` / `BProp` (operations to forward/backward one
+//! image) from a theoretical analysis of Cireşan's code, and admits the
+//! constants "are approximations, they are relative to each other, and yet
+//! far from precise". We therefore support **two parameter sources**:
+//!
+//! * [`OpSource::Computed`] — a first-principles count from the layer
+//!   geometry, documented per layer type below;
+//! * [`OpSource::Paper`] — the exact Table VII/VIII values embedded as
+//!   constants (see [`crate::report::paper`]).
+//!
+//! `repro exp table7|table8` prints both side by side with ratios, making
+//! the approximation gap visible instead of hiding it.
+//!
+//! ## Counting scheme (Computed)
+//!
+//! Counted per image, one "operation" = one scalar arithmetic op:
+//!
+//! * **conv fwd**: each output neuron does `fan_in` multiply-adds
+//!   (`2·fan_in` ops) plus activation (4 ops: the tanh is table-driven in
+//!   the original code).
+//! * **pool fwd**: each output neuron scans its `w²` window (`w²` compares)
+//!   and records the argmax (1 op).
+//! * **dense fwd**: `2·fan_in + 4` per unit, as conv.
+//! * **conv bwd**: per output neuron, the delta costs `2·fan_in` (pushing
+//!   its error to every input it reads) + 3 for the activation derivative;
+//!   per weight, gradient accumulate + decay + update = 3 ops amortized
+//!   over the neurons sharing it (`3·weights` total).
+//! * **pool bwd**: route the delta through the argmax (2 ops per output
+//!   neuron).
+//! * **dense bwd**: symmetric to conv bwd with `fan_in` per unit.
+
+use crate::config::arch::{ArchSpec, ResolvedLayer};
+use crate::error::Result;
+
+/// Layer classes the paper aggregates over in Tables VII/VIII.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum LayerClass {
+    MaxPool,
+    FullyConnected,
+    Convolution,
+}
+
+/// Operation counts for one direction, broken down by layer class.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpCounts {
+    pub max_pool: u64,
+    pub fully_connected: u64,
+    pub convolution: u64,
+}
+
+impl OpCounts {
+    pub fn total(&self) -> u64 {
+        self.max_pool + self.fully_connected + self.convolution
+    }
+
+    pub fn get(&self, class: LayerClass) -> u64 {
+        match class {
+            LayerClass::MaxPool => self.max_pool,
+            LayerClass::FullyConnected => self.fully_connected,
+            LayerClass::Convolution => self.convolution,
+        }
+    }
+
+    fn add(&mut self, class: LayerClass, ops: u64) {
+        match class {
+            LayerClass::MaxPool => self.max_pool += ops,
+            LayerClass::FullyConnected => self.fully_connected += ops,
+            LayerClass::Convolution => self.convolution += ops,
+        }
+    }
+}
+
+/// Forward + backward counts for one architecture.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArchOpCounts {
+    pub fprop: OpCounts,
+    pub bprop: OpCounts,
+}
+
+impl ArchOpCounts {
+    /// Ops per training image (one forward + one backward).
+    pub fn train_image(&self) -> u64 {
+        self.fprop.total() + self.bprop.total()
+    }
+}
+
+/// Which parameter source feeds the models/simulator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OpSource {
+    /// First-principles counts from the layer geometry (this module).
+    Computed,
+    /// The paper's Table VII/VIII constants (exact reproduction inputs).
+    #[default]
+    Paper,
+}
+
+/// Per-layer operation record (used by the simulator's per-layer costs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerOps {
+    pub class: LayerClass,
+    pub fwd: u64,
+    pub bwd: u64,
+    /// Map row width for spatial layers (vectorization modelling), or
+    /// `fan_in` for dense layers.
+    pub vector_width: usize,
+    /// Trainable weights (memory-traffic modelling).
+    pub weights: u64,
+    /// Output neurons.
+    pub neurons: u64,
+}
+
+/// Cost of the activation function in the forward direction.
+const ACT_FWD_OPS: u64 = 4;
+/// Cost of the activation derivative in the backward direction.
+const ACT_BWD_OPS: u64 = 3;
+/// Gradient accumulate + decay + update per weight.
+const WEIGHT_UPDATE_OPS: u64 = 3;
+
+/// Count every trainable/pooling layer of `arch`.
+pub fn layer_ops(arch: &ArchSpec) -> Result<Vec<LayerOps>> {
+    let shapes = arch.shapes()?;
+    let mut out = Vec::new();
+    for shape in &shapes {
+        match shape.spec {
+            ResolvedLayer::Input { .. } => {}
+            ResolvedLayer::Conv { maps, kernel, in_maps, out_hw, .. } => {
+                let neurons = (maps * out_hw * out_hw) as u64;
+                let fan_in = (in_maps * kernel * kernel) as u64;
+                let weights = shape.weights as u64;
+                let fwd = neurons * (2 * fan_in + ACT_FWD_OPS);
+                let bwd = neurons * (2 * fan_in + ACT_BWD_OPS)
+                    + weights * WEIGHT_UPDATE_OPS;
+                out.push(LayerOps {
+                    class: LayerClass::Convolution,
+                    fwd,
+                    bwd,
+                    vector_width: out_hw,
+                    weights,
+                    neurons,
+                });
+            }
+            ResolvedLayer::Pool { window, maps, out_hw, .. } => {
+                let neurons = (maps * out_hw * out_hw) as u64;
+                let win = (window * window) as u64;
+                let fwd = neurons * (win + 1);
+                let bwd = neurons * 2;
+                out.push(LayerOps {
+                    class: LayerClass::MaxPool,
+                    fwd,
+                    bwd,
+                    vector_width: out_hw,
+                    weights: 0,
+                    neurons,
+                });
+            }
+            ResolvedLayer::Dense { units, fan_in, .. } => {
+                let neurons = units as u64;
+                let fi = fan_in as u64;
+                let weights = shape.weights as u64;
+                let fwd = neurons * (2 * fi + ACT_FWD_OPS);
+                let bwd = neurons * (2 * fi + ACT_BWD_OPS)
+                    + weights * WEIGHT_UPDATE_OPS;
+                out.push(LayerOps {
+                    class: LayerClass::FullyConnected,
+                    fwd,
+                    bwd,
+                    vector_width: fan_in,
+                    weights,
+                    neurons,
+                });
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Aggregate per-class counts (the Tables VII/VIII layout).
+pub fn count(arch: &ArchSpec) -> Result<ArchOpCounts> {
+    let mut fprop = OpCounts::default();
+    let mut bprop = OpCounts::default();
+    for layer in layer_ops(arch)? {
+        fprop.add(layer.class, layer.fwd);
+        bprop.add(layer.class, layer.bwd);
+    }
+    Ok(ArchOpCounts { fprop, bprop })
+}
+
+/// Resolve counts from the chosen source for a *paper* architecture.
+/// `Computed` works for any [`ArchSpec`]; `Paper` requires small/medium/large.
+pub fn resolve(arch: &ArchSpec, source: OpSource) -> Result<ArchOpCounts> {
+    match source {
+        OpSource::Computed => count(arch),
+        OpSource::Paper => crate::report::paper::op_counts(&arch.name)
+            .ok_or_else(|| {
+                crate::error::Error::Config(format!(
+                    "no paper op counts for custom arch {:?}; use --ops computed",
+                    arch.name
+                ))
+            }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+
+    fn counts(name: &str) -> ArchOpCounts {
+        count(&ArchSpec::by_name(name).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn convolution_dominates_fprop() {
+        // Table VII: convolution is ~79-96% of forward ops in every arch.
+        for name in ["small", "medium", "large"] {
+            let c = counts(name);
+            let frac = c.fprop.convolution as f64 / c.fprop.total() as f64;
+            assert!(frac > 0.70, "{name}: conv frac {frac}");
+        }
+    }
+
+    #[test]
+    fn bprop_exceeds_fprop() {
+        // Table VII vs VIII: backward is several times forward.
+        for name in ["small", "medium", "large"] {
+            let c = counts(name);
+            assert!(c.bprop.total() > c.fprop.total(), "{name}");
+        }
+    }
+
+    #[test]
+    fn fprop_ratios_match_paper_shape() {
+        // Table VII reports medium/small = 9.64 and large/medium = 9.57.
+        // Our principled counts reproduce the order of magnitude (the paper
+        // itself calls its constants imprecise); assert the ratio is
+        // within a factor ~2 of the paper's.
+        let s = counts("small").fprop.total() as f64;
+        let m = counts("medium").fprop.total() as f64;
+        let l = counts("large").fprop.total() as f64;
+        // Computed ratios run larger than the paper's: the paper's deeper
+        // convolutional layers were counted with (undocumented) sparse map
+        // connectivity, while we count dense connectivity. Order and
+        // magnitude are preserved; the exact Table VII inputs come from
+        // OpSource::Paper.
+        let r1 = m / s;
+        let r2 = l / m;
+        assert!(r1 > 4.0 && r1 < 40.0, "medium/small fprop ratio {r1}");
+        assert!(r2 > 2.0 && r2 < 40.0, "large/medium fprop ratio {r2}");
+    }
+
+    #[test]
+    fn totals_same_decade_as_paper() {
+        // Computed totals should be the same order of magnitude as
+        // Table VII/VIII (paper: small 58k/524k, medium 559k/6119k,
+        // large 5349k/73178k).
+        let paper = [(58_000u64, 524_000u64), (559_000, 6_119_000), (5_349_000, 73_178_000)];
+        for (name, (pf, _pb)) in ["small", "medium", "large"].iter().zip(paper) {
+            let c = counts(name);
+            let ratio = c.fprop.total() as f64 / pf as f64;
+            // Within one decade (dense vs the paper's sparse connectivity).
+            assert!(ratio > 0.3 && ratio < 10.0,
+                    "{name}: fprop {} vs paper {pf}", c.fprop.total());
+        }
+    }
+
+    #[test]
+    fn small_exact_values_pinned() {
+        // Regression pin for the documented counting scheme (small arch):
+        //  conv: 3380 neurons × (2·16 + 4) = 121,680 fwd
+        //  pool: 845 × (4+1) = 4,225 fwd
+        //  dense: 10 × (2·845 + 4) = 16,940 fwd
+        let c = counts("small");
+        assert_eq!(c.fprop.convolution, 121_680);
+        assert_eq!(c.fprop.max_pool, 4_225);
+        assert_eq!(c.fprop.fully_connected, 16_940);
+        // bwd conv: 3380 × (32+3) + 85×3 = 118,555
+        assert_eq!(c.bprop.convolution, 118_555);
+    }
+
+    #[test]
+    fn layer_ops_sum_equals_aggregate() {
+        for name in ["small", "medium", "large"] {
+            let arch = ArchSpec::by_name(name).unwrap();
+            let per_layer = layer_ops(&arch).unwrap();
+            let agg = count(&arch).unwrap();
+            let fwd: u64 = per_layer.iter().map(|l| l.fwd).sum();
+            let bwd: u64 = per_layer.iter().map(|l| l.bwd).sum();
+            assert_eq!(fwd, agg.fprop.total());
+            assert_eq!(bwd, agg.bprop.total());
+        }
+    }
+
+    #[test]
+    fn resolve_paper_matches_tables() {
+        let arch = ArchSpec::small();
+        let c = resolve(&arch, OpSource::Paper).unwrap();
+        assert_eq!(c.fprop.total(), 58_000);
+        assert_eq!(c.bprop.total(), 524_000);
+    }
+
+    #[test]
+    fn resolve_paper_rejects_custom_arch() {
+        let mut arch = ArchSpec::small();
+        arch.name = "custom".into();
+        assert!(resolve(&arch, OpSource::Paper).is_err());
+        assert!(resolve(&arch, OpSource::Computed).is_ok());
+    }
+}

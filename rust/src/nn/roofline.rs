@@ -1,0 +1,219 @@
+//! Roofline analysis: arithmetic intensity and attainable performance.
+//!
+//! Two targets:
+//!
+//! * **KNC** (the paper's machine): peak = 61 cores × 16 lanes × 2 flops ×
+//!   1.238 GHz ≈ 2.4 TFLOP/s f32, machine balance ≈ 6.9 flop/byte against
+//!   the 352 GB/s GDDR system. Used to situate the calibrated simulator
+//!   cost (≈31 cycles/op forward) against the theoretical ceiling — the
+//!   achieved-vs-roofline *efficiency ratio* that EXPERIMENTS.md §Perf
+//!   reports.
+//! * **TPU (MXU)** — the Hardware-Adaptation view (DESIGN.md): each conv
+//!   layer as the im2col matmul the Pallas kernel runs, with MXU tile
+//!   occupancy (M, N vs the 128×128 systolic array) and VMEM residency of
+//!   one grid step. interpret=True wallclock is meaningless, so kernel
+//!   quality is assessed from these static estimates.
+
+use crate::config::arch::{ArchSpec, ResolvedLayer};
+use crate::config::MachineConfig;
+use crate::error::Result;
+
+/// Roofline record for one layer on the KNC target.
+#[derive(Debug, Clone)]
+pub struct LayerRoofline {
+    pub name: String,
+    /// FLOPs per image (2 × MACs).
+    pub flops: f64,
+    /// Bytes moved per image (weights once + input/output activations).
+    pub bytes: f64,
+    /// Arithmetic intensity, flop/byte.
+    pub intensity: f64,
+    /// Attainable GFLOP/s on the machine (min(peak, intensity × bw)).
+    pub attainable_gflops: f64,
+    /// Time at the roofline, seconds/image.
+    pub roofline_s: f64,
+}
+
+/// MXU mapping record for one conv/dense layer (the Pallas kernel view).
+#[derive(Debug, Clone)]
+pub struct MxuMapping {
+    pub name: String,
+    /// Matmul dims after im2col, with batch folded into M (B = 64).
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    /// Fraction of the 128×128 MXU tile grid actually used.
+    pub mxu_occupancy: f64,
+    /// VMEM bytes for one grid step (A tile + B tile + out tile + bias).
+    pub vmem_bytes: usize,
+}
+
+/// Per-layer KNC roofline for an architecture.
+pub fn knc_roofline(arch: &ArchSpec, machine: &MachineConfig) -> Result<Vec<LayerRoofline>> {
+    let peak_flops = machine.peak_flops_thread() * machine.cores as f64;
+    let bw = machine.memory_bw_bytes;
+    let mut out = Vec::new();
+    for shape in arch.shapes()? {
+        let (name, macs, w_bytes, in_neurons, out_neurons) = match shape.spec {
+            ResolvedLayer::Conv { maps, kernel, in_maps, in_hw, out_hw } => (
+                format!("conv{kernel}x{kernel}x{maps}"),
+                (maps * out_hw * out_hw * in_maps * kernel * kernel) as f64,
+                shape.weights as f64 * 4.0,
+                (in_maps * in_hw * in_hw) as f64,
+                shape.neurons as f64,
+            ),
+            ResolvedLayer::Dense { units, fan_in, .. } => (
+                format!("dense{units}"),
+                (units * fan_in) as f64,
+                shape.weights as f64 * 4.0,
+                fan_in as f64,
+                units as f64,
+            ),
+            ResolvedLayer::Pool { window, maps, in_hw, out_hw } => (
+                format!("pool{window}x{window}"),
+                (maps * out_hw * out_hw * window * window) as f64 / 2.0,
+                0.0,
+                (maps * in_hw * in_hw) as f64,
+                shape.neurons as f64,
+            ),
+            ResolvedLayer::Input { .. } => continue,
+        };
+        let flops = 2.0 * macs;
+        let bytes = w_bytes + 4.0 * (in_neurons + out_neurons);
+        let intensity = flops / bytes.max(1.0);
+        let attainable = (intensity * bw).min(peak_flops);
+        out.push(LayerRoofline {
+            name,
+            flops,
+            bytes,
+            intensity,
+            attainable_gflops: attainable / 1e9,
+            roofline_s: flops / attainable,
+        });
+    }
+    Ok(out)
+}
+
+/// Whole-net roofline time per image (sum of layer roofline times).
+pub fn knc_roofline_time_s(arch: &ArchSpec, machine: &MachineConfig) -> Result<f64> {
+    Ok(knc_roofline(arch, machine)?.iter().map(|l| l.roofline_s).sum())
+}
+
+/// Achieved-vs-roofline efficiency of the (simulated) machine: roofline
+/// time / measured per-image time. The paper's code measured ~1.45 ms for
+/// the small forward pass; the roofline is far lower — the ratio is the
+/// "how far from peak" number the §Perf analysis tracks.
+pub fn knc_efficiency(arch: &ArchSpec, machine: &MachineConfig, measured_s: f64) -> Result<f64> {
+    Ok(knc_roofline_time_s(arch, machine)? / measured_s)
+}
+
+/// MXU tile mapping of every matmul the Pallas kernel runs for `arch`
+/// (batch folded into M, as in `python/compile/model.py`).
+pub fn mxu_mapping(arch: &ArchSpec, batch: usize) -> Result<Vec<MxuMapping>> {
+    const TILE: usize = 128;
+    const BLOCK_M: usize = 128;
+    const BLOCK_N: usize = 128;
+    let mut out = Vec::new();
+    for shape in arch.shapes()? {
+        let (name, m, k, n) = match shape.spec {
+            ResolvedLayer::Conv { maps, kernel, in_maps, out_hw, .. } => (
+                format!("conv{kernel}x{kernel}x{maps}"),
+                batch * out_hw * out_hw,
+                in_maps * kernel * kernel,
+                maps,
+            ),
+            ResolvedLayer::Dense { units, fan_in, .. } => {
+                (format!("dense{units}"), batch, fan_in, units)
+            }
+            _ => continue,
+        };
+        // Occupancy: used / allocated cells in the padded tile grid.
+        let pad = |x: usize| x.div_ceil(TILE) * TILE;
+        let mxu_occupancy = (m * n) as f64 / (pad(m) * pad(n)) as f64;
+        let bm = BLOCK_M.min(m.max(8));
+        let bn = BLOCK_N.min(n.max(8));
+        let vmem_bytes = 4 * (bm * k + k * bn + bm * bn + bn);
+        out.push(MxuMapping { name, m, k, n, mxu_occupancy, vmem_bytes });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn phi() -> MachineConfig {
+        MachineConfig::xeon_phi_7120p()
+    }
+
+    #[test]
+    fn conv_layers_have_higher_intensity_than_dense() {
+        // Weight sharing gives convolutions far better flop/byte than
+        // dense layers (each dense weight is used once per image).
+        let rl = knc_roofline(&ArchSpec::medium(), &phi()).unwrap();
+        let conv = rl.iter().find(|l| l.name.starts_with("conv")).unwrap();
+        let dense = rl.iter().find(|l| l.name.starts_with("dense")).unwrap();
+        assert!(conv.intensity > dense.intensity * 2.0,
+                "{} vs {}", conv.intensity, dense.intensity);
+    }
+
+    #[test]
+    fn attainable_never_exceeds_peak() {
+        let m = phi();
+        let peak = m.peak_flops_thread() * m.cores as f64 / 1e9;
+        for arch in ArchSpec::paper_archs() {
+            for l in knc_roofline(&arch, &m).unwrap() {
+                assert!(l.attainable_gflops <= peak + 1e-6, "{}", l.name);
+                assert!(l.roofline_s > 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn roofline_time_far_below_measured() {
+        // Table III small forward = 1.45 ms measured; the roofline is
+        // orders of magnitude lower (the paper's code was nowhere near
+        // peak — ~31 cycles/op). Efficiency ratio must be << 1.
+        let arch = ArchSpec::small();
+        let eff = knc_efficiency(&arch, &phi(), 1.45e-3).unwrap();
+        assert!(eff > 0.0 && eff < 0.2, "{eff}");
+    }
+
+    #[test]
+    fn larger_archs_have_larger_roofline_times() {
+        let m = phi();
+        let t: Vec<f64> = ArchSpec::paper_archs()
+            .iter()
+            .map(|a| knc_roofline_time_s(a, &m).unwrap())
+            .collect();
+        assert!(t[0] < t[1] && t[1] < t[2], "{t:?}");
+    }
+
+    #[test]
+    fn mxu_mapping_matches_python_shapes() {
+        // Must agree with python/tests/test_kernels.py ARCH_MATMUL_SHAPES.
+        let maps = mxu_mapping(&ArchSpec::large(), 64).unwrap();
+        let c3 = maps.iter().find(|m| m.name == "conv6x6x100").unwrap();
+        assert_eq!((c3.m, c3.k, c3.n), (64 * 36, 2160, 100));
+        let f = maps.iter().find(|m| m.name == "dense150").unwrap();
+        assert_eq!((f.m, f.k, f.n), (64, 900, 150));
+    }
+
+    #[test]
+    fn vmem_fits_budget_for_all_arch_layers() {
+        // One grid step must fit comfortably in 16 MiB VMEM (same bound
+        // as the python-side test).
+        for arch in ArchSpec::paper_archs() {
+            for m in mxu_mapping(&arch, 64).unwrap() {
+                assert!(m.vmem_bytes < 4 * 1024 * 1024, "{}: {}", m.name, m.vmem_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn mxu_occupancy_within_unit_interval() {
+        for m in mxu_mapping(&ArchSpec::small(), 64).unwrap() {
+            assert!(m.mxu_occupancy > 0.0 && m.mxu_occupancy <= 1.0);
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! The MemoryContention(p) parameter and the `T_mem` term.
+//!
+//! `T_mem(ep, i, p) = MemoryContention(p) · ep · i / p` — the paper's
+//! memory/synchronization overhead (Section IV). The contention value per
+//! thread count comes either from the paper's Table IV (measured on the
+//! real Phi, predicted beyond 240 threads) or from the micsim probe.
+
+use crate::config::ArchSpec;
+use crate::error::{Error, Result};
+use crate::perfmodel::ParamSource;
+use crate::report::paper;
+use crate::simulator::{probe, SimConfig};
+
+/// Resolves MemoryContention(p) for one architecture.
+#[derive(Debug, Clone)]
+pub struct ContentionSource {
+    arch: ArchSpec,
+    source: ParamSource,
+    sim_cfg: SimConfig,
+}
+
+impl ContentionSource {
+    pub fn new(arch: &ArchSpec, source: ParamSource) -> Self {
+        ContentionSource {
+            arch: arch.clone(),
+            source,
+            sim_cfg: SimConfig::default(),
+        }
+    }
+
+    pub fn with_sim_config(mut self, cfg: SimConfig) -> Self {
+        self.sim_cfg = cfg;
+        self
+    }
+
+    /// MemoryContention(p) in seconds.
+    pub fn contention_s(&self, p: usize) -> Result<f64> {
+        match self.source {
+            ParamSource::Paper => {
+                paper::contention_s(&self.arch.name, p).ok_or_else(|| {
+                    Error::Config(format!(
+                        "no Table IV column for arch {:?}; use ParamSource::Simulator",
+                        self.arch.name
+                    ))
+                })
+            }
+            ParamSource::Simulator => probe::contention_probe(&self.arch, p, &self.sim_cfg),
+        }
+    }
+
+    /// The full memory-overhead term `T_mem(ep, i, p)`.
+    pub fn t_mem_s(&self, epochs: usize, train_images: usize, p: usize) -> Result<f64> {
+        Ok(self.contention_s(p)? * epochs as f64 * train_images as f64 / p as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_tmem_small_240_matches_hand_calc() {
+        // 1.40e-2 × 70 × 60000 / 240 = 245 s.
+        let c = ContentionSource::new(&ArchSpec::small(), ParamSource::Paper);
+        let t = c.t_mem_s(70, 60_000, 240).unwrap();
+        assert!((t - 245.0).abs() < 0.5, "{t}");
+    }
+
+    #[test]
+    fn simulator_source_close_to_paper_at_240() {
+        for arch in ArchSpec::paper_archs() {
+            let paper_src = ContentionSource::new(&arch, ParamSource::Paper);
+            let sim_src = ContentionSource::new(&arch, ParamSource::Simulator);
+            let a = paper_src.contention_s(240).unwrap();
+            let b = sim_src.contention_s(240).unwrap();
+            assert!((a - b).abs() / a < 0.05, "{}: {a} vs {b}", arch.name);
+        }
+    }
+
+    #[test]
+    fn paper_source_rejects_custom_arch() {
+        let mut arch = ArchSpec::small();
+        arch.name = "custom".into();
+        let c = ContentionSource::new(&arch, ParamSource::Paper);
+        assert!(c.contention_s(240).is_err());
+        let c = ContentionSource::new(&arch, ParamSource::Simulator);
+        assert!(c.contention_s(240).is_ok());
+    }
+
+    #[test]
+    fn tmem_scales_linearly_with_images_and_epochs() {
+        let c = ContentionSource::new(&ArchSpec::medium(), ParamSource::Paper);
+        let base = c.t_mem_s(70, 60_000, 240).unwrap();
+        assert!((c.t_mem_s(140, 60_000, 240).unwrap() / base - 2.0).abs() < 1e-9);
+        assert!((c.t_mem_s(70, 120_000, 240).unwrap() / base - 2.0).abs() < 1e-9);
+    }
+}

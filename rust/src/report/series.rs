@@ -1,0 +1,102 @@
+//! (x, y) series with ASCII rendering — the figure analogue of [`super::Table`].
+//!
+//! Figures 5–7 plot predicted vs measured execution time over thread counts;
+//! we render the same series as aligned columns plus a log-scale ASCII chart
+//! so `repro exp fig5` output is directly comparable to the paper's figure.
+
+use std::fmt::Write as _;
+
+/// One named line of a figure.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Self {
+        Series { name: name.into(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) -> &mut Self {
+        self.points.push((x, y));
+        self
+    }
+
+    pub fn from_points(name: impl Into<String>, pts: &[(f64, f64)]) -> Self {
+        Series { name: name.into(), points: pts.to_vec() }
+    }
+}
+
+/// Render multiple series as a log-y ASCII chart (rows = x values).
+pub fn render_chart(title: &str, series: &[Series], y_label: &str) -> String {
+    const WIDTH: usize = 60;
+    let mut out = String::new();
+    let _ = writeln!(out, "== {title} ==  ({y_label}, log scale)");
+    let ys: Vec<f64> = series
+        .iter()
+        .flat_map(|s| s.points.iter().map(|&(_, y)| y))
+        .filter(|y| *y > 0.0)
+        .collect();
+    if ys.is_empty() {
+        return out;
+    }
+    let (ymin, ymax) = ys
+        .iter()
+        .fold((f64::INFINITY, 0.0f64), |(lo, hi), &y| (lo.min(y), hi.max(y)));
+    let (lmin, lmax) = (ymin.ln(), ymax.ln().max(ymin.ln() + 1e-9));
+    let marks = ['*', 'o', '+', 'x', '#'];
+
+    let xs: Vec<f64> = series
+        .first()
+        .map(|s| s.points.iter().map(|&(x, _)| x).collect())
+        .unwrap_or_default();
+    for (row, &x) in xs.iter().enumerate() {
+        let mut line = vec![' '; WIDTH + 1];
+        for (si, s) in series.iter().enumerate() {
+            if let Some(&(_, y)) = s.points.get(row) {
+                if y > 0.0 {
+                    let pos = ((y.ln() - lmin) / (lmax - lmin) * WIDTH as f64)
+                        .round()
+                        .clamp(0.0, WIDTH as f64) as usize;
+                    line[pos] = marks[si % marks.len()];
+                }
+            }
+        }
+        let line: String = line.into_iter().collect();
+        let _ = writeln!(out, "{x:>8} |{line}");
+    }
+    let _ = write!(out, "legend: ");
+    for (si, s) in series.iter().enumerate() {
+        let _ = write!(out, "{}={}  ", marks[si % marks.len()], s.name);
+    }
+    let _ = writeln!(out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chart_contains_all_series_marks() {
+        let a = Series::from_points("pred", &[(1.0, 100.0), (2.0, 50.0)]);
+        let b = Series::from_points("meas", &[(1.0, 110.0), (2.0, 55.0)]);
+        let s = render_chart("fig", &[a, b], "seconds");
+        assert!(s.contains('*') && s.contains('o'));
+        assert!(s.contains("pred") && s.contains("meas"));
+    }
+
+    #[test]
+    fn chart_handles_empty() {
+        let s = render_chart("fig", &[Series::new("empty")], "s");
+        assert!(s.contains("fig"));
+    }
+
+    #[test]
+    fn push_builds_points() {
+        let mut s = Series::new("x");
+        s.push(1.0, 2.0).push(3.0, 4.0);
+        assert_eq!(s.points, vec![(1.0, 2.0), (3.0, 4.0)]);
+    }
+}

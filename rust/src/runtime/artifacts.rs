@@ -1,0 +1,209 @@
+//! Artifact registry: `artifacts/meta.json` + per-architecture HLO paths.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Parameter shapes of one trainable layer, as lowered.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ParamShapes {
+    pub w: Vec<usize>,
+    pub b: Vec<usize>,
+}
+
+/// One architecture's artifact entry.
+#[derive(Debug, Clone)]
+pub struct ArchArtifacts {
+    pub name: String,
+    pub params: Vec<ParamShapes>,
+    pub train_hlo: PathBuf,
+    pub infer_hlo: PathBuf,
+    /// Expected executable arity: params·2 + x + y.
+    pub train_inputs: usize,
+    /// params·2 + loss.
+    pub train_outputs: usize,
+}
+
+/// Parsed registry for an artifacts directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactRegistry {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub lr: f64,
+    pub input_hw: usize,
+    pub num_classes: usize,
+    pub archs: Vec<ArchArtifacts>,
+}
+
+impl ArtifactRegistry {
+    /// Load and validate `dir/meta.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactRegistry> {
+        let meta_path = dir.join("meta.json");
+        let text = std::fs::read_to_string(&meta_path).map_err(|e| {
+            Error::Artifact(format!(
+                "{}: {e} (run `make artifacts` first)",
+                meta_path.display()
+            ))
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse registry JSON (separated for testing).
+    pub fn parse(dir: &Path, text: &str) -> Result<ArtifactRegistry> {
+        let v = Json::parse(text)?;
+        let usize_field = |key: &str| -> Result<usize> {
+            v.expect(key)?
+                .as_usize()
+                .ok_or_else(|| Error::Artifact(format!("meta.json: bad {key}")))
+        };
+        let batch = usize_field("batch")?;
+        let input_hw = usize_field("input_hw")?;
+        let num_classes = usize_field("num_classes")?;
+        let lr = v
+            .expect("lr")?
+            .as_f64()
+            .ok_or_else(|| Error::Artifact("meta.json: bad lr".into()))?;
+
+        let mut archs = Vec::new();
+        for (name, entry) in v
+            .expect("archs")?
+            .as_obj()
+            .ok_or_else(|| Error::Artifact("meta.json: archs not object".into()))?
+        {
+            let mut params = Vec::new();
+            for p in entry
+                .expect("params")?
+                .as_arr()
+                .ok_or_else(|| Error::Artifact(format!("{name}: params not array")))?
+            {
+                let dims = |key: &str| -> Result<Vec<usize>> {
+                    p.expect(key)?
+                        .as_arr()
+                        .ok_or_else(|| Error::Artifact(format!("{name}: bad {key}")))?
+                        .iter()
+                        .map(|d| {
+                            d.as_usize().ok_or_else(|| {
+                                Error::Artifact(format!("{name}: bad {key} dim"))
+                            })
+                        })
+                        .collect()
+                };
+                params.push(ParamShapes { w: dims("w")?, b: dims("b")? });
+            }
+            let path_field = |key: &str| -> Result<PathBuf> {
+                Ok(dir.join(entry.expect(key)?.as_str().ok_or_else(|| {
+                    Error::Artifact(format!("{name}: bad {key}"))
+                })?))
+            };
+            let n = params.len();
+            let arch = ArchArtifacts {
+                name: name.clone(),
+                params,
+                train_hlo: path_field("train_hlo")?,
+                infer_hlo: path_field("infer_hlo")?,
+                train_inputs: 2 * n + 2,
+                train_outputs: 2 * n + 1,
+            };
+            // Cross-check against the meta's own counts when present.
+            if let (Some(ti), Some(to)) = (
+                entry.get("train_inputs").and_then(|j| j.as_usize()),
+                entry.get("train_outputs").and_then(|j| j.as_usize()),
+            ) {
+                if ti != arch.train_inputs || to != arch.train_outputs {
+                    return Err(Error::Artifact(format!(
+                        "{name}: meta arity {ti}/{to} disagrees with params ({}/{})",
+                        arch.train_inputs, arch.train_outputs
+                    )));
+                }
+            }
+            archs.push(arch);
+        }
+        archs.sort_by(|a, b| a.name.cmp(&b.name));
+        Ok(ArtifactRegistry { dir: dir.to_path_buf(), batch, lr, input_hw, num_classes, archs })
+    }
+
+    pub fn arch(&self, name: &str) -> Result<&ArchArtifacts> {
+        self.archs.iter().find(|a| a.name == name).ok_or_else(|| {
+            Error::Artifact(format!(
+                "no artifacts for arch {name:?} (have: {:?})",
+                self.archs.iter().map(|a| a.name.as_str()).collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    /// Verify the HLO files exist on disk.
+    pub fn check_files(&self) -> Result<()> {
+        for arch in &self.archs {
+            for path in [&arch.train_hlo, &arch.infer_hlo] {
+                if !path.exists() {
+                    return Err(Error::Artifact(format!(
+                        "missing artifact {} (run `make artifacts`)",
+                        path.display()
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META: &str = r#"{
+      "batch": 8, "lr": 0.05, "input_hw": 29, "num_classes": 10,
+      "archs": {
+        "small": {
+          "params": [{"w":[5,1,4,4],"b":[5]},{"w":[845,10],"b":[10]}],
+          "layers": [],
+          "train_hlo": "train_small_b8.hlo.txt",
+          "infer_hlo": "infer_small_b8.hlo.txt",
+          "train_inputs": 6, "train_outputs": 5
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_meta() {
+        let r = ArtifactRegistry::parse(Path::new("/tmp/a"), META).unwrap();
+        assert_eq!(r.batch, 8);
+        assert_eq!(r.input_hw, 29);
+        let arch = r.arch("small").unwrap();
+        assert_eq!(arch.params.len(), 2);
+        assert_eq!(arch.params[0].w, vec![5, 1, 4, 4]);
+        assert_eq!(arch.train_inputs, 6);
+        assert!(arch.train_hlo.ends_with("train_small_b8.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_arity_mismatch() {
+        let bad = META.replace("\"train_inputs\": 6", "\"train_inputs\": 7");
+        assert!(ArtifactRegistry::parse(Path::new("/tmp"), &bad).is_err());
+    }
+
+    #[test]
+    fn unknown_arch_lookup_fails() {
+        let r = ArtifactRegistry::parse(Path::new("/tmp"), META).unwrap();
+        assert!(r.arch("huge").is_err());
+    }
+
+    #[test]
+    fn check_files_reports_missing() {
+        let r = ArtifactRegistry::parse(Path::new("/definitely/not"), META).unwrap();
+        assert!(r.check_files().is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        // Integration smoke against the repo's own artifacts (skipped when
+        // `make artifacts` has not run).
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("meta.json").exists() {
+            let r = ArtifactRegistry::load(&dir).unwrap();
+            assert!(r.arch("small").is_ok());
+            r.check_files().unwrap();
+        }
+    }
+}

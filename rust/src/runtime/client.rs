@@ -1,0 +1,236 @@
+//! PJRT client wrapper: compile HLO text once, execute many times.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. The lowered train step is
+//! `(w0, b0, …, x, y) -> (w0', b0', …, loss)`, so a [`TrainHandle`] keeps
+//! the parameter literals between steps and feeds the outputs of step `k`
+//! straight back in as the inputs of step `k+1` — weights never leave the
+//! runtime between steps.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+use crate::nn::init::XorShift64;
+use crate::runtime::artifacts::{ArchArtifacts, ParamShapes};
+
+/// Compiled-executable cache over one PJRT CPU client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl std::fmt::Debug for PjrtRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtRuntime")
+            .field("platform", &self.client.platform_name())
+            .field("cached", &self.cache.len())
+            .finish()
+    }
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<PjrtRuntime> {
+        Ok(PjrtRuntime { client: xla::PjRtClient::cpu()?, cache: HashMap::new() })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text file (cached by path).
+    pub fn compile_hlo(&mut self, path: &Path) -> Result<&xla::PjRtLoadedExecutable> {
+        let key = path.display().to_string();
+        if !self.cache.contains_key(&key) {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::Runtime("non-utf8 path".into()))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(&self.cache[&key])
+    }
+
+    /// Build a training handle for one architecture with freshly
+    /// initialized parameters (Uniform(−1/√fan_in, 1/√fan_in), zero bias —
+    /// the same scheme as the JAX side).
+    pub fn train_handle(
+        &mut self,
+        arch: &ArchArtifacts,
+        batch: usize,
+        input_hw: usize,
+        seed: u64,
+    ) -> Result<TrainHandle> {
+        self.compile_hlo(&arch.train_hlo)?;
+        let params = init_param_literals(&arch.params, seed)?;
+        Ok(TrainHandle {
+            key: arch.train_hlo.display().to_string(),
+            infer_key: None,
+            infer_path: arch.infer_hlo.clone(),
+            params,
+            batch,
+            input_hw,
+            n_outputs: arch.train_outputs,
+            steps: 0,
+        })
+    }
+
+    /// Run one training step, feeding updated parameters back into the
+    /// handle. Returns the batch loss.
+    pub fn train_step(
+        &mut self,
+        handle: &mut TrainHandle,
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<f32> {
+        let b = handle.batch;
+        let hw = handle.input_hw as i64;
+        if images.len() != b * (hw * hw) as usize {
+            return Err(Error::Runtime(format!(
+                "expected {}x{hw}x{hw} image batch, got {} floats",
+                b,
+                images.len()
+            )));
+        }
+        if labels.len() != b {
+            return Err(Error::Runtime(format!(
+                "expected {b} labels, got {}",
+                labels.len()
+            )));
+        }
+        let x = xla::Literal::vec1(images).reshape(&[b as i64, 1, hw, hw])?;
+        let y = xla::Literal::vec1(labels);
+
+        let mut inputs: Vec<&xla::Literal> = handle.params.iter().collect();
+        inputs.push(&x);
+        inputs.push(&y);
+
+        let exe = self
+            .cache
+            .get(&handle.key)
+            .ok_or_else(|| Error::Runtime("train executable not compiled".into()))?;
+        let result = exe.execute::<&xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let mut outputs = result.to_tuple()?;
+        if outputs.len() != handle.n_outputs {
+            return Err(Error::Runtime(format!(
+                "train step returned {} outputs, expected {}",
+                outputs.len(),
+                handle.n_outputs
+            )));
+        }
+        let loss = outputs.pop().unwrap().to_vec::<f32>()?[0];
+        handle.params = outputs;
+        handle.steps += 1;
+        Ok(loss)
+    }
+
+    /// Run inference on a batch, returning per-sample argmax classes.
+    pub fn infer(&mut self, handle: &mut TrainHandle, images: &[f32]) -> Result<Vec<usize>> {
+        let b = handle.batch;
+        let hw = handle.input_hw as i64;
+        let x = xla::Literal::vec1(images).reshape(&[b as i64, 1, hw, hw])?;
+        if handle.infer_key.is_none() {
+            self.compile_hlo(&handle.infer_path)?;
+            handle.infer_key = Some(handle.infer_path.display().to_string());
+        }
+        let exe = self
+            .cache
+            .get(handle.infer_key.as_ref().unwrap())
+            .ok_or_else(|| Error::Runtime("infer executable not compiled".into()))?;
+        let mut inputs: Vec<&xla::Literal> = handle.params.iter().collect();
+        inputs.push(&x);
+        let result = exe.execute::<&xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let logits = result.to_tuple1()?.to_vec::<f32>()?;
+        let classes = logits
+            .chunks(logits.len() / b)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .map(|(i, _)| i)
+                    .unwrap_or(0)
+            })
+            .collect();
+        Ok(classes)
+    }
+}
+
+/// Per-run training state: the parameter literals and shapes.
+pub struct TrainHandle {
+    key: String,
+    infer_key: Option<String>,
+    infer_path: std::path::PathBuf,
+    /// Current parameters, in lowering order (w0, b0, w1, b1, …).
+    pub params: Vec<xla::Literal>,
+    pub batch: usize,
+    pub input_hw: usize,
+    n_outputs: usize,
+    /// Steps executed so far.
+    pub steps: u64,
+}
+
+impl std::fmt::Debug for TrainHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TrainHandle")
+            .field("params", &self.params.len())
+            .field("batch", &self.batch)
+            .field("steps", &self.steps)
+            .finish()
+    }
+}
+
+/// Initialize parameter literals matching the lowered shapes.
+fn init_param_literals(shapes: &[ParamShapes], seed: u64) -> Result<Vec<xla::Literal>> {
+    let mut rng = XorShift64::new(seed);
+    let mut out = Vec::with_capacity(shapes.len() * 2);
+    for p in shapes {
+        let fan_in: usize = if p.w.len() == 4 {
+            p.w[1] * p.w[2] * p.w[3]
+        } else {
+            p.w[0]
+        };
+        let n: usize = p.w.iter().product();
+        let mut w = vec![0.0f32; n];
+        crate::nn::init::init_weights(&mut rng, &mut w, fan_in);
+        let dims: Vec<i64> = p.w.iter().map(|&d| d as i64).collect();
+        out.push(xla::Literal::vec1(&w).reshape(&dims)?);
+        let nb: usize = p.b.iter().product();
+        out.push(xla::Literal::vec1(&vec![0.0f32; nb]));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT-backed tests live in rust/tests/runtime_e2e.rs (they need the
+    // artifacts built); here only the pure parts.
+    use super::*;
+
+    #[test]
+    fn init_param_literals_shapes() {
+        let shapes = vec![
+            ParamShapes { w: vec![5, 1, 4, 4], b: vec![5] },
+            ParamShapes { w: vec![845, 10], b: vec![10] },
+        ];
+        let lits = init_param_literals(&shapes, 7).unwrap();
+        assert_eq!(lits.len(), 4);
+        assert_eq!(lits[0].element_count(), 80);
+        assert_eq!(lits[1].element_count(), 5);
+        assert_eq!(lits[2].element_count(), 8450);
+        assert_eq!(lits[3].element_count(), 10);
+    }
+
+    #[test]
+    fn init_is_seed_deterministic() {
+        let shapes = vec![ParamShapes { w: vec![3, 4], b: vec![4] }];
+        let a = init_param_literals(&shapes, 1).unwrap();
+        let b = init_param_literals(&shapes, 1).unwrap();
+        assert_eq!(
+            a[0].to_vec::<f32>().unwrap(),
+            b[0].to_vec::<f32>().unwrap()
+        );
+    }
+}

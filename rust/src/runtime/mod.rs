@@ -1,0 +1,18 @@
+//! PJRT runtime: load the AOT HLO-text artifacts and execute them.
+//!
+//! The request path is Rust-only: `make artifacts` ran Python once to
+//! lower the JAX/Pallas training step to HLO **text** (see
+//! `python/compile/aot.py` — text, not serialized protos, because
+//! xla_extension 0.5.1 rejects jax ≥ 0.5's 64-bit instruction ids), and
+//! this module loads, compiles, and runs those artifacts via the `xla`
+//! crate's PJRT CPU client.
+//!
+//! * [`artifacts`] — the registry: parses `artifacts/meta.json`, resolves
+//!   per-architecture HLO paths and parameter shapes.
+//! * [`client`] — compiled-executable cache + typed train/infer wrappers.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArchArtifacts, ArtifactRegistry};
+pub use client::{PjrtRuntime, TrainHandle};

@@ -1,0 +1,236 @@
+//! Per-image cycle cost model.
+//!
+//! ## Calibration
+//!
+//! One abstract operation (Table VII/VIII counting) costs a calibrated
+//! number of core cycles at single-thread occupancy. The constants are
+//! fit against the paper's measured per-image times (Table III) over the
+//! paper's op counts:
+//!
+//! | arch   | T_Fprop | FProp ops | cycles/op | T_Bprop | BProp ops | cycles/op |
+//! |--------|---------|-----------|-----------|---------|-----------|-----------|
+//! | small  | 1.45 ms | 58k       | 30.9      | 5.30 ms | 524k      | 12.5      |
+//! | medium | 12.55 ms| 559k      | 27.8      | 69.73 ms| 6,119k    | 14.1      |
+//! | large  | 148.9 ms| 5,349k    | 34.5      | 859.2 ms| 73,178k   | 14.5      |
+//!
+//! The fit is tight (fwd 31±3, bwd 13.7±1): a single pair of constants
+//! reproduces all six measurements within ~11%. The residual is the
+//! simulator's honest disagreement with the paper's testbed and is what
+//! keeps the models' prediction accuracy Δ in the paper's ballpark
+//! instead of collapsing to zero (EXPERIMENTS.md §table9).
+//!
+//! ## Scaling with thread count
+//!
+//! Each per-image cost splits into an execute part (`exec_fraction`),
+//! which scales with the SMT CPI ladder, and a memory part, which scales
+//! with L2 pressure and ring occupancy ([`crate::simulator::memory`]).
+//! Channel contention is added per image on top. Oversubscribed software
+//! threads divide their hardware context round-robin and pay a switch
+//! overhead.
+
+use crate::config::arch::ArchSpec;
+use crate::error::Result;
+use crate::nn::opcount;
+use crate::simulator::machine::PhiMachine;
+use crate::simulator::memory::{l2_pressure, ring_factor, ContentionParams};
+use crate::simulator::SimConfig;
+
+/// Resolved per-architecture cost inputs.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Forward cycles per image at occupancy 1 (before memory scaling).
+    pub fwd_cycles: f64,
+    /// Backward cycles per image at occupancy 1.
+    pub bwd_cycles: f64,
+    /// Per-thread working set in bytes (weights + largest activations).
+    pub working_set_bytes: f64,
+    /// Channel-contention calibration.
+    pub contention: ContentionParams,
+    /// Total trainable parameters in bytes.
+    pub param_bytes: f64,
+    /// Weights for the prep phase cost.
+    pub total_weights: f64,
+}
+
+impl CostModel {
+    pub fn new(arch: &ArchSpec, cfg: &SimConfig) -> Result<CostModel> {
+        // Paper op counts where available (the calibration anchors); fall
+        // back to first-principles counts for custom architectures.
+        let counts = opcount::resolve(arch, cfg.op_source)
+            .or_else(|_| opcount::count(arch))?;
+        let shapes = arch.shapes()?;
+        let param_bytes: f64 = shapes.iter().map(|l| l.weights as f64 * 4.0).sum();
+        // Working set: parameters + the two largest activation layers
+        // (producer + consumer are live simultaneously).
+        let mut neuron_bytes: Vec<f64> =
+            shapes.iter().map(|l| l.neurons as f64 * 4.0).collect();
+        neuron_bytes.sort_by(|a, b| b.total_cmp(a));
+        let acts: f64 = neuron_bytes.iter().take(2).sum();
+        let working_set_bytes = param_bytes + acts;
+
+        Ok(CostModel {
+            fwd_cycles: counts.fprop.total() as f64 * cfg.fwd_cycles_per_op,
+            bwd_cycles: counts.bprop.total() as f64 * cfg.bwd_cycles_per_op,
+            working_set_bytes,
+            contention: ContentionParams::for_arch(&arch.name, param_bytes, &cfg.machine),
+            param_bytes,
+            total_weights: shapes.iter().map(|l| l.weights as f64).sum(),
+        })
+    }
+
+    /// Seconds for one *forward* pass on software thread `t` of `machine`,
+    /// including memory scaling and channel contention.
+    pub fn fwd_image_s(&self, cfg: &SimConfig, machine: &PhiMachine, t: usize) -> f64 {
+        self.image_s(cfg, machine, t, self.fwd_cycles, false)
+    }
+
+    /// Seconds for one *training* image (forward + backward).
+    pub fn train_image_s(&self, cfg: &SimConfig, machine: &PhiMachine, t: usize) -> f64 {
+        self.image_s(cfg, machine, t, self.fwd_cycles + self.bwd_cycles, true)
+    }
+
+    /// Shared per-image cost. `updates_weights` adds the contention term
+    /// (the Table IV probe measures concurrent weight-update traffic; the
+    /// forward-only phases read shared, cache-resident weights).
+    fn image_s(
+        &self,
+        cfg: &SimConfig,
+        machine: &PhiMachine,
+        t: usize,
+        cycles: f64,
+        updates_weights: bool,
+    ) -> f64 {
+        let occ = machine.occupancy_of(t);
+        let cpi = cfg.machine.cpi(occ);
+        let oversub = machine.oversub_of(t);
+        let exec = cycles * cfg.exec_fraction * cpi;
+        let mem = cycles
+            * (1.0 - cfg.exec_fraction)
+            * l2_pressure(cfg, self.working_set_bytes, occ)
+            * ring_factor(cfg, machine.active_cores());
+        let switch_penalty = 1.0 + cfg.oversub_overhead * (oversub - 1.0);
+        let mut s = (exec + mem) * oversub * switch_penalty / cfg.machine.clock_hz;
+        if updates_weights {
+            s += self.contention.contention_s(machine.threads, &cfg.machine);
+        }
+        s
+    }
+
+    /// Serial preparation seconds for `p` network instances (Fig. 4: not
+    /// parallelized).
+    pub fn prep_s(&self, cfg: &SimConfig, instances: usize) -> f64 {
+        cfg.prep_io_s
+            + instances as f64 * self.total_weights * cfg.prep_cycles_per_weight
+                / cfg.machine.clock_hz
+    }
+
+    /// Serial per-epoch bookkeeping (shuffling indices, statistics).
+    pub fn epoch_serial_s(&self, cfg: &SimConfig, train_images: usize, test_images: usize) -> f64 {
+        (train_images as f64 * cfg.serial_cycles_per_image
+            + test_images as f64 * 2.0
+            + 10.0)
+            / cfg.machine.clock_hz
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::MachineConfig;
+
+    fn setup(arch: &str, p: usize) -> (SimConfig, PhiMachine, CostModel) {
+        let cfg = SimConfig::default();
+        let machine = PhiMachine::new(MachineConfig::xeon_phi_7120p(), p);
+        let arch = ArchSpec::by_name(arch).unwrap();
+        let cm = CostModel::new(&arch, &cfg).unwrap();
+        (cfg, machine, cm)
+    }
+
+    #[test]
+    fn single_thread_fwd_matches_table3_within_12pct() {
+        // Table III: 1.45 / 12.55 / 148.88 ms per image.
+        for (name, want_ms) in [("small", 1.45), ("medium", 12.55), ("large", 148.88)] {
+            let (cfg, machine, cm) = setup(name, 1);
+            let got_ms = cm.fwd_image_s(&cfg, &machine, 0) * 1e3;
+            let rel = (got_ms - want_ms).abs() / want_ms;
+            assert!(rel < 0.12, "{name}: {got_ms:.2} ms vs {want_ms} ms ({rel:.3})");
+        }
+    }
+
+    #[test]
+    fn single_thread_bwd_matches_table3_within_12pct() {
+        for (name, want_ms) in [("small", 5.3), ("medium", 69.73), ("large", 859.19)] {
+            let (cfg, machine, cm) = setup(name, 1);
+            let fwd = cm.fwd_image_s(&cfg, &machine, 0);
+            // train = fwd + bwd + contention floor; extract bwd.
+            let train = cm.train_image_s(&cfg, &machine, 0);
+            let bwd_ms = (train - fwd) * 1e3;
+            let rel = (bwd_ms - want_ms).abs() / want_ms;
+            assert!(rel < 0.12, "{name}: {bwd_ms:.2} ms vs {want_ms} ms");
+        }
+    }
+
+    #[test]
+    fn four_threads_per_core_slower_than_one_per_image() {
+        let (cfg, m1, cm) = setup("medium", 1);
+        let (_, m240, _) = setup("medium", 240);
+        let t1 = cm.train_image_s(&cfg, &m1, 0);
+        let t240 = cm.train_image_s(&cfg, &m240, 0);
+        // Per image slower at occupancy 4 (CPI 2 + L2 sharing), but less
+        // than the naive 2x because only the exec part doubles... plus
+        // contention. Bound loosely.
+        assert!(t240 > t1 * 1.3, "{t1} vs {t240}");
+        assert!(t240 < t1 * 3.0, "{t1} vs {t240}");
+    }
+
+    #[test]
+    fn oversubscription_divides_throughput() {
+        let (cfg, m244, cm) = setup("small", 244);
+        let (_, m488, _) = setup("small", 488);
+        let t244 = cm.train_image_s(&cfg, &m244, 0);
+        let t488 = cm.train_image_s(&cfg, &m488, 0);
+        // 2x software threads per context: per-image latency roughly
+        // doubles (plus switch overhead + contention growth).
+        assert!(t488 > t244 * 1.8, "{t244} vs {t488}");
+    }
+
+    #[test]
+    fn prep_scales_with_instances() {
+        let (cfg, _, cm) = setup("large", 1);
+        let p1 = cm.prep_s(&cfg, 1);
+        let p240 = cm.prep_s(&cfg, 240);
+        assert!(p240 > p1);
+        // Table III: T_prep ≈ 12.56–13.5 s; check we are in that range
+        // for 240 instances.
+        assert!(p240 > 12.0 && p240 < 14.5, "{p240}");
+    }
+
+    #[test]
+    fn prep_near_table3_for_all_archs() {
+        for (name, want) in [("small", 12.56), ("medium", 12.7), ("large", 13.5)] {
+            let (cfg, _, cm) = setup(name, 240);
+            let got = cm.prep_s(&cfg, 240);
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.08, "{name}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn working_set_ordering() {
+        let (_, _, s) = setup("small", 1);
+        let (_, _, m) = setup("medium", 1);
+        let (_, _, l) = setup("large", 1);
+        assert!(s.working_set_bytes < m.working_set_bytes);
+        assert!(m.working_set_bytes < l.working_set_bytes);
+    }
+
+    #[test]
+    fn validation_fwd_has_no_contention_term() {
+        let (cfg, machine, cm) = setup("large", 240);
+        let fwd = cm.fwd_image_s(&cfg, &machine, 0);
+        let train = cm.train_image_s(&cfg, &machine, 0);
+        let contention = cm.contention.contention_s(240, &cfg.machine);
+        // train includes fwd+bwd cycles AND contention; fwd excludes it.
+        assert!(train > fwd + contention);
+    }
+}

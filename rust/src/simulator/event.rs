@@ -1,0 +1,156 @@
+//! Generic discrete-event engine (time-ordered heap).
+//!
+//! Minimal but real: f64 simulation clock, stable FIFO ordering among
+//! simultaneous events, O(log n) schedule/pop. The per-image fidelity mode
+//! of [`crate::simulator::workload`] runs on this engine; the chunked mode
+//! bypasses it (that bypass is the headline §Perf optimization — see
+//! EXPERIMENTS.md).
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event carrying a payload `T` at a simulation time.
+#[derive(Debug, Clone)]
+struct Scheduled<T> {
+    time: f64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Scheduled<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.time == other.time && self.seq == other.seq
+    }
+}
+impl<T> Eq for Scheduled<T> {}
+
+impl<T> Ord for Scheduled<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Reverse for min-heap semantics on BinaryHeap (max-heap).
+        other
+            .time
+            .total_cmp(&self.time)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl<T> PartialOrd for Scheduled<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Discrete-event simulation engine.
+#[derive(Debug)]
+pub struct Engine<T> {
+    heap: BinaryHeap<Scheduled<T>>,
+    now: f64,
+    seq: u64,
+    processed: u64,
+}
+
+impl<T> Default for Engine<T> {
+    fn default() -> Self {
+        Engine { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+    }
+}
+
+impl<T> Engine<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current simulation time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Events popped so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Pending events.
+    pub fn pending(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// Schedule `payload` at absolute time `at` (>= now).
+    pub fn schedule_at(&mut self, at: f64, payload: T) {
+        debug_assert!(at >= self.now, "cannot schedule into the past");
+        self.heap.push(Scheduled { time: at, seq: self.seq, payload });
+        self.seq += 1;
+    }
+
+    /// Schedule `payload` after `delay` seconds.
+    pub fn schedule_in(&mut self, delay: f64, payload: T) {
+        self.schedule_at(self.now + delay, payload);
+    }
+
+    /// Pop the earliest event, advancing the clock to it.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        let ev = self.heap.pop()?;
+        self.now = ev.time;
+        self.processed += 1;
+        Some((ev.time, ev.payload))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut e = Engine::new();
+        e.schedule_at(3.0, "c");
+        e.schedule_at(1.0, "a");
+        e.schedule_at(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| e.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(e.now(), 3.0);
+        assert_eq!(e.processed(), 3);
+    }
+
+    #[test]
+    fn simultaneous_events_fifo() {
+        let mut e = Engine::new();
+        for i in 0..10 {
+            e.schedule_at(1.0, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| e.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn schedule_in_is_relative() {
+        let mut e = Engine::new();
+        e.schedule_at(5.0, ());
+        e.pop();
+        e.schedule_in(2.5, ());
+        let (t, _) = e.pop().unwrap();
+        assert_eq!(t, 7.5);
+    }
+
+    #[test]
+    fn chained_scheduling_like_a_thread_loop() {
+        // A "thread" that processes 100 work items of 0.1 s each.
+        let mut e = Engine::new();
+        e.schedule_at(0.0, 100u32);
+        let mut done_at = 0.0;
+        while let Some((t, remaining)) = e.pop() {
+            if remaining > 0 {
+                e.schedule_in(0.1, remaining - 1);
+            } else {
+                done_at = t;
+            }
+        }
+        assert!((done_at - 10.0).abs() < 1e-9);
+        assert_eq!(e.processed(), 101);
+    }
+
+    #[test]
+    fn empty_pop_is_none() {
+        let mut e: Engine<()> = Engine::new();
+        assert!(e.pop().is_none());
+    }
+}

@@ -1,0 +1,131 @@
+//! Thread placement on the simulated chip.
+//!
+//! Threads are placed round-robin across cores (scatter affinity, the
+//! paper's configuration): thread `t` runs on core `t % cores`. Per-core
+//! SMT occupancy therefore differs by at most one when `p` is not a
+//! multiple of the core count — the simulator exploits this to model the
+//! *heterogeneous* CPI across workers that the analytic models flatten
+//! into a single ladder value.
+
+use crate::config::MachineConfig;
+
+/// Placement view of `p` software threads on the machine.
+#[derive(Debug, Clone)]
+pub struct PhiMachine {
+    pub config: MachineConfig,
+    /// Software threads in flight.
+    pub threads: usize,
+}
+
+impl PhiMachine {
+    pub fn new(config: MachineConfig, threads: usize) -> Self {
+        assert!(threads >= 1, "need at least one thread");
+        PhiMachine { config, threads }
+    }
+
+    /// Core hosting software thread `t` (scatter affinity). Beyond the
+    /// hardware thread count, software threads wrap around and multiplex.
+    pub fn core_of(&self, t: usize) -> usize {
+        t % self.config.cores
+    }
+
+    /// Hardware-thread occupancy of the core hosting thread `t` (how many
+    /// *hardware* contexts on that core are busy), saturating at the SMT
+    /// width.
+    pub fn occupancy_of(&self, t: usize) -> usize {
+        let core = self.core_of(t);
+        // Threads on this core: t' ≡ core (mod cores), t' < p.
+        let on_core = (self.threads + self.config.cores - 1 - core) / self.config.cores;
+        on_core.min(self.config.threads_per_core)
+    }
+
+    /// Software threads multiplexed onto the core of thread `t`.
+    pub fn sw_threads_on_core(&self, t: usize) -> usize {
+        let core = self.core_of(t);
+        (self.threads + self.config.cores - 1 - core) / self.config.cores
+    }
+
+    /// Oversubscription of thread `t`'s core: software threads per
+    /// hardware context (1.0 when p ≤ 244 and balanced).
+    pub fn oversub_of(&self, t: usize) -> f64 {
+        let sw = self.sw_threads_on_core(t) as f64;
+        let hw = self.occupancy_of(t) as f64;
+        (sw / hw).max(1.0)
+    }
+
+    /// Number of cores with at least one thread.
+    pub fn active_cores(&self) -> usize {
+        self.threads.min(self.config.cores)
+    }
+
+    /// Worst-case (slowest) occupancy across all threads — what a barrier
+    /// waits for.
+    pub fn max_occupancy(&self) -> usize {
+        self.config.occupancy(self.threads)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn phi(p: usize) -> PhiMachine {
+        PhiMachine::new(MachineConfig::xeon_phi_7120p(), p)
+    }
+
+    #[test]
+    fn scatter_affinity_round_robin() {
+        let m = phi(100);
+        assert_eq!(m.core_of(0), 0);
+        assert_eq!(m.core_of(60), 60);
+        assert_eq!(m.core_of(61), 0);
+        assert_eq!(m.core_of(122), 0);
+    }
+
+    #[test]
+    fn occupancy_differs_by_at_most_one() {
+        for p in [1, 15, 30, 61, 62, 100, 120, 180, 240] {
+            let m = phi(p);
+            let occs: Vec<usize> = (0..p).map(|t| m.occupancy_of(t)).collect();
+            let min = *occs.iter().min().unwrap();
+            let max = *occs.iter().max().unwrap();
+            assert!(max - min <= 1, "p={p}: {min}..{max}");
+            assert_eq!(max, m.max_occupancy(), "p={p}");
+        }
+    }
+
+    #[test]
+    fn occupancy_at_paper_thread_counts() {
+        assert_eq!(phi(1).occupancy_of(0), 1);
+        assert_eq!(phi(120).occupancy_of(0), 2);
+        assert_eq!(phi(120).occupancy_of(119), 2);
+        assert_eq!(phi(180).occupancy_of(0), 3);
+        assert_eq!(phi(240).occupancy_of(0), 4);
+    }
+
+    #[test]
+    fn hundred_threads_mixed_occupancy() {
+        // 100 threads on 61 cores: cores 0..38 have 2 threads, 39..60 one.
+        let m = phi(100);
+        assert_eq!(m.occupancy_of(0), 2);
+        assert_eq!(m.occupancy_of(99), 2); // core 38
+        assert_eq!(m.occupancy_of(60), 1); // core 60
+        assert_eq!(m.active_cores(), 61);
+    }
+
+    #[test]
+    fn oversubscription_past_hw_threads() {
+        let m = phi(488); // 2 sw threads per hw context
+        assert_eq!(m.occupancy_of(0), 4);
+        assert_eq!(m.sw_threads_on_core(0), 8);
+        assert!((m.oversub_of(0) - 2.0).abs() < 1e-12);
+        // Within hardware: no oversubscription.
+        assert_eq!(phi(240).oversub_of(0), 1.0);
+    }
+
+    #[test]
+    fn active_cores_saturates() {
+        assert_eq!(phi(10).active_cores(), 10);
+        assert_eq!(phi(3840).active_cores(), 61);
+    }
+}

@@ -1,0 +1,184 @@
+//! Memory-system model: L2 sharing, ring latency, channel contention.
+//!
+//! These are the effects the paper's analytic models do **not** capture
+//! (they fold everything into the CPI ladder plus the measured
+//! MemoryContention table); modelling them explicitly is what makes the
+//! simulator's "measured" times deviate from the models for the same
+//! structural reasons the authors' testbed did:
+//!
+//! * **L2 sharing** — each KNC core has 512 KB of L2; with `o` SMT threads
+//!   resident, each sees ~512/o KB. When an architecture's per-thread
+//!   working set exceeds that, the memory-bound portion of execution
+//!   stretches: `pressure = 1 + α·min(ws/(L2/o), cap)`.
+//! * **Ring / tag directory** — remote L2 and directory hops grow with the
+//!   number of active cores: `ring = 1 + β·(active−1)/(cores−1)`.
+//! * **GDDR channel contention** — the Table IV effect: concurrent
+//!   threads serialize on the 16 memory channels. Calibrated per
+//!   architecture as an *effective serialized traffic* per image
+//!   (includes the coherence/synchronization amplification the paper's
+//!   probe measured): `contention(p) = floor + traffic·(p−1)/BW`.
+
+use crate::config::MachineConfig;
+use crate::simulator::SimConfig;
+
+/// L2 *sharing* pressure multiplier for a per-thread working set of
+/// `ws_bytes` at SMT occupancy `occ`.
+///
+/// Only the sharing excess is modelled — the single-thread cache
+/// behaviour is already inside the calibrated per-op cycle costs
+/// ([`crate::simulator::cost`]), so by construction `occ == 1` gives 1.0:
+/// `pressure = 1 + α · min(ws·(occ−1)/L2, cap)`.
+pub fn l2_pressure(cfg: &SimConfig, ws_bytes: f64, occ: usize) -> f64 {
+    let excess = ws_bytes * (occ.saturating_sub(1)) as f64
+        / cfg.machine.l2_bytes as f64;
+    1.0 + cfg.l2_alpha * excess.min(cfg.l2_ratio_cap)
+}
+
+/// Ring/tag-directory latency multiplier with `active` busy cores.
+pub fn ring_factor(cfg: &SimConfig, active: usize) -> f64 {
+    let denom = (cfg.machine.cores - 1).max(1) as f64;
+    1.0 + cfg.ring_beta * ((active.saturating_sub(1)) as f64 / denom)
+}
+
+/// Calibrated channel-contention parameters for one architecture.
+#[derive(Debug, Clone, Copy)]
+pub struct ContentionParams {
+    /// Single-thread floor, seconds per image.
+    pub floor_s: f64,
+    /// Effective serialized bytes per image per thread (includes
+    /// coherence amplification — see module docs).
+    pub traffic_bytes: f64,
+}
+
+impl ContentionParams {
+    /// Calibration for the paper architectures, fit to Table IV at p=1
+    /// (floor) and p=240 (slope). Custom architectures scale the medium
+    /// calibration by parameter footprint.
+    ///
+    /// Traffic is calibrated against the *reference* 7120P bandwidth
+    /// (352 GB/s), not the configured machine's — so ablations that widen
+    /// the memory system genuinely reduce contention.
+    pub fn for_arch(name: &str, param_bytes: f64, machine: &MachineConfig) -> Self {
+        const REF_BW: f64 = 352.0e9;
+        let _ = machine;
+        let bw = REF_BW;
+        match name {
+            // traffic = contention(240)·BW/240  (slope through the origin)
+            "small" => ContentionParams {
+                floor_s: 7.10e-6,
+                traffic_bytes: 1.40e-2 * bw / 240.0,
+            },
+            "medium" => ContentionParams {
+                floor_s: 1.56e-4,
+                traffic_bytes: 3.83e-2 * bw / 240.0,
+            },
+            "large" => ContentionParams {
+                floor_s: 8.83e-4,
+                traffic_bytes: 1.38e-1 * bw / 240.0,
+            },
+            _ => {
+                // Scale from the medium CNN by parameter footprint (the
+                // probe traffic is dominated by weight updates).
+                let medium_bytes = 304.6e3;
+                let scale = (param_bytes / medium_bytes).max(0.01);
+                ContentionParams {
+                    floor_s: 1.56e-4 * scale,
+                    traffic_bytes: 3.83e-2 * bw / 240.0 * scale,
+                }
+            }
+        }
+    }
+
+    /// Per-image contention wait at `p` concurrent threads.
+    pub fn contention_s(&self, p: usize, machine: &MachineConfig) -> f64 {
+        let queue = self.traffic_bytes * (p.saturating_sub(1)) as f64
+            / machine.memory_bw_bytes;
+        self.floor_s + queue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SimConfig {
+        SimConfig::default()
+    }
+
+    #[test]
+    fn l2_pressure_grows_with_occupancy() {
+        let c = cfg();
+        let ws = 300.0e3; // medium-ish working set
+        let p1 = l2_pressure(&c, ws, 1);
+        let p2 = l2_pressure(&c, ws, 2);
+        let p4 = l2_pressure(&c, ws, 4);
+        assert!(p1 < p2 && p2 < p4, "{p1} {p2} {p4}");
+    }
+
+    #[test]
+    fn l2_pressure_negligible_for_tiny_ws() {
+        let c = cfg();
+        let p = l2_pressure(&c, 34.0e3, 4); // small CNN
+        assert!(p < 1.12, "{p}");
+    }
+
+    #[test]
+    fn l2_pressure_is_one_at_single_occupancy() {
+        // Single-thread cache behaviour lives in the calibrated base cost.
+        let c = cfg();
+        for ws in [10.0e3, 400.0e3, 2.0e6] {
+            assert_eq!(l2_pressure(&c, ws, 1), 1.0);
+        }
+    }
+
+    #[test]
+    fn l2_pressure_capped() {
+        let c = cfg();
+        let p = l2_pressure(&c, 1.0e9, 4);
+        assert!((p - (1.0 + c.l2_alpha * c.l2_ratio_cap)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_factor_range() {
+        let c = cfg();
+        assert!((ring_factor(&c, 1) - 1.0).abs() < 1e-12);
+        let full = ring_factor(&c, 61);
+        assert!((full - (1.0 + c.ring_beta)).abs() < 1e-12);
+        assert!(ring_factor(&c, 30) > 1.0 && ring_factor(&c, 30) < full);
+    }
+
+    #[test]
+    fn contention_matches_table4_at_240() {
+        let m = MachineConfig::xeon_phi_7120p();
+        for (name, want) in [("small", 1.40e-2), ("medium", 3.83e-2), ("large", 1.38e-1)] {
+            let p = ContentionParams::for_arch(name, 0.0, &m);
+            let got = p.contention_s(240, &m);
+            let rel = (got - want).abs() / want;
+            assert!(rel < 0.02, "{name}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn contention_floor_at_one_thread() {
+        let m = MachineConfig::xeon_phi_7120p();
+        let p = ContentionParams::for_arch("large", 0.0, &m);
+        assert!((p.contention_s(1, &m) - 8.83e-4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn contention_roughly_linear_in_p() {
+        let m = MachineConfig::xeon_phi_7120p();
+        let p = ContentionParams::for_arch("medium", 0.0, &m);
+        let c480 = p.contention_s(480, &m);
+        let c960 = p.contention_s(960, &m);
+        assert!((c960 / c480 - 2.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn custom_arch_scales_with_params() {
+        let m = MachineConfig::xeon_phi_7120p();
+        let small_fp = ContentionParams::for_arch("custom", 30.0e3, &m);
+        let big_fp = ContentionParams::for_arch("custom", 3.0e6, &m);
+        assert!(big_fp.traffic_bytes > small_fp.traffic_bytes * 50.0);
+    }
+}

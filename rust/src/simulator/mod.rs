@@ -1,0 +1,128 @@
+//! `micsim` — a discrete-event, cycle-approximate simulator of the Intel
+//! Xeon Phi 7120P (Knights Corner).
+//!
+//! The paper's evaluation hardware does not exist in this environment, so
+//! micsim stands in for it (DESIGN.md §1): every execution time this
+//! reproduction reports as *measured* is a micsim output, and the paper's
+//! analytic models predict micsim exactly the way they predicted the
+//! authors' testbed.
+//!
+//! ## What is modelled
+//!
+//! * **Cores & SMT** — 61 in-order cores, 4 round-robin hardware threads
+//!   each; the Table III CPI ladder (1/1/1.5/2) applies to the *execute*
+//!   portion of each instruction stream ([`cost`]).
+//! * **VPU** — the 512-bit SIMD unit appears as the calibrated
+//!   cycles-per-operation constants (operations are Table VII/VIII
+//!   abstract ops; the calibration against the paper's measured
+//!   per-image times absorbs the achieved vector efficiency).
+//! * **Memory system** — three effects the analytic models do not see
+//!   ([`memory`]): per-core L2 sharing pressure when SMT occupancy rises,
+//!   ring/tag-directory latency growth with active cores, and GDDR
+//!   channel contention (the Table IV probe, [`probe`]).
+//! * **Workload structure** — the Fig. 4 algorithm: serial prep, then per
+//!   epoch: train (fwd+bwd per image), validation (fwd), test (fwd), with
+//!   a barrier after each phase and ⌈i/p⌉/⌊i/p⌋ load imbalance
+//!   ([`workload`]).
+//! * **Oversubscription** — beyond 244 hardware threads, software threads
+//!   multiplex round-robin with a context-switch overhead, letting the
+//!   simulator (like the models) answer "what if p = 3,840?".
+//!
+//! ## Fidelity modes
+//!
+//! [`Fidelity::PerImage`] drives a discrete-event engine ([`event`]) with
+//! one event per image per phase; [`Fidelity::Chunked`] evaluates the same
+//! cost model in closed form per (thread, phase) chunk. They agree to
+//! floating-point tolerance (asserted by tests) — chunked is the default
+//! and ~10³× faster; per-image exists for traces and as the reference
+//! semantics (EXPERIMENTS.md §Perf).
+
+pub mod cost;
+pub mod event;
+pub mod machine;
+pub mod memory;
+pub mod probe;
+pub mod stats;
+pub mod workload;
+
+pub use cost::CostModel;
+pub use machine::PhiMachine;
+pub use stats::{PhaseTimes, SimResult};
+pub use workload::{simulate_training, Fidelity};
+
+use crate::config::MachineConfig;
+use crate::nn::OpSource;
+
+/// All tunable simulator constants (ablation benches sweep these).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Machine description (defaults to the 7120P).
+    pub machine: MachineConfig,
+    /// Where per-image op counts come from (paper tables vs computed).
+    pub op_source: OpSource,
+    /// Calibrated cycles per abstract forward operation (see [`cost`]).
+    pub fwd_cycles_per_op: f64,
+    /// Calibrated cycles per abstract backward operation.
+    pub bwd_cycles_per_op: f64,
+    /// Fraction of per-image cycles that are issue-bound (subject to the
+    /// SMT CPI ladder); the rest is memory-bound (subject to [`memory`]).
+    pub exec_fraction: f64,
+    /// L2-sharing pressure coefficient (α in memory.rs).
+    pub l2_alpha: f64,
+    /// Cap on the L2 working-set ratio used for pressure.
+    pub l2_ratio_cap: f64,
+    /// Ring/tag-directory latency growth coefficient (β in memory.rs).
+    pub ring_beta: f64,
+    /// Serial preparation: image/label I/O base seconds.
+    pub prep_io_s: f64,
+    /// Serial preparation: cycles per network weight per instance
+    /// (instance creation is not parallelized — Fig. 4).
+    pub prep_cycles_per_weight: f64,
+    /// Per-epoch serial bookkeeping cycles per training image (the `4·i`
+    /// term of Table V).
+    pub serial_cycles_per_image: f64,
+    /// Context-switch overhead fraction per software thread beyond the
+    /// hardware thread count (oversubscription).
+    pub oversub_overhead: f64,
+    /// Simulation granularity.
+    pub fidelity: Fidelity,
+    /// Seed for the simulator's (deterministic) jitter streams.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            machine: MachineConfig::xeon_phi_7120p(),
+            op_source: OpSource::Paper,
+            // Calibrated against Table III measured per-image times over the
+            // paper op counts: fwd ≈ 31 cycles/op (1.45 ms = 58k ops ×31 /
+            // 1.238 GHz), bwd ≈ 13.7 (see cost.rs for the fit table).
+            fwd_cycles_per_op: 31.0,
+            bwd_cycles_per_op: 13.7,
+            exec_fraction: 0.75,
+            l2_alpha: 0.35,
+            l2_ratio_cap: 3.0,
+            ring_beta: 0.15,
+            prep_io_s: 12.4,
+            prep_cycles_per_weight: 15.5,
+            serial_cycles_per_image: 4.0,
+            oversub_overhead: 0.05,
+            fidelity: Fidelity::Chunked,
+            seed: 0x5EED,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_7120p_paper_source() {
+        let cfg = SimConfig::default();
+        assert_eq!(cfg.machine.cores, 61);
+        assert_eq!(cfg.op_source, OpSource::Paper);
+        assert!(cfg.exec_fraction > 0.0 && cfg.exec_fraction <= 1.0);
+    }
+}

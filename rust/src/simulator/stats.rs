@@ -1,0 +1,82 @@
+//! Simulation results and phase breakdowns.
+
+/// Wall time per algorithm phase, summed over epochs.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseTimes {
+    /// Serial preparation (image load + instance creation).
+    pub prep_s: f64,
+    /// Training phase (fwd+bwd over each thread's chunk), barrier-to-barrier.
+    pub train_s: f64,
+    /// Validation phase (fwd over the training set).
+    pub validation_s: f64,
+    /// Test phase (fwd over the test set).
+    pub test_s: f64,
+    /// Serial per-epoch bookkeeping.
+    pub serial_s: f64,
+}
+
+impl PhaseTimes {
+    pub fn total(&self) -> f64 {
+        self.prep_s + self.train_s + self.validation_s + self.test_s + self.serial_s
+    }
+}
+
+/// Full result of one simulated training run.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// Total wall time, seconds.
+    pub total_s: f64,
+    /// The paper's reported "execution time" excludes initialization
+    /// (Section V): total minus prep.
+    pub execution_s: f64,
+    pub phases: PhaseTimes,
+    /// Threads simulated.
+    pub threads: usize,
+    /// Events processed (0 in chunked mode).
+    pub events: u64,
+    /// Busy seconds of the slowest and fastest worker (imbalance window).
+    pub slowest_busy_s: f64,
+    pub fastest_busy_s: f64,
+}
+
+impl SimResult {
+    /// Load imbalance: (slowest - fastest) / slowest.
+    pub fn imbalance(&self) -> f64 {
+        if self.slowest_busy_s <= 0.0 {
+            0.0
+        } else {
+            (self.slowest_busy_s - self.fastest_busy_s) / self.slowest_busy_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phase_total_sums() {
+        let p = PhaseTimes {
+            prep_s: 1.0,
+            train_s: 2.0,
+            validation_s: 3.0,
+            test_s: 4.0,
+            serial_s: 0.5,
+        };
+        assert!((p.total() - 10.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn imbalance_zero_when_equal() {
+        let r = SimResult {
+            total_s: 1.0,
+            execution_s: 1.0,
+            phases: PhaseTimes::default(),
+            threads: 2,
+            events: 0,
+            slowest_busy_s: 5.0,
+            fastest_busy_s: 5.0,
+        };
+        assert_eq!(r.imbalance(), 0.0);
+    }
+}

@@ -1,0 +1,154 @@
+//! The Fig. 4 parallel training algorithm, over pluggable compute backends.
+//!
+//! The paper's scheme is model-replica data parallelism: `ns` network
+//! instances (one per processing unit) each train on their image chunk
+//! every epoch; validation and test run forward passes over the shards;
+//! instance weights are combined between epochs. This module defines the
+//! backend abstraction and the per-epoch bookkeeping; the actual parallel
+//! drivers live in [`crate::coordinator`]:
+//!
+//! * [`crate::coordinator::pool::DataParallelTrainer`] — real
+//!   `std::thread` workers, each owning a pure-Rust [`crate::engine`]
+//!   network instance (the OpenMP-substitute path).
+//! * [`crate::coordinator::leader::PjrtTrainer`] — the AOT path: the
+//!   leader drives batched train steps through the compiled JAX/Pallas
+//!   artifact ([`crate::runtime`]).
+
+use crate::dataset::Dataset;
+use crate::engine;
+use crate::error::Result;
+use crate::nn::Network;
+
+/// A compute backend that can train and classify single images.
+pub trait Backend: Send {
+    fn train_image(&mut self, image: &[f32], label: usize, lr: f32) -> Result<f32>;
+    fn classify(&self, image: &[f32], label: usize) -> Result<(usize, f32)>;
+}
+
+/// The pure-Rust engine backend: one owned network instance.
+#[derive(Debug, Clone)]
+pub struct EngineBackend {
+    pub net: Network,
+}
+
+impl EngineBackend {
+    pub fn new(net: Network) -> Self {
+        EngineBackend { net }
+    }
+}
+
+impl Backend for EngineBackend {
+    fn train_image(&mut self, image: &[f32], label: usize, lr: f32) -> Result<f32> {
+        engine::train_image(&mut self.net, image, label, lr)
+    }
+
+    fn classify(&self, image: &[f32], label: usize) -> Result<(usize, f32)> {
+        engine::classify(&self.net, image, label)
+    }
+}
+
+/// Statistics of one epoch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EpochStats {
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub val_loss: f64,
+    pub val_accuracy: f64,
+    pub test_accuracy: f64,
+    /// Wall seconds for the epoch (train + val + test).
+    pub wall_s: f64,
+}
+
+/// Full training report.
+#[derive(Debug, Clone, Default)]
+pub struct TrainReport {
+    pub epochs: Vec<EpochStats>,
+    pub total_wall_s: f64,
+    /// Images trained per wall second (training phase only).
+    pub train_throughput: f64,
+}
+
+impl TrainReport {
+    pub fn final_test_accuracy(&self) -> f64 {
+        self.epochs.last().map(|e| e.test_accuracy).unwrap_or(0.0)
+    }
+
+    /// Loss curve as (epoch, train_loss) pairs.
+    pub fn loss_curve(&self) -> Vec<(f64, f64)> {
+        self.epochs
+            .iter()
+            .map(|e| (e.epoch as f64, e.train_loss))
+            .collect()
+    }
+
+    /// True iff the train loss decreased from first to last epoch.
+    pub fn converging(&self) -> bool {
+        match (self.epochs.first(), self.epochs.last()) {
+            (Some(a), Some(b)) if self.epochs.len() >= 2 => {
+                b.train_loss < a.train_loss
+            }
+            _ => false,
+        }
+    }
+}
+
+/// Evaluate accuracy + mean loss of a backend over a dataset slice.
+pub fn evaluate(
+    backend: &dyn Backend,
+    data: &Dataset,
+    range: std::ops::Range<usize>,
+) -> Result<(f64, f64)> {
+    let mut correct = 0usize;
+    let mut loss_sum = 0.0f64;
+    let n = range.len().max(1);
+    for idx in range {
+        let (img, label) = data.sample(idx);
+        let (pred, loss) = backend.classify(img, label)?;
+        if pred == label {
+            correct += 1;
+        }
+        loss_sum += loss as f64;
+    }
+    Ok((correct as f64 / n as f64, loss_sum / n as f64))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+    use crate::dataset::load_or_synth;
+
+    #[test]
+    fn engine_backend_trains() {
+        let net = Network::new(ArchSpec::small(), 1).unwrap();
+        let mut b = EngineBackend::new(net);
+        let (data, _) = load_or_synth(None, 10, 2, 3);
+        let (img, label) = data.sample(0);
+        let l1 = b.train_image(img, label, 0.02).unwrap();
+        for _ in 0..10 {
+            b.train_image(img, label, 0.02).unwrap();
+        }
+        let (_, l2) = b.classify(img, label).unwrap();
+        assert!(l2 < l1);
+    }
+
+    #[test]
+    fn evaluate_counts_correctly() {
+        let net = Network::new(ArchSpec::small(), 2).unwrap();
+        let b = EngineBackend::new(net);
+        let (data, _) = load_or_synth(None, 20, 2, 5);
+        let (acc, loss) = evaluate(&b, &data, 0..20).unwrap();
+        assert!((0.0..=1.0).contains(&acc));
+        assert!(loss > 0.0);
+    }
+
+    #[test]
+    fn report_converging_logic() {
+        let mut r = TrainReport::default();
+        assert!(!r.converging());
+        r.epochs.push(EpochStats { epoch: 0, train_loss: 2.0, ..Default::default() });
+        r.epochs.push(EpochStats { epoch: 1, train_loss: 1.0, ..Default::default() });
+        assert!(r.converging());
+        assert_eq!(r.loss_curve(), vec![(0.0, 2.0), (1.0, 1.0)]);
+    }
+}

@@ -1,0 +1,161 @@
+//! Micro-benchmark harness — the criterion stand-in (offline build).
+//!
+//! `cargo bench` targets use `harness = false` and drive this runner:
+//! warmup, timed iterations until a minimum wall budget, and robust stats
+//! (median + MAD) so the §Perf pass has stable numbers to compare.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub median: Duration,
+    pub mean: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Median absolute deviation (robust spread).
+    pub mad: Duration,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} median  {:>12} mean  {:>12} min  (±{:?}, {} iters)",
+            self.name,
+            format!("{:?}", self.median),
+            format!("{:?}", self.mean),
+            format!("{:?}", self.min),
+            self.mad,
+            self.iters
+        )
+    }
+}
+
+/// Benchmark runner with a fixed time budget per case.
+pub struct Bench {
+    /// Minimum total measured time per case.
+    pub budget: Duration,
+    /// Warmup time per case.
+    pub warmup: Duration,
+    /// Hard cap on iterations (for very slow cases).
+    pub max_iters: usize,
+    pub results: Vec<BenchStats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            budget: Duration::from_millis(800),
+            warmup: Duration::from_millis(150),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            budget: Duration::from_millis(200),
+            warmup: Duration::from_millis(30),
+            max_iters: 1_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` repeatedly; `f` must return something observable to keep the
+    /// optimizer honest (the value is passed through `std::hint::black_box`).
+    pub fn case<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchStats {
+        // Warmup.
+        let start = Instant::now();
+        while start.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // Measure.
+        let mut samples: Vec<Duration> = Vec::new();
+        let start = Instant::now();
+        while start.elapsed() < self.budget && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        if samples.is_empty() {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let iters = samples.len();
+        let median = samples[iters / 2];
+        let min = samples[0];
+        let max = samples[iters - 1];
+        let mean = samples.iter().sum::<Duration>() / iters as u32;
+        let mut devs: Vec<Duration> = samples
+            .iter()
+            .map(|&s| if s > median { s - median } else { median - s })
+            .collect();
+        devs.sort();
+        let mad = devs[iters / 2];
+        self.results.push(BenchStats {
+            name: name.to_string(),
+            iters,
+            median,
+            mean,
+            min,
+            max,
+            mad,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Print all collected results.
+    pub fn print_report(&self, title: &str) {
+        println!("\n=== bench: {title} ===");
+        for r in &self.results {
+            println!("{}", r.report());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_stats() {
+        let mut b = Bench::quick();
+        let s = b.case("noop-ish", || 1 + 1).clone();
+        assert!(s.iters >= 1);
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn distinguishes_slow_from_fast() {
+        let mut b = Bench {
+            budget: Duration::from_millis(50),
+            warmup: Duration::from_millis(5),
+            max_iters: 500,
+            results: Vec::new(),
+        };
+        b.case("fast", || 0u64);
+        b.case("slow", || {
+            // black_box inside the loop: in release mode LLVM otherwise
+            // folds the whole sum to a constant.
+            let mut acc = 0u64;
+            for i in 0..20_000u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i) * i);
+            }
+            acc
+        });
+        assert!(b.results[1].median >= b.results[0].median);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let mut b = Bench::quick();
+        b.case("my-case", || ());
+        assert!(b.results[0].report().contains("my-case"));
+    }
+}

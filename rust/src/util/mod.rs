@@ -1,0 +1,12 @@
+//! Small self-contained utilities (no external dependencies).
+//!
+//! The build environment is fully offline with only the `xla` crate's
+//! dependency closure available, so the conveniences a crates.io project
+//! would pull in are implemented here: a JSON parser/emitter ([`json`],
+//! for `artifacts/meta.json` and custom architecture files), a
+//! micro-benchmark harness ([`bench`], the criterion stand-in driving
+//! `cargo bench`), and temp-dir helpers for tests ([`tmp`]).
+
+pub mod bench;
+pub mod json;
+pub mod tmp;

@@ -1,0 +1,120 @@
+//! CLI surface tests: spawn the real `repro` binary per subcommand.
+
+use std::process::{Command, Output};
+
+fn repro(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .output()
+        .expect("spawn repro")
+}
+
+fn stdout(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stdout).to_string()
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let out = repro(&[]);
+    assert!(out.status.success());
+    assert!(stdout(&out).contains("USAGE"));
+}
+
+#[test]
+fn unknown_command_fails_with_usage() {
+    let out = repro(&["frobnicate"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("USAGE"));
+}
+
+#[test]
+fn exp_table10_prints_paper_cells() {
+    let out = repro(&["exp", "table10"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = stdout(&out);
+    assert!(s.contains("480") && s.contains("3840"));
+    assert!(s.contains("4.6")); // paper small-b @3840
+}
+
+#[test]
+fn exp_csv_mode() {
+    let out = repro(&["exp", "table9", "--csv"]);
+    assert!(out.status.success());
+    let s = stdout(&out);
+    assert!(s.lines().next().unwrap().contains(','));
+}
+
+#[test]
+fn exp_unknown_id_fails() {
+    let out = repro(&["exp", "table99"]);
+    assert!(!out.status.success());
+}
+
+#[test]
+fn arch_lists_all_three() {
+    let out = repro(&["arch"]);
+    assert!(out.status.success());
+    let s = stdout(&out);
+    for name in ["small", "medium", "large"] {
+        assert!(s.contains(name), "{name}");
+    }
+    assert!(s.contains("216100")); // large C3 weights (Fig. 2c)
+}
+
+#[test]
+fn simulate_reports_phases() {
+    let out = repro(&["simulate", "--arch", "small", "--threads", "240",
+                      "--epochs", "2", "--images", "6000"]);
+    assert!(out.status.success());
+    let s = stdout(&out);
+    assert!(s.contains("phases:") && s.contains("execution"));
+}
+
+#[test]
+fn simulate_per_image_fidelity_small_workload() {
+    let out = repro(&["simulate", "--arch", "small", "--threads", "8",
+                      "--epochs", "1", "--images", "64", "--test-images", "8",
+                      "--fidelity", "image"]);
+    assert!(out.status.success());
+    let s = stdout(&out);
+    // Per-image mode reports its event count.
+    assert!(s.contains("events"), "{s}");
+    assert!(!s.contains("events 0"), "{s}");
+}
+
+#[test]
+fn predict_both_strategies() {
+    let out = repro(&["predict", "--arch", "medium", "--threads", "480"]);
+    assert!(out.status.success());
+    let s = stdout(&out);
+    assert!(s.contains("minutes"));
+    // Both strategies rendered.
+    let rows = s.lines().filter(|l| l.starts_with("a ") || l.starts_with("b ")).count();
+    assert_eq!(rows, 2, "{s}");
+}
+
+#[test]
+fn probe_prints_eleven_rows() {
+    let out = repro(&["probe", "--arch", "large"]);
+    assert!(out.status.success());
+    let s = stdout(&out);
+    assert!(s.contains("3840"));
+}
+
+#[test]
+fn train_engine_backend_tiny_run() {
+    let out = repro(&["train", "--backend", "engine", "--arch", "small",
+                      "--epochs", "1", "--images", "80", "--test-images", "20",
+                      "--workers", "2"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = stdout(&out);
+    assert!(s.contains("img/s"));
+    assert!(s.contains("synthetic"));
+}
+
+#[test]
+fn selfcheck_passes() {
+    let out = repro(&["selfcheck"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(stdout(&out).contains("selfcheck OK"));
+}

@@ -1,0 +1,200 @@
+//! Cross-module integration tests: dataset → engine → coordinator,
+//! simulator ↔ perfmodel consistency, experiments end-to-end.
+
+use micdl::config::{ArchSpec, RunConfig};
+use micdl::coordinator::pool::{DataParallelTrainer, PoolConfig};
+use micdl::dataset;
+use micdl::experiments::{self, ExpOptions};
+use micdl::nn::opcount;
+use micdl::perfmodel::{both_models, delta_pct, ParamSource, PerfModel};
+use micdl::simulator::{probe, simulate_training, SimConfig};
+
+// ---------------------------------------------------------------------------
+// Simulator ↔ model consistency
+// ---------------------------------------------------------------------------
+
+#[test]
+fn models_predict_simulator_within_band_all_archs() {
+    // The headline reproduction claim (Table IX): both analytic models
+    // predict the "machine" (micsim) within the paper's accuracy band.
+    let cfg = SimConfig::default();
+    for arch in ArchSpec::paper_archs() {
+        let (a, b) = both_models(&arch, ParamSource::Paper).unwrap();
+        let mut worst_a = 0.0f64;
+        let mut worst_b = 0.0f64;
+        for &p in RunConfig::MEASURED_THREADS.iter() {
+            let run = RunConfig::paper_default(&arch.name, p);
+            let m = probe::measured_execution_s(&arch, p, &cfg).unwrap();
+            worst_a = worst_a.max(delta_pct(m, a.predict(&run).unwrap().total_s));
+            worst_b = worst_b.max(delta_pct(m, b.predict(&run).unwrap().total_s));
+        }
+        assert!(worst_a < 30.0, "{}: worst Δa {worst_a:.1}%", arch.name);
+        assert!(worst_b < 30.0, "{}: worst Δb {worst_b:.1}%", arch.name);
+    }
+}
+
+#[test]
+fn simulator_scaling_shape_matches_figures() {
+    // Figs. 5-7 shape: time falls steeply to 120 threads, then flattens;
+    // at 240 threads the speedup over 1 thread is large but sublinear.
+    let cfg = SimConfig::default();
+    for arch in ArchSpec::paper_archs() {
+        let t = |p: usize| probe::measured_execution_s(&arch, p, &cfg).unwrap();
+        let t1 = t(1);
+        let t120 = t(120);
+        let t240 = t(240);
+        assert!(t120 < t1 / 40.0, "{}: t1 {t1} t120 {t120}", arch.name);
+        assert!(t240 < t120 * 1.5, "{}: flattening violated", arch.name);
+        let speedup = t1 / t240;
+        assert!(speedup > 30.0 && speedup < 240.0, "{}: {speedup}", arch.name);
+    }
+}
+
+#[test]
+fn contention_source_consistency_models_vs_probe() {
+    // Under ParamSource::Simulator both models use the probe's contention;
+    // predictions must stay finite and ordered in p.
+    for arch in ArchSpec::paper_archs() {
+        let (a, _) = both_models(&arch, ParamSource::Simulator).unwrap();
+        let mut prev = f64::INFINITY;
+        for p in [15, 60, 120] {
+            let run = RunConfig::paper_default(&arch.name, p);
+            let t = a.predict(&run).unwrap().total_s;
+            assert!(t.is_finite() && t < prev, "{} p={p}", arch.name);
+            prev = t;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dataset → engine → coordinator
+// ---------------------------------------------------------------------------
+
+#[test]
+fn full_engine_training_pipeline() {
+    let (train, test) = dataset::load_or_synth(None, 300, 60, 99);
+    assert_eq!(train.source, "synthetic");
+    let cfg = PoolConfig { workers: 4, epochs: 8, lr: 0.02, eval_cap: 60, seed: 5, verbose: false };
+    let mut trainer = DataParallelTrainer::new(ArchSpec::small(), cfg).unwrap();
+    let report = trainer.train(&train, &test).unwrap();
+    assert!(report.converging());
+    // A learnable corpus: the small CNN must beat chance (10%) clearly.
+    assert!(
+        report.final_test_accuracy() > 0.3,
+        "final accuracy {:.3}",
+        report.final_test_accuracy()
+    );
+    assert!(report.train_throughput > 0.0);
+}
+
+#[test]
+fn engine_training_deterministic_given_seed_and_single_worker() {
+    let (train, test) = dataset::load_or_synth(None, 60, 10, 3);
+    let run = |seed| {
+        let cfg = PoolConfig { workers: 1, epochs: 2, lr: 0.02, eval_cap: 10, seed, verbose: false };
+        let mut t = DataParallelTrainer::new(ArchSpec::small(), cfg).unwrap();
+        t.train(&train, &test).unwrap().epochs.last().unwrap().train_loss
+    };
+    assert_eq!(run(7).to_bits(), run(7).to_bits());
+    assert_ne!(run(7).to_bits(), run(8).to_bits());
+}
+
+#[test]
+fn worker_count_does_not_change_image_coverage() {
+    // Different worker counts shard differently but must train on every
+    // image exactly once per epoch (metrics count them).
+    let (train, test) = dataset::load_or_synth(None, 120, 10, 4);
+    for workers in [1, 3, 8] {
+        let cfg = PoolConfig { workers, epochs: 2, lr: 0.01, eval_cap: 8, seed: 1, verbose: false };
+        let mut t = DataParallelTrainer::new(ArchSpec::small(), cfg).unwrap();
+        t.train(&train, &test).unwrap();
+        assert_eq!(t.metrics.images_trained, 240, "workers={workers}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Op counts feed both the models and the simulator coherently
+// ---------------------------------------------------------------------------
+
+#[test]
+fn opcounts_consistent_across_consumers() {
+    for arch in ArchSpec::paper_archs() {
+        let computed = opcount::count(&arch).unwrap();
+        let per_layer = opcount::layer_ops(&arch).unwrap();
+        let fwd_sum: u64 = per_layer.iter().map(|l| l.fwd).sum();
+        assert_eq!(fwd_sum, computed.fprop.total());
+        // Paper counts exist for the three paper archs.
+        let paper = opcount::resolve(&arch, micdl::nn::OpSource::Paper).unwrap();
+        assert!(paper.fprop.total() > 0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Experiments end-to-end (the CLI surface)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn all_experiments_render_with_paper_values_inline() {
+    let out = experiments::run("all", &ExpOptions::default()).unwrap();
+    // Spot-check one published anchor per artifact class.
+    assert!(out.contains("ASCI Red"));            // fig1
+    assert!(out.contains("1.40e-2"));             // table4 anchor (small@240)
+    assert!(out.contains("9.64"));                // table7 ratio
+    assert!(out.contains("11.96"));               // table8 ratio
+    assert!(out.contains("14.57"));               // table9 paper Δ
+    assert!(out.contains("4.6"));                 // table10 small@3840
+    assert!(out.contains("139.3"));               // table11 corner
+}
+
+#[test]
+fn experiments_csv_mode_all_ids() {
+    let opts = ExpOptions { csv: true, ..Default::default() };
+    for id in experiments::ALL_WITH_SCALING {
+        let out = experiments::run(id, &opts).unwrap();
+        let lines: Vec<&str> = out.lines().collect();
+        assert!(lines.len() >= 2, "{id}");
+        let header_cols = lines[0].split(',').count();
+        for line in &lines[1..] {
+            assert_eq!(line.split(',').count(), header_cols, "{id}: ragged CSV");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Simulated hardware variants (ablation)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn faster_clock_means_faster_simulation() {
+    let arch = ArchSpec::medium();
+    let run = RunConfig::paper_default("medium", 240);
+    let base = SimConfig::default();
+    let mut fast = SimConfig::default();
+    fast.machine.clock_hz *= 2.0;
+    let t_base = simulate_training(&arch, &run, &base).unwrap().execution_s;
+    let t_fast = simulate_training(&arch, &run, &fast).unwrap().execution_s;
+    assert!(t_fast < t_base);
+}
+
+#[test]
+fn disabling_smt_penalty_speeds_up_240_threads() {
+    let arch = ArchSpec::medium();
+    let run = RunConfig::paper_default("medium", 240);
+    let base = SimConfig::default();
+    let mut no_smt = SimConfig::default();
+    no_smt.machine.cpi_ladder = vec![1.0, 1.0, 1.0, 1.0];
+    let t_base = simulate_training(&arch, &run, &base).unwrap().execution_s;
+    let t_flat = simulate_training(&arch, &run, &no_smt).unwrap().execution_s;
+    assert!(t_flat < t_base);
+}
+
+#[test]
+fn more_memory_channels_reduce_contention_effect() {
+    let arch = ArchSpec::large();
+    let cfg = SimConfig::default();
+    let mut wide = SimConfig::default();
+    wide.machine.memory_bw_bytes *= 4.0;
+    let c_base = probe::contention_probe(&arch, 240, &cfg).unwrap();
+    let c_wide = probe::contention_probe(&arch, 240, &wide).unwrap();
+    assert!(c_wide < c_base);
+}

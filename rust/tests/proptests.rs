@@ -1,0 +1,354 @@
+//! Property-based tests over randomized inputs.
+//!
+//! The proptest crate is unavailable in this offline build, so the same
+//! discipline is implemented directly: a seeded generator drives many
+//! randomized cases per property, and failures print the offending seed
+//! so the case replays deterministically.
+
+use micdl::config::{ArchSpec, LayerSpec, MachineConfig, RunConfig};
+use micdl::coordinator::shard::Shard;
+use micdl::nn::init::XorShift64;
+use micdl::nn::opcount;
+use micdl::perfmodel::{both_models, ParamSource, PerfModel};
+use micdl::report::paper;
+use micdl::simulator::{simulate_training, workload, Fidelity, SimConfig};
+use micdl::util::json::Json;
+
+const CASES: usize = 200;
+
+// ---------------------------------------------------------------------------
+// Sharding / chunking invariants (coordinator state & routing)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_shards_partition_disjointly_and_conserve() {
+    let mut rng = XorShift64::new(101);
+    for case in 0..CASES {
+        let n = rng.next_below(100_000);
+        let p = 1 + rng.next_below(512);
+        let shards = Shard::all(n, p);
+        let mut covered = 0usize;
+        for (t, s) in shards.iter().enumerate() {
+            assert!(s.start <= s.end, "case {case}: t={t}");
+            if t > 0 {
+                assert_eq!(shards[t - 1].end, s.start, "case {case}: gap/overlap");
+            }
+            covered += s.len();
+        }
+        assert_eq!(covered, n, "case {case}: n={n} p={p}");
+        // Balance: sizes differ by at most one.
+        let max = shards.iter().map(Shard::len).max().unwrap();
+        let min = shards.iter().map(Shard::len).min().unwrap();
+        assert!(max - min <= 1, "case {case}");
+        // Agreement with the simulator's chunk arithmetic.
+        for (t, s) in shards.iter().enumerate() {
+            assert_eq!(s.len(), workload::chunk_of(n, p, t), "case {case} t={t}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Machine placement invariants
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_occupancy_counts_are_consistent() {
+    let mut rng = XorShift64::new(202);
+    let m = MachineConfig::xeon_phi_7120p();
+    for case in 0..CASES {
+        let p = 1 + rng.next_below(4096);
+        let machine = micdl::simulator::PhiMachine::new(m.clone(), p);
+        // Sum of software threads across cores equals p.
+        let mut total = 0usize;
+        for core in 0..m.cores.min(p) {
+            total += machine.sw_threads_on_core(core);
+        }
+        assert_eq!(total, p, "case {case}: p={p}");
+        // Occupancy never exceeds the SMT width; oversub ≥ 1.
+        for t in [0, p / 2, p - 1] {
+            assert!(machine.occupancy_of(t) <= m.threads_per_core);
+            assert!(machine.oversub_of(t) >= 1.0);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Simulator monotonicity / linearity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_sim_time_monotone_in_epochs_and_images() {
+    let mut rng = XorShift64::new(303);
+    let cfg = SimConfig::default();
+    let arch = ArchSpec::small();
+    for case in 0..40 {
+        let base = RunConfig {
+            train_images: 100 + rng.next_below(5_000),
+            test_images: rng.next_below(1_000),
+            epochs: 1 + rng.next_below(10),
+            threads: 1 + rng.next_below(300),
+        };
+        let t0 = simulate_training(&arch, &base, &cfg).unwrap().execution_s;
+        let more_ep = base.with_epochs(base.epochs + 1 + rng.next_below(5));
+        let t1 = simulate_training(&arch, &more_ep, &cfg).unwrap().execution_s;
+        assert!(t1 > t0, "case {case}: epochs up, time down? {base:?}");
+        let more_imgs = RunConfig {
+            train_images: base.train_images * 2,
+            ..base
+        };
+        let t2 = simulate_training(&arch, &more_imgs, &cfg).unwrap().execution_s;
+        assert!(t2 > t0, "case {case}: images up, time down? {base:?}");
+    }
+}
+
+#[test]
+fn prop_sim_execution_linear_in_epochs() {
+    // execution (prep excluded) must scale exactly linearly with ep in
+    // chunked mode.
+    let mut rng = XorShift64::new(404);
+    let cfg = SimConfig::default();
+    let arch = ArchSpec::medium();
+    for case in 0..40 {
+        let run = RunConfig {
+            train_images: 500 + rng.next_below(3_000),
+            test_images: rng.next_below(500),
+            epochs: 1 + rng.next_below(6),
+            threads: 1 + rng.next_below(244),
+        };
+        let t1 = simulate_training(&arch, &run, &cfg).unwrap().execution_s;
+        let t3 = simulate_training(&arch, &run.with_epochs(run.epochs * 3), &cfg)
+            .unwrap()
+            .execution_s;
+        let ratio = t3 / t1;
+        assert!((ratio - 3.0).abs() < 1e-9, "case {case}: {ratio} {run:?}");
+    }
+}
+
+#[test]
+fn prop_fidelity_modes_agree_on_random_workloads() {
+    let mut rng = XorShift64::new(505);
+    let chunked = SimConfig { fidelity: Fidelity::Chunked, ..Default::default() };
+    let image = SimConfig { fidelity: Fidelity::PerImage, ..Default::default() };
+    for case in 0..25 {
+        let run = RunConfig {
+            train_images: 1 + rng.next_below(400),
+            test_images: rng.next_below(100),
+            epochs: 1 + rng.next_below(3),
+            threads: 1 + rng.next_below(128),
+        };
+        let arch = match case % 3 {
+            0 => ArchSpec::small(),
+            1 => ArchSpec::medium(),
+            _ => ArchSpec::large(),
+        };
+        let a = simulate_training(&arch, &run, &chunked).unwrap().total_s;
+        let b = simulate_training(&arch, &run, &image).unwrap().total_s;
+        assert!(
+            (a - b).abs() / b < 1e-9,
+            "case {case}: chunked {a} vs per-image {b} ({run:?})"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Model properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_models_monotone_in_workload() {
+    let mut rng = XorShift64::new(606);
+    for case in 0..60 {
+        let arch = ArchSpec::paper_archs()[case % 3].clone();
+        let (a, b) = both_models(&arch, ParamSource::Paper).unwrap();
+        let run = RunConfig {
+            train_images: 1_000 + rng.next_below(100_000),
+            test_images: 100 + rng.next_below(10_000),
+            epochs: 1 + rng.next_below(100),
+            threads: 1 + rng.next_below(3_840),
+        };
+        for model in [&a as &dyn PerfModel, &b as &dyn PerfModel] {
+            let t = model.predict(&run).unwrap().total_s;
+            assert!(t > 0.0 && t.is_finite());
+            let bigger = RunConfig {
+                train_images: run.train_images + 1_000,
+                ..run
+            };
+            let t2 = model.predict(&bigger).unwrap().total_s;
+            assert!(t2 > t, "case {case} model {}", model.name());
+        }
+    }
+}
+
+#[test]
+fn prop_model_b_total_decomposes_exactly() {
+    let mut rng = XorShift64::new(707);
+    let arch = ArchSpec::large();
+    let (_, b) = both_models(&arch, ParamSource::Paper).unwrap();
+    for _ in 0..CASES {
+        let run = RunConfig {
+            train_images: 1 + rng.next_below(200_000),
+            test_images: 1 + rng.next_below(20_000),
+            epochs: 1 + rng.next_below(300),
+            threads: 1 + rng.next_below(4_000),
+        };
+        let p = b.predict(&run).unwrap();
+        let sum = p.prep_s + p.train_s + p.test_s + p.mem_s;
+        assert!((p.total_s - sum).abs() < 1e-6 * p.total_s.max(1.0));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Contention table properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_paper_contention_monotone_in_threads() {
+    let mut rng = XorShift64::new(808);
+    for arch in ["small", "medium", "large"] {
+        for _ in 0..CASES {
+            let p1 = 1 + rng.next_below(5_000);
+            let p2 = p1 + 1 + rng.next_below(1_000);
+            let c1 = paper::contention_s(arch, p1).unwrap();
+            let c2 = paper::contention_s(arch, p2).unwrap();
+            assert!(c2 >= c1, "{arch}: contention({p2}) < contention({p1})");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON roundtrip fuzz
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut XorShift64, depth: usize) -> Json {
+    match if depth == 0 { rng.next_below(4) } else { rng.next_below(6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.next_below(2) == 0),
+        2 => Json::Num((rng.next_below(2_000_000) as f64 - 1e6) / 97.0),
+        3 => {
+            let len = rng.next_below(12);
+            let s: String = (0..len)
+                .map(|_| {
+                    let c = rng.next_below(96) as u8 + 32;
+                    c as char
+                })
+                .collect();
+            Json::Str(s)
+        }
+        4 => {
+            let len = rng.next_below(5);
+            Json::Arr((0..len).map(|_| random_json(rng, depth - 1)).collect())
+        }
+        _ => {
+            let len = rng.next_below(5);
+            Json::Obj(
+                (0..len)
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            )
+        }
+    }
+}
+
+#[test]
+fn prop_json_emit_parse_roundtrip() {
+    let mut rng = XorShift64::new(909);
+    for case in 0..CASES {
+        let v = random_json(&mut rng, 3);
+        let text = v.emit();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("case {case}: {e}\n{text}"));
+        assert_eq!(back, v, "case {case}: {text}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Architecture generator: valid stacks always shape-check, op counts grow
+// ---------------------------------------------------------------------------
+
+fn random_arch(rng: &mut XorShift64, idx: usize) -> ArchSpec {
+    let mut layers = Vec::new();
+    let mut hw = 29usize;
+    // 1-3 conv/pool stages that always fit.
+    for _ in 0..(1 + rng.next_below(3)) {
+        let k = 2 + rng.next_below(4); // 2..=5
+        if k < hw {
+            layers.push(LayerSpec::Conv { maps: 1 + rng.next_below(24), kernel: k });
+            hw = hw - k + 1;
+            // Pool with a window that divides hw, if any.
+            for w in [2usize, 3, 5] {
+                if hw % w == 0 && hw / w >= 2 && rng.next_below(2) == 0 {
+                    layers.push(LayerSpec::Pool { window: w });
+                    hw /= w;
+                    break;
+                }
+            }
+        }
+    }
+    if rng.next_below(2) == 0 {
+        layers.push(LayerSpec::Dense { units: 10 + rng.next_below(200) });
+    }
+    layers.push(LayerSpec::Dense { units: 10 });
+    ArchSpec { name: format!("gen{idx}"), layers }
+}
+
+#[test]
+fn prop_generated_archs_validate_and_count() {
+    let mut rng = XorShift64::new(1010);
+    for case in 0..CASES {
+        let arch = random_arch(&mut rng, case);
+        arch.validate().unwrap_or_else(|e| panic!("case {case}: {e} {arch:?}"));
+        let counts = opcount::count(&arch).unwrap();
+        assert!(counts.fprop.total() > 0);
+        assert!(counts.bprop.total() > 0);
+        // Backward costs at least as much as forward minus activation
+        // bookkeeping — in our scheme it is always strictly more.
+        assert!(counts.bprop.total() + counts.fprop.total() > counts.fprop.total());
+        // JSON roundtrip of the generated arch.
+        let back = ArchSpec::from_json(&arch.to_json()).unwrap();
+        assert_eq!(back, arch, "case {case}");
+    }
+}
+
+#[test]
+fn prop_adding_a_dense_layer_increases_ops() {
+    let mut rng = XorShift64::new(1111);
+    for case in 0..60 {
+        let arch = random_arch(&mut rng, case);
+        let mut bigger = arch.clone();
+        let insert_at = bigger.layers.len() - 1;
+        bigger.layers.insert(insert_at, LayerSpec::Dense { units: 64 });
+        let a = opcount::count(&arch).unwrap();
+        let b = opcount::count(&bigger).unwrap();
+        assert!(
+            b.fprop.total() > a.fprop.total(),
+            "case {case}: {arch:?}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Simulator vs random machine configs (no panics, sane outputs)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_simulator_robust_across_machine_configs() {
+    let mut rng = XorShift64::new(1212);
+    let arch = ArchSpec::small();
+    for case in 0..40 {
+        let mut cfg = SimConfig::default();
+        cfg.machine.cores = 1 + rng.next_below(128);
+        cfg.machine.threads_per_core = 1 + rng.next_below(8);
+        cfg.machine.clock_hz = 0.5e9 + rng.next_below(3) as f64 * 1e9;
+        cfg.machine.cpi_ladder =
+            (0..cfg.machine.threads_per_core).map(|i| 1.0 + i as f64 * 0.4).collect();
+        let run = RunConfig {
+            train_images: 1 + rng.next_below(2_000),
+            test_images: rng.next_below(500),
+            epochs: 1 + rng.next_below(4),
+            threads: 1 + rng.next_below(cfg.machine.cores * cfg.machine.threads_per_core * 2),
+        };
+        let r = simulate_training(&arch, &run, &cfg)
+            .unwrap_or_else(|e| panic!("case {case}: {e} cfg={cfg:?} run={run:?}"));
+        assert!(r.total_s.is_finite() && r.total_s > 0.0, "case {case}");
+        assert!(r.execution_s <= r.total_s);
+    }
+}

@@ -1,0 +1,147 @@
+//! End-to-end PJRT tests: load the AOT HLO artifacts, compile them on the
+//! CPU PJRT client, and train — the full L1/L2/L3 composition.
+//!
+//! These tests require `make artifacts` to have run; they are skipped
+//! (with a notice) when `artifacts/meta.json` is absent so `cargo test`
+//! stays green on a fresh checkout.
+
+use std::path::PathBuf;
+
+use micdl::dataset;
+use micdl::runtime::{ArtifactRegistry, PjrtRuntime};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn batch_of(
+    data: &dataset::Dataset,
+    start: usize,
+    batch: usize,
+) -> (Vec<f32>, Vec<i32>) {
+    let mut xs = Vec::with_capacity(batch * dataset::IMAGE_PIXELS);
+    let mut ys = Vec::with_capacity(batch);
+    for k in 0..batch {
+        let (img, label) = data.sample((start + k) % data.len());
+        xs.extend_from_slice(img);
+        ys.push(label as i32);
+    }
+    (xs, ys)
+}
+
+#[test]
+fn artifacts_load_and_compile() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load(&dir).unwrap();
+    reg.check_files().unwrap();
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    assert!(rt.platform_name().to_lowercase().contains("cpu")
+            || rt.platform_name().to_lowercase().contains("host"),
+            "platform: {}", rt.platform_name());
+    let arch = reg.arch("small").unwrap().clone();
+    rt.compile_hlo(&arch.train_hlo).unwrap();
+    rt.compile_hlo(&arch.infer_hlo).unwrap();
+}
+
+#[test]
+fn small_cnn_trains_loss_decreases() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load(&dir).unwrap();
+    let arch = reg.arch("small").unwrap().clone();
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    let mut handle = rt.train_handle(&arch, reg.batch, reg.input_hw, 42).unwrap();
+
+    let (train, _) = dataset::load_or_synth(None, 512, 64, 7);
+    let mut first_losses = Vec::new();
+    let mut last_losses = Vec::new();
+    let steps = 30usize;
+    for step in 0..steps {
+        let (xs, ys) = batch_of(&train, step * reg.batch, reg.batch);
+        let loss = rt.train_step(&mut handle, &xs, &ys).unwrap();
+        assert!(loss.is_finite(), "step {step}: loss {loss}");
+        if step < 3 {
+            first_losses.push(loss);
+        }
+        if step >= steps - 3 {
+            last_losses.push(loss);
+        }
+    }
+    let first: f32 = first_losses.iter().sum::<f32>() / first_losses.len() as f32;
+    let last: f32 = last_losses.iter().sum::<f32>() / last_losses.len() as f32;
+    assert!(last < first, "loss did not decrease: {first} -> {last}");
+    assert_eq!(handle.steps, steps as u64);
+}
+
+#[test]
+fn inference_predictions_valid_classes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load(&dir).unwrap();
+    let arch = reg.arch("small").unwrap().clone();
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    let mut handle = rt.train_handle(&arch, reg.batch, reg.input_hw, 3).unwrap();
+
+    let (train, _) = dataset::load_or_synth(None, reg.batch, 8, 9);
+    let (xs, _) = batch_of(&train, 0, reg.batch);
+    let classes = rt.infer(&mut handle, &xs).unwrap();
+    assert_eq!(classes.len(), reg.batch);
+    assert!(classes.iter().all(|&c| c < reg.num_classes));
+}
+
+#[test]
+fn training_improves_accuracy_on_synth() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load(&dir).unwrap();
+    let arch = reg.arch("small").unwrap().clone();
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    let mut handle = rt.train_handle(&arch, reg.batch, reg.input_hw, 11).unwrap();
+
+    let (train, test) = dataset::load_or_synth(None, 2048, 256, 13);
+    let mut accuracy = |rt: &mut PjrtRuntime,
+                        handle: &mut micdl::runtime::TrainHandle|
+     -> f64 {
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut start = 0;
+        while start + reg.batch <= test.len() {
+            let (xs, ys) = batch_of(&test, start, reg.batch);
+            let classes = rt.infer(handle, &xs).unwrap();
+            correct += classes
+                .iter()
+                .zip(ys.iter())
+                .filter(|(&c, &y)| c == y as usize)
+                .count();
+            total += reg.batch;
+            start += reg.batch;
+        }
+        correct as f64 / total as f64
+    };
+
+    let before = accuracy(&mut rt, &mut handle);
+    for step in 0..80 {
+        let (xs, ys) = batch_of(&train, step * reg.batch, reg.batch);
+        rt.train_step(&mut handle, &xs, &ys).unwrap();
+    }
+    let after = accuracy(&mut rt, &mut handle);
+    assert!(
+        after > before.max(0.3),
+        "accuracy did not improve: {before:.3} -> {after:.3}"
+    );
+}
+
+#[test]
+fn rejects_wrong_batch_sizes() {
+    let Some(dir) = artifacts_dir() else { return };
+    let reg = ArtifactRegistry::load(&dir).unwrap();
+    let arch = reg.arch("small").unwrap().clone();
+    let mut rt = PjrtRuntime::cpu().unwrap();
+    let mut handle = rt.train_handle(&arch, reg.batch, reg.input_hw, 1).unwrap();
+    let bad_images = vec![0.0f32; 10];
+    let labels = vec![0i32; reg.batch];
+    assert!(rt.train_step(&mut handle, &bad_images, &labels).is_err());
+}
