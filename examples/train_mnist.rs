@@ -18,7 +18,7 @@ use micdl::coordinator::pool::{DataParallelTrainer, PoolConfig};
 use micdl::config::ArchSpec;
 use micdl::dataset;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> micdl::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let arch = args.first().cloned().unwrap_or_else(|| "small".into());
     let epochs: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);

@@ -1,0 +1,75 @@
+//! Sweep-engine benchmark: the hot path future PRs must not regress.
+//!
+//! Cases cover grid enumeration, serial vs parallel evaluation of a
+//! mid-size grid, and a paper-scale 1,464-scenario run. Besides the
+//! stdout report, the run writes `BENCH_sweep.json` (median/mean/min per
+//! case) so the perf trajectory is diffable across PRs:
+//! `cargo bench --bench bench_sweep`.
+
+use micdl::sweep::{GridSpec, SweepRunner};
+use micdl::util::bench::Bench;
+use micdl::util::json::Json;
+
+fn mid_grid() -> GridSpec {
+    // 3 archs × 61 thread counts × 2 strategies = 366 scenarios.
+    GridSpec {
+        threads: (1..=244).step_by(4).collect(),
+        ..GridSpec::default()
+    }
+}
+
+fn full_grid() -> GridSpec {
+    // 3 archs × 244 thread counts × 2 strategies = 1,464 scenarios.
+    GridSpec {
+        threads: (1..=244).collect(),
+        ..GridSpec::default()
+    }
+}
+
+fn main() {
+    let mut b = Bench::default();
+
+    let grid = mid_grid();
+    b.case("sweep/enumerate/366", || grid.enumerate().len());
+    b.case("sweep/serial/366", || {
+        SweepRunner::serial().run(&grid).unwrap().len()
+    });
+    b.case("sweep/parallel/366", || {
+        SweepRunner::new(0).run(&grid).unwrap().len()
+    });
+
+    let measured = GridSpec { measure: true, ..mid_grid() };
+    b.case("sweep/parallel+measure/366", || {
+        SweepRunner::new(0).run(&measured).unwrap().len()
+    });
+
+    let big = full_grid();
+    b.case("sweep/parallel/1464", || {
+        SweepRunner::new(0).run(&big).unwrap().len()
+    });
+
+    b.print_report("scenario sweep engine");
+
+    let cases: Vec<Json> = b
+        .results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(r.name.clone())),
+                ("iters", Json::num(r.iters as f64)),
+                ("median_ns", Json::num(r.median.as_nanos() as f64)),
+                ("mean_ns", Json::num(r.mean.as_nanos() as f64)),
+                ("min_ns", Json::num(r.min.as_nanos() as f64)),
+                ("mad_ns", Json::num(r.mad.as_nanos() as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("sweep")),
+        ("grid_mid", Json::num(mid_grid().len() as f64)),
+        ("grid_full", Json::num(full_grid().len() as f64)),
+        ("cases", Json::Arr(cases)),
+    ]);
+    std::fs::write("BENCH_sweep.json", doc.emit() + "\n").expect("write BENCH_sweep.json");
+    println!("\nwrote BENCH_sweep.json ({} cases)", b.results.len());
+}

@@ -50,6 +50,15 @@ impl MachineConfig {
         }
     }
 
+    /// A 7120P variant at a different core clock (the sweep machine
+    /// axis: `repro sweep --clock-ghz` and the `clock_ghz` spec key).
+    pub fn xeon_phi_7120p_at_ghz(ghz: f64) -> Self {
+        let mut m = Self::xeon_phi_7120p();
+        m.clock_hz = ghz * 1e9;
+        m.name = format!("7120P@{ghz}GHz");
+        m
+    }
+
     /// Maximum hardware threads (244 on the 7120P).
     pub fn max_hw_threads(&self) -> usize {
         self.cores * self.threads_per_core

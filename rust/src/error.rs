@@ -1,39 +1,62 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+//! offline build carries no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for all micdl subsystems.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration rejected (bad layer stack, invalid parameter, ...).
-    #[error("config error: {0}")]
     Config(String),
 
     /// Dataset file missing or malformed (IDX magic, truncation, ...).
-    #[error("dataset error: {0}")]
     Dataset(String),
 
     /// Simulator invariant violated or invalid workload.
-    #[error("simulator error: {0}")]
     Simulator(String),
 
     /// PJRT / XLA runtime failure (artifact load, compile, execute).
-    #[error("runtime error: {0}")]
     Runtime(String),
 
     /// Artifact registry problem (missing meta.json, shape mismatch, ...).
-    #[error("artifact error: {0}")]
     Artifact(String),
 
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
-    #[error("json error: {0}")]
     Json(String),
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Dataset(m) => write!(f, "dataset error: {m}"),
+            Error::Simulator(m) => write!(f, "simulator error: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json(m) => write!(f, "json error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<crate::runtime::xla::Error> for Error {
+    fn from(e: crate::runtime::xla::Error) -> Self {
         Error::Runtime(e.to_string())
     }
 }

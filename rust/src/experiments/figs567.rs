@@ -3,15 +3,17 @@
 //! For each measured thread count {1, 15, 30, 60, 120, 180, 240}:
 //! strategy (a) prediction, strategy (b) prediction, and the micsim
 //! "measurement", plus per-point Δ — the per-architecture view behind
-//! Table IX. Rendered as an aligned table and a log-scale ASCII chart
-//! mirroring the paper's figures.
+//! Table IX. The grid itself is a [`crate::sweep`] definition (one
+//! architecture × the measured thread counts × both strategies, with
+//! micsim measurement on); this module only formats the results as an
+//! aligned table and a log-scale ASCII chart mirroring the paper's
+//! figures.
 
 use crate::config::{ArchSpec, RunConfig};
 use crate::error::Result;
 use crate::experiments::ExpOptions;
-use crate::perfmodel::{both_models, delta_pct, PerfModel};
 use crate::report::{series, Series, Table};
-use crate::simulator::{probe, SimConfig};
+use crate::sweep::{GridSpec, Strategy, SweepRunner};
 
 pub fn run(arch_name: &str, opts: &ExpOptions) -> Result<String> {
     let arch = ArchSpec::by_name(arch_name)?;
@@ -20,8 +22,15 @@ pub fn run(arch_name: &str, opts: &ExpOptions) -> Result<String> {
         "medium" => "Fig. 6",
         _ => "Fig. 7",
     };
-    let cfg = SimConfig::default();
-    let (model_a, model_b) = both_models(&arch, opts.params)?;
+    let grid = GridSpec {
+        archs: vec![arch],
+        threads: RunConfig::MEASURED_THREADS.to_vec(),
+        strategies: vec![Strategy::A, Strategy::B],
+        params: opts.params,
+        measure: true,
+        ..GridSpec::default()
+    };
+    let res = SweepRunner::new(0).run(&grid)?;
 
     let mut t = Table::new(
         format!(
@@ -36,11 +45,13 @@ pub fn run(arch_name: &str, opts: &ExpOptions) -> Result<String> {
     let mut pred_a = Series::new("predicted (a)");
     let mut pred_b = Series::new("predicted (b)");
     let mut measured = Series::new("measured");
-    for &p in RunConfig::MEASURED_THREADS.iter() {
-        let run = RunConfig::paper_default(arch_name, p);
-        let a = model_a.predict(&run)?.total_s;
-        let b = model_b.predict(&run)?.total_s;
-        let m = probe::measured_execution_s(&arch, p, &cfg)?;
+    for ti in 0..res.grid.threads.len() {
+        let ra = res.at(0, 0, 0, 0, ti, 0);
+        let rb = res.at(0, 0, 0, 0, ti, 1);
+        let p = ra.scenario.threads;
+        let a = ra.prediction.total_s;
+        let b = rb.prediction.total_s;
+        let m = ra.measured_s.expect("measure grid");
         pred_a.push(p as f64, a);
         pred_b.push(p as f64, b);
         measured.push(p as f64, m);
@@ -49,8 +60,8 @@ pub fn run(arch_name: &str, opts: &ExpOptions) -> Result<String> {
             format!("{a:.0}"),
             format!("{b:.0}"),
             format!("{m:.0}"),
-            format!("{:.1}", delta_pct(m, a)),
-            format!("{:.1}", delta_pct(m, b)),
+            format!("{:.1}", ra.delta_pct.expect("measure grid")),
+            format!("{:.1}", rb.delta_pct.expect("measure grid")),
         ]);
     }
 
@@ -69,6 +80,8 @@ pub fn run(arch_name: &str, opts: &ExpOptions) -> Result<String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::perfmodel::{both_models, delta_pct, PerfModel};
+    use crate::simulator::{probe, SimConfig};
 
     #[test]
     fn all_three_figures_render() {

@@ -1,12 +1,21 @@
 //! Table X — predicted execution times beyond the hardware thread count.
+//!
+//! The grid is a [`crate::sweep`] definition (all three architectures ×
+//! the Table X thread counts × both strategies); this module formats the
+//! results next to the paper's published cells.
 
-use crate::config::{ArchSpec, RunConfig};
 use crate::error::Result;
 use crate::experiments::ExpOptions;
-use crate::perfmodel::{both_models, PerfModel};
 use crate::report::{paper, Table};
+use crate::sweep::{GridSpec, SweepRunner};
 
 pub fn run(opts: &ExpOptions) -> Result<String> {
+    let grid = GridSpec {
+        threads: paper::TABLE10_THREADS.to_vec(),
+        params: opts.params,
+        ..GridSpec::default()
+    };
+    let res = SweepRunner::new(0).run(&grid)?;
     let mut t = Table::new(
         "Table X — predicted minutes for 480–3,840 threads (ours | paper)",
         &[
@@ -18,11 +27,9 @@ pub fn run(opts: &ExpOptions) -> Result<String> {
     );
     for (row, &p) in paper::TABLE10_THREADS.iter().enumerate() {
         let mut cells = vec![p.to_string()];
-        for (col, arch) in ArchSpec::paper_archs().iter().enumerate() {
-            let (a, b) = both_models(arch, opts.params)?;
-            let run = RunConfig::paper_default(&arch.name, p);
-            let ta = a.predict(&run)?.total_s / 60.0;
-            let tb = b.predict(&run)?.total_s / 60.0;
+        for col in 0..res.grid.archs.len() {
+            let ta = res.at(col, 0, 0, 0, row, 0).prediction.total_s / 60.0;
+            let tb = res.at(col, 0, 0, 0, row, 1).prediction.total_s / 60.0;
             cells.push(format!("{ta:.1}"));
             cells.push(format!("{:.1}", paper::TABLE10_MINUTES[row][col * 2]));
             cells.push(format!("{tb:.1}"));

@@ -1,15 +1,26 @@
 //! Table XI — scaling epochs and images (small CNN, strategy (a)).
+//!
+//! The grid is a [`crate::sweep`] definition (small CNN × the Table XI
+//! image/epoch/thread axes, strategy (a) only); this module formats the
+//! results next to the paper's published cells.
 
-use crate::config::{ArchSpec, RunConfig};
+use crate::config::ArchSpec;
 use crate::error::Result;
 use crate::experiments::ExpOptions;
-use crate::perfmodel::{ParamSource, PerfModel, StrategyA};
 use crate::report::{paper, Table};
+use crate::sweep::{GridSpec, Strategy, SweepRunner};
 
 pub fn run(opts: &ExpOptions) -> Result<String> {
-    let arch = ArchSpec::small();
-    let model = StrategyA::new(&arch, opts.params)?;
-    let _ = ParamSource::Paper;
+    let grid = GridSpec {
+        archs: vec![ArchSpec::small()],
+        images: paper::TABLE11_IMAGES.to_vec(),
+        epochs: paper::TABLE11_EPOCHS.to_vec(),
+        threads: paper::TABLE11_THREADS.to_vec(),
+        strategies: vec![Strategy::A],
+        params: opts.params,
+        ..GridSpec::default()
+    };
+    let res = SweepRunner::new(0).run(&grid)?;
     let mut t = Table::new(
         "Table XI — minutes when scaling epochs/images, small CNN, model (a) \
          (ours | paper)",
@@ -21,10 +32,9 @@ pub fn run(opts: &ExpOptions) -> Result<String> {
     );
     for (row, &(i, it)) in paper::TABLE11_IMAGES.iter().enumerate() {
         let mut cells = vec![format!("{}k", i / 1000), format!("{}k", it / 1000)];
-        for (tcol, &p) in paper::TABLE11_THREADS.iter().enumerate() {
-            for (ecol, &ep) in paper::TABLE11_EPOCHS.iter().enumerate() {
-                let run = RunConfig { train_images: i, test_images: it, epochs: ep, threads: p };
-                let got = model.predict(&run)?.total_s / 60.0;
+        for tcol in 0..paper::TABLE11_THREADS.len() {
+            for ecol in 0..paper::TABLE11_EPOCHS.len() {
+                let got = res.at(0, 0, row, ecol, tcol, 0).prediction.total_s / 60.0;
                 cells.push(format!("{got:.1}"));
                 cells.push(format!("{:.1}", paper::TABLE11_MINUTES[row][tcol * 3 + ecol]));
             }
@@ -44,6 +54,8 @@ pub fn run(opts: &ExpOptions) -> Result<String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::RunConfig;
+    use crate::perfmodel::{ParamSource, PerfModel, StrategyA};
 
     #[test]
     fn doubling_images_doubles_time() {

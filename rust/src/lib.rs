@@ -33,6 +33,7 @@
 //! | [`coordinator`] | Worker pool, image sharding, epoch barriers, metrics |
 //! | [`runtime`] | xla/PJRT client: load HLO text artifacts, compile, execute |
 //! | [`report`] | Paper-style table/series rendering + embedded paper data |
+//! | [`sweep`] | Parallel scenario-sweep engine (grid × cache × worker pool) |
 //! | [`experiments`] | One entry per paper table/figure (the reproduction index) |
 
 pub mod config;
@@ -46,6 +47,7 @@ pub mod perfmodel;
 pub mod report;
 pub mod runtime;
 pub mod simulator;
+pub mod sweep;
 pub mod training;
 pub mod util;
 

@@ -7,6 +7,7 @@
 //! repro arch [--name N | --json FILE]               architecture summary (Fig. 2)
 //! repro simulate --arch A --threads P [...]         run micsim on a workload
 //! repro predict --arch A --threads P [...]          run the performance models
+//! repro sweep [--spec FILE | axis flags]            evaluate a whole scenario grid
 //! repro probe --arch A                              Table IV contention probe
 //! repro train [...]                                 really train (engine or PJRT backend)
 //! repro selfcheck                                   invariant + artifact checks
@@ -14,18 +15,31 @@
 //!
 //! Argument parsing is hand-rolled (offline build — no clap); see
 //! [`micdl::util`] for the rationale.
+//!
+//! Exit codes: 0 on success; 1 on any configuration, parse, or runtime
+//! error (the error is printed to stderr together with the usage text).
 
-use anyhow::{anyhow, bail, Result};
-
-use micdl::config::{ArchSpec, RunConfig};
+use micdl::config::{ArchSpec, MachineConfig, RunConfig};
 use micdl::coordinator::leader::{LeaderConfig, PjrtTrainer};
 use micdl::coordinator::pool::{DataParallelTrainer, PoolConfig};
 use micdl::dataset;
+use micdl::error::{Error, Result};
 use micdl::experiments::{self, ExpOptions};
 use micdl::nn::opcount;
 use micdl::perfmodel::{both_models, ParamSource, PerfModel};
 use micdl::report::Table;
 use micdl::simulator::{probe, simulate_training, Fidelity, SimConfig};
+use micdl::sweep::{parse_axis, GridSpec, Strategy, SweepRunner};
+
+/// `format!` into the crate's config error.
+macro_rules! err {
+    ($($arg:tt)*) => { Error::Config(format!($($arg)*)) };
+}
+
+/// Early-return with a config error.
+macro_rules! bail {
+    ($($arg:tt)*) => { return Err(err!($($arg)*)) };
+}
 
 /// Minimal flag parser: positionals + `--key value` + boolean `--flag`.
 #[derive(Debug, Default)]
@@ -41,10 +55,7 @@ impl Args {
         while i < argv.len() {
             let a = &argv[i];
             if let Some(name) = a.strip_prefix("--") {
-                let value = argv
-                    .get(i + 1)
-                    .filter(|v| !v.starts_with("--"))
-                    .cloned();
+                let value = argv.get(i + 1).filter(|v| !v.starts_with("--")).cloned();
                 if value.is_some() {
                     i += 1;
                 }
@@ -71,7 +82,9 @@ impl Args {
     fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v.parse().map_err(|_| anyhow!("--{name} wants an integer, got {v:?}")),
+            Some(v) => v
+                .parse()
+                .map_err(|_| err!("--{name} wants an integer, got {v:?}")),
         }
     }
 }
@@ -87,6 +100,11 @@ USAGE:
                  [--fidelity chunked|image]
   repro predict  --arch A [--threads P] [--epochs E] [--images I] [--test-images IT]
                  [--strategy a|b|both] [--params paper|sim]
+  repro sweep    [--spec FILE.json] [--arch all|NAME[,NAME...]] [--threads LIST]
+                 [--images IxIT[,IxIT...]] [--epochs LIST] [--strategy a|b|both]
+                 [--params paper|sim] [--clock-ghz F[,F...]] [--measure]
+                 [--workers N | --serial] [--json OUT.json] [--csv] [--full]
+                 (LIST = comma items and/or inclusive ranges: 1,15,30 or 1..244 or 8..64..8)
   repro probe    [--arch A]
   repro train    [--backend engine|pjrt] [--arch A] [--epochs E] [--images N]
                  [--test-images N] [--workers W] [--lr F] [--artifacts DIR]
@@ -116,7 +134,7 @@ fn parse_arch(args: &Args) -> Result<ArchSpec> {
         let text = std::fs::read_to_string(path)?;
         return Ok(ArchSpec::from_json(&text)?);
     }
-    Ok(ArchSpec::by_name(args.get("name").or(args.get("arch")).unwrap_or("small"))?)
+    ArchSpec::by_name(args.get("name").or(args.get("arch")).unwrap_or("small"))
 }
 
 fn parse_run(args: &Args, arch: &str) -> Result<RunConfig> {
@@ -140,6 +158,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "arch" => cmd_arch(&args),
         "simulate" => cmd_simulate(&args),
         "predict" => cmd_predict(&args),
+        "sweep" => cmd_sweep(&args),
         "probe" => cmd_probe(&args),
         "train" => cmd_train(&args),
         "selfcheck" => cmd_selfcheck(&args),
@@ -156,7 +175,7 @@ fn cmd_exp(args: &Args) -> Result<()> {
         .positional
         .first()
         .map(String::as_str)
-        .ok_or_else(|| anyhow!("exp needs an id (or 'all')"))?;
+        .ok_or_else(|| err!("exp needs an id (or 'all')"))?;
     let opts = ExpOptions { csv: args.has("csv"), params: parse_params(args)? };
     print!("{}", experiments::run(id, &opts)?);
     Ok(())
@@ -265,6 +284,88 @@ fn cmd_predict(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse the `--images` axis: `IxIT` pairs, comma-separated
+/// (`60000x10000,30000x5000`).
+fn parse_images(text: &str) -> Result<Vec<(usize, usize)>> {
+    let mut out = Vec::new();
+    for item in text.split(',') {
+        let (i, it) = item
+            .trim()
+            .split_once(['x', 'X'])
+            .ok_or_else(|| err!("--images wants IxIT pairs, got {item:?}"))?;
+        let parse = |s: &str| -> Result<usize> {
+            s.trim()
+                .parse()
+                .map_err(|_| err!("--images wants integers, got {s:?}"))
+        };
+        out.push((parse(i)?, parse(it)?));
+    }
+    Ok(out)
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let mut grid = match args.get("spec") {
+        Some(path) => GridSpec::from_json(&std::fs::read_to_string(path)?)?,
+        None => GridSpec::default(),
+    };
+    if let Some(v) = args.get("arch") {
+        grid.archs = if v == "all" {
+            ArchSpec::paper_archs()
+        } else {
+            v.split(',')
+                .map(|name| ArchSpec::by_name(name.trim()))
+                .collect::<Result<Vec<_>>>()?
+        };
+    }
+    if let Some(v) = args.get("threads") {
+        grid.threads = parse_axis(v)?;
+    }
+    if let Some(v) = args.get("epochs") {
+        grid.epochs = parse_axis(v)?;
+    }
+    if let Some(v) = args.get("images") {
+        grid.images = parse_images(v)?;
+    }
+    if let Some(v) = args.get("strategy") {
+        grid.strategies = Strategy::parse_list(v)?;
+    }
+    if args.has("params") {
+        grid.params = parse_params(args)?;
+    }
+    if args.has("measure") {
+        grid.measure = true;
+    }
+    if let Some(v) = args.get("clock-ghz") {
+        grid.machines = v
+            .split(',')
+            .map(|c| -> Result<MachineConfig> {
+                let ghz: f64 = c
+                    .trim()
+                    .parse()
+                    .map_err(|_| err!("--clock-ghz wants floats, got {c:?}"))?;
+                Ok(MachineConfig::xeon_phi_7120p_at_ghz(ghz))
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    grid.normalize();
+    let workers = if args.has("serial") {
+        1
+    } else {
+        args.get_usize("workers", 0)?
+    };
+    let results = SweepRunner::new(workers).run(&grid)?;
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, results.to_json().emit())?;
+        eprintln!("wrote {} scenario results to {path}", results.len());
+    }
+    if args.has("csv") {
+        print!("{}", results.table(true).to_csv());
+    } else {
+        print!("{}", results.render(args.has("full")));
+    }
+    Ok(())
+}
+
 fn cmd_probe(args: &Args) -> Result<()> {
     let arch = parse_arch(args)?;
     let cfg = SimConfig::default();
@@ -306,7 +407,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                     .get("lr")
                     .map(|v| v.parse())
                     .transpose()
-                    .map_err(|_| anyhow!("--lr wants a float"))?
+                    .map_err(|_| err!("--lr wants a float"))?
                     .unwrap_or(0.02),
                 eval_cap: 1024,
                 seed,

@@ -91,6 +91,22 @@ impl StrategyA {
             contention: ContentionSource::new(arch, source),
         })
     }
+
+    /// Re-target the model at another machine configuration (the sweep
+    /// machine axis). CPI/clock terms and — under
+    /// [`ParamSource::Simulator`] — the contention probe follow the new
+    /// machine; Paper-source contention stays the published Table IV
+    /// values (measured on the 1.238 GHz testbed, the only machine the
+    /// paper measured).
+    pub fn with_machine(mut self, machine: MachineConfig) -> Self {
+        let sim = crate::simulator::SimConfig {
+            machine: machine.clone(),
+            ..crate::simulator::SimConfig::default()
+        };
+        self.contention = self.contention.with_sim_config(sim);
+        self.machine = machine;
+        self
+    }
 }
 
 impl PerfModel for StrategyA {

@@ -68,6 +68,15 @@ impl StrategyB {
             contention: ContentionSource::new(arch, source),
         })
     }
+
+    /// Re-target the model at another machine configuration (the sweep
+    /// machine axis) — see [`crate::perfmodel::StrategyA::with_machine`].
+    pub fn with_machine(mut self, machine: MachineConfig) -> Self {
+        let sim = SimConfig { machine: machine.clone(), ..SimConfig::default() };
+        self.contention = self.contention.with_sim_config(sim);
+        self.machine = machine;
+        self
+    }
 }
 
 impl PerfModel for StrategyB {

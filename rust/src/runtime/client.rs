@@ -14,6 +14,7 @@ use std::path::Path;
 use crate::error::{Error, Result};
 use crate::nn::init::XorShift64;
 use crate::runtime::artifacts::{ArchArtifacts, ParamShapes};
+use crate::runtime::xla;
 
 /// Compiled-executable cache over one PJRT CPU client.
 pub struct PjrtRuntime {

@@ -13,6 +13,7 @@
 
 pub mod artifacts;
 pub mod client;
+pub mod xla;
 
 pub use artifacts::{ArchArtifacts, ArtifactRegistry};
 pub use client::{PjrtRuntime, TrainHandle};

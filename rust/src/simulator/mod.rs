@@ -48,7 +48,7 @@ pub mod workload;
 pub use cost::CostModel;
 pub use machine::PhiMachine;
 pub use stats::{PhaseTimes, SimResult};
-pub use workload::{simulate_training, Fidelity};
+pub use workload::{simulate_training, simulate_training_with, Fidelity};
 
 use crate::config::MachineConfig;
 use crate::nn::OpSource;

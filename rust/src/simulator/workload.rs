@@ -46,12 +46,23 @@ pub fn simulate_training(
     run: &RunConfig,
     cfg: &SimConfig,
 ) -> Result<SimResult> {
+    let cost = CostModel::new(arch, cfg)?;
+    simulate_training_with(&cost, run, cfg)
+}
+
+/// Simulate with a prebuilt [`CostModel`] — the sweep-cache path, which
+/// resolves the per-layer op counts and cost calibration once per
+/// (architecture, machine) instead of once per scenario.
+pub fn simulate_training_with(
+    cost: &CostModel,
+    run: &RunConfig,
+    cfg: &SimConfig,
+) -> Result<SimResult> {
     run.validate()?;
     let machine = PhiMachine::new(cfg.machine.clone(), run.threads);
-    let cost = CostModel::new(arch, cfg)?;
     match cfg.fidelity {
-        Fidelity::Chunked => Ok(simulate_chunked(&machine, &cost, run, cfg)),
-        Fidelity::PerImage => Ok(simulate_per_image(&machine, &cost, run, cfg)),
+        Fidelity::Chunked => Ok(simulate_chunked(&machine, cost, run, cfg)),
+        Fidelity::PerImage => Ok(simulate_per_image(&machine, cost, run, cfg)),
     }
 }
 

@@ -1,0 +1,210 @@
+//! Memoization shared across the scenarios of one sweep.
+//!
+//! The expensive sub-computations of a scenario depend on far fewer axes
+//! than the scenario itself:
+//!
+//! * model construction (op-count resolution via [`crate::nn::opcount`],
+//!   probe measurement, contention calibration) depends only on
+//!   (architecture, strategy, machine) — not on threads/images/epochs;
+//! * the micsim cost model ([`crate::simulator::cost`]) depends only on
+//!   (architecture, machine);
+//! * a micsim "measurement" depends on the workload but not the strategy.
+//!
+//! The cache keys each by exactly its inputs, so a 10k-scenario sweep
+//! builds each model once and spends the rest of its time in the cheap
+//! closed-form `predict`. All maps are `Mutex`-guarded: lookups are
+//! lock-drop-compute-insert, so a concurrent miss may compute a value
+//! twice, but every computation is deterministic and the first insert
+//! wins — parallel sweeps stay bit-identical to serial ones.
+
+use std::collections::HashMap;
+use std::hash::Hash;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::Result;
+use crate::perfmodel::{PerfModel, StrategyA, StrategyB};
+use crate::simulator::{simulate_training_with, CostModel, SimConfig};
+use crate::sweep::grid::{GridSpec, Scenario, Strategy};
+
+/// A model usable from any sweep worker.
+pub type SharedModel = Arc<dyn PerfModel + Send + Sync>;
+
+/// Hit/miss counters for one sweep run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups() == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups() as f64
+        }
+    }
+}
+
+/// The per-sweep memo: models, cost models, and micsim measurements.
+pub struct SweepCache {
+    models: Mutex<HashMap<(String, Strategy, usize), SharedModel>>,
+    costs: Mutex<HashMap<(String, usize), Arc<CostModel>>>,
+    measured: Mutex<HashMap<(String, usize, usize, usize, usize, usize), f64>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl SweepCache {
+    pub fn new() -> SweepCache {
+        SweepCache {
+            models: Mutex::new(HashMap::new()),
+            costs: Mutex::new(HashMap::new()),
+            measured: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Counted map probe (any table).
+    fn probe<K: Eq + Hash, V: Clone>(&self, map: &Mutex<HashMap<K, V>>, key: &K) -> Option<V> {
+        let got = map.lock().unwrap().get(key).cloned();
+        if got.is_some() {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+        got
+    }
+
+    /// The performance model for a scenario, built at most once per
+    /// (architecture, strategy, machine).
+    pub fn model(&self, grid: &GridSpec, scn: &Scenario) -> Result<SharedModel> {
+        let arch = &grid.archs[scn.arch];
+        let key = (arch.name.clone(), scn.strategy, scn.machine);
+        if let Some(model) = self.probe(&self.models, &key) {
+            return Ok(model);
+        }
+        let machine = grid.machines[scn.machine].clone();
+        let built: SharedModel = match scn.strategy {
+            Strategy::A => Arc::new(StrategyA::new(arch, grid.params)?.with_machine(machine)),
+            Strategy::B => Arc::new(StrategyB::new(arch, grid.params)?.with_machine(machine)),
+        };
+        Ok(self
+            .models
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert(built)
+            .clone())
+    }
+
+    /// The micsim cost model for (architecture, machine), shared by every
+    /// measured workload on that pair.
+    pub fn cost(&self, grid: &GridSpec, scn: &Scenario, sim: &SimConfig) -> Result<Arc<CostModel>> {
+        let arch = &grid.archs[scn.arch];
+        let key = (arch.name.clone(), scn.machine);
+        if let Some(cost) = self.probe(&self.costs, &key) {
+            return Ok(cost);
+        }
+        let built = Arc::new(CostModel::new(arch, sim)?);
+        Ok(self
+            .costs
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert(built)
+            .clone())
+    }
+
+    /// Micsim execution seconds for a scenario's workload (strategy-
+    /// independent: the (a) and (b) rows of one point share it).
+    pub fn measured_s(&self, grid: &GridSpec, scn: &Scenario) -> Result<f64> {
+        let arch = &grid.archs[scn.arch];
+        let key = (
+            arch.name.clone(),
+            scn.machine,
+            scn.threads,
+            scn.train_images,
+            scn.test_images,
+            scn.epochs,
+        );
+        if let Some(v) = self.probe(&self.measured, &key) {
+            return Ok(v);
+        }
+        let sim = SimConfig {
+            machine: grid.machines[scn.machine].clone(),
+            ..SimConfig::default()
+        };
+        let cost = self.cost(grid, scn, &sim)?;
+        let v = simulate_training_with(&cost, &scn.run(), &sim)?.execution_s;
+        Ok(*self.measured.lock().unwrap().entry(key).or_insert(v))
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+
+    fn tiny_grid() -> GridSpec {
+        GridSpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![1, 240],
+            strategies: vec![Strategy::A],
+            ..GridSpec::default()
+        }
+    }
+
+    #[test]
+    fn model_is_built_once_per_arch_strategy_machine() {
+        let grid = tiny_grid();
+        let cache = SweepCache::new();
+        let scenarios = grid.enumerate();
+        assert_eq!(scenarios.len(), 2);
+        let m0 = cache.model(&grid, &scenarios[0]).unwrap();
+        let m1 = cache.model(&grid, &scenarios[1]).unwrap();
+        // Same Arc: the second lookup hit.
+        assert!(Arc::ptr_eq(&m0, &m1));
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 1);
+        assert_eq!(stats.hits, 1);
+    }
+
+    #[test]
+    fn measured_workload_shared_across_strategies() {
+        let grid = GridSpec {
+            strategies: vec![Strategy::A, Strategy::B],
+            measure: true,
+            ..tiny_grid()
+        };
+        let cache = SweepCache::new();
+        let scenarios = grid.enumerate();
+        // Scenarios 0 and 1 differ only in strategy → same workload key.
+        let a = cache.measured_s(&grid, &scenarios[0]).unwrap();
+        let b = cache.measured_s(&grid, &scenarios[1]).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits());
+        // First call: measured miss + cost miss; second call: measured hit.
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 2);
+        assert_eq!(stats.hits, 1);
+    }
+
+    #[test]
+    fn hit_rate_is_well_defined_when_empty() {
+        let cache = SweepCache::new();
+        assert_eq!(cache.stats().hit_rate(), 0.0);
+    }
+}

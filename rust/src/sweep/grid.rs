@@ -1,0 +1,568 @@
+//! Declarative scenario grids: the cross-product the paper's evaluation
+//! ranges over, as data.
+//!
+//! A [`GridSpec`] names one value list per axis — architecture, machine
+//! configuration, (train, test) image counts, epochs, thread count, model
+//! strategy — and [`GridSpec::enumerate`] expands the cross-product into a
+//! deterministic, stably-ordered scenario list. The order is lexicographic
+//! in axis position (arch → machine → images → epochs → threads →
+//! strategy), so a scenario's id is pure stride arithmetic over the axis
+//! indices and results can be addressed in O(1)
+//! ([`crate::sweep::SweepResults::at`]).
+
+use crate::config::{ArchSpec, MachineConfig, RunConfig};
+use crate::error::{Error, Result};
+use crate::perfmodel::ParamSource;
+use crate::util::json::Json;
+
+/// Which analytic model evaluates a scenario (paper Tables V / VI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    /// Strategy (a): minimal measurement, op-count driven.
+    A,
+    /// Strategy (b): measured per-image times.
+    B,
+}
+
+impl Strategy {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Strategy::A => "a",
+            Strategy::B => "b",
+        }
+    }
+
+    /// Parse a `--strategy` value: `a`, `b`, or `both`.
+    pub fn parse_list(text: &str) -> Result<Vec<Strategy>> {
+        match text {
+            "a" => Ok(vec![Strategy::A]),
+            "b" => Ok(vec![Strategy::B]),
+            "both" | "ab" | "a,b" => Ok(vec![Strategy::A, Strategy::B]),
+            other => Err(Error::Config(format!(
+                "strategy must be a|b|both, got {other:?}"
+            ))),
+        }
+    }
+}
+
+impl std::fmt::Display for Strategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One point of the grid, with every axis resolved to a concrete value.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Scenario {
+    /// Stable index into the enumeration order (also the result slot).
+    pub id: usize,
+    /// Index into [`GridSpec::archs`].
+    pub arch: usize,
+    /// Index into [`GridSpec::machines`].
+    pub machine: usize,
+    pub train_images: usize,
+    pub test_images: usize,
+    pub epochs: usize,
+    pub threads: usize,
+    pub strategy: Strategy,
+}
+
+impl Scenario {
+    /// The workload this scenario evaluates.
+    pub fn run(&self) -> RunConfig {
+        RunConfig {
+            train_images: self.train_images,
+            test_images: self.test_images,
+            epochs: self.epochs,
+            threads: self.threads,
+        }
+    }
+}
+
+/// A declarative scenario grid (one value list per axis).
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    /// Architecture axis. Names must be unique (they key the sweep cache).
+    pub archs: Vec<ArchSpec>,
+    /// Machine-configuration axis (defaults to the paper's 7120P).
+    pub machines: Vec<MachineConfig>,
+    /// (train images, test images) axis.
+    pub images: Vec<(usize, usize)>,
+    /// Epoch axis; empty means "the paper default for each architecture"
+    /// (70 for small/medium, 15 for large).
+    pub epochs: Vec<usize>,
+    /// Thread-count axis.
+    pub threads: Vec<usize>,
+    /// Model strategy axis.
+    pub strategies: Vec<Strategy>,
+    /// Parameter provenance for every model in the grid.
+    pub params: ParamSource,
+    /// Also "measure" each (arch, machine, workload) point on micsim and
+    /// report the Δ accuracy next to the predictions.
+    pub measure: bool,
+}
+
+impl Default for GridSpec {
+    fn default() -> Self {
+        GridSpec {
+            archs: ArchSpec::paper_archs(),
+            machines: vec![MachineConfig::xeon_phi_7120p()],
+            images: vec![(60_000, 10_000)],
+            epochs: Vec::new(),
+            threads: RunConfig::MEASURED_THREADS.to_vec(),
+            strategies: vec![Strategy::A, Strategy::B],
+            params: ParamSource::Paper,
+            measure: false,
+        }
+    }
+}
+
+/// Drop duplicate entries, keeping the first occurrence of each.
+fn dedup_preserve<T: PartialEq + Clone>(values: &mut Vec<T>) {
+    let mut seen: Vec<T> = Vec::with_capacity(values.len());
+    values.retain(|v| {
+        if seen.contains(v) {
+            false
+        } else {
+            seen.push(v.clone());
+            true
+        }
+    });
+}
+
+impl GridSpec {
+    /// Number of scenarios the grid expands to.
+    pub fn len(&self) -> usize {
+        self.archs.len()
+            * self.machines.len()
+            * self.images.len()
+            * self.epochs.len().max(1)
+            * self.threads.len()
+            * self.strategies.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Reject grids the runner cannot evaluate.
+    pub fn validate(&self) -> Result<()> {
+        if self.archs.is_empty() {
+            return Err(Error::Config("sweep grid has no architectures".into()));
+        }
+        let mut names: Vec<&str> = self.archs.iter().map(|a| a.name.as_str()).collect();
+        names.sort_unstable();
+        if names.windows(2).any(|w| w[0] == w[1]) {
+            return Err(Error::Config(
+                "sweep grid architecture names must be unique (they key the cache)".into(),
+            ));
+        }
+        if self.machines.is_empty() {
+            return Err(Error::Config("sweep grid has no machine configs".into()));
+        }
+        if self.images.is_empty() {
+            return Err(Error::Config("sweep grid has no image counts".into()));
+        }
+        if self.threads.is_empty() {
+            return Err(Error::Config("sweep grid has no thread counts".into()));
+        }
+        if self.strategies.is_empty() {
+            return Err(Error::Config("sweep grid has no strategies".into()));
+        }
+        if self.threads.iter().any(|&p| p == 0) {
+            return Err(Error::Config("thread counts must be >= 1".into()));
+        }
+        if self.epochs.iter().any(|&e| e == 0) {
+            return Err(Error::Config("epoch counts must be >= 1".into()));
+        }
+        if self.images.iter().any(|&(i, _)| i == 0) {
+            return Err(Error::Config("train image counts must be >= 1".into()));
+        }
+        for m in &self.machines {
+            if !(m.clock_hz.is_finite() && m.clock_hz > 0.0) {
+                return Err(Error::Config(format!(
+                    "machine {:?} has invalid clock {} Hz (must be finite and > 0)",
+                    m.name, m.clock_hz
+                )));
+            }
+            if m.cores == 0 || m.threads_per_core == 0 || m.cpi_ladder.is_empty() {
+                return Err(Error::Config(format!(
+                    "machine {:?} needs cores, threads_per_core, and a CPI ladder",
+                    m.name
+                )));
+            }
+        }
+        for arch in &self.archs {
+            arch.validate()?;
+        }
+        Ok(())
+    }
+
+    /// Dedup every axis in place, preserving first-occurrence order (so a
+    /// user-supplied `--threads 1,15,15,1` grid stays `[1, 15]`).
+    pub fn normalize(&mut self) {
+        let mut seen_names: Vec<String> = Vec::new();
+        self.archs.retain(|a| {
+            if seen_names.contains(&a.name) {
+                false
+            } else {
+                seen_names.push(a.name.clone());
+                true
+            }
+        });
+        dedup_preserve(&mut self.machines);
+        dedup_preserve(&mut self.images);
+        dedup_preserve(&mut self.epochs);
+        dedup_preserve(&mut self.threads);
+        dedup_preserve(&mut self.strategies);
+    }
+
+    /// Epoch values for one architecture (the paper default when the axis
+    /// is empty).
+    fn epochs_for(&self, arch: &ArchSpec) -> Vec<usize> {
+        if self.epochs.is_empty() {
+            vec![RunConfig::paper_default(&arch.name, 1).epochs]
+        } else {
+            self.epochs.clone()
+        }
+    }
+
+    /// Expand the cross-product in deterministic lexicographic order.
+    pub fn enumerate(&self) -> Vec<Scenario> {
+        let mut out = Vec::with_capacity(self.len());
+        let mut id = 0;
+        for (ai, arch) in self.archs.iter().enumerate() {
+            let epochs = self.epochs_for(arch);
+            for mi in 0..self.machines.len() {
+                for &(i, it) in &self.images {
+                    for &ep in &epochs {
+                        for &p in &self.threads {
+                            for &s in &self.strategies {
+                                out.push(Scenario {
+                                    id,
+                                    arch: ai,
+                                    machine: mi,
+                                    train_images: i,
+                                    test_images: it,
+                                    epochs: ep,
+                                    threads: p,
+                                    strategy: s,
+                                });
+                                id += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Build a grid from a JSON spec document. Every key is optional and
+    /// falls back to the paper defaults; unknown keys are rejected (a
+    /// typo must not silently sweep the wrong grid). `threads` and
+    /// `threads_range` are mutually exclusive ways to give the thread
+    /// axis:
+    ///
+    /// ```json
+    /// {
+    ///   "archs": ["small", {"name": "tiny", "layers": [...]}],
+    ///   "threads_range": {"from": 1, "to": 244, "step": 1},
+    ///   "images": [[60000, 10000]],
+    ///   "epochs": [70, 140],
+    ///   "strategies": ["a", "b"],
+    ///   "params": "paper",
+    ///   "clock_ghz": [1.238],
+    ///   "measure": false
+    /// }
+    /// ```
+    pub fn from_json(text: &str) -> Result<GridSpec> {
+        const KNOWN_KEYS: [&str; 9] = [
+            "archs", "threads", "threads_range", "images", "epochs", "strategies",
+            "params", "clock_ghz", "measure",
+        ];
+        let doc = Json::parse(text)?;
+        let Some(pairs) = doc.as_obj() else {
+            return Err(Error::Config("sweep spec must be a JSON object".into()));
+        };
+        for (key, _) in pairs {
+            if !KNOWN_KEYS.contains(&key.as_str()) {
+                return Err(Error::Config(format!(
+                    "unknown sweep spec key {key:?} (known keys: {KNOWN_KEYS:?})"
+                )));
+            }
+        }
+        if doc.get("threads").is_some() && doc.get("threads_range").is_some() {
+            return Err(Error::Config(
+                "sweep spec gives both \"threads\" and \"threads_range\" — pick one".into(),
+            ));
+        }
+        let mut grid = GridSpec::default();
+        if let Some(archs) = doc.get("archs").and_then(Json::as_arr) {
+            grid.archs = archs
+                .iter()
+                .map(|node| match node.as_str() {
+                    Some(name) => ArchSpec::by_name(name),
+                    None => ArchSpec::from_json(&node.emit()),
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(threads) = doc.get("threads").and_then(Json::as_arr) {
+            grid.threads = usize_list(threads, "threads")?;
+        }
+        if let Some(range) = doc.get("threads_range") {
+            let field = |key: &str, default: usize| -> Result<usize> {
+                match range.get(key) {
+                    None => Ok(default),
+                    Some(v) => v.as_usize().ok_or_else(|| {
+                        Error::Config(format!("threads_range.{key} must be an integer"))
+                    }),
+                }
+            };
+            let (from, to, step) = (field("from", 1)?, field("to", 244)?, field("step", 1)?);
+            grid.threads = expand_range(from, to, step)?;
+        }
+        if let Some(images) = doc.get("images").and_then(Json::as_arr) {
+            grid.images = images
+                .iter()
+                .map(|pair| {
+                    let pair = pair.as_arr().unwrap_or(&[]);
+                    match (
+                        pair.first().and_then(Json::as_usize),
+                        pair.get(1).and_then(Json::as_usize),
+                    ) {
+                        (Some(i), Some(it)) if pair.len() == 2 => Ok((i, it)),
+                        _ => Err(Error::Config(
+                            "images entries must be [train, test] integer pairs".into(),
+                        )),
+                    }
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(epochs) = doc.get("epochs").and_then(Json::as_arr) {
+            grid.epochs = usize_list(epochs, "epochs")?;
+        }
+        if let Some(strategies) = doc.get("strategies").and_then(Json::as_arr) {
+            let mut out = Vec::new();
+            for s in strategies {
+                match s.as_str() {
+                    Some("a") => out.push(Strategy::A),
+                    Some("b") => out.push(Strategy::B),
+                    other => {
+                        return Err(Error::Config(format!(
+                            "strategies entries must be \"a\" or \"b\", got {other:?}"
+                        )))
+                    }
+                }
+            }
+            grid.strategies = out;
+        }
+        if let Some(params) = doc.get("params").and_then(Json::as_str) {
+            grid.params = match params {
+                "paper" => ParamSource::Paper,
+                "sim" | "simulator" => ParamSource::Simulator,
+                other => {
+                    return Err(Error::Config(format!(
+                        "params must be paper|sim, got {other:?}"
+                    )))
+                }
+            };
+        }
+        if let Some(clocks) = doc.get("clock_ghz").and_then(Json::as_arr) {
+            grid.machines = clocks
+                .iter()
+                .map(|c| {
+                    let ghz = c.as_f64().ok_or_else(|| {
+                        Error::Config("clock_ghz entries must be numbers".into())
+                    })?;
+                    Ok(MachineConfig::xeon_phi_7120p_at_ghz(ghz))
+                })
+                .collect::<Result<Vec<_>>>()?;
+        }
+        if let Some(measure) = doc.get("measure").and_then(Json::as_bool) {
+            grid.measure = measure;
+        }
+        Ok(grid)
+    }
+}
+
+fn usize_list(values: &[Json], key: &str) -> Result<Vec<usize>> {
+    values
+        .iter()
+        .map(|v| {
+            v.as_usize()
+                .ok_or_else(|| Error::Config(format!("{key} entries must be integers")))
+        })
+        .collect()
+}
+
+fn expand_range(from: usize, to: usize, step: usize) -> Result<Vec<usize>> {
+    if step == 0 {
+        return Err(Error::Config("range step must be >= 1".into()));
+    }
+    if to < from {
+        return Err(Error::Config(format!(
+            "range end {to} is below range start {from}"
+        )));
+    }
+    Ok((from..=to).step_by(step).collect())
+}
+
+/// Parse one integer-axis value: comma-separated items, each a single
+/// value `n` or an inclusive range `a..b` / `a..b..step`.
+pub fn parse_axis(text: &str) -> Result<Vec<usize>> {
+    let parse_num = |s: &str| -> Result<usize> {
+        s.trim()
+            .parse()
+            .map_err(|_| Error::Config(format!("axis wants integers, got {s:?} in {text:?}")))
+    };
+    let mut out = Vec::new();
+    for item in text.split(',') {
+        let item = item.trim();
+        if item.is_empty() {
+            return Err(Error::Config(format!("empty item in axis {text:?}")));
+        }
+        match item.split_once("..") {
+            None => out.push(parse_num(item)?),
+            Some((a, rest)) => {
+                let (b, step) = match rest.split_once("..") {
+                    None => (rest, 1),
+                    Some((b, s)) => (b, parse_num(s)?),
+                };
+                out.extend(expand_range(parse_num(a)?, parse_num(b)?, step)?);
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_grid_covers_paper_evaluation() {
+        let grid = GridSpec::default();
+        // 3 archs × 1 machine × 1 image pair × default epochs × 7 thread
+        // counts × 2 strategies.
+        assert_eq!(grid.len(), 42);
+        assert!(grid.validate().is_ok());
+        let scenarios = grid.enumerate();
+        assert_eq!(scenarios.len(), 42);
+        // Large CNN gets its own paper epoch default.
+        let large = scenarios.iter().find(|s| s.arch == 2).unwrap();
+        assert_eq!(large.epochs, 15);
+        assert_eq!(scenarios[0].epochs, 70);
+    }
+
+    #[test]
+    fn enumeration_ids_are_sequential_and_stable() {
+        let grid = GridSpec::default();
+        let a = grid.enumerate();
+        let b = grid.enumerate();
+        assert_eq!(a, b);
+        for (i, s) in a.iter().enumerate() {
+            assert_eq!(s.id, i);
+        }
+    }
+
+    #[test]
+    fn normalize_dedups_preserving_first_occurrence() {
+        let mut grid = GridSpec {
+            threads: vec![240, 1, 240, 61, 1],
+            epochs: vec![70, 70, 15],
+            strategies: vec![Strategy::A, Strategy::A, Strategy::B],
+            ..GridSpec::default()
+        };
+        grid.normalize();
+        assert_eq!(grid.threads, vec![240, 1, 61]);
+        assert_eq!(grid.epochs, vec![70, 15]);
+        assert_eq!(grid.strategies, vec![Strategy::A, Strategy::B]);
+    }
+
+    #[test]
+    fn validate_rejects_bad_grids() {
+        let empty = GridSpec { threads: Vec::new(), ..GridSpec::default() };
+        assert!(empty.validate().is_err());
+        let zero = GridSpec { threads: vec![0], ..GridSpec::default() };
+        assert!(zero.validate().is_err());
+        let dup = GridSpec {
+            archs: vec![ArchSpec::small(), ArchSpec::small()],
+            ..GridSpec::default()
+        };
+        assert!(dup.validate().is_err());
+        let bad_clock = GridSpec {
+            machines: vec![MachineConfig::xeon_phi_7120p_at_ghz(0.0)],
+            ..GridSpec::default()
+        };
+        assert!(bad_clock.validate().is_err());
+        let nan_clock = GridSpec {
+            machines: vec![MachineConfig::xeon_phi_7120p_at_ghz(f64::NAN)],
+            ..GridSpec::default()
+        };
+        assert!(nan_clock.validate().is_err());
+    }
+
+    #[test]
+    fn axis_parser_accepts_lists_and_ranges() {
+        assert_eq!(parse_axis("1,15,30").unwrap(), vec![1, 15, 30]);
+        assert_eq!(parse_axis("1..5").unwrap(), vec![1, 2, 3, 4, 5]);
+        assert_eq!(parse_axis("10..30..10").unwrap(), vec![10, 20, 30]);
+        assert_eq!(parse_axis("1, 8..10").unwrap(), vec![1, 8, 9, 10]);
+        assert!(parse_axis("").is_err());
+        assert!(parse_axis("5..1").is_err());
+        assert!(parse_axis("1..10..0").is_err());
+        assert!(parse_axis("x").is_err());
+    }
+
+    #[test]
+    fn strategy_parse_list() {
+        assert_eq!(Strategy::parse_list("a").unwrap(), vec![Strategy::A]);
+        assert_eq!(
+            Strategy::parse_list("both").unwrap(),
+            vec![Strategy::A, Strategy::B]
+        );
+        assert!(Strategy::parse_list("c").is_err());
+    }
+
+    #[test]
+    fn json_spec_roundtrip() {
+        let grid = GridSpec::from_json(
+            r#"{
+                "archs": ["small", "medium"],
+                "threads_range": {"from": 10, "to": 30, "step": 10},
+                "images": [[1000, 100]],
+                "epochs": [2],
+                "strategies": ["a"],
+                "params": "sim",
+                "measure": true
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(grid.archs.len(), 2);
+        assert_eq!(grid.threads, vec![10, 20, 30]);
+        assert_eq!(grid.images, vec![(1000, 100)]);
+        assert_eq!(grid.epochs, vec![2]);
+        assert_eq!(grid.strategies, vec![Strategy::A]);
+        assert_eq!(grid.params, ParamSource::Simulator);
+        assert!(grid.measure);
+        // 2 archs × 3 thread counts, all other axes singleton.
+        assert_eq!(grid.len(), 6);
+    }
+
+    #[test]
+    fn json_spec_rejects_garbage() {
+        assert!(GridSpec::from_json("{").is_err());
+        assert!(GridSpec::from_json(r#"{"strategies": ["z"]}"#).is_err());
+        assert!(GridSpec::from_json(r#"{"images": [[1]]}"#).is_err());
+        assert!(GridSpec::from_json(r#"{"threads": ["x"]}"#).is_err());
+        // Non-object top level, typo'd keys, and ambiguous thread axes
+        // must error instead of silently sweeping the default grid.
+        assert!(GridSpec::from_json("[1, 2]").is_err());
+        assert!(GridSpec::from_json(r#"{"thread": [1, 2]}"#).is_err());
+        assert!(GridSpec::from_json(
+            r#"{"threads": [1], "threads_range": {"from": 1, "to": 2}}"#
+        )
+        .is_err());
+    }
+}

@@ -1,0 +1,31 @@
+//! The scenario-sweep engine: evaluate the performance models over a
+//! declarative grid of scenarios, concurrently, with shared-computation
+//! memoization.
+//!
+//! The paper's whole evaluation is a grid — three CNN architectures ×
+//! thread counts (1..244 and beyond) × workload sizes × two model
+//! strategies — yet the rest of the crate evaluates one point per call.
+//! This module makes "evaluate 10k scenarios fast" the default shape:
+//!
+//! * [`grid`] — [`GridSpec`], the declarative cross-product, with a
+//!   deterministic enumeration order and a JSON spec format;
+//! * [`cache`] — [`SweepCache`], memoizing model construction, micsim
+//!   cost models, and measurements by exactly their input axes;
+//! * [`runner`] — [`SweepRunner`], the scoped-thread worker pool whose
+//!   parallel results are bit-identical to a serial run;
+//! * [`summary`] — [`SweepResults`], O(1) stride addressing, JSON dump,
+//!   and paper-style tables.
+//!
+//! The `repro sweep` subcommand drives it from the CLI, and the
+//! `experiments` table/figure entries for Figs. 5–7 and Tables X/XI are
+//! thin grid definitions executed here.
+
+pub mod cache;
+pub mod grid;
+pub mod runner;
+pub mod summary;
+
+pub use cache::{CacheStats, SweepCache};
+pub use grid::{parse_axis, GridSpec, Scenario, Strategy};
+pub use runner::SweepRunner;
+pub use summary::{ScenarioResult, SweepResults};

@@ -1,0 +1,198 @@
+//! The sweep worker pool: evaluate a scenario grid concurrently.
+//!
+//! Workers pull scenario indices from a shared atomic cursor (work
+//! stealing over a pre-enumerated list) and write results into the slot
+//! matching the scenario id. Because every evaluation is a pure function
+//! of the scenario (the cache only memoizes deterministic values),
+//! results are **bit-identical** regardless of worker count or
+//! scheduling — asserted by `tests/sweep.rs`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::perfmodel::delta_pct;
+use crate::sweep::cache::SweepCache;
+use crate::sweep::grid::{GridSpec, Scenario};
+use crate::sweep::summary::{ScenarioResult, SweepResults};
+
+/// Concurrency policy for one sweep.
+#[derive(Debug, Clone, Copy)]
+pub struct SweepRunner {
+    /// Worker thread count (≥ 1; see [`SweepRunner::new`]).
+    pub workers: usize,
+}
+
+impl SweepRunner {
+    /// `workers == 0` picks one worker per available CPU.
+    pub fn new(workers: usize) -> SweepRunner {
+        let workers = if workers == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(4)
+        } else {
+            workers
+        };
+        SweepRunner { workers }
+    }
+
+    /// Single-threaded reference runner.
+    pub fn serial() -> SweepRunner {
+        SweepRunner { workers: 1 }
+    }
+
+    /// Evaluate every scenario of `grid`.
+    pub fn run(&self, grid: &GridSpec) -> Result<SweepResults> {
+        grid.validate()?;
+        let scenarios = grid.enumerate();
+        let cache = SweepCache::new();
+        let started = Instant::now();
+        let results = if self.workers <= 1 || scenarios.len() < 2 {
+            let mut out = Vec::with_capacity(scenarios.len());
+            for scn in &scenarios {
+                out.push(evaluate(grid, &cache, scn)?);
+            }
+            out
+        } else {
+            run_pool(grid, &cache, &scenarios, self.workers)?
+        };
+        Ok(SweepResults {
+            grid: grid.clone(),
+            results,
+            cache: cache.stats(),
+            wall_s: started.elapsed().as_secs_f64(),
+            workers: self.workers,
+        })
+    }
+}
+
+/// Evaluate one scenario against the shared cache.
+fn evaluate(grid: &GridSpec, cache: &SweepCache, scn: &Scenario) -> Result<ScenarioResult> {
+    let model = cache.model(grid, scn)?;
+    let prediction = model.predict(&scn.run())?;
+    let (measured_s, delta) = if grid.measure {
+        let m = cache.measured_s(grid, scn)?;
+        (Some(m), Some(delta_pct(m, prediction.total_s)))
+    } else {
+        (None, None)
+    };
+    Ok(ScenarioResult {
+        scenario: scn.clone(),
+        prediction,
+        measured_s,
+        delta_pct: delta,
+    })
+}
+
+/// Fan the scenario list over `workers` scoped threads.
+fn run_pool(
+    grid: &GridSpec,
+    cache: &SweepCache,
+    scenarios: &[Scenario],
+    workers: usize,
+) -> Result<Vec<ScenarioResult>> {
+    let cursor = AtomicUsize::new(0);
+    let slots: Mutex<Vec<Option<ScenarioResult>>> =
+        Mutex::new(scenarios.iter().map(|_| None).collect());
+    let failure: Mutex<Option<Error>> = Mutex::new(None);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers.min(scenarios.len()) {
+            scope.spawn(|| loop {
+                let idx = cursor.fetch_add(1, Ordering::Relaxed);
+                if idx >= scenarios.len() {
+                    break;
+                }
+                if failure.lock().unwrap().is_some() {
+                    break;
+                }
+                match evaluate(grid, cache, &scenarios[idx]) {
+                    Ok(result) => {
+                        slots.lock().unwrap()[idx] = Some(result);
+                    }
+                    Err(e) => {
+                        failure.lock().unwrap().get_or_insert(e);
+                        break;
+                    }
+                }
+            });
+        }
+    });
+
+    if let Some(e) = failure.into_inner().unwrap() {
+        return Err(e);
+    }
+    Ok(slots
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|slot| slot.expect("worker pool completed every scenario"))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+    use crate::sweep::grid::Strategy;
+
+    #[test]
+    fn serial_run_produces_one_result_per_scenario() {
+        let grid = GridSpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![1, 15, 240],
+            strategies: vec![Strategy::A, Strategy::B],
+            ..GridSpec::default()
+        };
+        let res = SweepRunner::serial().run(&grid).unwrap();
+        assert_eq!(res.len(), 6);
+        for (i, r) in res.results.iter().enumerate() {
+            assert_eq!(r.scenario.id, i);
+            assert!(r.prediction.total_s.is_finite() && r.prediction.total_s > 0.0);
+            assert!(r.measured_s.is_none());
+        }
+        // 6 model lookups over 2 distinct (arch, strategy, machine) keys.
+        assert_eq!(res.cache.misses, 2);
+        assert_eq!(res.cache.hits, 4);
+    }
+
+    #[test]
+    fn measured_grid_reports_delta() {
+        let grid = GridSpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![61],
+            strategies: vec![Strategy::B],
+            measure: true,
+            ..GridSpec::default()
+        };
+        let res = SweepRunner::serial().run(&grid).unwrap();
+        let r = &res.results[0];
+        let m = r.measured_s.unwrap();
+        assert!(m > 0.0);
+        let d = r.delta_pct.unwrap();
+        assert!((0.0..100.0).contains(&d), "Δ = {d}");
+    }
+
+    #[test]
+    fn invalid_grid_is_rejected_before_spawning() {
+        let grid = GridSpec { threads: vec![], ..GridSpec::default() };
+        assert!(SweepRunner::new(4).run(&grid).is_err());
+    }
+
+    #[test]
+    fn worker_error_surfaces_not_panics() {
+        // A custom arch under ParamSource::Paper has no Table VII/VIII
+        // entry → model construction fails; the pool must report it.
+        let mut weird = ArchSpec::small();
+        weird.name = "not-in-the-paper".into();
+        let grid = GridSpec {
+            archs: vec![weird],
+            threads: vec![1, 2, 3, 4],
+            strategies: vec![Strategy::A],
+            ..GridSpec::default()
+        };
+        let err = SweepRunner::new(2).run(&grid);
+        assert!(err.is_err());
+    }
+}

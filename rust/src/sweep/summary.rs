@@ -1,0 +1,335 @@
+//! Sweep results: O(1) addressing, JSON emission, paper-style tables.
+
+use crate::perfmodel::Prediction;
+use crate::report::Table;
+use crate::sweep::cache::CacheStats;
+use crate::sweep::grid::{GridSpec, Scenario, Strategy};
+use crate::util::json::Json;
+
+/// One evaluated scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    pub scenario: Scenario,
+    pub prediction: Prediction,
+    /// Micsim execution seconds (grids with `measure = true` only).
+    pub measured_s: Option<f64>,
+    /// Prediction accuracy Δ vs the measurement, percent.
+    pub delta_pct: Option<f64>,
+}
+
+/// Everything one sweep produced, in enumeration order.
+#[derive(Debug)]
+pub struct SweepResults {
+    pub grid: GridSpec,
+    pub results: Vec<ScenarioResult>,
+    pub cache: CacheStats,
+    pub wall_s: f64,
+    pub workers: usize,
+}
+
+impl SweepResults {
+    pub fn len(&self) -> usize {
+        self.results.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.results.is_empty()
+    }
+
+    /// O(1) lookup by axis indices (the enumeration-order strides).
+    ///
+    /// Panics if an index is out of range for its axis — the experiment
+    /// definitions address only points they put into the grid.
+    pub fn at(
+        &self,
+        arch: usize,
+        machine: usize,
+        image: usize,
+        epoch: usize,
+        thread: usize,
+        strategy: usize,
+    ) -> &ScenarioResult {
+        let g = &self.grid;
+        let (nm, ni, ne, nt, ns) = (
+            g.machines.len(),
+            g.images.len(),
+            g.epochs.len().max(1),
+            g.threads.len(),
+            g.strategies.len(),
+        );
+        assert!(
+            machine < nm && image < ni && epoch < ne && thread < nt && strategy < ns,
+            "axis index out of range"
+        );
+        let id = ((((arch * nm + machine) * ni + image) * ne + epoch) * nt + thread) * ns
+            + strategy;
+        let result = &self.results[id];
+        debug_assert_eq!(result.scenario.id, id);
+        result
+    }
+
+    /// Linear-scan convenience lookup by value (first match).
+    pub fn find(
+        &self,
+        arch_name: &str,
+        threads: usize,
+        strategy: Strategy,
+    ) -> Option<&ScenarioResult> {
+        self.results.iter().find(|r| {
+            self.grid.archs[r.scenario.arch].name == arch_name
+                && r.scenario.threads == threads
+                && r.scenario.strategy == strategy
+        })
+    }
+
+    /// Full machine-readable dump (the `repro sweep --json` payload).
+    pub fn to_json(&self) -> Json {
+        let g = &self.grid;
+        let rows: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let s = &r.scenario;
+                let mut pairs = vec![
+                    ("arch", Json::str(g.archs[s.arch].name.clone())),
+                    ("machine", Json::str(g.machines[s.machine].name.clone())),
+                    ("threads", Json::num(s.threads as f64)),
+                    ("train_images", Json::num(s.train_images as f64)),
+                    ("test_images", Json::num(s.test_images as f64)),
+                    ("epochs", Json::num(s.epochs as f64)),
+                    ("strategy", Json::str(s.strategy.as_str())),
+                    ("prep_s", Json::num(r.prediction.prep_s)),
+                    ("train_s", Json::num(r.prediction.train_s)),
+                    ("test_s", Json::num(r.prediction.test_s)),
+                    ("mem_s", Json::num(r.prediction.mem_s)),
+                    ("total_s", Json::num(r.prediction.total_s)),
+                    ("total_min", Json::num(r.prediction.total_s / 60.0)),
+                ];
+                if let Some(m) = r.measured_s {
+                    pairs.push(("measured_s", Json::num(m)));
+                }
+                if let Some(d) = r.delta_pct {
+                    pairs.push(("delta_pct", Json::num(d)));
+                }
+                Json::obj(pairs)
+            })
+            .collect();
+        Json::obj(vec![
+            (
+                "grid",
+                Json::obj(vec![
+                    (
+                        "archs",
+                        Json::Arr(
+                            g.archs.iter().map(|a| Json::str(a.name.clone())).collect(),
+                        ),
+                    ),
+                    (
+                        "machines",
+                        Json::Arr(
+                            g.machines.iter().map(|m| Json::str(m.name.clone())).collect(),
+                        ),
+                    ),
+                    ("threads", Json::arr_usize(&g.threads)),
+                    (
+                        "images",
+                        Json::Arr(
+                            g.images
+                                .iter()
+                                .map(|&(i, it)| Json::arr_usize(&[i, it]))
+                                .collect(),
+                        ),
+                    ),
+                    ("epochs", Json::arr_usize(&g.epochs)),
+                    (
+                        "strategies",
+                        Json::Arr(
+                            g.strategies
+                                .iter()
+                                .map(|s| Json::str(s.as_str()))
+                                .collect(),
+                        ),
+                    ),
+                    ("measure", Json::Bool(g.measure)),
+                ]),
+            ),
+            ("scenarios", Json::num(self.len() as f64)),
+            ("workers", Json::num(self.workers as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", Json::num(self.cache.hits as f64)),
+                    ("misses", Json::num(self.cache.misses as f64)),
+                ]),
+            ),
+            ("results", Json::Arr(rows)),
+        ])
+    }
+
+    /// Paper-style table: every scenario when `full`, otherwise one
+    /// summary row per (architecture, strategy).
+    pub fn table(&self, full: bool) -> Table {
+        if full {
+            self.table_full()
+        } else {
+            self.table_summary()
+        }
+    }
+
+    fn table_full(&self) -> Table {
+        let g = &self.grid;
+        let mut t = Table::new(
+            format!("sweep — {} scenarios", self.len()),
+            &[
+                "arch", "machine", "p", "i", "it", "ep", "strat", "prep s", "train+val s",
+                "test s", "T_mem s", "total s", "min", "measured s", "Δ %",
+            ],
+        );
+        for r in &self.results {
+            let s = &r.scenario;
+            t.row(vec![
+                g.archs[s.arch].name.clone(),
+                g.machines[s.machine].name.clone(),
+                s.threads.to_string(),
+                s.train_images.to_string(),
+                s.test_images.to_string(),
+                s.epochs.to_string(),
+                s.strategy.as_str().into(),
+                format!("{:.2}", r.prediction.prep_s),
+                format!("{:.1}", r.prediction.train_s),
+                format!("{:.1}", r.prediction.test_s),
+                format!("{:.1}", r.prediction.mem_s),
+                format!("{:.1}", r.prediction.total_s),
+                format!("{:.1}", r.prediction.total_s / 60.0),
+                r.measured_s.map(|m| format!("{m:.1}")).unwrap_or_else(|| "-".into()),
+                r.delta_pct.map(|d| format!("{d:.1}")).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        t
+    }
+
+    fn table_summary(&self) -> Table {
+        let g = &self.grid;
+        let mut t = Table::new(
+            format!("sweep summary — {} scenarios", self.len()),
+            &[
+                "arch", "strat", "points", "best total [min]", "at p", "worst total [min]",
+                "at p", "mean Δ %",
+            ],
+        );
+        for (ai, arch) in g.archs.iter().enumerate() {
+            for &strat in &g.strategies {
+                let mut best: Option<&ScenarioResult> = None;
+                let mut worst: Option<&ScenarioResult> = None;
+                let mut count = 0usize;
+                let mut delta_sum = 0.0f64;
+                let mut delta_n = 0usize;
+                for r in &self.results {
+                    if r.scenario.arch != ai || r.scenario.strategy != strat {
+                        continue;
+                    }
+                    count += 1;
+                    best = match best {
+                        Some(b) if b.prediction.total_s <= r.prediction.total_s => Some(b),
+                        _ => Some(r),
+                    };
+                    worst = match worst {
+                        Some(w) if w.prediction.total_s >= r.prediction.total_s => Some(w),
+                        _ => Some(r),
+                    };
+                    if let Some(d) = r.delta_pct {
+                        delta_sum += d;
+                        delta_n += 1;
+                    }
+                }
+                let (Some(best), Some(worst)) = (best, worst) else { continue };
+                t.row(vec![
+                    arch.name.clone(),
+                    strat.as_str().into(),
+                    count.to_string(),
+                    format!("{:.1}", best.prediction.total_s / 60.0),
+                    best.scenario.threads.to_string(),
+                    format!("{:.1}", worst.prediction.total_s / 60.0),
+                    worst.scenario.threads.to_string(),
+                    if delta_n > 0 {
+                        format!("{:.1}", delta_sum / delta_n as f64)
+                    } else {
+                        "-".into()
+                    },
+                ]);
+            }
+        }
+        t
+    }
+
+    /// Render a table plus the run footer (wall time + cache telemetry).
+    pub fn render(&self, full: bool) -> String {
+        let mut out = self.table(full).render();
+        out.push_str(&format!(
+            "{} scenarios in {:.3}s ({} workers) | cache: {} hits / {} misses \
+             ({:.0}% hit rate)\n",
+            self.len(),
+            self.wall_s,
+            self.workers,
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.hit_rate() * 100.0,
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+    use crate::sweep::runner::SweepRunner;
+
+    fn run_small() -> SweepResults {
+        let grid = GridSpec {
+            archs: vec![ArchSpec::small(), ArchSpec::medium()],
+            threads: vec![15, 240],
+            strategies: vec![Strategy::A, Strategy::B],
+            ..GridSpec::default()
+        };
+        SweepRunner::serial().run(&grid).unwrap()
+    }
+
+    #[test]
+    fn stride_lookup_matches_linear_find() {
+        let res = run_small();
+        for (ai, arch) in res.grid.archs.iter().enumerate() {
+            for (ti, &p) in res.grid.threads.iter().enumerate() {
+                for (si, &s) in res.grid.strategies.iter().enumerate() {
+                    let by_stride = res.at(ai, 0, 0, 0, ti, si);
+                    let by_find = res.find(&arch.name, p, s).unwrap();
+                    assert_eq!(by_stride.scenario.id, by_find.scenario.id);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn json_dump_roundtrips_and_has_all_rows() {
+        let res = run_small();
+        let doc = Json::parse(&res.to_json().emit()).unwrap();
+        assert_eq!(doc.get("scenarios").unwrap().as_usize(), Some(8));
+        assert_eq!(doc.get("results").unwrap().as_arr().unwrap().len(), 8);
+        let first = &doc.get("results").unwrap().as_arr().unwrap()[0];
+        assert_eq!(first.get("arch").unwrap().as_str(), Some("small"));
+        assert!(first.get("total_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn tables_render_both_shapes() {
+        let res = run_small();
+        let full = res.render(true);
+        assert!(full.contains("total s"));
+        // One line per scenario + title/header/rule + footer.
+        assert_eq!(full.lines().count(), 8 + 4);
+        let summary = res.render(false);
+        assert!(summary.contains("best total"));
+        assert!(summary.contains("hit rate"));
+    }
+}

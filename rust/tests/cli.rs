@@ -113,6 +113,59 @@ fn train_engine_backend_tiny_run() {
 }
 
 #[test]
+fn sweep_small_grid_renders_summary() {
+    let out = repro(&["sweep", "--arch", "small", "--threads", "1,240",
+                      "--strategy", "both", "--serial"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let s = stdout(&out);
+    assert!(s.contains("sweep summary"), "{s}");
+    assert!(s.contains("hit rate"), "{s}");
+}
+
+#[test]
+fn sweep_full_table_has_one_row_per_scenario() {
+    let out = repro(&["sweep", "--arch", "small,medium", "--threads", "60,240",
+                      "--strategy", "a", "--serial", "--full"]);
+    assert!(out.status.success());
+    let s = stdout(&out);
+    // 2 archs × 2 thread counts × 1 strategy.
+    assert_eq!(s.lines().filter(|l| l.contains("60000")).count(), 4, "{s}");
+}
+
+#[test]
+fn sweep_range_axis_and_json_output() {
+    let dir = micdl::util::tmp::TempDir::new("cli-sweep").unwrap();
+    let json_path = dir.path().join("sweep.json");
+    let out = repro(&["sweep", "--arch", "small", "--threads", "1..16",
+                      "--strategy", "both", "--json",
+                      json_path.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let doc = micdl::util::json::Json::parse(
+        &std::fs::read_to_string(&json_path).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(doc.get("scenarios").unwrap().as_usize(), Some(32));
+    assert_eq!(doc.get("results").unwrap().as_arr().unwrap().len(), 32);
+}
+
+#[test]
+fn sweep_csv_mode() {
+    let out = repro(&["sweep", "--arch", "small", "--threads", "15",
+                      "--strategy", "a", "--serial", "--csv"]);
+    assert!(out.status.success());
+    let s = stdout(&out);
+    assert!(s.lines().next().unwrap().contains(','));
+    assert_eq!(s.lines().count(), 2); // header + one scenario
+}
+
+#[test]
+fn sweep_rejects_bad_axis() {
+    let out = repro(&["sweep", "--threads", "240..1"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("range"));
+}
+
+#[test]
 fn selfcheck_passes() {
     let out = repro(&["selfcheck"]);
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));

@@ -1,0 +1,189 @@
+//! Sweep-engine integration tests: cross-product enumeration, cache
+//! behaviour, parallel/serial equivalence, and the ≥1000-scenario grid
+//! the CLI acceptance path exercises.
+
+use micdl::config::ArchSpec;
+use micdl::sweep::{parse_axis, GridSpec, Strategy, SweepRunner};
+use micdl::util::json::Json;
+
+fn mid_grid() -> GridSpec {
+    GridSpec {
+        archs: vec![ArchSpec::small(), ArchSpec::medium()],
+        threads: vec![1, 15, 61, 240],
+        strategies: vec![Strategy::A, Strategy::B],
+        ..GridSpec::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Grid enumeration
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cross_product_count_matches_axes() {
+    let grid = mid_grid();
+    assert_eq!(grid.len(), 2 * 4 * 2);
+    assert_eq!(grid.enumerate().len(), grid.len());
+}
+
+#[test]
+fn enumeration_is_deterministic_and_ordered() {
+    let grid = mid_grid();
+    let a = grid.enumerate();
+    let b = grid.enumerate();
+    assert_eq!(a, b);
+    for (i, s) in a.iter().enumerate() {
+        assert_eq!(s.id, i, "ids must be the enumeration order");
+    }
+    // Lexicographic axis order: strategy is the innermost axis.
+    assert_eq!(a[0].strategy, Strategy::A);
+    assert_eq!(a[1].strategy, Strategy::B);
+    assert_eq!(a[0].threads, a[1].threads);
+    // Arch is the outermost axis.
+    assert!(a.iter().take(8).all(|s| s.arch == 0));
+    assert!(a.iter().skip(8).all(|s| s.arch == 1));
+}
+
+#[test]
+fn normalize_dedups_every_axis() {
+    let mut grid = GridSpec {
+        archs: vec![ArchSpec::small(), ArchSpec::small(), ArchSpec::large()],
+        threads: vec![240, 1, 240, 1, 61],
+        images: vec![(100, 10), (100, 10)],
+        epochs: vec![2, 2, 4],
+        strategies: vec![Strategy::B, Strategy::B, Strategy::A],
+        ..GridSpec::default()
+    };
+    grid.normalize();
+    assert_eq!(grid.archs.len(), 2);
+    assert_eq!(grid.threads, vec![240, 1, 61]);
+    assert_eq!(grid.images, vec![(100, 10)]);
+    assert_eq!(grid.epochs, vec![2, 4]);
+    assert_eq!(grid.strategies, vec![Strategy::B, Strategy::A]);
+    assert!(grid.validate().is_ok());
+}
+
+#[test]
+fn axis_parser_handles_ranges_and_lists() {
+    assert_eq!(parse_axis("1..244").unwrap().len(), 244);
+    assert_eq!(parse_axis("1..244..4").unwrap().len(), 61);
+    assert_eq!(parse_axis("1,15,30,60").unwrap(), vec![1, 15, 30, 60]);
+}
+
+// ---------------------------------------------------------------------------
+// Cache behaviour
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cache_builds_each_model_once_per_key() {
+    // 2 archs × 4 threads × 2 strategies = 16 scenarios, but only
+    // 2 × 2 = 4 distinct (arch, strategy, machine) model keys.
+    let res = SweepRunner::serial().run(&mid_grid()).unwrap();
+    assert_eq!(res.cache.misses, 4);
+    assert_eq!(res.cache.hits, 16 - 4);
+    assert!(res.cache.hit_rate() > 0.7);
+}
+
+#[test]
+fn measured_grid_shares_workload_measurements_across_strategies() {
+    let grid = GridSpec { measure: true, ..mid_grid() };
+    let res = SweepRunner::serial().run(&grid).unwrap();
+    // Model keys: 4 misses. Cost models: one per (arch, machine) = 2.
+    // Measurements: one per (arch, machine, workload) = 2 archs × 4
+    // threads = 8 misses, hit by the second strategy of each point.
+    assert_eq!(res.cache.misses, 4 + 2 + 8);
+    // Every (a, b) pair shares the measured value bit-for-bit.
+    for pair in res.results.chunks(2) {
+        assert_eq!(
+            pair[0].measured_s.unwrap().to_bits(),
+            pair[1].measured_s.unwrap().to_bits()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parallel vs serial equivalence
+// ---------------------------------------------------------------------------
+
+#[test]
+fn parallel_results_bit_identical_to_serial() {
+    let grid = GridSpec { measure: true, ..mid_grid() };
+    let serial = SweepRunner::serial().run(&grid).unwrap();
+    for workers in [2, 4, 16] {
+        let parallel = SweepRunner::new(workers).run(&grid).unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        for (s, p) in serial.results.iter().zip(parallel.results.iter()) {
+            assert_eq!(s.scenario, p.scenario);
+            let sp = s.prediction;
+            let pp = p.prediction;
+            assert_eq!(sp.prep_s.to_bits(), pp.prep_s.to_bits());
+            assert_eq!(sp.train_s.to_bits(), pp.train_s.to_bits());
+            assert_eq!(sp.test_s.to_bits(), pp.test_s.to_bits());
+            assert_eq!(sp.mem_s.to_bits(), pp.mem_s.to_bits());
+            assert_eq!(sp.total_s.to_bits(), pp.total_s.to_bits());
+            assert_eq!(
+                s.measured_s.unwrap().to_bits(),
+                p.measured_s.unwrap().to_bits()
+            );
+            assert_eq!(
+                s.delta_pct.unwrap().to_bits(),
+                p.delta_pct.unwrap().to_bits()
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scale: the ≥1000-scenario acceptance grid
+// ---------------------------------------------------------------------------
+
+#[test]
+fn thousand_scenario_grid_evaluates_in_one_run() {
+    let grid = GridSpec {
+        threads: parse_axis("1..180").unwrap(),
+        ..GridSpec::default()
+    };
+    // 3 archs × 180 thread counts × 2 strategies.
+    assert_eq!(grid.len(), 1080);
+    let res = SweepRunner::new(0).run(&grid).unwrap();
+    assert_eq!(res.len(), 1080);
+    for r in &res.results {
+        assert!(
+            r.prediction.total_s.is_finite() && r.prediction.total_s > 0.0,
+            "scenario {:?}",
+            r.scenario
+        );
+    }
+    // The cache keeps model construction sublinear in grid size: 3 archs
+    // × 2 strategies = 6 distinct keys over 1080 lookups. Concurrent
+    // first-misses on one key may each count (compute-outside-lock), so
+    // bound rather than pin the parallel-run miss count.
+    assert!(res.cache.misses >= 6, "misses = {}", res.cache.misses);
+    assert!(res.cache.misses <= 6 * res.workers as u64, "misses = {}", res.cache.misses);
+    assert!(res.cache.hit_rate() > 0.9);
+}
+
+// ---------------------------------------------------------------------------
+// Output surfaces
+// ---------------------------------------------------------------------------
+
+#[test]
+fn json_output_parses_and_indexes() {
+    let res = SweepRunner::serial().run(&mid_grid()).unwrap();
+    let doc = Json::parse(&res.to_json().emit()).unwrap();
+    assert_eq!(doc.get("scenarios").unwrap().as_usize(), Some(16));
+    let rows = doc.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 16);
+    assert_eq!(rows[0].get("strategy").unwrap().as_str(), Some("a"));
+    assert_eq!(rows[15].get("arch").unwrap().as_str(), Some("medium"));
+}
+
+#[test]
+fn stride_lookup_agrees_with_value_lookup() {
+    let res = SweepRunner::serial().run(&mid_grid()).unwrap();
+    let by_stride = res.at(1, 0, 0, 0, 3, 1); // medium, p=240, strategy b
+    let by_value = res.find("medium", 240, Strategy::B).unwrap();
+    assert_eq!(by_stride.scenario.id, by_value.scenario.id);
+    assert_eq!(by_stride.scenario.threads, 240);
+    assert_eq!(by_stride.scenario.strategy, Strategy::B);
+}
