@@ -42,6 +42,37 @@ def to_hlo_text(lowered) -> str:
     return comp.as_hlo_text()
 
 
+def compile_hlo_text(txt: str, client=None):
+    """HLO text -> loaded executable on the local CPU client.
+
+    The round-trip the Rust runtime does: parse the HLO text (which
+    reassigns instruction ids), convert to StableHLO/MHLO, compile. The
+    conversion API moved across jaxlib versions, so both paths are
+    supported:
+
+    * jaxlib >= 0.5: ``mlir.hlo_to_stablehlo`` + ``compile_and_load``
+    * jaxlib 0.4.x:  ``XlaComputation`` -> ``xla_computation_to_mlir_module``
+      + ``client.compile``
+
+    Returns a LoadedExecutable whose ``execute_sharded`` takes the
+    flattened input buffers in artifact order.
+    """
+    if client is None:
+        client = jax.devices("cpu")[0].client
+    hlo_mod = xc._xla.hlo_module_from_text(txt)
+    proto = hlo_mod.as_serialized_hlo_module_proto()
+    mlir_api = xc._xla.mlir
+    if hasattr(mlir_api, "hlo_to_stablehlo"):  # jaxlib >= 0.5
+        import jaxlib._jax as _jax
+        mlir = mlir_api.hlo_to_stablehlo(proto)
+        return client.compile_and_load(
+            mlir, _jax.DeviceList(tuple(client.devices()[:1])))
+    # jaxlib 0.4.x: through XlaComputation -> MHLO module text.
+    comp = xc.XlaComputation(proto)
+    mlir = mlir_api.xla_computation_to_mlir_module(comp)
+    return client.compile(mlir)
+
+
 def lower_train(arch: str, batch: int, lr: float) -> str:
     n_params = 2 * len(model.param_shapes(arch))
 

@@ -67,10 +67,9 @@ def test_train_hlo_roundtrip_matches_jax(arch):
 
     This mirrors the Rust runtime's path (the HLO text parse reassigns the
     64-bit instruction ids that xla_extension 0.5.1 rejects in protos).
+    ``aot.compile_hlo_text`` picks the conversion API for the installed
+    jaxlib (0.4.x and >= 0.5 moved it).
     """
-    import jaxlib._jax as _jax
-    from jax._src.lib import xla_client as xc
-
     batch, lr = 2, 0.05
     txt = aot.lower_train(arch, batch=batch, lr=lr)
 
@@ -81,12 +80,7 @@ def test_train_hlo_roundtrip_matches_jax(arch):
     # hand the executable its own copies.
     want = [np.asarray(o) for o in model.train_step(params, x, y, arch, lr=lr)]
 
-    client = jax.devices("cpu")[0].client
-    hlo_mod = xc._xla.hlo_module_from_text(txt)
-    mlir = xc._xla.mlir.hlo_to_stablehlo(
-        hlo_mod.as_serialized_hlo_module_proto())
-    exe = client.compile_and_load(
-        mlir, _jax.DeviceList(tuple(jax.devices("cpu")[:1])))
+    exe = aot.compile_hlo_text(txt)
     inputs = [jax.device_put(np.asarray(p).copy()) for p in params]
     inputs += [jax.device_put(x), jax.device_put(y)]
     res = exe.execute_sharded(inputs)
@@ -96,3 +90,22 @@ def test_train_hlo_roundtrip_matches_jax(arch):
     assert len(got) == len(want)
     for g, w in zip(got, want):
         np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("arch", ["small"])
+def test_infer_hlo_roundtrip_matches_jax(arch):
+    """The inference artifact round-trips numerically too."""
+    batch = 2
+    txt = aot.lower_infer(arch, batch=batch)
+    params = model.init_params(arch, KEY)
+    x = jax.random.normal(KEY, (batch, 1, 29, 29), jnp.float32)
+    want = np.asarray(model.predict(params, x, arch))
+
+    exe = aot.compile_hlo_text(txt)
+    inputs = [jax.device_put(np.asarray(p).copy()) for p in params]
+    inputs += [jax.device_put(x)]
+    res = exe.execute_sharded(inputs)
+    got = [np.asarray(a[0])
+           for a in res.disassemble_into_single_device_arrays()]
+    assert len(got) == 1
+    np.testing.assert_allclose(got[0], want, rtol=1e-4, atol=1e-5)

@@ -10,6 +10,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# Optional dependency: skip (not error) collection where hypothesis is
+# not installed — the fixed-shape cases below still need it via @given.
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from compile.kernels import conv_mm, pool, ref

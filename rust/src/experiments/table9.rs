@@ -5,25 +5,52 @@
 //! is printed alongside — the claim preserved is the *band* (models
 //! predict within ~10–20%) and the medium/large ordering (strategy (b)
 //! beats (a) where measured parameters matter most).
+//!
+//! The grid itself is a [`crate::sweep`] definition (all three
+//! architectures × the measured thread counts × both strategies, with
+//! micsim measurement on) and the averaging is the sweep engine's
+//! grid-level aggregation ([`crate::sweep::SweepResults::accuracy`]);
+//! this module only formats the aggregates next to the paper's published
+//! cells. The numbers are bit-identical to the pointwise
+//! [`crate::perfmodel::average_delta`] path the module used before the
+//! sweep refactor (`tests::sweep_path_matches_pointwise_average_delta`).
 
-use crate::config::{ArchSpec, RunConfig};
-use crate::error::Result;
+use crate::config::RunConfig;
+use crate::error::{Error, Result};
 use crate::experiments::ExpOptions;
-use crate::perfmodel::{accuracy, both_models};
 use crate::report::{paper, Table};
-use crate::simulator::SimConfig;
+use crate::sweep::{GridSpec, Strategy, SweepRunner};
+
+/// The Table IX sweep grid: paper architectures × measured thread counts
+/// × both strategies, with micsim measurement enabled.
+pub fn grid(opts: &ExpOptions) -> GridSpec {
+    GridSpec {
+        threads: RunConfig::MEASURED_THREADS.to_vec(),
+        strategies: vec![Strategy::A, Strategy::B],
+        params: opts.params,
+        measure: true,
+        ..GridSpec::default()
+    }
+}
 
 pub fn run(opts: &ExpOptions) -> Result<String> {
-    let cfg = SimConfig::default();
-    let threads = RunConfig::MEASURED_THREADS;
+    let res = SweepRunner::new(0).run(&grid(opts))?;
+    let aggregates = res.accuracy();
     let mut t = Table::new(
         "Table IX — average accuracy Δ of the performance models [%]",
         &["arch", "Δa ours", "Δa paper", "Δb ours", "Δb paper"],
     );
-    for arch in ArchSpec::paper_archs() {
-        let (model_a, model_b) = both_models(&arch, opts.params)?;
-        let da = accuracy::average_delta(&arch, &model_a, &threads, &cfg)?;
-        let db = accuracy::average_delta(&arch, &model_b, &threads, &cfg)?;
+    for arch in &res.grid.archs {
+        let delta = |s: Strategy| -> Result<f64> {
+            aggregates
+                .iter()
+                .find(|a| a.arch == arch.name && a.strategy == s)
+                .map(|a| a.mean_delta_pct)
+                .ok_or_else(|| {
+                    Error::Config(format!("no measured Δ for arch {:?}", arch.name))
+                })
+        };
+        let (da, db) = (delta(Strategy::A)?, delta(Strategy::B)?);
         let idx = paper::arch_index(&arch.name).unwrap();
         t.row(vec![
             arch.name.clone(),
@@ -39,7 +66,10 @@ pub fn run(opts: &ExpOptions) -> Result<String> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::ArchSpec;
     use crate::perfmodel::accuracy::average_delta;
+    use crate::perfmodel::both_models;
+    use crate::simulator::SimConfig;
 
     #[test]
     fn renders_all_archs() {
@@ -52,19 +82,53 @@ mod tests {
     }
 
     #[test]
+    fn sweep_path_matches_pointwise_average_delta() {
+        // The acceptance criterion of the sweep refactor: Table IX through
+        // the sweep grid reproduces the pre-refactor pointwise computation
+        // bit-for-bit — same measurements, same predictions, same
+        // summation order.
+        let opts = ExpOptions::default();
+        let res = SweepRunner::new(0).run(&grid(&opts)).unwrap();
+        let cfg = SimConfig::default();
+        let threads = RunConfig::MEASURED_THREADS;
+        for arch in ArchSpec::paper_archs() {
+            let (model_a, model_b) = both_models(&arch, opts.params).unwrap();
+            let da = average_delta(&arch, &model_a, &threads, &cfg).unwrap();
+            let db = average_delta(&arch, &model_b, &threads, &cfg).unwrap();
+            let sa = res.accuracy_for(&arch.name, Strategy::A).unwrap();
+            let sb = res.accuracy_for(&arch.name, Strategy::B).unwrap();
+            assert_eq!(sa.points, threads.len());
+            assert_eq!(sb.points, threads.len());
+            assert_eq!(
+                sa.mean_delta_pct.to_bits(),
+                da.to_bits(),
+                "{}: sweep Δa {} vs pointwise {}",
+                arch.name,
+                sa.mean_delta_pct,
+                da
+            );
+            assert_eq!(
+                sb.mean_delta_pct.to_bits(),
+                db.to_bits(),
+                "{}: sweep Δb {} vs pointwise {}",
+                arch.name,
+                sb.mean_delta_pct,
+                db
+            );
+        }
+    }
+
+    #[test]
     fn strategy_b_beats_a_for_medium_and_large() {
         // The paper's Table IX finding: "(b) is better for medium and
         // large CNNs". Against micsim the large-CNN gap narrows to a
         // near-tie (both models share the calibrated contention term), so
         // the assertion is: strictly better for medium, and within a
         // 1-percentage-point tie for large.
-        let cfg = SimConfig::default();
-        let threads = RunConfig::MEASURED_THREADS;
+        let res = SweepRunner::new(0).run(&grid(&ExpOptions::default())).unwrap();
         for (name, slack) in [("medium", 0.0), ("large", 1.0)] {
-            let arch = ArchSpec::by_name(name).unwrap();
-            let (a, b) = both_models(&arch, Default::default()).unwrap();
-            let da = average_delta(&arch, &a, &threads, &cfg).unwrap();
-            let db = average_delta(&arch, &b, &threads, &cfg).unwrap();
+            let da = res.accuracy_for(name, Strategy::A).unwrap().mean_delta_pct;
+            let db = res.accuracy_for(name, Strategy::B).unwrap().mean_delta_pct;
             assert!(db < da + slack, "{name}: Δb {db:.1} !< Δa {da:.1} + {slack}");
         }
     }
@@ -73,14 +137,15 @@ mod tests {
     fn deltas_in_paper_band() {
         // Both models within the paper's accuracy band (≈7–17%, we allow
         // up to 25% — the simulator is not their testbed).
-        let cfg = SimConfig::default();
-        let threads = RunConfig::MEASURED_THREADS;
-        for arch in ArchSpec::paper_archs() {
-            let (a, b) = both_models(&arch, Default::default()).unwrap();
-            let da = average_delta(&arch, &a, &threads, &cfg).unwrap();
-            let db = average_delta(&arch, &b, &threads, &cfg).unwrap();
-            assert!(da < 25.0, "{}: Δa {da:.1}", arch.name);
-            assert!(db < 25.0, "{}: Δb {db:.1}", arch.name);
+        let res = SweepRunner::new(0).run(&grid(&ExpOptions::default())).unwrap();
+        for a in res.accuracy() {
+            assert!(
+                a.mean_delta_pct < 25.0,
+                "{} Δ{} {:.1}",
+                a.arch,
+                a.strategy,
+                a.mean_delta_pct
+            );
         }
     }
 }

@@ -17,7 +17,9 @@
 //! [`micdl::util`] for the rationale.
 //!
 //! Exit codes: 0 on success; 1 on any configuration, parse, or runtime
-//! error (the error is printed to stderr together with the usage text).
+//! error (the error is printed to stderr together with the usage text);
+//! 2 when `sweep --compare` finds a golden-baseline regression (the
+//! machine-readable diff goes to stdout, the findings to stderr).
 
 use micdl::config::{ArchSpec, MachineConfig, RunConfig};
 use micdl::coordinator::leader::{LeaderConfig, PjrtTrainer};
@@ -29,7 +31,8 @@ use micdl::nn::opcount;
 use micdl::perfmodel::{both_models, ParamSource, PerfModel};
 use micdl::report::Table;
 use micdl::simulator::{probe, simulate_training, Fidelity, SimConfig};
-use micdl::sweep::{parse_axis, GridSpec, Strategy, SweepRunner};
+use micdl::sweep::baseline::DEFAULT_TOLERANCE;
+use micdl::sweep::{parse_axis, Baseline, GridSpec, Strategy, SweepRunner};
 
 /// `format!` into the crate's config error.
 macro_rules! err {
@@ -104,7 +107,11 @@ USAGE:
                  [--images IxIT[,IxIT...]] [--epochs LIST] [--strategy a|b|both]
                  [--params paper|sim] [--clock-ghz F[,F...]] [--measure]
                  [--workers N | --serial] [--json OUT.json] [--csv] [--full]
+                 [--write-baseline OUT.json] [--compare BASELINE.json]
+                 [--tolerance F]
                  (LIST = comma items and/or inclusive ranges: 1,15,30 or 1..244 or 8..64..8)
+                 (--compare alone re-runs the baseline's own grid; grid flags
+                  override it. Exit 2 on baseline regression.)
   repro probe    [--arch A]
   repro train    [--backend engine|pjrt] [--arch A] [--epochs E] [--images N]
                  [--test-images N] [--workers W] [--lr F] [--artifacts DIR]
@@ -303,10 +310,71 @@ fn parse_images(text: &str) -> Result<Vec<(usize, usize)>> {
     Ok(out)
 }
 
+/// The sweep flag inventory: (name, takes a value, shapes the grid).
+/// One table drives both the missing-value check and the "did the user
+/// give an explicit grid" test, so the per-flag handlers in [`cmd_sweep`]
+/// cannot drift out of sync with either.
+const SWEEP_FLAGS: [(&str, bool, bool); 17] = [
+    ("spec", true, true),
+    ("arch", true, true),
+    ("threads", true, true),
+    ("epochs", true, true),
+    ("images", true, true),
+    ("strategy", true, true),
+    ("params", true, true),
+    ("clock-ghz", true, true),
+    ("measure", false, true),
+    ("workers", true, false),
+    ("serial", false, false),
+    ("json", true, false),
+    ("csv", false, false),
+    ("full", false, false),
+    ("compare", true, false),
+    ("write-baseline", true, false),
+    ("tolerance", true, false),
+];
+
 fn cmd_sweep(args: &Args) -> Result<()> {
-    let mut grid = match args.get("spec") {
-        Some(path) => GridSpec::from_json(&std::fs::read_to_string(path)?)?,
-        None => GridSpec::default(),
+    // A typo'd or valueless flag must error, not silently no-op — a
+    // dropped `--compare` would make a CI gate vacuous, a dropped
+    // `--json` starves the script capturing the dump.
+    for (flag, _) in &args.flags {
+        if !SWEEP_FLAGS.iter().any(|&(f, _, _)| f == flag.as_str()) {
+            bail!("unknown sweep flag --{flag}");
+        }
+    }
+    for (flag, valued, _) in SWEEP_FLAGS {
+        if valued && args.has(flag) && args.get(flag).is_none() {
+            bail!("--{flag} needs a value");
+        }
+    }
+    let baseline = args
+        .get("compare")
+        .map(|path| Baseline::load(std::path::Path::new(path)))
+        .transpose()?;
+    // Validate up front — a malformed tolerance must not cost a full
+    // sweep before erroring.
+    let tolerance = match args.get("tolerance") {
+        None => DEFAULT_TOLERANCE,
+        Some(v) => {
+            let t: f64 = v
+                .parse()
+                .map_err(|_| err!("--tolerance wants a float, got {v:?}"))?;
+            if !(t.is_finite() && t >= 0.0) {
+                bail!("--tolerance must be finite and >= 0, got {t}");
+            }
+            t
+        }
+    };
+    // `--compare` with no grid-shaping flags re-runs the baseline's own
+    // grid; any explicit flag (or `--spec`) overrides it.
+    let grid_shaped = SWEEP_FLAGS
+        .iter()
+        .any(|&(f, _, shapes_grid)| shapes_grid && args.has(f));
+    let mut grid = match (args.get("spec"), &baseline) {
+        (Some(path), _) => GridSpec::from_json(&std::fs::read_to_string(path)?)?,
+        (None, Some(base)) if !grid_shaped => base.grid()?,
+        _ => GridSpec::default(),
     };
     if let Some(v) = args.get("arch") {
         grid.archs = if v == "all" {
@@ -357,6 +425,22 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     if let Some(path) = args.get("json") {
         std::fs::write(path, results.to_json().emit())?;
         eprintln!("wrote {} scenario results to {path}", results.len());
+    }
+    if let Some(path) = args.get("write-baseline") {
+        let base = Baseline::from_results(&results)?;
+        std::fs::write(path, base.to_json().emit())?;
+        eprintln!("wrote baseline ({} cells) to {path}", base.cells.len());
+    }
+    if let Some(base) = baseline {
+        // Compare mode: stdout carries the machine-readable diff report,
+        // stderr the human-readable findings. Exit 2 on regression.
+        let report = base.compare(&results, tolerance)?;
+        println!("{}", report.to_json().emit());
+        eprint!("{}", report.render());
+        if !report.is_clean() {
+            std::process::exit(2);
+        }
+        return Ok(());
     }
     if args.has("csv") {
         print!("{}", results.table(true).to_csv());

@@ -31,6 +31,50 @@ pub fn average_delta(
     Ok(sum / threads.len() as f64)
 }
 
+/// Streaming mean/max accumulator for Δ values.
+///
+/// The sweep engine's grid-level accuracy aggregation
+/// ([`crate::sweep::SweepResults::accuracy`]) and the Table IX experiment
+/// both fold per-scenario Δ through this. Pushing values in enumeration
+/// order keeps the mean **bit-identical** to [`average_delta`] (same
+/// addition order, same final division) — asserted by
+/// `experiments::table9::tests::sweep_path_matches_pointwise_average_delta`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DeltaAccumulator {
+    sum: f64,
+    n: usize,
+    max: f64,
+    max_at_threads: usize,
+}
+
+impl DeltaAccumulator {
+    /// Fold in one scenario's Δ, remembering the thread count of the
+    /// worst point.
+    pub fn push(&mut self, delta_pct: f64, threads: usize) {
+        if self.n == 0 || delta_pct > self.max {
+            self.max = delta_pct;
+            self.max_at_threads = threads;
+        }
+        self.sum += delta_pct;
+        self.n += 1;
+    }
+
+    /// Number of points folded in so far.
+    pub fn count(&self) -> usize {
+        self.n
+    }
+
+    /// Mean Δ, percent (`None` before the first push).
+    pub fn mean_pct(&self) -> Option<f64> {
+        (self.n > 0).then(|| self.sum / self.n as f64)
+    }
+
+    /// Worst-point Δ and the thread count it occurred at.
+    pub fn max_pct(&self) -> Option<(f64, usize)> {
+        (self.n > 0).then_some((self.max, self.max_at_threads))
+    }
+}
+
 /// Per-point Δ series (for figure annotations / debugging).
 pub fn delta_series(
     arch: &ArchSpec,
@@ -76,6 +120,33 @@ mod tests {
             assert!(da < 30.0, "{}: Δa = {da:.1}%", arch.name);
             assert!(db < 30.0, "{}: Δb = {db:.1}%", arch.name);
         }
+    }
+
+    #[test]
+    fn accumulator_matches_average_delta_bit_for_bit() {
+        let cfg = SimConfig::default();
+        let arch = ArchSpec::medium();
+        let model = StrategyA::new(&arch, ParamSource::Paper).unwrap();
+        let threads = [1usize, 15, 240];
+        let mut acc = DeltaAccumulator::default();
+        for (p, d) in delta_series(&arch, &model, &threads, &cfg).unwrap() {
+            acc.push(d, p);
+        }
+        let avg = average_delta(&arch, &model, &threads, &cfg).unwrap();
+        assert_eq!(acc.count(), 3);
+        assert_eq!(acc.mean_pct().unwrap().to_bits(), avg.to_bits());
+    }
+
+    #[test]
+    fn accumulator_tracks_max_and_its_thread_count() {
+        let mut acc = DeltaAccumulator::default();
+        assert!(acc.mean_pct().is_none() && acc.max_pct().is_none());
+        acc.push(5.0, 1);
+        acc.push(12.0, 240);
+        acc.push(7.0, 30);
+        assert_eq!(acc.count(), 3);
+        assert_eq!(acc.max_pct(), Some((12.0, 240)));
+        assert!((acc.mean_pct().unwrap() - 8.0).abs() < 1e-12);
     }
 
     #[test]

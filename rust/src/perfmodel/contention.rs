@@ -4,12 +4,39 @@
 //! memory/synchronization overhead (Section IV). The contention value per
 //! thread count comes either from the paper's Table IV (measured on the
 //! real Phi, predicted beyond 240 threads) or from the micsim probe.
+//!
+//! Under [`ParamSource::Simulator`] the probe needs a calibrated
+//! [`CostModel`], which is the expensive part of every prediction — so a
+//! source memoizes it (built at most once per source, shared by clones)
+//! together with the per-`p` probe values. Accuracy sweeps call
+//! `contention_s` once per scenario; without the memo each call re-ran
+//! the whole probe calibration (the ROADMAP hot-path item). The memo is
+//! invalidated when the simulator configuration changes
+//! ([`ContentionSource::with_sim_config`]) and is observable through
+//! [`ContentionSource::probe_calibrations`], which the memoization tests
+//! pin to exactly one build per source.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 use crate::config::ArchSpec;
 use crate::error::{Error, Result};
 use crate::perfmodel::ParamSource;
 use crate::report::paper;
-use crate::simulator::{probe, SimConfig};
+use crate::simulator::{probe, CostModel, SimConfig};
+
+/// Lazily-built probe state shared by clones of one source. Values are
+/// deterministic, so memoized results are bit-identical to fresh probes.
+#[derive(Debug, Default)]
+struct ProbeMemo {
+    /// The calibrated cost model, built at most once per source.
+    cost: Mutex<Option<Arc<CostModel>>>,
+    /// Probe results per thread count.
+    values: Mutex<HashMap<usize, f64>>,
+    /// How many times the probe calibration (cost-model build) ran.
+    calibrations: AtomicU64,
+}
 
 /// Resolves MemoryContention(p) for one architecture.
 #[derive(Debug, Clone)]
@@ -17,6 +44,7 @@ pub struct ContentionSource {
     arch: ArchSpec,
     source: ParamSource,
     sim_cfg: SimConfig,
+    memo: Arc<ProbeMemo>,
 }
 
 impl ContentionSource {
@@ -25,12 +53,36 @@ impl ContentionSource {
             arch: arch.clone(),
             source,
             sim_cfg: SimConfig::default(),
+            memo: Arc::new(ProbeMemo::default()),
         }
     }
 
+    /// Re-target the probe at another simulator configuration. Resets the
+    /// memoized probe state — the calibration depends on the machine.
     pub fn with_sim_config(mut self, cfg: SimConfig) -> Self {
         self.sim_cfg = cfg;
+        self.memo = Arc::new(ProbeMemo::default());
         self
+    }
+
+    /// How many times this source ran the probe calibration (builds of
+    /// the micsim cost model). Stays 0 under [`ParamSource::Paper`];
+    /// under [`ParamSource::Simulator`] it is at most 1 for any number of
+    /// `contention_s`/`t_mem_s` calls.
+    pub fn probe_calibrations(&self) -> u64 {
+        self.memo.calibrations.load(Ordering::Relaxed)
+    }
+
+    /// The memoized calibrated cost model (Simulator source only).
+    fn cost_model(&self) -> Result<Arc<CostModel>> {
+        let mut slot = self.memo.cost.lock().unwrap();
+        if let Some(cost) = slot.as_ref() {
+            return Ok(Arc::clone(cost));
+        }
+        let built = Arc::new(CostModel::new(&self.arch, &self.sim_cfg)?);
+        self.memo.calibrations.fetch_add(1, Ordering::Relaxed);
+        *slot = Some(Arc::clone(&built));
+        Ok(built)
     }
 
     /// MemoryContention(p) in seconds.
@@ -44,7 +96,14 @@ impl ContentionSource {
                     ))
                 })
             }
-            ParamSource::Simulator => probe::contention_probe(&self.arch, p, &self.sim_cfg),
+            ParamSource::Simulator => {
+                if let Some(v) = self.memo.values.lock().unwrap().get(&p) {
+                    return Ok(*v);
+                }
+                let cost = self.cost_model()?;
+                let v = probe::contention_probe_with(&cost, p, &self.sim_cfg);
+                Ok(*self.memo.values.lock().unwrap().entry(p).or_insert(v))
+            }
         }
     }
 
@@ -93,5 +152,67 @@ mod tests {
         let base = c.t_mem_s(70, 60_000, 240).unwrap();
         assert!((c.t_mem_s(140, 60_000, 240).unwrap() / base - 2.0).abs() < 1e-9);
         assert!((c.t_mem_s(70, 120_000, 240).unwrap() / base - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn simulator_probe_calibrates_exactly_once() {
+        // The ROADMAP hot-path item: repeated contention_s/t_mem_s calls
+        // under ParamSource::Simulator must run the probe calibration
+        // exactly once, not once per call.
+        let c = ContentionSource::new(&ArchSpec::medium(), ParamSource::Simulator);
+        assert_eq!(c.probe_calibrations(), 0, "calibration must be lazy");
+        for p in [1usize, 15, 30, 60, 120, 180, 240, 240, 15] {
+            c.contention_s(p).unwrap();
+            c.t_mem_s(70, 60_000, p).unwrap();
+        }
+        assert_eq!(c.probe_calibrations(), 1);
+        // Clones share the memo — still one calibration total.
+        let clone = c.clone();
+        clone.contention_s(3840).unwrap();
+        assert_eq!(c.probe_calibrations(), 1);
+    }
+
+    #[test]
+    fn paper_source_never_calibrates() {
+        let c = ContentionSource::new(&ArchSpec::small(), ParamSource::Paper);
+        for p in [1usize, 240, 3840] {
+            c.contention_s(p).unwrap();
+        }
+        assert_eq!(c.probe_calibrations(), 0);
+    }
+
+    #[test]
+    fn memoized_values_bit_identical_to_fresh_probe() {
+        let cfg = SimConfig::default();
+        let arch = ArchSpec::large();
+        let c = ContentionSource::new(&arch, ParamSource::Simulator);
+        for p in [1usize, 61, 240, 960] {
+            let fresh = probe::contention_probe(&arch, p, &cfg).unwrap();
+            // First call (computes + memoizes) and second call (cache
+            // hit) must both equal the unmemoized probe exactly.
+            assert_eq!(c.contention_s(p).unwrap().to_bits(), fresh.to_bits(), "p={p}");
+            assert_eq!(c.contention_s(p).unwrap().to_bits(), fresh.to_bits(), "p={p}");
+        }
+    }
+
+    #[test]
+    fn with_sim_config_resets_the_memo() {
+        let arch = ArchSpec::small();
+        let c = ContentionSource::new(&arch, ParamSource::Simulator);
+        let at_default = c.contention_s(240).unwrap();
+        assert_eq!(c.probe_calibrations(), 1);
+        // Contention scales with memory bandwidth (the queue term) — a
+        // narrower memory system must re-probe to a different value.
+        let mut narrow = SimConfig::default();
+        narrow.machine.memory_bw_bytes /= 2.0;
+        let c2 = c.with_sim_config(narrow);
+        assert_eq!(c2.probe_calibrations(), 0, "retarget must reset the memo");
+        let at_half_bw = c2.contention_s(240).unwrap();
+        assert_eq!(c2.probe_calibrations(), 1);
+        assert_ne!(
+            at_default.to_bits(),
+            at_half_bw.to_bits(),
+            "probe must re-run against the new machine"
+        );
     }
 }

@@ -26,13 +26,19 @@ use crate::simulator::{Fidelity, SimConfig};
 /// used (and stays meaningful if the memory model gains stochastic
 /// queueing).
 pub fn contention_probe(arch: &ArchSpec, p: usize, cfg: &SimConfig) -> Result<f64> {
-    let cost = CostModel::new(arch, cfg)?;
+    Ok(contention_probe_with(&CostModel::new(arch, cfg)?, p, cfg))
+}
+
+/// [`contention_probe`] against a prebuilt, calibrated [`CostModel`] —
+/// the memoized path ([`crate::perfmodel::ContentionSource`] builds the
+/// cost model once and probes every thread count against it).
+pub fn contention_probe_with(cost: &CostModel, p: usize, cfg: &SimConfig) -> f64 {
     let iters = 16usize;
     let mut total = 0.0f64;
     for _round in 0..iters {
         total += cost.contention.contention_s(p, &cfg.machine);
     }
-    Ok(total / iters as f64)
+    total / iters as f64
 }
 
 /// Strategy (b) measured parameters, extracted from the simulator.

@@ -1,0 +1,555 @@
+//! Golden-baseline regression mode: pin a sweep's numbers in a JSON file
+//! and diff fresh runs against it.
+//!
+//! A [`Baseline`] captures one sweep — the grid (as a
+//! [`crate::sweep::GridSpec`] spec document, so `--compare` can re-run
+//! the exact grid) and one cell per scenario holding the values worth
+//! pinning: `total_s`, plus `measured_s`/`delta_pct` for measured grids.
+//! [`Baseline::compare`] matches cells by their full axis key (not by
+//! enumeration index, so reordered or partially-overlapping grids diff
+//! meaningfully) and checks every pinned value under a per-cell relative
+//! tolerance, producing a machine-readable [`DiffReport`].
+//!
+//! The CLI surface is `repro sweep --write-baseline FILE` /
+//! `--compare FILE [--tolerance F]`; CI pins `baselines/ci_smoke.json`
+//! so any drift in the models' numbers blocks merges. CHAOS
+//! (1702.07908) and ResPerfNet (2012.01671) track measured-vs-predicted
+//! error as the artifact that must not regress over time; this module
+//! makes that stance executable here.
+
+use std::collections::HashMap;
+
+use crate::error::{Error, Result};
+use crate::sweep::grid::{GridSpec, Strategy};
+use crate::sweep::summary::SweepResults;
+use crate::util::json::Json;
+
+/// Baseline file format version (bumped on incompatible change).
+pub const BASELINE_VERSION: u64 = 1;
+
+/// Default per-cell relative tolerance for [`Baseline::compare`]: far
+/// above cross-platform float noise (≲1e-15), far below any genuine
+/// model change.
+pub const DEFAULT_TOLERANCE: f64 = 1e-6;
+
+/// One pinned scenario: the full axis key plus the pinned values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BaselineCell {
+    pub arch: String,
+    pub machine: String,
+    pub threads: usize,
+    pub train_images: usize,
+    pub test_images: usize,
+    pub epochs: usize,
+    pub strategy: Strategy,
+    /// Predicted total execution time, seconds.
+    pub total_s: f64,
+    /// Micsim measurement (measured grids only).
+    pub measured_s: Option<f64>,
+    /// Prediction accuracy Δ vs the measurement, percent.
+    pub delta_pct: Option<f64>,
+}
+
+impl BaselineCell {
+    /// The cell's identity: every axis value, human-readable. Used both
+    /// as the diff-report identifier and as the matching key in
+    /// [`Baseline::compare`] — one encoding, so reports always name
+    /// cells by exactly the identity they matched under.
+    pub fn key(&self) -> String {
+        format!(
+            "{}/{}/p={}/i={}/it={}/ep={}/strat={}",
+            self.arch,
+            self.machine,
+            self.threads,
+            self.train_images,
+            self.test_images,
+            self.epochs,
+            self.strategy
+        )
+    }
+
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("arch", Json::str(self.arch.clone())),
+            ("machine", Json::str(self.machine.clone())),
+            ("threads", Json::num(self.threads as f64)),
+            ("train_images", Json::num(self.train_images as f64)),
+            ("test_images", Json::num(self.test_images as f64)),
+            ("epochs", Json::num(self.epochs as f64)),
+            ("strategy", Json::str(self.strategy.as_str())),
+            ("total_s", Json::num(self.total_s)),
+        ];
+        if let Some(m) = self.measured_s {
+            pairs.push(("measured_s", Json::num(m)));
+        }
+        if let Some(d) = self.delta_pct {
+            pairs.push(("delta_pct", Json::num(d)));
+        }
+        Json::obj(pairs)
+    }
+
+    fn from_json(node: &Json) -> Result<BaselineCell> {
+        let field_str = |key: &str| -> Result<String> {
+            node.expect(key)?
+                .as_str()
+                .map(str::to_string)
+                .ok_or_else(|| Error::Json(format!("baseline cell {key} must be a string")))
+        };
+        let field_usize = |key: &str| -> Result<usize> {
+            node.expect(key)?
+                .as_usize()
+                .ok_or_else(|| Error::Json(format!("baseline cell {key} must be an integer")))
+        };
+        let field_f64 = |key: &str| -> Result<f64> {
+            node.expect(key)?
+                .as_f64()
+                .ok_or_else(|| Error::Json(format!("baseline cell {key} must be a number")))
+        };
+        let strategy = match node.expect("strategy")?.as_str() {
+            Some("a") => Strategy::A,
+            Some("b") => Strategy::B,
+            other => {
+                return Err(Error::Json(format!(
+                    "baseline cell strategy must be \"a\" or \"b\", got {other:?}"
+                )))
+            }
+        };
+        Ok(BaselineCell {
+            arch: field_str("arch")?,
+            machine: field_str("machine")?,
+            threads: field_usize("threads")?,
+            train_images: field_usize("train_images")?,
+            test_images: field_usize("test_images")?,
+            epochs: field_usize("epochs")?,
+            strategy,
+            total_s: field_f64("total_s")?,
+            measured_s: node.get("measured_s").and_then(Json::as_f64),
+            delta_pct: node.get("delta_pct").and_then(Json::as_f64),
+        })
+    }
+}
+
+/// A checked-in golden sweep: the grid spec plus one cell per scenario.
+#[derive(Debug, Clone)]
+pub struct Baseline {
+    /// Spec document re-runnable via [`GridSpec::from_json`].
+    pub grid_spec: Json,
+    pub cells: Vec<BaselineCell>,
+}
+
+/// The pinned cells of one result set (shared by baseline capture and
+/// the compare path, which needs no grid spec).
+fn cells_of(results: &SweepResults) -> Vec<BaselineCell> {
+    let g = &results.grid;
+    results
+        .results
+        .iter()
+        .map(|r| {
+            let s = &r.scenario;
+            BaselineCell {
+                arch: g.archs[s.arch].name.clone(),
+                machine: g.machines[s.machine].name.clone(),
+                threads: s.threads,
+                train_images: s.train_images,
+                test_images: s.test_images,
+                epochs: s.epochs,
+                strategy: s.strategy,
+                total_s: r.prediction.total_s,
+                measured_s: r.measured_s,
+                delta_pct: r.delta_pct,
+            }
+        })
+        .collect()
+}
+
+impl Baseline {
+    /// Capture a sweep's results as a baseline.
+    ///
+    /// Fails when the grid does not round-trip through its spec document
+    /// (machine configs beyond the 7120P clock variants the spec format
+    /// carries): such a baseline would make a later `--compare` silently
+    /// re-run a *different* grid and report every cell as regressed.
+    pub fn from_results(results: &SweepResults) -> Result<Baseline> {
+        let g = &results.grid;
+        let spec = g.to_spec_json()?;
+        let back = GridSpec::from_json(&spec.emit())?;
+        if back != *g {
+            return Err(Error::Config(
+                "grid does not round-trip through its spec document (machine \
+                 configs beyond 7120P clock variants cannot be baselined — \
+                 `--compare` would re-run a different grid)"
+                    .into(),
+            ));
+        }
+        Ok(Baseline { grid_spec: spec, cells: cells_of(results) })
+    }
+
+    /// The grid this baseline was written from.
+    pub fn grid(&self) -> Result<GridSpec> {
+        GridSpec::from_json(&self.grid_spec.emit())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str("micdl-sweep-baseline")),
+            ("version", Json::num(BASELINE_VERSION as f64)),
+            ("grid", self.grid_spec.clone()),
+            (
+                "cells",
+                Json::Arr(self.cells.iter().map(BaselineCell::to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn parse(text: &str) -> Result<Baseline> {
+        let doc = Json::parse(text)?;
+        match doc.get("version").and_then(Json::as_usize) {
+            Some(v) if v as u64 == BASELINE_VERSION => {}
+            other => {
+                return Err(Error::Json(format!(
+                    "baseline version {other:?} unsupported (want {BASELINE_VERSION})"
+                )))
+            }
+        }
+        let cells = doc
+            .expect("cells")?
+            .as_arr()
+            .ok_or_else(|| Error::Json("baseline cells must be an array".into()))?
+            .iter()
+            .map(BaselineCell::from_json)
+            .collect::<Result<Vec<_>>>()?;
+        if cells.is_empty() {
+            return Err(Error::Json("baseline has no cells".into()));
+        }
+        Ok(Baseline { grid_spec: doc.expect("grid")?.clone(), cells })
+    }
+
+    /// Load a baseline file.
+    pub fn load(path: &std::path::Path) -> Result<Baseline> {
+        Baseline::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Diff a fresh sweep against this baseline under a per-cell
+    /// relative tolerance (`|a−b| ≤ tol · max(|a|, |b|)`).
+    pub fn compare(&self, results: &SweepResults, tolerance: f64) -> Result<DiffReport> {
+        let current = cells_of(results);
+        let mut index: HashMap<String, &BaselineCell> = HashMap::with_capacity(current.len());
+        for cell in &current {
+            index.insert(cell.key(), cell);
+        }
+        let mut report = DiffReport {
+            tolerance,
+            cells_compared: 0,
+            mismatches: Vec::new(),
+            missing_in_run: Vec::new(),
+            missing_in_baseline: Vec::new(),
+        };
+        for want in &self.cells {
+            let Some(got) = index.get(&want.key()) else {
+                report.missing_in_run.push(want.key());
+                continue;
+            };
+            report.cells_compared += 1;
+            let fields = [
+                ("total_s", Some(want.total_s), Some(got.total_s)),
+                ("measured_s", want.measured_s, got.measured_s),
+                ("delta_pct", want.delta_pct, got.delta_pct),
+            ];
+            for (field, base, cur) in fields {
+                match (base, cur) {
+                    (None, None) => {}
+                    (Some(b), Some(c)) => {
+                        if !within(b, c, tolerance) {
+                            report.mismatches.push(CellDiff {
+                                cell: want.key(),
+                                field,
+                                baseline: b,
+                                current: c,
+                                rel_err: rel_err(b, c),
+                            });
+                        }
+                    }
+                    // A pinned value the run no longer produces (or vice
+                    // versa) is a structural regression, not noise.
+                    (Some(b), None) => report.mismatches.push(CellDiff {
+                        cell: want.key(),
+                        field,
+                        baseline: b,
+                        current: f64::NAN,
+                        rel_err: f64::INFINITY,
+                    }),
+                    (None, Some(c)) => report.mismatches.push(CellDiff {
+                        cell: want.key(),
+                        field,
+                        baseline: f64::NAN,
+                        current: c,
+                        rel_err: f64::INFINITY,
+                    }),
+                }
+            }
+        }
+        let baseline_keys: std::collections::HashSet<String> =
+            self.cells.iter().map(BaselineCell::key).collect();
+        for cell in &current {
+            if !baseline_keys.contains(&cell.key()) {
+                report.missing_in_baseline.push(cell.key());
+            }
+        }
+        Ok(report)
+    }
+}
+
+/// `|a−b| ≤ tol · max(|a|, |b|)` — symmetric relative closeness; exact
+/// equality (including 0 vs 0) always passes, NaN never does.
+fn within(a: f64, b: f64, tol: f64) -> bool {
+    a == b || (a - b).abs() <= tol * a.abs().max(b.abs())
+}
+
+fn rel_err(a: f64, b: f64) -> f64 {
+    if a == b {
+        0.0
+    } else {
+        (a - b).abs() / a.abs().max(b.abs())
+    }
+}
+
+/// One out-of-tolerance value.
+#[derive(Debug, Clone)]
+pub struct CellDiff {
+    /// The offending scenario, as [`BaselineCell::key`].
+    pub cell: String,
+    pub field: &'static str,
+    pub baseline: f64,
+    pub current: f64,
+    pub rel_err: f64,
+}
+
+/// The machine-readable outcome of [`Baseline::compare`].
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    pub tolerance: f64,
+    /// Cells present on both sides and value-compared.
+    pub cells_compared: usize,
+    pub mismatches: Vec<CellDiff>,
+    /// Baseline cells the fresh sweep did not produce.
+    pub missing_in_run: Vec<String>,
+    /// Fresh cells the baseline does not pin.
+    pub missing_in_baseline: Vec<String>,
+}
+
+impl DiffReport {
+    /// No regression: every baseline cell matched within tolerance and
+    /// the grids covered each other exactly.
+    pub fn is_clean(&self) -> bool {
+        self.mismatches.is_empty()
+            && self.missing_in_run.is_empty()
+            && self.missing_in_baseline.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let strs = |v: &[String]| Json::Arr(v.iter().map(|s| Json::str(s.clone())).collect());
+        // Structural mismatches carry NaN/∞ sentinels, which JSON cannot
+        // represent — emit null instead of an unparseable literal.
+        let num_or_null = |v: f64| if v.is_finite() { Json::num(v) } else { Json::Null };
+        Json::obj(vec![
+            ("clean", Json::Bool(self.is_clean())),
+            ("tolerance", Json::num(self.tolerance)),
+            ("cells_compared", Json::num(self.cells_compared as f64)),
+            (
+                "mismatches",
+                Json::Arr(
+                    self.mismatches
+                        .iter()
+                        .map(|m| {
+                            Json::obj(vec![
+                                ("cell", Json::str(m.cell.clone())),
+                                ("field", Json::str(m.field)),
+                                ("baseline", num_or_null(m.baseline)),
+                                ("current", num_or_null(m.current)),
+                                ("rel_err", num_or_null(m.rel_err)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("missing_in_run", strs(&self.missing_in_run)),
+            ("missing_in_baseline", strs(&self.missing_in_baseline)),
+        ])
+    }
+
+    /// Human-readable summary, one line per finding.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for m in &self.mismatches {
+            out.push_str(&format!(
+                "REGRESSION {} {}: baseline {} vs current {} (rel err {:.3e} > tol {:.1e})\n",
+                m.cell, m.field, m.baseline, m.current, m.rel_err, self.tolerance
+            ));
+        }
+        for k in &self.missing_in_run {
+            out.push_str(&format!("MISSING in run: {k}\n"));
+        }
+        for k in &self.missing_in_baseline {
+            out.push_str(&format!("MISSING in baseline: {k}\n"));
+        }
+        out.push_str(&format!(
+            "baseline compare: {} cells, {} mismatches, {} missing in run, \
+             {} missing in baseline (tolerance {:.1e})\n",
+            self.cells_compared,
+            self.mismatches.len(),
+            self.missing_in_run.len(),
+            self.missing_in_baseline.len(),
+            self.tolerance,
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ArchSpec;
+    use crate::sweep::runner::SweepRunner;
+
+    fn small_results() -> SweepResults {
+        let grid = GridSpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![1, 240],
+            strategies: vec![Strategy::A, Strategy::B],
+            ..GridSpec::default()
+        };
+        SweepRunner::serial().run(&grid).unwrap()
+    }
+
+    #[test]
+    fn fresh_baseline_compares_clean() {
+        let res = small_results();
+        let base = Baseline::from_results(&res).unwrap();
+        let report = base.compare(&res, DEFAULT_TOLERANCE).unwrap();
+        assert!(report.is_clean(), "{}", report.render());
+        assert_eq!(report.cells_compared, 4);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_cells_and_grid() {
+        let res = small_results();
+        let base = Baseline::from_results(&res).unwrap();
+        let back = Baseline::parse(&base.to_json().emit()).unwrap();
+        assert_eq!(back.cells, base.cells);
+        let grid = back.grid().unwrap();
+        assert_eq!(grid.threads, vec![1, 240]);
+        assert!(back.compare(&res, DEFAULT_TOLERANCE).unwrap().is_clean());
+    }
+
+    #[test]
+    fn perturbed_cell_is_reported_with_its_key() {
+        let res = small_results();
+        let mut base = Baseline::from_results(&res).unwrap();
+        base.cells[2].total_s *= 1.05;
+        let report = base.compare(&res, DEFAULT_TOLERANCE).unwrap();
+        assert!(!report.is_clean());
+        assert_eq!(report.mismatches.len(), 1);
+        let m = &report.mismatches[0];
+        assert_eq!(m.field, "total_s");
+        assert_eq!(m.cell, base.cells[2].key());
+        assert!(m.cell.contains("p=240") && m.cell.contains("strat=a"), "{}", m.cell);
+        assert!((m.rel_err - 0.05 / 1.05).abs() < 1e-3, "{}", m.rel_err);
+        assert!(report.render().contains("REGRESSION"));
+        // The machine-readable report names the same cell.
+        let doc = report.to_json();
+        assert_eq!(doc.get("clean").unwrap().as_bool(), Some(false));
+        let mm = doc.get("mismatches").unwrap().as_arr().unwrap();
+        assert_eq!(mm[0].get("cell").unwrap().as_str(), Some(m.cell.as_str()));
+    }
+
+    #[test]
+    fn grid_mismatch_shows_up_as_missing_cells() {
+        let res = small_results();
+        let mut base = Baseline::from_results(&res).unwrap();
+        // Pretend the baseline pinned a thread count the run lacks.
+        base.cells[0].threads = 61;
+        let report = base.compare(&res, DEFAULT_TOLERANCE).unwrap();
+        assert!(!report.is_clean());
+        assert_eq!(report.missing_in_run.len(), 1);
+        assert_eq!(report.missing_in_baseline.len(), 1);
+        assert!(report.missing_in_run[0].contains("p=61"));
+    }
+
+    #[test]
+    fn measured_fields_are_pinned_and_compared() {
+        let grid = GridSpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![15],
+            strategies: vec![Strategy::B],
+            measure: true,
+            ..GridSpec::default()
+        };
+        let res = SweepRunner::serial().run(&grid).unwrap();
+        let mut base = Baseline::from_results(&res).unwrap();
+        assert!(base.cells[0].measured_s.is_some());
+        assert!(base.cells[0].delta_pct.is_some());
+        assert!(base.compare(&res, DEFAULT_TOLERANCE).unwrap().is_clean());
+        base.cells[0].delta_pct = Some(base.cells[0].delta_pct.unwrap() + 1.0);
+        let report = base.compare(&res, DEFAULT_TOLERANCE).unwrap();
+        assert_eq!(report.mismatches.len(), 1);
+        assert_eq!(report.mismatches[0].field, "delta_pct");
+        // A baseline pinning a field the run no longer produces is a
+        // structural regression.
+        let prediction_only = GridSpec { measure: false, ..grid };
+        let pred_res = SweepRunner::serial().run(&prediction_only).unwrap();
+        let base2 = Baseline::from_results(&res).unwrap();
+        let report = base2.compare(&pred_res, DEFAULT_TOLERANCE).unwrap();
+        assert!(!report.is_clean());
+        assert!(report.mismatches.iter().any(|m| m.field == "measured_s"));
+        // Structural mismatches (NaN/∞ sentinels) must still emit valid
+        // JSON (null, not a bare NaN literal).
+        let doc = Json::parse(&report.to_json().emit()).unwrap();
+        let mm = doc.get("mismatches").unwrap().as_arr().unwrap();
+        assert!(mm.iter().any(|m| m.get("current") == Some(&Json::Null)));
+    }
+
+    #[test]
+    fn non_round_tripping_grid_is_rejected_at_capture() {
+        // A machine differing from the 7120P in anything the spec format
+        // cannot carry (here: memory bandwidth) must not be baselined —
+        // `--compare` would silently re-run the stock machine.
+        let mut machine = crate::config::MachineConfig::xeon_phi_7120p();
+        machine.memory_bw_bytes /= 2.0;
+        let grid = GridSpec {
+            archs: vec![ArchSpec::small()],
+            machines: vec![machine],
+            threads: vec![1],
+            strategies: vec![Strategy::A],
+            ..GridSpec::default()
+        };
+        let res = SweepRunner::serial().run(&grid).unwrap();
+        let err = Baseline::from_results(&res);
+        assert!(err.is_err(), "non-round-tripping grid must be rejected");
+        assert!(err.unwrap_err().to_string().contains("round-trip"));
+        // But comparing such a run against a valid baseline still works
+        // (compare never needs the current run's spec).
+        let clock_variant = GridSpec {
+            machines: vec![crate::config::MachineConfig::xeon_phi_7120p_at_ghz(1.0)],
+            ..grid
+        };
+        let res = SweepRunner::serial().run(&clock_variant).unwrap();
+        let base = Baseline::from_results(&res).unwrap();
+        assert!(base.compare(&res, DEFAULT_TOLERANCE).unwrap().is_clean());
+    }
+
+    #[test]
+    fn version_and_shape_validation() {
+        assert!(Baseline::parse("{}").is_err());
+        assert!(Baseline::parse(r#"{"version": 99, "grid": {}, "cells": []}"#).is_err());
+        assert!(Baseline::parse(r#"{"version": 1, "grid": {}, "cells": []}"#).is_err());
+    }
+
+    #[test]
+    fn tolerance_is_respected() {
+        let res = small_results();
+        let mut base = Baseline::from_results(&res).unwrap();
+        base.cells[0].total_s *= 1.0 + 1e-9;
+        assert!(base.compare(&res, 1e-6).unwrap().is_clean());
+        assert!(!base.compare(&res, 1e-12).unwrap().is_clean());
+    }
+}

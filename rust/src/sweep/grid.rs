@@ -80,7 +80,7 @@ impl Scenario {
 }
 
 /// A declarative scenario grid (one value list per axis).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct GridSpec {
     /// Architecture axis. Names must be unique (they key the sweep cache).
     pub archs: Vec<ArchSpec>,
@@ -386,6 +386,72 @@ impl GridSpec {
     }
 }
 
+impl GridSpec {
+    /// Emit the grid as a spec document [`GridSpec::from_json`] parses
+    /// back to an equivalent grid — the form a sweep baseline embeds so
+    /// `repro sweep --compare baseline.json` can re-run the exact grid
+    /// the baseline was written from.
+    ///
+    /// Paper architectures are emitted by name, custom ones inline.
+    /// Machines are emitted as a `clock_ghz` axis (the only machine axis
+    /// the spec format carries), and only when they differ from the
+    /// default 7120P — grids built programmatically around other machine
+    /// configs do not round-trip and should not be baselined.
+    pub fn to_spec_json(&self) -> Result<Json> {
+        let archs = self
+            .archs
+            .iter()
+            .map(|arch| {
+                if ArchSpec::by_name(&arch.name).ok().as_ref() == Some(arch) {
+                    Ok(Json::str(arch.name.clone()))
+                } else {
+                    Json::parse(&arch.to_json())
+                }
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let mut pairs = vec![
+            ("archs", Json::Arr(archs)),
+            ("threads", Json::arr_usize(&self.threads)),
+            (
+                "images",
+                Json::Arr(
+                    self.images
+                        .iter()
+                        .map(|&(i, it)| Json::arr_usize(&[i, it]))
+                        .collect(),
+                ),
+            ),
+        ];
+        if !self.epochs.is_empty() {
+            pairs.push(("epochs", Json::arr_usize(&self.epochs)));
+        }
+        pairs.push((
+            "strategies",
+            Json::Arr(self.strategies.iter().map(|s| Json::str(s.as_str())).collect()),
+        ));
+        pairs.push((
+            "params",
+            Json::str(match self.params {
+                ParamSource::Paper => "paper",
+                ParamSource::Simulator => "sim",
+            }),
+        ));
+        if self.machines != vec![MachineConfig::xeon_phi_7120p()] {
+            pairs.push((
+                "clock_ghz",
+                Json::Arr(
+                    self.machines
+                        .iter()
+                        .map(|m| Json::num(m.clock_hz / 1e9))
+                        .collect(),
+                ),
+            ));
+        }
+        pairs.push(("measure", Json::Bool(self.measure)));
+        Ok(Json::obj(pairs))
+    }
+}
+
 fn usize_list(values: &[Json], key: &str) -> Result<Vec<usize>> {
     values
         .iter()
@@ -548,6 +614,46 @@ mod tests {
         assert!(grid.measure);
         // 2 archs × 3 thread counts, all other axes singleton.
         assert_eq!(grid.len(), 6);
+    }
+
+    #[test]
+    fn spec_emission_round_trips() {
+        let grids = [
+            GridSpec::default(),
+            GridSpec {
+                archs: vec![ArchSpec::small()],
+                threads: vec![1, 61, 240],
+                images: vec![(1_000, 100), (2_000, 200)],
+                epochs: vec![2, 4],
+                strategies: vec![Strategy::B],
+                params: ParamSource::Simulator,
+                machines: vec![
+                    MachineConfig::xeon_phi_7120p_at_ghz(1.0),
+                    MachineConfig::xeon_phi_7120p_at_ghz(1.5),
+                ],
+                measure: true,
+            },
+        ];
+        for grid in grids {
+            let spec = grid.to_spec_json().unwrap().emit();
+            let back = GridSpec::from_json(&spec).unwrap();
+            assert_eq!(back, grid, "{spec}");
+        }
+    }
+
+    #[test]
+    fn spec_emission_inlines_custom_archs() {
+        let custom = ArchSpec::from_json(
+            r#"{"name":"tiny","layers":[
+                {"type":"conv","maps":4,"kernel":4},
+                {"type":"pool","window":2},
+                {"type":"dense","units":10}]}"#,
+        )
+        .unwrap();
+        let grid = GridSpec { archs: vec![custom.clone()], ..GridSpec::default() };
+        let spec = grid.to_spec_json().unwrap().emit();
+        let back = GridSpec::from_json(&spec).unwrap();
+        assert_eq!(back.archs, vec![custom]);
     }
 
     #[test]

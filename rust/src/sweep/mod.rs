@@ -13,19 +13,24 @@
 //!   cost models, and measurements by exactly their input axes;
 //! * [`runner`] — [`SweepRunner`], the scoped-thread worker pool whose
 //!   parallel results are bit-identical to a serial run;
-//! * [`summary`] — [`SweepResults`], O(1) stride addressing, JSON dump,
-//!   and paper-style tables.
+//! * [`summary`] — [`SweepResults`], O(1) stride addressing, grid-level
+//!   accuracy aggregation (mean/max Δ per architecture × strategy — the
+//!   sweep-native Table IX), JSON dump, and paper-style tables;
+//! * [`baseline`] — [`Baseline`]/[`DiffReport`], the golden-baseline
+//!   regression mode behind `repro sweep --compare`/`--write-baseline`.
 //!
 //! The `repro sweep` subcommand drives it from the CLI, and the
-//! `experiments` table/figure entries for Figs. 5–7 and Tables X/XI are
-//! thin grid definitions executed here.
+//! `experiments` table/figure entries for Figs. 5–7 and Tables IX/X/XI
+//! are thin grid definitions executed here.
 
+pub mod baseline;
 pub mod cache;
 pub mod grid;
 pub mod runner;
 pub mod summary;
 
+pub use baseline::{Baseline, BaselineCell, CellDiff, DiffReport};
 pub use cache::{CacheStats, SweepCache};
 pub use grid::{parse_axis, GridSpec, Scenario, Strategy};
 pub use runner::SweepRunner;
-pub use summary::{ScenarioResult, SweepResults};
+pub use summary::{AccuracyAggregate, ScenarioResult, SweepResults};

@@ -1,10 +1,30 @@
-//! Sweep results: O(1) addressing, JSON emission, paper-style tables.
+//! Sweep results: O(1) addressing, accuracy aggregation, JSON emission,
+//! paper-style tables.
 
-use crate::perfmodel::Prediction;
+use crate::perfmodel::{DeltaAccumulator, Prediction};
 use crate::report::Table;
 use crate::sweep::cache::CacheStats;
 use crate::sweep::grid::{GridSpec, Scenario, Strategy};
 use crate::util::json::Json;
+
+/// Grid-level prediction accuracy for one (architecture, strategy) group
+/// — one Table IX cell, computed over every measured scenario of the
+/// group in enumeration order (so the mean is bit-identical to
+/// [`crate::perfmodel::average_delta`] over the same points).
+#[derive(Debug, Clone)]
+pub struct AccuracyAggregate {
+    /// Architecture name.
+    pub arch: String,
+    pub strategy: Strategy,
+    /// Measured scenarios folded into this group.
+    pub points: usize,
+    /// Mean Δ over the group, percent.
+    pub mean_delta_pct: f64,
+    /// Worst-point Δ over the group, percent.
+    pub max_delta_pct: f64,
+    /// Thread count of the worst point.
+    pub max_at_threads: usize,
+}
 
 /// One evaluated scenario.
 #[derive(Debug, Clone)]
@@ -80,6 +100,55 @@ impl SweepResults {
                 && r.scenario.threads == threads
                 && r.scenario.strategy == strategy
         })
+    }
+
+    /// Fold one (architecture, strategy) group's Δ values, in
+    /// enumeration order (`None` when the group has no measured points).
+    fn fold_group(&self, ai: usize, strategy: Strategy) -> Option<AccuracyAggregate> {
+        let mut acc = DeltaAccumulator::default();
+        for r in &self.results {
+            if r.scenario.arch != ai || r.scenario.strategy != strategy {
+                continue;
+            }
+            if let Some(d) = r.delta_pct {
+                acc.push(d, r.scenario.threads);
+            }
+        }
+        let (mean, (max, max_at)) = (acc.mean_pct()?, acc.max_pct()?);
+        Some(AccuracyAggregate {
+            arch: self.grid.archs[ai].name.clone(),
+            strategy,
+            points: acc.count(),
+            mean_delta_pct: mean,
+            max_delta_pct: max,
+            max_at_threads: max_at,
+        })
+    }
+
+    /// Grid-level accuracy aggregation: mean/max Δ per (architecture,
+    /// strategy), in axis order. Empty unless the grid measured
+    /// (`measure = true`) — prediction-only sweeps have no Δ to
+    /// aggregate. This is the sweep-native Table IX.
+    pub fn accuracy(&self) -> Vec<AccuracyAggregate> {
+        let g = &self.grid;
+        let mut out = Vec::new();
+        for ai in 0..g.archs.len() {
+            for &strategy in &g.strategies {
+                if let Some(agg) = self.fold_group(ai, strategy) {
+                    out.push(agg);
+                }
+            }
+        }
+        out
+    }
+
+    /// The aggregate for one (architecture, strategy) group, if measured.
+    /// Folds only the requested group — callers wanting every group
+    /// should use [`SweepResults::accuracy`] once instead of repeated
+    /// lookups.
+    pub fn accuracy_for(&self, arch_name: &str, strategy: Strategy) -> Option<AccuracyAggregate> {
+        let ai = self.grid.archs.iter().position(|a| a.name == arch_name)?;
+        self.fold_group(ai, strategy)
     }
 
     /// Full machine-readable dump (the `repro sweep --json` payload).
@@ -163,6 +232,24 @@ impl SweepResults {
                     ("misses", Json::num(self.cache.misses as f64)),
                 ]),
             ),
+            (
+                "accuracy",
+                Json::Arr(
+                    self.accuracy()
+                        .iter()
+                        .map(|a| {
+                            Json::obj(vec![
+                                ("arch", Json::str(a.arch.clone())),
+                                ("strategy", Json::str(a.strategy.as_str())),
+                                ("points", Json::num(a.points as f64)),
+                                ("mean_delta_pct", Json::num(a.mean_delta_pct)),
+                                ("max_delta_pct", Json::num(a.max_delta_pct)),
+                                ("max_at_threads", Json::num(a.max_at_threads as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("results", Json::Arr(rows)),
         ])
     }
@@ -215,7 +302,7 @@ impl SweepResults {
             format!("sweep summary — {} scenarios", self.len()),
             &[
                 "arch", "strat", "points", "best total [min]", "at p", "worst total [min]",
-                "at p", "mean Δ %",
+                "at p", "mean Δ %", "max Δ %", "at p",
             ],
         );
         for (ai, arch) in g.archs.iter().enumerate() {
@@ -223,8 +310,7 @@ impl SweepResults {
                 let mut best: Option<&ScenarioResult> = None;
                 let mut worst: Option<&ScenarioResult> = None;
                 let mut count = 0usize;
-                let mut delta_sum = 0.0f64;
-                let mut delta_n = 0usize;
+                let mut acc = DeltaAccumulator::default();
                 for r in &self.results {
                     if r.scenario.arch != ai || r.scenario.strategy != strat {
                         continue;
@@ -239,8 +325,7 @@ impl SweepResults {
                         _ => Some(r),
                     };
                     if let Some(d) = r.delta_pct {
-                        delta_sum += d;
-                        delta_n += 1;
+                        acc.push(d, r.scenario.threads);
                     }
                 }
                 let (Some(best), Some(worst)) = (best, worst) else { continue };
@@ -252,11 +337,15 @@ impl SweepResults {
                     best.scenario.threads.to_string(),
                     format!("{:.1}", worst.prediction.total_s / 60.0),
                     worst.scenario.threads.to_string(),
-                    if delta_n > 0 {
-                        format!("{:.1}", delta_sum / delta_n as f64)
-                    } else {
-                        "-".into()
-                    },
+                    acc.mean_pct()
+                        .map(|d| format!("{d:.1}"))
+                        .unwrap_or_else(|| "-".into()),
+                    acc.max_pct()
+                        .map(|(d, _)| format!("{d:.1}"))
+                        .unwrap_or_else(|| "-".into()),
+                    acc.max_pct()
+                        .map(|(_, p)| p.to_string())
+                        .unwrap_or_else(|| "-".into()),
                 ]);
             }
         }
@@ -319,6 +408,76 @@ mod tests {
         let first = &doc.get("results").unwrap().as_arr().unwrap()[0];
         assert_eq!(first.get("arch").unwrap().as_str(), Some("small"));
         assert!(first.get("total_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    fn run_measured() -> SweepResults {
+        let grid = GridSpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![1, 15, 240],
+            strategies: vec![Strategy::A, Strategy::B],
+            measure: true,
+            ..GridSpec::default()
+        };
+        SweepRunner::serial().run(&grid).unwrap()
+    }
+
+    #[test]
+    fn accuracy_empty_without_measurement() {
+        let res = run_small();
+        assert!(res.accuracy().is_empty());
+        assert!(res.accuracy_for("small", Strategy::A).is_none());
+        // The JSON surface still carries the (empty) aggregation array.
+        let doc = Json::parse(&res.to_json().emit()).unwrap();
+        assert_eq!(doc.get("accuracy").unwrap().as_arr().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn accuracy_aggregates_per_arch_strategy() {
+        let res = run_measured();
+        let acc = res.accuracy();
+        // 1 arch × 2 strategies, 3 measured points each.
+        assert_eq!(acc.len(), 2);
+        for a in &acc {
+            assert_eq!(a.arch, "small");
+            assert_eq!(a.points, 3);
+            assert!(a.mean_delta_pct.is_finite() && a.mean_delta_pct >= 0.0);
+            assert!(a.max_delta_pct >= a.mean_delta_pct);
+            assert!([1, 15, 240].contains(&a.max_at_threads));
+        }
+        assert_eq!(acc[0].strategy, Strategy::A);
+        assert_eq!(acc[1].strategy, Strategy::B);
+        // The group mean equals the hand-fold over the same scenarios.
+        let by_hand: f64 = res
+            .results
+            .iter()
+            .filter(|r| r.scenario.strategy == Strategy::A)
+            .map(|r| r.delta_pct.unwrap())
+            .sum::<f64>()
+            / 3.0;
+        assert_eq!(acc[0].mean_delta_pct.to_bits(), by_hand.to_bits());
+    }
+
+    #[test]
+    fn accuracy_appears_in_json_dump() {
+        let res = run_measured();
+        let doc = Json::parse(&res.to_json().emit()).unwrap();
+        let acc = doc.get("accuracy").unwrap().as_arr().unwrap();
+        assert_eq!(acc.len(), 2);
+        assert_eq!(acc[0].get("arch").unwrap().as_str(), Some("small"));
+        assert_eq!(acc[0].get("strategy").unwrap().as_str(), Some("a"));
+        assert_eq!(acc[0].get("points").unwrap().as_usize(), Some(3));
+        assert!(acc[0].get("mean_delta_pct").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(acc[0].get("max_at_threads").unwrap().as_usize().is_some());
+    }
+
+    #[test]
+    fn summary_table_reports_max_delta_for_measured_grids() {
+        let res = run_measured();
+        let out = res.render(false);
+        assert!(out.contains("max Δ %"), "{out}");
+        let unmeasured = run_small().render(false);
+        // Prediction-only grids render dashes in the Δ columns.
+        assert!(unmeasured.contains('-'), "{unmeasured}");
     }
 
     #[test]

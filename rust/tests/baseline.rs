@@ -1,0 +1,187 @@
+//! Golden-baseline regression-mode integration tests: write a baseline
+//! from a small sweep, compare clean, then perturb one cell and assert
+//! the diff names it — at the library level and through the real
+//! `repro sweep --write-baseline` / `--compare` CLI (exit code 2).
+
+use std::process::{Command, Output};
+
+use micdl::config::ArchSpec;
+use micdl::sweep::baseline::DEFAULT_TOLERANCE;
+use micdl::sweep::{Baseline, GridSpec, Strategy, SweepRunner};
+use micdl::util::json::Json;
+use micdl::util::tmp::TempDir;
+
+fn repro(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .output()
+        .expect("spawn repro")
+}
+
+fn small_grid() -> GridSpec {
+    GridSpec {
+        archs: vec![ArchSpec::small()],
+        threads: vec![1, 15],
+        strategies: vec![Strategy::A, Strategy::B],
+        measure: true,
+        ..GridSpec::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Library level
+// ---------------------------------------------------------------------------
+
+#[test]
+fn write_then_compare_round_trips_clean() {
+    let res = SweepRunner::serial().run(&small_grid()).unwrap();
+    let base = Baseline::from_results(&res).unwrap();
+    // Through the file format, against a fresh run of the embedded grid.
+    let reparsed = Baseline::parse(&base.to_json().emit()).unwrap();
+    let rerun = SweepRunner::new(0).run(&reparsed.grid().unwrap()).unwrap();
+    let report = reparsed.compare(&rerun, DEFAULT_TOLERANCE).unwrap();
+    assert!(report.is_clean(), "{}", report.render());
+    assert_eq!(report.cells_compared, 4);
+}
+
+#[test]
+fn perturbed_cell_fails_and_is_named() {
+    let res = SweepRunner::serial().run(&small_grid()).unwrap();
+    let mut base = Baseline::from_results(&res).unwrap();
+    let victim = base.cells[3].key();
+    base.cells[3].total_s *= 1.02;
+    let report = base.compare(&res, DEFAULT_TOLERANCE).unwrap();
+    assert!(!report.is_clean());
+    assert_eq!(report.mismatches.len(), 1);
+    assert_eq!(report.mismatches[0].cell, victim);
+    assert_eq!(report.mismatches[0].field, "total_s");
+    assert!(report.render().contains(&victim));
+}
+
+// ---------------------------------------------------------------------------
+// The committed CI baseline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn committed_ci_smoke_baseline_matches_fresh_sweep() {
+    // The golden file CI pins (baselines/ci_smoke.json) must stay in
+    // lockstep with the models — this is the same check the CI step
+    // runs, executed inside the tier-1 test gate. On an intentional
+    // model change, regenerate the file (baselines/README.md).
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../baselines/ci_smoke.json");
+    let base = Baseline::load(&path).expect("load baselines/ci_smoke.json");
+    assert_eq!(base.cells.len(), 42, "default grid is 42 cells");
+    let res = SweepRunner::serial().run(&base.grid().unwrap()).unwrap();
+    let report = base.compare(&res, DEFAULT_TOLERANCE).unwrap();
+    assert!(report.is_clean(), "{}", report.render());
+    assert_eq!(report.cells_compared, 42);
+}
+
+// ---------------------------------------------------------------------------
+// CLI level (the acceptance path)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cli_write_baseline_then_compare_passes_then_fails_on_perturbation() {
+    let dir = TempDir::new("baseline-cli").unwrap();
+    let path = dir.path().join("golden.json");
+    let path_str = path.to_str().unwrap();
+
+    // 1. Write a baseline from a small measured sweep.
+    let out = repro(&[
+        "sweep", "--arch", "small", "--threads", "1,15", "--strategy", "both",
+        "--measure", "--serial", "--write-baseline", path_str,
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = std::fs::read_to_string(&path).unwrap();
+    let doc = Json::parse(&text).unwrap();
+    assert_eq!(doc.get("cells").unwrap().as_arr().unwrap().len(), 4);
+
+    // 2. `--compare` alone re-runs the baseline's embedded grid: clean,
+    //    exit 0, machine-readable report on stdout.
+    let out = repro(&["sweep", "--compare", path_str, "--serial"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let report = Json::parse(String::from_utf8_lossy(&out.stdout).trim()).unwrap();
+    assert_eq!(report.get("clean").unwrap().as_bool(), Some(true));
+    assert_eq!(report.get("cells_compared").unwrap().as_usize(), Some(4));
+    assert_eq!(
+        report.get("mismatches").unwrap().as_arr().unwrap().len(),
+        0
+    );
+
+    // 3. Perturb one cell in the baseline file and compare again: exit
+    //    code 2 and the offending scenario named in both report forms.
+    let mut base = Baseline::parse(&text).unwrap();
+    let victim = base.cells[1].key();
+    base.cells[1].delta_pct = base.cells[1].delta_pct.map(|d| d + 0.5);
+    std::fs::write(&path, base.to_json().emit()).unwrap();
+    let out = repro(&["sweep", "--compare", path_str, "--serial"]);
+    assert!(!out.status.success());
+    assert_eq!(out.status.code(), Some(2), "regression must exit 2");
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    let report = Json::parse(stdout.trim()).unwrap();
+    assert_eq!(report.get("clean").unwrap().as_bool(), Some(false));
+    let mismatches = report.get("mismatches").unwrap().as_arr().unwrap();
+    assert_eq!(mismatches.len(), 1);
+    assert_eq!(
+        mismatches[0].get("cell").unwrap().as_str(),
+        Some(victim.as_str())
+    );
+    assert_eq!(mismatches[0].get("field").unwrap().as_str(), Some("delta_pct"));
+    assert!(stderr.contains("REGRESSION"), "{stderr}");
+    assert!(stderr.contains(&victim), "{stderr}");
+}
+
+#[test]
+fn cli_compare_with_explicit_grid_flags_overrides_baseline_grid() {
+    let dir = TempDir::new("baseline-cli-grid").unwrap();
+    let path = dir.path().join("golden.json");
+    let path_str = path.to_str().unwrap();
+    let out = repro(&[
+        "sweep", "--arch", "small", "--threads", "1,15", "--strategy", "a",
+        "--serial", "--write-baseline", path_str,
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    // A narrower explicit grid leaves baseline cells unmatched → exit 2
+    // with the missing cells reported.
+    let out = repro(&[
+        "sweep", "--arch", "small", "--threads", "1", "--strategy", "a",
+        "--serial", "--compare", path_str,
+    ]);
+    assert_eq!(out.status.code(), Some(2));
+    let report = Json::parse(String::from_utf8_lossy(&out.stdout).trim()).unwrap();
+    assert_eq!(
+        report.get("missing_in_run").unwrap().as_arr().unwrap().len(),
+        1
+    );
+}
+
+#[test]
+fn cli_rejects_unknown_and_valueless_sweep_flags() {
+    // A typo'd --compare must not silently skip the comparison (exit 0
+    // would make a CI gate vacuous).
+    let out = repro(&["sweep", "--serial", "--comapre", "x.json"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown sweep flag"));
+    // So must a --compare with its value swallowed by the next flag.
+    let out = repro(&["sweep", "--compare", "--serial"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("needs a value"));
+}
+
+#[test]
+fn cli_rejects_bad_tolerance() {
+    let dir = TempDir::new("baseline-cli-tol").unwrap();
+    let path = dir.path().join("golden.json");
+    let path_str = path.to_str().unwrap();
+    let out = repro(&[
+        "sweep", "--arch", "small", "--threads", "1", "--strategy", "a",
+        "--serial", "--write-baseline", path_str,
+    ]);
+    assert!(out.status.success());
+    let out = repro(&["sweep", "--compare", path_str, "--tolerance", "nope"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("tolerance"));
+}

@@ -9,7 +9,8 @@ use micdl::config::{ArchSpec, LayerSpec, MachineConfig, RunConfig};
 use micdl::coordinator::shard::Shard;
 use micdl::nn::init::XorShift64;
 use micdl::nn::opcount;
-use micdl::perfmodel::{both_models, ParamSource, PerfModel};
+use micdl::perfmodel::accuracy::{average_delta, delta_series};
+use micdl::perfmodel::{both_models, delta_pct, DeltaAccumulator, ParamSource, PerfModel};
 use micdl::report::paper;
 use micdl::simulator::{simulate_training, workload, Fidelity, SimConfig};
 use micdl::util::json::Json;
@@ -194,6 +195,80 @@ fn prop_model_b_total_decomposes_exactly() {
         let p = b.predict(&run).unwrap();
         let sum = p.prep_s + p.train_s + p.test_s + p.mem_s;
         assert!((p.total_s - sum).abs() < 1e-6 * p.total_s.max(1.0));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Accuracy layer (Δ) properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_delta_pct_nonnegative_and_symmetric_under_abs() {
+    // Δ = |m − p| / p · 100: non-negative, zero iff m == p, and symmetric
+    // in the sign of the error (p+d and p−d give bit-identical Δ).
+    // Integer-valued inputs keep p±d and the differences exactly
+    // representable, so the symmetry really is an |·| property and not a
+    // rounding accident (fl(p+d)−p and p−fl(p−d) can differ in the last
+    // ulp for arbitrary reals).
+    let mut rng = XorShift64::new(1313);
+    for case in 0..CASES {
+        let predicted = (1 + rng.next_below(1_000_000)) as f64;
+        let err = rng.next_below(1_000_000) as f64;
+        let over = delta_pct(predicted + err, predicted);
+        let under = delta_pct(predicted - err, predicted);
+        assert!(over >= 0.0 && under >= 0.0, "case {case}");
+        assert_eq!(
+            over.to_bits(),
+            under.to_bits(),
+            "case {case}: Δ(p+d) {over} != Δ(p−d) {under}"
+        );
+        assert_eq!(delta_pct(predicted, predicted), 0.0, "case {case}");
+        if err > 0.0 {
+            assert!(over > 0.0, "case {case}: nonzero error gave Δ = 0");
+        }
+    }
+}
+
+#[test]
+fn prop_average_delta_is_mean_of_delta_series() {
+    // The aggregate must equal the mean of the per-point series it
+    // summarizes — same points, same order, bit-for-bit.
+    let mut rng = XorShift64::new(1414);
+    let cfg = SimConfig::default();
+    for case in 0..12 {
+        let arch = ArchSpec::paper_archs()[case % 3].clone();
+        let (a, b) = both_models(&arch, ParamSource::Paper).unwrap();
+        // A random non-empty subset of plausible thread counts.
+        let mut threads: Vec<usize> = Vec::new();
+        for &p in &[1usize, 15, 30, 60, 120, 180, 240, 480] {
+            if rng.next_below(2) == 0 {
+                threads.push(p);
+            }
+        }
+        threads.push(1 + rng.next_below(3_840));
+        for model in [&a as &dyn PerfModel, &b as &dyn PerfModel] {
+            let avg = average_delta(&arch, model, &threads, &cfg).unwrap();
+            let series = delta_series(&arch, model, &threads, &cfg).unwrap();
+            assert_eq!(series.len(), threads.len(), "case {case}");
+            let mean = series.iter().map(|&(_, d)| d).sum::<f64>() / threads.len() as f64;
+            assert_eq!(
+                avg.to_bits(),
+                mean.to_bits(),
+                "case {case} model {}: {avg} != {mean}",
+                model.name()
+            );
+            // And folding the series through the sweep accumulator gives
+            // the same mean again, with the max at one of the points.
+            let mut acc = DeltaAccumulator::default();
+            for &(p, d) in &series {
+                assert!(d >= 0.0 && d.is_finite(), "case {case} p={p}");
+                acc.push(d, p);
+            }
+            assert_eq!(acc.mean_pct().unwrap().to_bits(), avg.to_bits());
+            let (max, max_at) = acc.max_pct().unwrap();
+            assert!(series.iter().any(|&(p, d)| p == max_at && d == max));
+            assert!(series.iter().all(|&(_, d)| d <= max));
+        }
     }
 }
 
