@@ -1,0 +1,481 @@
+#!/usr/bin/env python3
+"""One-time bootstrap for baselines/measured_smoke.json.
+
+The canonical way to (re)generate the measured conformance baseline is
+the binary itself:
+
+    cd rust && cargo run --release -- \
+        conformance --write-baseline ../baselines/measured_smoke.json
+
+This script exists because the baseline was first seeded in an
+environment without a Rust toolchain (the same situation that produced
+generate_ci_smoke.py for the prediction baseline). It replicates,
+operation for operation, micsim's chunked-fidelity measured path
+(rust/src/simulator/{cost,memory,machine,workload}.rs) on top of the
+closed-form model predictions replicated by generate_ci_smoke.py, then
+aggregates the per-cell Δ = |measured − predicted| / predicted × 100
+into per-(grid × architecture × strategy) Δ bands for the three paper
+evaluation grids (Tables IX, X, XI).
+
+Before writing anything it self-checks against every anchor the green
+Rust test suite pins:
+
+  * Table III per-image forward/backward/prep times (cost.rs tests,
+    probe.rs measured_params_near_table3);
+  * Table IV contention at p = 240 (memory.rs, probe.rs);
+  * per-(arch × strategy) mean Δ < 25 % over the measured threads
+    (experiments/table9.rs deltas_in_paper_band);
+  * average Δ < 30 % (perfmodel/accuracy.rs average_delta_in_papers_
+    ballpark) and per-point Δ < 30 % (experiments/figs567.rs);
+  * strategy (b) beats (a) for the medium CNN, within 1 pp for large
+    (table9.rs strategy_b_beats_a_for_medium_and_large);
+  * measured time monotone decreasing over 1/15/60/240 threads, with a
+    30–240× speedup at 240 (workload.rs tests), and the large CNN's
+    measured 240-thread time below its 120-thread time (figs567.rs).
+
+Band tolerances in the emitted file are ±max(1.0 pp, 2 % relative) on
+the mean and ±max(2.0 pp, 2 % relative) on the max — far above
+double-precision replication noise (≲1e-12 pp), far below any genuine
+simulator or model change.
+"""
+
+import json
+import os
+
+from generate_ci_smoke import (
+    ARCHS, CLOCK_HZ, CORES, EPOCHS, MACHINE, MEASURED_THREADS,
+    TEST_IMAGES, THREADS_PER_CORE, TRAIN_IMAGES,
+    CPI_LADDER, FPROP_OPS, BPROP_OPS,
+    predict_a, predict_b, self_check as ci_smoke_self_check,
+)
+
+# ---------------------------------------------------------------------------
+# SimConfig::default() (rust/src/simulator/mod.rs)
+# ---------------------------------------------------------------------------
+
+FWD_CYCLES_PER_OP = 31.0
+BWD_CYCLES_PER_OP = 13.7
+EXEC_FRACTION = 0.75
+L2_ALPHA = 0.35
+L2_RATIO_CAP = 3.0
+RING_BETA = 0.15
+PREP_IO_S = 12.4
+PREP_CYCLES_PER_WEIGHT = 15.5
+SERIAL_CYCLES_PER_IMAGE = 4.0
+OVERSUB_OVERHEAD = 0.05
+
+# MachineConfig::xeon_phi_7120p() (rust/src/config/machine.rs)
+L2_BYTES = 512 * 1024
+MEMORY_BW_BYTES = 352.0e9
+
+# ---------------------------------------------------------------------------
+# ArchSpec::shapes() results for the paper architectures
+# (rust/src/config/arch.rs; 29×29 input, valid convolutions)
+# ---------------------------------------------------------------------------
+
+# Per-layer (neurons, weights) including the input layer, in stack order.
+SHAPES = {
+    "small": [
+        (841, 0),        # input 29×29
+        (3380, 85),      # conv 5×(4×4): 26×26 maps
+        (845, 0),        # pool 2×2: 13×13
+        (10, 8460),      # dense 10, fan-in 845
+    ],
+    "medium": [
+        (841, 0),
+        (13520, 340),    # conv 20×(4×4): 26×26
+        (3380, 0),       # pool 2×2: 13×13
+        (3240, 20040),   # conv 40×(5×5): 9×9
+        (360, 0),        # pool 3×3: 3×3
+        (150, 54150),    # dense 150, fan-in 360
+        (10, 1510),      # dense 10, fan-in 150
+    ],
+    "large": [
+        (841, 0),
+        (13520, 340),    # conv 20×(4×4): 26×26
+        (3380, 0),       # pool 2×2: 13×13
+        (7260, 10860),   # conv 60×(3×3): 11×11
+        (3600, 216100),  # conv 100×(6×6): 6×6
+        (900, 0),        # pool 2×2: 3×3
+        (150, 135150),   # dense 150, fan-in 900
+        (10, 1510),      # dense 10, fan-in 150
+    ],
+}
+
+# ContentionParams::for_arch (rust/src/simulator/memory.rs): floor at
+# p=1 and Table IV slope through the origin at p=240, against the
+# reference 352 GB/s bandwidth.
+CONTENTION_FLOOR_S = {"small": 7.10e-6, "medium": 1.56e-4, "large": 8.83e-4}
+CONTENTION_AT_240_S = {"small": 1.40e-2, "medium": 3.83e-2, "large": 1.38e-1}
+
+
+def cost_model(arch):
+    """CostModel::new under OpSource::Paper, operation for operation."""
+    shapes = SHAPES[arch]
+    param_bytes = 0.0
+    for _, w in shapes:
+        param_bytes += float(w) * 4.0
+    neuron_bytes = sorted((float(n) * 4.0 for n, _ in shapes), reverse=True)
+    acts = neuron_bytes[0] + neuron_bytes[1]
+    return {
+        "fwd_cycles": FPROP_OPS[arch] * FWD_CYCLES_PER_OP,
+        "bwd_cycles": BPROP_OPS[arch] * BWD_CYCLES_PER_OP,
+        "working_set_bytes": param_bytes + acts,
+        "contention_floor_s": CONTENTION_FLOOR_S[arch],
+        "contention_traffic_bytes": CONTENTION_AT_240_S[arch] * MEMORY_BW_BYTES / 240.0,
+        "param_bytes": param_bytes,
+        "total_weights": float(sum(w for _, w in shapes)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# PhiMachine placement (rust/src/simulator/machine.rs)
+# ---------------------------------------------------------------------------
+
+def sw_threads_on_core(p, t):
+    core = t % CORES
+    return (p + CORES - 1 - core) // CORES
+
+
+def occupancy_of(p, t):
+    return min(sw_threads_on_core(p, t), THREADS_PER_CORE)
+
+
+def oversub_of(p, t):
+    sw = float(sw_threads_on_core(p, t))
+    hw = float(occupancy_of(p, t))
+    return max(sw / hw, 1.0)
+
+
+def machine_cpi(occ):
+    """MachineConfig::cpi (1-based ladder, saturating)."""
+    if occ == 0:
+        return CPI_LADDER[0]
+    return CPI_LADDER[min(occ, len(CPI_LADDER)) - 1]
+
+
+def contention_s(cm, p):
+    """ContentionParams::contention_s."""
+    queue = cm["contention_traffic_bytes"] * float(max(p - 1, 0)) / MEMORY_BW_BYTES
+    return cm["contention_floor_s"] + queue
+
+
+def l2_pressure(ws_bytes, occ):
+    excess = ws_bytes * float(max(occ - 1, 0)) / float(L2_BYTES)
+    return 1.0 + L2_ALPHA * min(excess, L2_RATIO_CAP)
+
+
+def ring_factor(active):
+    return 1.0 + RING_BETA * (float(max(active - 1, 0)) / float(CORES - 1))
+
+
+def image_s(cm, p, t, cycles, updates_weights):
+    """CostModel::image_s, operation for operation."""
+    occ = occupancy_of(p, t)
+    cpi = machine_cpi(occ)
+    oversub = oversub_of(p, t)
+    exec_ = cycles * EXEC_FRACTION * cpi
+    active = min(p, CORES)
+    mem = cycles * (1.0 - EXEC_FRACTION) * l2_pressure(cm["working_set_bytes"], occ) \
+        * ring_factor(active)
+    switch_penalty = 1.0 + OVERSUB_OVERHEAD * (oversub - 1.0)
+    s = (exec_ + mem) * oversub * switch_penalty / CLOCK_HZ
+    if updates_weights:
+        s += contention_s(cm, p)
+    return s
+
+
+def fwd_image_s(cm, p, t):
+    return image_s(cm, p, t, cm["fwd_cycles"], False)
+
+
+def train_image_s(cm, p, t):
+    return image_s(cm, p, t, cm["fwd_cycles"] + cm["bwd_cycles"], True)
+
+
+def chunk_of(total, p, t):
+    base = total // p
+    extra = total % p
+    return base + 1 if t < extra else base
+
+
+def prep_s(cm, instances):
+    return PREP_IO_S + float(instances) * cm["total_weights"] \
+        * PREP_CYCLES_PER_WEIGHT / CLOCK_HZ
+
+
+def epoch_serial_s(cm, i, it):
+    return (float(i) * SERIAL_CYCLES_PER_IMAGE + float(it) * 2.0 + 10.0) / CLOCK_HZ
+
+
+def measured_execution_s(arch, i, it, ep, p):
+    """simulate_chunked (rust/src/simulator/workload.rs): execution_s of
+    the Fig. 4 workload — total minus prep."""
+    cm = cost_model(arch)
+    prep = prep_s(cm, p)
+    serial_epoch = epoch_serial_s(cm, i, it)
+    train_max = val_max = test_max = 0.0
+    window = min(p, CORES)
+    candidates = [0] + list(range(p - window, p))
+    for t in candidates:
+        train_chunk = float(chunk_of(i, p, t))
+        test_chunk = float(chunk_of(it, p, t))
+        fwd = fwd_image_s(cm, p, t)
+        train_max = max(train_max, train_chunk * train_image_s(cm, p, t))
+        val_max = max(val_max, train_chunk * fwd)
+        test_max = max(test_max, test_chunk * fwd)
+    ep_f = float(ep)
+    phases = (prep, train_max * ep_f, val_max * ep_f, test_max * ep_f,
+              serial_epoch * ep_f)
+    total = phases[0] + phases[1] + phases[2] + phases[3] + phases[4]
+    return total - prep
+
+
+def delta_pct(measured, predicted):
+    return abs(measured - predicted) / predicted * 100.0
+
+
+# ---------------------------------------------------------------------------
+# The three conformance grids (sweep::conformance::paper_grids)
+# ---------------------------------------------------------------------------
+
+TABLE10_THREADS = [480, 960, 1920, 3840]
+TABLE11_IMAGES = [(60_000, 10_000), (120_000, 20_000), (240_000, 40_000)]
+TABLE11_EPOCHS = [70, 140, 280]
+TABLE11_THREADS = [240, 480]
+
+# Paper Table IX Δ per architecture, columns (a, b) — report/paper.rs
+# ACCURACY_DELTA_PCT. The headline claim is the per-strategy mean.
+PAPER_DELTA_PCT = {
+    "small": (14.57, 16.35),
+    "medium": (14.76, 7.48),
+    "large": (15.36, 10.22),
+}
+
+# Band tolerances, percentage points: floor for the Table IX scale
+# (Δ ≈ 5–25 %), 2 % relative for the extrapolation grids where Δ runs to
+# hundreds of percent and absolute points would over-tighten.
+MEAN_TOL_PP_FLOOR = 1.0
+MAX_TOL_PP_FLOOR = 2.0
+TOL_REL = 0.02
+CLAIM_HEADROOM_PP = 3.0
+
+
+def mean_tol_pp(mean):
+    return max(MEAN_TOL_PP_FLOOR, TOL_REL * mean)
+
+
+def max_tol_pp(mx):
+    return max(MAX_TOL_PP_FLOOR, TOL_REL * mx)
+
+
+def grid_defs():
+    """(id, spec-json, scenario list) per grid, scenarios in
+    GridSpec::enumerate order (arch → machine → images → epochs →
+    threads → strategy)."""
+    grids = []
+
+    def enumerate_grid(archs, images, epochs, threads, strategies):
+        out = []
+        for arch in archs:
+            eps = epochs if epochs else [EPOCHS[arch]]
+            for (i, it) in images:
+                for ep in eps:
+                    for p in threads:
+                        for s in strategies:
+                            out.append((arch, i, it, ep, p, s))
+        return out
+
+    def spec(archs, images, epochs, threads, strategies):
+        doc = {
+            "archs": archs,
+            "threads": threads,
+            "images": [list(pair) for pair in images],
+        }
+        if epochs:
+            doc["epochs"] = epochs
+        doc["strategies"] = strategies
+        doc["params"] = "paper"
+        doc["measure"] = True
+        return doc
+
+    # Table IX: the measured evaluation domain (42 cells).
+    grids.append((
+        "table9",
+        spec(ARCHS, [(TRAIN_IMAGES, TEST_IMAGES)], [], MEASURED_THREADS,
+             ["a", "b"]),
+        enumerate_grid(ARCHS, [(TRAIN_IMAGES, TEST_IMAGES)], [],
+                       MEASURED_THREADS, ["a", "b"]),
+    ))
+    # Table X: extrapolation beyond the hardware thread count (24 cells).
+    grids.append((
+        "table10",
+        spec(ARCHS, [(TRAIN_IMAGES, TEST_IMAGES)], [], TABLE10_THREADS,
+             ["a", "b"]),
+        enumerate_grid(ARCHS, [(TRAIN_IMAGES, TEST_IMAGES)], [],
+                       TABLE10_THREADS, ["a", "b"]),
+    ))
+    # Table XI: workload scaling, small CNN, strategy (a) (18 cells).
+    grids.append((
+        "table11",
+        spec(["small"], TABLE11_IMAGES, TABLE11_EPOCHS, TABLE11_THREADS,
+             ["a"]),
+        enumerate_grid(["small"], TABLE11_IMAGES, TABLE11_EPOCHS,
+                       TABLE11_THREADS, ["a"]),
+    ))
+    return grids
+
+
+def evaluate(scenarios):
+    """Per-scenario (measured, predicted, Δ)."""
+    rows = []
+    for (arch, i, it, ep, p, s) in scenarios:
+        predicted = (predict_a if s == "a" else predict_b)(arch, i, it, ep, p)
+        measured = measured_execution_s(arch, i, it, ep, p)
+        rows.append((arch, i, it, ep, p, s, measured, predicted,
+                     delta_pct(measured, predicted)))
+    return rows
+
+
+def bands_of(rows):
+    """Per-(arch × strategy) mean/max Δ, groups in axis order, Δ folded
+    in enumeration order (SweepResults::accuracy)."""
+    order, groups = [], {}
+    for row in rows:
+        key = (row[0], row[5])
+        if key not in groups:
+            order.append(key)
+            groups[key] = []
+        groups[key].append(row)
+    bands = []
+    for (arch, strategy) in order:
+        cells = groups[(arch, strategy)]
+        total = 0.0
+        mx, mx_at = -1.0, 0
+        for row in cells:
+            d, p = row[8], row[4]
+            total += d
+            if d > mx:
+                mx, mx_at = d, p
+        mean = total / float(len(cells))
+        bands.append({
+            "arch": arch,
+            "strategy": strategy,
+            "points": len(cells),
+            "mean_delta_pct": mean,
+            "max_delta_pct": mx,
+            "max_at_threads": mx_at,
+            "mean_tol_pp": mean_tol_pp(mean),
+            "max_tol_pp": max_tol_pp(mx),
+        })
+    return bands
+
+
+def overall_mean(rows, strategy):
+    deltas = [r[8] for r in rows if r[5] == strategy]
+    return sum(deltas) / float(len(deltas))
+
+
+def self_check(results):
+    """Pin the micsim replication against the anchors the green Rust
+    test suite asserts."""
+    ci_smoke_self_check()  # the prediction side first
+    # Table III anchors (cost.rs / probe.rs): fwd/bwd per image within
+    # 12 %, prep within 8 %.
+    t3 = {
+        "small": (1.45e-3, 5.3e-3, 12.56),
+        "medium": (12.55e-3, 69.73e-3, 12.7),
+        "large": (148.88e-3, 859.19e-3, 13.5),
+    }
+    for arch, (f_want, b_want, prep_want) in t3.items():
+        cm = cost_model(arch)
+        fwd = fwd_image_s(cm, 1, 0)
+        bwd = train_image_s(cm, 1, 0) - fwd
+        prep = prep_s(cm, 240)
+        assert abs(fwd - f_want) / f_want < 0.12, (arch, "fwd", fwd)
+        assert abs(bwd - b_want) / b_want < 0.12, (arch, "bwd", bwd)
+        assert abs(prep - prep_want) / prep_want < 0.08, (arch, "prep", prep)
+    # Table IV anchor (memory.rs): contention at 240 within 2 %.
+    for arch, want in CONTENTION_AT_240_S.items():
+        got = contention_s(cost_model(arch), 240)
+        assert abs(got - want) / want < 0.02, (arch, got)
+    # Measured-time shape (workload.rs): monotone in threads, sublinear
+    # speedup in (30, 240) at one epoch.
+    ts = {p: measured_execution_s("small", 60_000, 10_000, 1, p)
+          for p in (1, 15, 60, 240)}
+    assert ts[1] > ts[15] > ts[60] > ts[240], ts
+    assert 30.0 < ts[1] / ts[240] < 240.0, ts[1] / ts[240]
+    # figs567.rs: the large CNN's measured time keeps dropping 120→240.
+    m120 = measured_execution_s("large", 60_000, 10_000, 15, 120)
+    m240 = measured_execution_s("large", 60_000, 10_000, 15, 240)
+    assert m240 < m120, (m120, m240)
+    # Δ anchors over the Table IX grid (table9.rs / figs567.rs /
+    # accuracy.rs): per-point < 30, per-group mean < 25, (b) beats (a)
+    # for medium (strictly) and large (within 1 pp).
+    rows9 = results["table9"]
+    assert all(r[8] < 30.0 for r in rows9), max(r[8] for r in rows9)
+    means = {(b["arch"], b["strategy"]): b["mean_delta_pct"]
+             for b in bands_of(rows9)}
+    assert all(m < 25.0 for m in means.values()), means
+    assert means[("medium", "b")] < means[("medium", "a")], means
+    assert means[("large", "b")] < means[("large", "a")] + 1.0, means
+
+
+def build():
+    results = {}
+    grids_out = []
+    for (gid, spec, scenarios) in grid_defs():
+        rows = evaluate(scenarios)
+        results[gid] = rows
+        grids_out.append({"id": gid, "spec": spec, "bands": bands_of(rows)})
+    self_check(results)
+    claims = []
+    for idx, strategy in enumerate(("a", "b")):
+        paper = sum(v[idx] for v in PAPER_DELTA_PCT.values()) / 3.0
+        observed = overall_mean(results["table9"], strategy)
+        claims.append({
+            "strategy": strategy,
+            "grid": "table9",
+            "paper_mean_pct": paper,
+            "ceiling_pct": max(paper, observed + CLAIM_HEADROOM_PP),
+        })
+    return {
+        "kind": "micdl-conformance-baseline",
+        "version": 1,
+        "claims": claims,
+        "grids": grids_out,
+    }, results
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--write", action="store_true",
+                    help="overwrite baselines/measured_smoke.json "
+                         "(default: self-check + print the bands only)")
+    args = ap.parse_args()
+    doc, results = build()
+    for grid in doc["grids"]:
+        print(f"{grid['id']}: {len(results[grid['id']])} cells")
+        for band in grid["bands"]:
+            print(f"  {band['arch']}/{band['strategy']}: "
+                  f"mean Δ {band['mean_delta_pct']:.3f}%  "
+                  f"max Δ {band['max_delta_pct']:.3f}% "
+                  f"@ p={band['max_at_threads']} "
+                  f"({band['points']} points)")
+    for claim in doc["claims"]:
+        print(f"claim {claim['strategy']}: paper {claim['paper_mean_pct']:.2f}% "
+              f"ceiling {claim['ceiling_pct']:.2f}%")
+    if not args.write:
+        print("self-check OK; pass --write to overwrite measured_smoke.json")
+        return
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "measured_smoke.json")
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

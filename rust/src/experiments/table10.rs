@@ -9,13 +9,14 @@ use crate::experiments::ExpOptions;
 use crate::report::{paper, Table};
 use crate::sweep::{GridSpec, SweepRunner};
 
+/// The Table X sweep grid ([`GridSpec::table10`], prediction-only) with
+/// the experiment's parameter provenance applied.
+pub fn grid(opts: &ExpOptions) -> GridSpec {
+    GridSpec { params: opts.params, ..GridSpec::table10() }
+}
+
 pub fn run(opts: &ExpOptions) -> Result<String> {
-    let grid = GridSpec {
-        threads: paper::TABLE10_THREADS.to_vec(),
-        params: opts.params,
-        ..GridSpec::default()
-    };
-    let res = SweepRunner::new(0).run(&grid)?;
+    let res = SweepRunner::new(0).run(&grid(opts))?;
     let mut t = Table::new(
         "Table X — predicted minutes for 480–3,840 threads (ours | paper)",
         &[

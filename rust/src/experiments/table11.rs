@@ -4,23 +4,19 @@
 //! image/epoch/thread axes, strategy (a) only); this module formats the
 //! results next to the paper's published cells.
 
-use crate::config::ArchSpec;
 use crate::error::Result;
 use crate::experiments::ExpOptions;
 use crate::report::{paper, Table};
-use crate::sweep::{GridSpec, Strategy, SweepRunner};
+use crate::sweep::{GridSpec, SweepRunner};
+
+/// The Table XI sweep grid ([`GridSpec::table11`], prediction-only) with
+/// the experiment's parameter provenance applied.
+pub fn grid(opts: &ExpOptions) -> GridSpec {
+    GridSpec { params: opts.params, ..GridSpec::table11() }
+}
 
 pub fn run(opts: &ExpOptions) -> Result<String> {
-    let grid = GridSpec {
-        archs: vec![ArchSpec::small()],
-        images: paper::TABLE11_IMAGES.to_vec(),
-        epochs: paper::TABLE11_EPOCHS.to_vec(),
-        threads: paper::TABLE11_THREADS.to_vec(),
-        strategies: vec![Strategy::A],
-        params: opts.params,
-        ..GridSpec::default()
-    };
-    let res = SweepRunner::new(0).run(&grid)?;
+    let res = SweepRunner::new(0).run(&grid(opts))?;
     let mut t = Table::new(
         "Table XI — minutes when scaling epochs/images, small CNN, model (a) \
          (ours | paper)",
@@ -54,7 +50,7 @@ pub fn run(opts: &ExpOptions) -> Result<String> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::RunConfig;
+    use crate::config::{ArchSpec, RunConfig};
     use crate::perfmodel::{ParamSource, PerfModel, StrategyA};
 
     #[test]

@@ -15,22 +15,17 @@
 //! [`crate::perfmodel::average_delta`] path the module used before the
 //! sweep refactor (`tests::sweep_path_matches_pointwise_average_delta`).
 
-use crate::config::RunConfig;
 use crate::error::{Error, Result};
 use crate::experiments::ExpOptions;
 use crate::report::{paper, Table};
 use crate::sweep::{GridSpec, Strategy, SweepRunner};
 
-/// The Table IX sweep grid: paper architectures × measured thread counts
-/// × both strategies, with micsim measurement enabled.
+/// The Table IX sweep grid ([`GridSpec::table9`]: paper architectures ×
+/// measured thread counts × both strategies, micsim measurement on),
+/// with the experiment's parameter provenance applied. The conformance
+/// harness (`crate::sweep::conformance`) runs the same canonical grid.
 pub fn grid(opts: &ExpOptions) -> GridSpec {
-    GridSpec {
-        threads: RunConfig::MEASURED_THREADS.to_vec(),
-        strategies: vec![Strategy::A, Strategy::B],
-        params: opts.params,
-        measure: true,
-        ..GridSpec::default()
-    }
+    GridSpec { params: opts.params, ..GridSpec::table9() }
 }
 
 pub fn run(opts: &ExpOptions) -> Result<String> {
@@ -66,7 +61,7 @@ pub fn run(opts: &ExpOptions) -> Result<String> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::ArchSpec;
+    use crate::config::{ArchSpec, RunConfig};
     use crate::perfmodel::accuracy::average_delta;
     use crate::perfmodel::both_models;
     use crate::simulator::SimConfig;

@@ -8,6 +8,7 @@
 //! repro simulate --arch A --threads P [...]         run micsim on a workload
 //! repro predict --arch A --threads P [...]          run the performance models
 //! repro sweep [--spec FILE | axis flags]            evaluate a whole scenario grid
+//! repro conformance [--baseline FILE]               measured-mode Δ-band conformance
 //! repro probe --arch A                              Table IV contention probe
 //! repro train [...]                                 really train (engine or PJRT backend)
 //! repro selfcheck                                   invariant + artifact checks
@@ -18,8 +19,9 @@
 //!
 //! Exit codes: 0 on success; 1 on any configuration, parse, or runtime
 //! error (the error is printed to stderr together with the usage text);
-//! 2 when `sweep --compare` finds a golden-baseline regression (the
-//! machine-readable diff goes to stdout, the findings to stderr).
+//! 2 when `sweep --compare` finds a golden-baseline regression or
+//! `conformance --baseline` finds a Δ-band/claim regression (the
+//! machine-readable report goes to stdout, the findings to stderr).
 
 use micdl::config::{ArchSpec, MachineConfig, RunConfig};
 use micdl::coordinator::leader::{LeaderConfig, PjrtTrainer};
@@ -32,7 +34,10 @@ use micdl::perfmodel::{both_models, ParamSource, PerfModel};
 use micdl::report::Table;
 use micdl::simulator::{probe, simulate_training, Fidelity, SimConfig};
 use micdl::sweep::baseline::DEFAULT_TOLERANCE;
-use micdl::sweep::{parse_axis, Baseline, GridSpec, Strategy, SweepRunner};
+use micdl::sweep::{
+    conformance, parse_axis, Baseline, ConformanceBaseline, GridSpec, Strategy,
+    SweepRunner,
+};
 
 /// `format!` into the crate's config error.
 macro_rules! err {
@@ -112,6 +117,14 @@ USAGE:
                  (LIST = comma items and/or inclusive ranges: 1,15,30 or 1..244 or 8..64..8)
                  (--compare alone re-runs the baseline's own grid; grid flags
                   override it. Exit 2 on baseline regression.)
+  repro conformance [--baseline FILE | --write-baseline FILE] [--report OUT.json]
+                 [--workers N | --serial]
+                 (measured-mode Δ-band conformance over the Tables IX-XI
+                  grids. --baseline re-runs the file's grids and checks its
+                  Δ bands and paper claims, exit 2 on regression; --write-
+                  baseline pins the observed bands; with neither flag the
+                  observed bands are printed, nothing asserted. Check mode
+                  puts the report JSON on stdout, findings on stderr.)
   repro probe    [--arch A]
   repro train    [--backend engine|pjrt] [--arch A] [--epochs E] [--images N]
                  [--test-images N] [--workers W] [--lr F] [--artifacts DIR]
@@ -166,6 +179,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "predict" => cmd_predict(&args),
         "sweep" => cmd_sweep(&args),
+        "conformance" => cmd_conformance(&args),
         "probe" => cmd_probe(&args),
         "train" => cmd_train(&args),
         "selfcheck" => cmd_selfcheck(&args),
@@ -446,6 +460,105 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         print!("{}", results.table(true).to_csv());
     } else {
         print!("{}", results.render(args.has("full")));
+    }
+    Ok(())
+}
+
+/// The conformance flag inventory: (name, takes a value). One table
+/// drives both validation passes, like [`SWEEP_FLAGS`].
+const CONFORMANCE_FLAGS: [(&str, bool); 5] = [
+    ("baseline", true),
+    ("write-baseline", true),
+    ("report", true),
+    ("workers", true),
+    ("serial", false),
+];
+
+fn cmd_conformance(args: &Args) -> Result<()> {
+    for (flag, _) in &args.flags {
+        if !CONFORMANCE_FLAGS.iter().any(|&(f, _)| f == flag.as_str()) {
+            bail!("unknown conformance flag --{flag}");
+        }
+    }
+    for (flag, valued) in CONFORMANCE_FLAGS {
+        if valued && args.has(flag) && args.get(flag).is_none() {
+            bail!("--{flag} needs a value");
+        }
+    }
+    if args.has("baseline") && args.has("write-baseline") {
+        bail!("--baseline and --write-baseline are mutually exclusive");
+    }
+    // Only check mode produces a report — accepting --report elsewhere
+    // would silently no-op and leave a script reading a stale file.
+    if args.has("report") && !args.has("baseline") {
+        bail!("--report requires --baseline (only check mode writes a report)");
+    }
+    let workers = if args.has("serial") {
+        1
+    } else {
+        args.get_usize("workers", 0)?
+    };
+    let runner = SweepRunner::new(workers);
+    if let Some(path) = args.get("write-baseline") {
+        let base = ConformanceBaseline::capture(&runner)?;
+        std::fs::write(path, base.to_json().emit())?;
+        eprintln!(
+            "wrote conformance baseline ({} grids, {} bands, {} claims) to {path}",
+            base.grids.len(),
+            base.grids.iter().map(|g| g.bands.len()).sum::<usize>(),
+            base.claims.len()
+        );
+        return Ok(());
+    }
+    let Some(path) = args.get("baseline") else {
+        // Observational mode: run the Tables IX-XI grids and print the
+        // observed Δ bands without asserting anything.
+        let runs = conformance::run_paper_grids(&runner)?;
+        let mut t = Table::new(
+            "measured-mode Δ bands (observed; nothing asserted)",
+            &["grid", "arch", "strat", "points", "mean Δ %", "max Δ %", "at p"],
+        );
+        for (id, res) in &runs {
+            for a in res.accuracy() {
+                t.row(vec![
+                    id.clone(),
+                    a.arch.clone(),
+                    a.strategy.as_str().into(),
+                    a.points.to_string(),
+                    format!("{:.3}", a.mean_delta_pct),
+                    format!("{:.3}", a.max_delta_pct),
+                    a.max_at_threads.to_string(),
+                ]);
+            }
+            for &s in &res.grid.strategies {
+                if let Some(overall) = res.accuracy_overall(s) {
+                    t.row(vec![
+                        id.clone(),
+                        "all".into(),
+                        s.as_str().into(),
+                        overall.points.to_string(),
+                        format!("{:.3}", overall.mean_delta_pct),
+                        format!("{:.3}", overall.max_delta_pct),
+                        overall.max_at_threads.to_string(),
+                    ]);
+                }
+            }
+        }
+        print!("{}", t.render());
+        return Ok(());
+    };
+    // Check mode: stdout carries the machine-readable report, stderr the
+    // human-readable findings. Exit 2 on any band/claim regression.
+    let base = ConformanceBaseline::load(std::path::Path::new(path))?;
+    let report = base.check(&runner)?;
+    let json = report.to_json().emit();
+    if let Some(out) = args.get("report") {
+        std::fs::write(out, &json)?;
+    }
+    println!("{json}");
+    eprint!("{}", report.render());
+    if !report.is_clean() {
+        std::process::exit(2);
     }
     Ok(())
 }

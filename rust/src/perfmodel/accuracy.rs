@@ -75,6 +75,28 @@ impl DeltaAccumulator {
     }
 }
 
+/// A named ceiling for a Δ statistic — the executable form of a paper
+/// accuracy claim ("mean prediction error ≈ 15 % for model (a)"): the
+/// published value alongside the hard ceiling the reproduction's
+/// observed statistic must stay under. The conformance harness
+/// ([`crate::sweep::conformance`]) stores one per strategy and fails the
+/// build when a fresh measured sweep exceeds it.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Band {
+    /// The paper's published value, percent.
+    pub paper_pct: f64,
+    /// Ceiling the observed statistic must not exceed, percent.
+    pub ceiling_pct: f64,
+}
+
+impl Band {
+    /// Whether an observed Δ statistic conforms. Non-finite observations
+    /// never conform — a NaN mean is a broken pipeline, not a pass.
+    pub fn admits(&self, observed_pct: f64) -> bool {
+        observed_pct.is_finite() && observed_pct <= self.ceiling_pct
+    }
+}
+
 /// Per-point Δ series (for figure annotations / debugging).
 pub fn delta_series(
     arch: &ArchSpec,
@@ -147,6 +169,16 @@ mod tests {
         assert_eq!(acc.count(), 3);
         assert_eq!(acc.max_pct(), Some((12.0, 240)));
         assert!((acc.mean_pct().unwrap() - 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn band_admits_at_and_below_ceiling_only() {
+        let band = Band { paper_pct: 15.0, ceiling_pct: 18.0 };
+        assert!(band.admits(10.0));
+        assert!(band.admits(18.0));
+        assert!(!band.admits(18.001));
+        assert!(!band.admits(f64::NAN));
+        assert!(!band.admits(f64::INFINITY));
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub mod contention;
 pub mod strategy_a;
 pub mod strategy_b;
 
-pub use accuracy::{average_delta, delta_pct, DeltaAccumulator};
+pub use accuracy::{average_delta, delta_pct, Band, DeltaAccumulator};
 pub use contention::ContentionSource;
 pub use strategy_a::StrategyA;
 pub use strategy_b::StrategyB;

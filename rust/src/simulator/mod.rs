@@ -90,6 +90,84 @@ pub struct SimConfig {
     pub seed: u64,
 }
 
+/// Order-stable FNV-1a accumulator for [`SimConfig::fingerprint`].
+struct Fnv(u64);
+
+impl Fnv {
+    fn new() -> Fnv {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+
+    fn bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0100_0000_01b3);
+        }
+    }
+
+    fn f64(&mut self, v: f64) {
+        self.bytes(&v.to_bits().to_le_bytes());
+    }
+
+    fn u64(&mut self, v: u64) {
+        self.bytes(&v.to_le_bytes());
+    }
+
+    fn str(&mut self, s: &str) {
+        self.u64(s.len() as u64);
+        self.bytes(s.as_bytes());
+    }
+}
+
+impl SimConfig {
+    /// Order-stable fingerprint over every field (machine included) — the
+    /// simulator's memoization hook. The sweep cache
+    /// ([`crate::sweep::SweepCache`]) keys micsim cost models and
+    /// measurements by this, so *any* change to the simulator
+    /// configuration invalidates memoized entries instead of silently
+    /// reusing stale ones. The `seed` is folded in too: two configs that
+    /// differ only in seed get distinct keys, which keeps the measured
+    /// path seed-stable by construction (and the chunked path is
+    /// seed-independent anyway — asserted in `tests/proptests.rs`).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv::new();
+        let m = &self.machine;
+        h.str(&m.name);
+        h.u64(m.cores as u64);
+        h.u64(m.threads_per_core as u64);
+        h.f64(m.clock_hz);
+        h.u64(m.simd_lanes as u64);
+        h.u64(m.memory_channels as u64);
+        h.f64(m.memory_bw_bytes);
+        h.u64(m.l1_bytes as u64);
+        h.u64(m.l2_bytes as u64);
+        h.u64(m.cpi_ladder.len() as u64);
+        for &cpi in &m.cpi_ladder {
+            h.f64(cpi);
+        }
+        h.u64(match self.op_source {
+            OpSource::Paper => 0,
+            OpSource::Computed => 1,
+        });
+        h.f64(self.fwd_cycles_per_op);
+        h.f64(self.bwd_cycles_per_op);
+        h.f64(self.exec_fraction);
+        h.f64(self.l2_alpha);
+        h.f64(self.l2_ratio_cap);
+        h.f64(self.ring_beta);
+        h.f64(self.prep_io_s);
+        h.f64(self.prep_cycles_per_weight);
+        h.f64(self.serial_cycles_per_image);
+        h.f64(self.oversub_overhead);
+        h.u64(match self.fidelity {
+            Fidelity::PerImage => 0,
+            Fidelity::Chunked => 1,
+        });
+        h.u64(self.seed);
+        h.0
+    }
+}
+
 impl Default for SimConfig {
     fn default() -> Self {
         SimConfig {
@@ -124,5 +202,30 @@ mod tests {
         assert_eq!(cfg.machine.cores, 61);
         assert_eq!(cfg.op_source, OpSource::Paper);
         assert!(cfg.exec_fraction > 0.0 && cfg.exec_fraction <= 1.0);
+    }
+
+    #[test]
+    fn fingerprint_is_stable_for_equal_configs() {
+        assert_eq!(
+            SimConfig::default().fingerprint(),
+            SimConfig::default().fingerprint()
+        );
+    }
+
+    #[test]
+    fn fingerprint_changes_with_every_field_class() {
+        let base = SimConfig::default().fingerprint();
+        let mut cost = SimConfig::default();
+        cost.fwd_cycles_per_op += 1.0;
+        assert_ne!(cost.fingerprint(), base);
+        let mut machine = SimConfig::default();
+        machine.machine.clock_hz *= 2.0;
+        assert_ne!(machine.fingerprint(), base);
+        let mut fidelity = SimConfig::default();
+        fidelity.fidelity = Fidelity::PerImage;
+        assert_ne!(fidelity.fingerprint(), base);
+        let mut seed = SimConfig::default();
+        seed.seed ^= 1;
+        assert_ne!(seed.fingerprint(), base);
     }
 }

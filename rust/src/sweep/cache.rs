@@ -52,22 +52,61 @@ impl CacheStats {
 }
 
 /// The per-sweep memo: models, cost models, and micsim measurements.
+///
+/// Measured-mode entries (cost models and measurements) are keyed by the
+/// [`SimConfig::fingerprint`] of the cache's simulator configuration in
+/// addition to their axes, so [`SweepCache::set_sim`] invalidates them
+/// wholesale — a changed simulator must never serve stale measurements.
 pub struct SweepCache {
+    /// Base simulator configuration for the measured path; the machine
+    /// field is overridden per scenario by the grid's machine axis.
+    sim: SimConfig,
+    sim_fp: u64,
     models: Mutex<HashMap<(String, Strategy, usize), SharedModel>>,
-    costs: Mutex<HashMap<(String, usize), Arc<CostModel>>>,
-    measured: Mutex<HashMap<(String, usize, usize, usize, usize, usize), f64>>,
+    costs: Mutex<HashMap<(String, usize, u64), Arc<CostModel>>>,
+    measured: Mutex<HashMap<(String, usize, usize, usize, usize, usize, u64), f64>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
 
 impl SweepCache {
     pub fn new() -> SweepCache {
+        SweepCache::with_sim(SimConfig::default())
+    }
+
+    /// A cache whose measured path runs under `sim` (the
+    /// `SweepRunner::run_with_sim` hook).
+    pub fn with_sim(sim: SimConfig) -> SweepCache {
         SweepCache {
+            sim_fp: sim.fingerprint(),
+            sim,
             models: Mutex::new(HashMap::new()),
             costs: Mutex::new(HashMap::new()),
             measured: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+        }
+    }
+
+    /// The simulator configuration the measured path runs under.
+    pub fn sim(&self) -> &SimConfig {
+        &self.sim
+    }
+
+    /// Swap the simulator configuration. Memoized cost models and
+    /// measurements keyed under the old fingerprint become unreachable
+    /// (but are retained: switching back re-hits them).
+    pub fn set_sim(&mut self, sim: SimConfig) {
+        self.sim_fp = sim.fingerprint();
+        self.sim = sim;
+    }
+
+    /// The effective simulator configuration for one scenario: the base
+    /// `sim` with the scenario's machine substituted in.
+    fn sim_for(&self, grid: &GridSpec, scn: &Scenario) -> SimConfig {
+        SimConfig {
+            machine: grid.machines[scn.machine].clone(),
+            ..self.sim.clone()
         }
     }
 
@@ -104,15 +143,15 @@ impl SweepCache {
             .clone())
     }
 
-    /// The micsim cost model for (architecture, machine), shared by every
-    /// measured workload on that pair.
-    pub fn cost(&self, grid: &GridSpec, scn: &Scenario, sim: &SimConfig) -> Result<Arc<CostModel>> {
+    /// The micsim cost model for (architecture, machine, sim config),
+    /// shared by every measured workload on that triple.
+    pub fn cost(&self, grid: &GridSpec, scn: &Scenario) -> Result<Arc<CostModel>> {
         let arch = &grid.archs[scn.arch];
-        let key = (arch.name.clone(), scn.machine);
+        let key = (arch.name.clone(), scn.machine, self.sim_fp);
         if let Some(cost) = self.probe(&self.costs, &key) {
             return Ok(cost);
         }
-        let built = Arc::new(CostModel::new(arch, sim)?);
+        let built = Arc::new(CostModel::new(arch, &self.sim_for(grid, scn))?);
         Ok(self
             .costs
             .lock()
@@ -133,15 +172,13 @@ impl SweepCache {
             scn.train_images,
             scn.test_images,
             scn.epochs,
+            self.sim_fp,
         );
         if let Some(v) = self.probe(&self.measured, &key) {
             return Ok(v);
         }
-        let sim = SimConfig {
-            machine: grid.machines[scn.machine].clone(),
-            ..SimConfig::default()
-        };
-        let cost = self.cost(grid, scn, &sim)?;
+        let sim = self.sim_for(grid, scn);
+        let cost = self.cost(grid, scn)?;
         let v = simulate_training_with(&cost, &scn.run(), &sim)?.execution_s;
         Ok(*self.measured.lock().unwrap().entry(key).or_insert(v))
     }
@@ -206,5 +243,81 @@ mod tests {
     fn hit_rate_is_well_defined_when_empty() {
         let cache = SweepCache::new();
         assert_eq!(cache.stats().hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn measured_hit_miss_accounting_across_cells_sharing_workload() {
+        // 2 thread counts × 2 strategies: 4 cells, but only 2 distinct
+        // (arch, machine, workload) measurement keys and 1 cost model.
+        let grid = GridSpec {
+            strategies: vec![Strategy::A, Strategy::B],
+            measure: true,
+            ..tiny_grid()
+        };
+        let cache = SweepCache::new();
+        let scenarios = grid.enumerate();
+        assert_eq!(scenarios.len(), 4);
+        for scn in &scenarios {
+            cache.measured_s(&grid, scn).unwrap();
+        }
+        // Lookups: 4 measured probes + 2 cost probes (only on the two
+        // measured misses). Misses: 2 measured + 1 cost; hits: 2 measured
+        // (strategy b re-reads strategy a's workload) + 1 cost.
+        let stats = cache.stats();
+        assert_eq!(stats.lookups(), 6);
+        assert_eq!(stats.misses, 3);
+        assert_eq!(stats.hits, 3);
+        // Same workload key → bit-identical value, across strategies.
+        let a = cache.measured_s(&grid, &scenarios[0]).unwrap();
+        let b = cache.measured_s(&grid, &scenarios[1]).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    #[test]
+    fn sim_config_change_invalidates_measured_entries() {
+        let grid = GridSpec { measure: true, ..tiny_grid() };
+        let scenarios = grid.enumerate();
+        let scn = &scenarios[0];
+        let mut cache = SweepCache::new();
+
+        let base = cache.measured_s(&grid, scn).unwrap();
+        cache.measured_s(&grid, scn).unwrap();
+        // Miss (measured + cost) then one measured hit.
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 2 });
+
+        // A doubled per-op cost is a different simulator: stale entries
+        // must not serve it.
+        let mut slower = SimConfig::default();
+        slower.fwd_cycles_per_op *= 2.0;
+        slower.bwd_cycles_per_op *= 2.0;
+        cache.set_sim(slower);
+        let slow = cache.measured_s(&grid, scn).unwrap();
+        assert!(slow > base, "{slow} !> {base}");
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 4 });
+
+        // Switching back re-hits the original entries bit-for-bit.
+        cache.set_sim(SimConfig::default());
+        let back = cache.measured_s(&grid, scn).unwrap();
+        assert_eq!(back.to_bits(), base.to_bits());
+        assert_eq!(cache.stats(), CacheStats { hits: 2, misses: 4 });
+    }
+
+    #[test]
+    fn seed_only_change_invalidates_keys_but_not_values() {
+        // The measured path is seed-stable: a different seed is a
+        // different cache key (conservative invalidation) but the chunked
+        // simulation is deterministic and seed-independent.
+        let grid = GridSpec { measure: true, ..tiny_grid() };
+        let scenarios = grid.enumerate();
+        let scn = &scenarios[0];
+        let mut cache = SweepCache::new();
+        let a = cache.measured_s(&grid, scn).unwrap();
+        let mut reseeded = SimConfig::default();
+        reseeded.seed ^= 0xDEAD_BEEF;
+        cache.set_sim(reseeded);
+        let b = cache.measured_s(&grid, scn).unwrap();
+        assert_eq!(a.to_bits(), b.to_bits());
+        // Both were misses on their own key.
+        assert_eq!(cache.stats().misses, 4);
     }
 }

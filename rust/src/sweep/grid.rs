@@ -258,6 +258,44 @@ impl GridSpec {
         out
     }
 
+    /// The Table IX evaluation grid: the three paper architectures × the
+    /// measured thread counts × both strategies, micsim measurement on
+    /// (42 cells). The canonical measured domain — `repro exp table9`
+    /// and the conformance harness both run exactly this grid.
+    pub fn table9() -> GridSpec {
+        GridSpec {
+            threads: RunConfig::MEASURED_THREADS.to_vec(),
+            measure: true,
+            ..GridSpec::default()
+        }
+    }
+
+    /// The Table X grid: extrapolation beyond the 244 hardware threads
+    /// (24 cells). Prediction-only by default — the paper had no testbed
+    /// measurements past 244 threads; the conformance harness turns
+    /// `measure` on to pin micsim's stand-in numbers instead.
+    pub fn table10() -> GridSpec {
+        GridSpec {
+            threads: crate::report::paper::TABLE10_THREADS.to_vec(),
+            ..GridSpec::default()
+        }
+    }
+
+    /// The Table XI grid: workload scaling — small CNN × the Table XI
+    /// image/epoch/thread axes, strategy (a) only (18 cells),
+    /// prediction-only by default like [`GridSpec::table10`].
+    pub fn table11() -> GridSpec {
+        use crate::report::paper;
+        GridSpec {
+            archs: vec![ArchSpec::small()],
+            images: paper::TABLE11_IMAGES.to_vec(),
+            epochs: paper::TABLE11_EPOCHS.to_vec(),
+            threads: paper::TABLE11_THREADS.to_vec(),
+            strategies: vec![Strategy::A],
+            ..GridSpec::default()
+        }
+    }
+
     /// Build a grid from a JSON spec document. Every key is optional and
     /// falls back to the paper defaults; unknown keys are rejected (a
     /// typo must not silently sweep the wrong grid). `threads` and
@@ -519,6 +557,26 @@ mod tests {
         let large = scenarios.iter().find(|s| s.arch == 2).unwrap();
         assert_eq!(large.epochs, 15);
         assert_eq!(scenarios[0].epochs, 70);
+    }
+
+    #[test]
+    fn paper_grids_have_table_shapes_and_round_trip() {
+        let t9 = GridSpec::table9();
+        assert_eq!(t9.len(), 42);
+        assert!(t9.measure, "Table IX is the measured evaluation");
+        let t10 = GridSpec::table10();
+        assert_eq!(t10.len(), 24);
+        assert!(!t10.measure);
+        assert_eq!(t10.threads, vec![480, 960, 1920, 3840]);
+        let t11 = GridSpec::table11();
+        assert_eq!(t11.len(), 18);
+        assert_eq!(t11.strategies, vec![Strategy::A]);
+        for grid in [t9, t10, t11] {
+            assert!(grid.validate().is_ok());
+            // All three must baseline: spec round-trip is exact.
+            let back = GridSpec::from_json(&grid.to_spec_json().unwrap().emit()).unwrap();
+            assert_eq!(back, grid);
+        }
     }
 
     #[test]

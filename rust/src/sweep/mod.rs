@@ -17,20 +17,27 @@
 //!   accuracy aggregation (mean/max Δ per architecture × strategy — the
 //!   sweep-native Table IX), JSON dump, and paper-style tables;
 //! * [`baseline`] — [`Baseline`]/[`DiffReport`], the golden-baseline
-//!   regression mode behind `repro sweep --compare`/`--write-baseline`.
+//!   regression mode behind `repro sweep --compare`/`--write-baseline`;
+//! * [`conformance`] — the measured-mode conformance harness: Δ-band
+//!   golden baselines over the Tables IX–XI grids plus the paper's
+//!   ≈ 15 %/11 % mean-Δ claims, behind `repro conformance`.
 //!
-//! The `repro sweep` subcommand drives it from the CLI, and the
-//! `experiments` table/figure entries for Figs. 5–7 and Tables IX/X/XI
-//! are thin grid definitions executed here.
+//! The `repro sweep`/`repro conformance` subcommands drive it from the
+//! CLI, and the `experiments` table/figure entries for Figs. 5–7 and
+//! Tables IX/X/XI are thin grid definitions executed here.
 
 pub mod baseline;
 pub mod cache;
+pub mod conformance;
 pub mod grid;
 pub mod runner;
 pub mod summary;
 
 pub use baseline::{Baseline, BaselineCell, CellDiff, DiffReport};
 pub use cache::{CacheStats, SweepCache};
+pub use conformance::{
+    BandCheck, BandSpec, ClaimCheck, ClaimSpec, ConformanceBaseline, ConformanceReport,
+};
 pub use grid::{parse_axis, GridSpec, Scenario, Strategy};
 pub use runner::SweepRunner;
 pub use summary::{AccuracyAggregate, ScenarioResult, SweepResults};

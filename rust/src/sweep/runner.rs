@@ -44,9 +44,24 @@ impl SweepRunner {
 
     /// Evaluate every scenario of `grid`.
     pub fn run(&self, grid: &GridSpec) -> Result<SweepResults> {
+        self.run_with_cache(grid, SweepCache::new())
+    }
+
+    /// Evaluate with an explicit simulator configuration for the measured
+    /// path — micsim memoization keys include the config's
+    /// [`crate::simulator::SimConfig::fingerprint`], so sweeps under
+    /// different simulator settings never share stale measurements.
+    pub fn run_with_sim(
+        &self,
+        grid: &GridSpec,
+        sim: &crate::simulator::SimConfig,
+    ) -> Result<SweepResults> {
+        self.run_with_cache(grid, SweepCache::with_sim(sim.clone()))
+    }
+
+    fn run_with_cache(&self, grid: &GridSpec, cache: SweepCache) -> Result<SweepResults> {
         grid.validate()?;
         let scenarios = grid.enumerate();
-        let cache = SweepCache::new();
         let started = Instant::now();
         let results = if self.workers <= 1 || scenarios.len() < 2 {
             let mut out = Vec::with_capacity(scenarios.len());
@@ -172,6 +187,32 @@ mod tests {
         assert!(m > 0.0);
         let d = r.delta_pct.unwrap();
         assert!((0.0..100.0).contains(&d), "Δ = {d}");
+    }
+
+    #[test]
+    fn run_with_sim_drives_the_measured_path() {
+        use crate::simulator::SimConfig;
+        let grid = GridSpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![15],
+            strategies: vec![Strategy::B],
+            measure: true,
+            ..GridSpec::default()
+        };
+        let runner = SweepRunner::serial();
+        let default = runner.run(&grid).unwrap();
+        let mut slower = SimConfig::default();
+        slower.fwd_cycles_per_op *= 2.0;
+        let slow = runner.run_with_sim(&grid, &slower).unwrap();
+        assert!(
+            slow.results[0].measured_s.unwrap() > default.results[0].measured_s.unwrap()
+        );
+        // With the default config it is bit-identical to plain run().
+        let same = runner.run_with_sim(&grid, &SimConfig::default()).unwrap();
+        assert_eq!(
+            same.results[0].measured_s.unwrap().to_bits(),
+            default.results[0].measured_s.unwrap().to_bits()
+        );
     }
 
     #[test]

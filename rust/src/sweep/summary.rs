@@ -142,6 +142,33 @@ impl SweepResults {
         out
     }
 
+    /// The whole-grid aggregate for one strategy: every architecture's
+    /// measured Δ folded in enumeration order. This is the per-strategy
+    /// headline statistic the paper's accuracy claim quotes (mean Δ
+    /// ≈ 15 % for model (a), ≈ 11 % for model (b)) and what
+    /// [`crate::sweep::conformance`] checks claim ceilings against.
+    /// `None` for prediction-only grids or strategies without points.
+    pub fn accuracy_overall(&self, strategy: Strategy) -> Option<AccuracyAggregate> {
+        let mut acc = DeltaAccumulator::default();
+        for r in &self.results {
+            if r.scenario.strategy != strategy {
+                continue;
+            }
+            if let Some(d) = r.delta_pct {
+                acc.push(d, r.scenario.threads);
+            }
+        }
+        let (mean, (max, max_at)) = (acc.mean_pct()?, acc.max_pct()?);
+        Some(AccuracyAggregate {
+            arch: "all".into(),
+            strategy,
+            points: acc.count(),
+            mean_delta_pct: mean,
+            max_delta_pct: max,
+            max_at_threads: max_at,
+        })
+    }
+
     /// The aggregate for one (architecture, strategy) group, if measured.
     /// Folds only the requested group — callers wanting every group
     /// should use [`SweepResults::accuracy`] once instead of repeated
@@ -455,6 +482,40 @@ mod tests {
             .sum::<f64>()
             / 3.0;
         assert_eq!(acc[0].mean_delta_pct.to_bits(), by_hand.to_bits());
+    }
+
+    #[test]
+    fn accuracy_overall_folds_all_archs_in_enumeration_order() {
+        let grid = GridSpec {
+            archs: vec![ArchSpec::small(), ArchSpec::medium()],
+            threads: vec![1, 240],
+            strategies: vec![Strategy::A, Strategy::B],
+            measure: true,
+            ..GridSpec::default()
+        };
+        let res = SweepRunner::serial().run(&grid).unwrap();
+        let overall = res.accuracy_overall(Strategy::A).unwrap();
+        assert_eq!(overall.arch, "all");
+        assert_eq!(overall.points, 4);
+        // Mean equals the enumeration-order fold over both archs.
+        let by_hand: f64 = res
+            .results
+            .iter()
+            .filter(|r| r.scenario.strategy == Strategy::A)
+            .map(|r| r.delta_pct.unwrap())
+            .sum::<f64>()
+            / 4.0;
+        assert_eq!(overall.mean_delta_pct.to_bits(), by_hand.to_bits());
+        // Max is the worst per-group max.
+        let worst = res
+            .accuracy()
+            .iter()
+            .filter(|a| a.strategy == Strategy::A)
+            .map(|a| a.max_delta_pct)
+            .fold(0.0f64, f64::max);
+        assert_eq!(overall.max_delta_pct, worst);
+        // Prediction-only grids have no overall aggregate.
+        assert!(run_small().accuracy_overall(Strategy::A).is_none());
     }
 
     #[test]

@@ -1,0 +1,221 @@
+//! Measured-mode conformance harness integration tests: capture a
+//! baseline, check it clean, perturb it and watch it fail — at the
+//! library level, against the committed `baselines/measured_smoke.json`,
+//! and through the real `repro conformance` CLI (exit code 2).
+
+use std::process::{Command, Output};
+
+use micdl::sweep::conformance::{self, ConformanceBaseline};
+use micdl::sweep::SweepRunner;
+use micdl::util::json::Json;
+use micdl::util::tmp::TempDir;
+
+fn repro(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .output()
+        .expect("spawn repro")
+}
+
+fn committed_baseline_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../baselines/measured_smoke.json")
+}
+
+// ---------------------------------------------------------------------------
+// Library level
+// ---------------------------------------------------------------------------
+
+#[test]
+fn capture_then_check_round_trips_clean() {
+    let runner = SweepRunner::new(0);
+    let base = ConformanceBaseline::capture(&runner).unwrap();
+    // Tables IX (6 groups) + X (6) + XI (1), claims for both strategies.
+    assert_eq!(base.grids.len(), 3);
+    assert_eq!(
+        base.grids.iter().map(|g| g.bands.len()).sum::<usize>(),
+        13
+    );
+    assert_eq!(base.claims.len(), 2);
+    // Through the file format, against a fresh re-run of the embedded
+    // grids.
+    let reparsed = ConformanceBaseline::parse(&base.to_json().emit()).unwrap();
+    let report = reparsed.check(&runner).unwrap();
+    assert!(report.is_clean(), "{}", report.render());
+    assert_eq!(report.scenarios, 42 + 24 + 18);
+    assert_eq!(report.bands.len(), 13);
+    assert_eq!(report.claims.len(), 2);
+}
+
+#[test]
+fn serial_and_parallel_checks_agree_bit_for_bit() {
+    // The acceptance criterion: measured-mode sweeps are bit-identical
+    // parallel vs serial, so the whole conformance report is too.
+    let base = ConformanceBaseline::capture(&SweepRunner::serial()).unwrap();
+    let serial = base.check(&SweepRunner::serial()).unwrap();
+    let parallel = base.check(&SweepRunner::new(4)).unwrap();
+    assert_eq!(serial.to_json().emit(), parallel.to_json().emit());
+    assert!(serial.is_clean(), "{}", serial.render());
+}
+
+// ---------------------------------------------------------------------------
+// The committed measured golden baseline
+// ---------------------------------------------------------------------------
+
+#[test]
+fn committed_measured_smoke_baseline_is_clean() {
+    // The measured-mode analogue of the ci_smoke check: the Δ bands in
+    // baselines/measured_smoke.json must hold against a fresh run of the
+    // Tables IX-XI grids. This is the paper's accuracy claim as a
+    // regression test — on an intentional simulator or model change,
+    // regenerate the file (baselines/README.md).
+    let base = ConformanceBaseline::load(&committed_baseline_path())
+        .expect("load baselines/measured_smoke.json");
+    assert_eq!(base.grids.len(), 3);
+    let ids: Vec<&str> = base.grids.iter().map(|g| g.id.as_str()).collect();
+    assert_eq!(ids, vec!["table9", "table10", "table11"]);
+    let report = base.check(&SweepRunner::serial()).unwrap();
+    assert!(report.is_clean(), "{}", report.render());
+    assert_eq!(report.scenarios, 84);
+    // The claims bound the paper's headline numbers: mean Δ over the
+    // Table IX domain stays within ≈ 15 % (a) and ≈ 11 % (b).
+    assert_eq!(report.claims.len(), 2);
+    for claim in &report.claims {
+        assert!(claim.pass);
+        assert!(
+            claim.observed_mean_pct <= claim.claim.band.ceiling_pct,
+            "{} observed {} ceiling {}",
+            claim.claim.strategy,
+            claim.observed_mean_pct,
+            claim.claim.band.ceiling_pct
+        );
+        assert!(claim.claim.band.paper_pct > 10.0 && claim.claim.band.paper_pct < 16.0);
+    }
+}
+
+#[test]
+fn committed_baseline_matches_capture_within_tolerance() {
+    // The committed file was seeded by generate_measured_smoke.py; a
+    // live capture must agree with it band for band (same grids, same
+    // points, means within each band's own tolerance).
+    let committed = ConformanceBaseline::load(&committed_baseline_path()).unwrap();
+    let captured = ConformanceBaseline::capture(&SweepRunner::serial()).unwrap();
+    for (want, got) in committed.grids.iter().zip(captured.grids.iter()) {
+        assert_eq!(want.id, got.id);
+        assert_eq!(want.bands.len(), got.bands.len(), "{}", want.id);
+        for (wb, gb) in want.bands.iter().zip(got.bands.iter()) {
+            assert_eq!((wb.arch.as_str(), wb.strategy), (gb.arch.as_str(), gb.strategy));
+            assert_eq!(wb.points, gb.points);
+            assert!(
+                (wb.mean_delta_pct - gb.mean_delta_pct).abs() <= wb.mean_tol_pp,
+                "{}/{}/{}: committed mean {} vs captured {}",
+                want.id,
+                wb.arch,
+                wb.strategy,
+                wb.mean_delta_pct,
+                gb.mean_delta_pct
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI level (the acceptance path)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cli_check_committed_baseline_writes_report_and_exits_zero() {
+    let dir = TempDir::new("conformance-cli").unwrap();
+    let report_path = dir.path().join("report.json");
+    let out = repro(&[
+        "conformance",
+        "--baseline",
+        committed_baseline_path().to_str().unwrap(),
+        "--serial",
+        "--report",
+        report_path.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let doc = Json::parse(stdout.trim()).unwrap();
+    assert_eq!(doc.get("clean").unwrap().as_bool(), Some(true));
+    assert_eq!(doc.get("scenarios").unwrap().as_usize(), Some(84));
+    assert_eq!(doc.get("bands").unwrap().as_arr().unwrap().len(), 13);
+    // The --report artifact is byte-identical to stdout's payload.
+    let file = std::fs::read_to_string(&report_path).unwrap();
+    assert_eq!(file, stdout.trim());
+    // Findings channel carries the PASS summary.
+    assert!(String::from_utf8_lossy(&out.stderr).contains("PASS"));
+}
+
+#[test]
+fn cli_perturbed_baseline_exits_two_with_named_findings() {
+    let dir = TempDir::new("conformance-cli-fail").unwrap();
+    let path = dir.path().join("perturbed.json");
+    let mut base = ConformanceBaseline::load(&committed_baseline_path()).unwrap();
+    // An impossible claim ceiling and a shifted band.
+    base.claims[0].band.ceiling_pct = 0.01;
+    base.grids[0].bands[0].mean_delta_pct += 50.0;
+    std::fs::write(&path, base.to_json().emit()).unwrap();
+    let out = repro(&["conformance", "--baseline", path.to_str().unwrap(), "--serial"]);
+    assert_eq!(out.status.code(), Some(2), "regression must exit 2");
+    let doc = Json::parse(String::from_utf8_lossy(&out.stdout).trim()).unwrap();
+    assert_eq!(doc.get("clean").unwrap().as_bool(), Some(false));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("BAND REGRESSION"), "{stderr}");
+    assert!(stderr.contains("CLAIM REGRESSION"), "{stderr}");
+    assert!(stderr.contains("FAIL"), "{stderr}");
+}
+
+#[test]
+fn cli_write_baseline_then_check_round_trips() {
+    let dir = TempDir::new("conformance-cli-write").unwrap();
+    let path = dir.path().join("golden.json");
+    let out = repro(&["conformance", "--write-baseline", path.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("3 grids"));
+    let out = repro(&["conformance", "--baseline", path.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let doc = Json::parse(String::from_utf8_lossy(&out.stdout).trim()).unwrap();
+    assert_eq!(doc.get("clean").unwrap().as_bool(), Some(true));
+}
+
+#[test]
+fn cli_observational_mode_prints_bands() {
+    let out = repro(&["conformance", "--serial"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for needle in ["table9", "table10", "table11", "mean Δ %", "all"] {
+        assert!(stdout.contains(needle), "missing {needle:?} in {stdout}");
+    }
+}
+
+#[test]
+fn cli_rejects_unknown_and_conflicting_flags() {
+    let out = repro(&["conformance", "--basline", "x.json"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown conformance flag"));
+    let out = repro(&["conformance", "--baseline"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("needs a value"));
+    let out = repro(&["conformance", "--baseline", "a.json", "--write-baseline", "b.json"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("mutually exclusive"));
+    // --report outside check mode would silently write nothing.
+    let out = repro(&["conformance", "--report", "out.json"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--report requires"));
+}
+
+// ---------------------------------------------------------------------------
+// Paper-grid sanity the harness relies on
+// ---------------------------------------------------------------------------
+
+#[test]
+fn paper_grids_cover_tables_nine_through_eleven() {
+    let grids = conformance::paper_grids();
+    let sizes: Vec<usize> = grids.iter().map(|(_, g)| g.len()).collect();
+    assert_eq!(sizes, vec![42, 24, 18]);
+    for (_, grid) in &grids {
+        assert!(grid.measure);
+    }
+}

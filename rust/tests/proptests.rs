@@ -48,6 +48,49 @@ fn prop_shards_partition_disjointly_and_conserve() {
     }
 }
 
+#[test]
+fn prop_shard_matches_workload_chunk_mapping() {
+    // coordinator::shard and the simulator's ⌈i/p⌉/⌊i/p⌋ mapping must be
+    // the same partition: exhaustively for every (images, p) pair up to
+    // 64×64, then on randomized large pairs.
+    for n in 0..=64usize {
+        for p in 1..=64usize {
+            let shards = Shard::all(n, p);
+            for (t, s) in shards.iter().enumerate() {
+                let want = if t < n % p { n / p + 1 } else { n / p };
+                assert_eq!(s.len(), want, "n={n} p={p} t={t}");
+                assert_eq!(s.len(), workload::chunk_of(n, p, t), "n={n} p={p} t={t}");
+            }
+            if n > 0 {
+                // The slowest worker's share is ⌈n/p⌉ — what the models
+                // fold into their chunk terms (RunConfig::train_chunk).
+                let rc = RunConfig {
+                    train_images: n,
+                    test_images: 0,
+                    epochs: 1,
+                    threads: p,
+                };
+                assert_eq!(rc.train_chunk(), shards[0].len(), "n={n} p={p}");
+            }
+        }
+    }
+    let mut rng = XorShift64::new(1616);
+    for case in 0..CASES {
+        let n = rng.next_below(1_000_000);
+        let p = 1 + rng.next_below(4_096);
+        let t = rng.next_below(p);
+        assert_eq!(
+            Shard::of(n, p, t).len(),
+            workload::chunk_of(n, p, t),
+            "case {case}: n={n} p={p} t={t}"
+        );
+        // Boundary workers carry the ceiling and floor shares.
+        let first = Shard::of(n, p, 0).len();
+        assert_eq!(first, if n % p > 0 { n / p + 1 } else { n / p }, "case {case}");
+        assert_eq!(Shard::of(n, p, p - 1).len(), n / p, "case {case}");
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Machine placement invariants
 // ---------------------------------------------------------------------------
@@ -122,6 +165,77 @@ fn prop_sim_execution_linear_in_epochs() {
             .execution_s;
         let ratio = t3 / t1;
         assert!((ratio - 3.0).abs() < 1e-9, "case {case}: {ratio} {run:?}");
+    }
+}
+
+#[test]
+fn prop_fidelity_modes_agree_across_random_sim_configs() {
+    // The simulator docs claim PerImage ≡ Chunked to float tolerance for
+    // *any* configuration; here the whole SimConfig is randomized, not
+    // just the workload. Generation keeps the physical preconditions of
+    // the chunked window argument: a non-decreasing CPI ladder and
+    // non-negative coefficients, so per-image cost is non-decreasing in
+    // (occupancy, oversubscription) and thread 0 stays the slowest.
+    // Oversubscription (p up to 2× hardware capacity) is included.
+    let mut rng = XorShift64::new(1515);
+    for case in 0..30 {
+        let mut cfg = SimConfig::default();
+        cfg.machine.cores = 1 + rng.next_below(96);
+        cfg.machine.threads_per_core = 1 + rng.next_below(6);
+        cfg.machine.clock_hz = 0.6e9 + rng.next_below(4) as f64 * 0.5e9;
+        let mut cpi = 1.0 + rng.next_below(3) as f64 * 0.25;
+        cfg.machine.cpi_ladder = (0..cfg.machine.threads_per_core)
+            .map(|_| {
+                cpi += rng.next_below(3) as f64 * 0.25;
+                cpi
+            })
+            .collect();
+        cfg.fwd_cycles_per_op = 5.0 + rng.next_below(60) as f64;
+        cfg.bwd_cycles_per_op = 5.0 + rng.next_below(30) as f64;
+        cfg.exec_fraction = 0.3 + rng.next_below(8) as f64 * 0.1;
+        cfg.l2_alpha = rng.next_below(100) as f64 * 0.01;
+        cfg.l2_ratio_cap = 0.5 + rng.next_below(6) as f64;
+        cfg.ring_beta = rng.next_below(60) as f64 * 0.01;
+        cfg.oversub_overhead = rng.next_below(20) as f64 * 0.01;
+        cfg.prep_io_s = rng.next_below(20) as f64;
+        cfg.prep_cycles_per_weight = 1.0 + rng.next_below(30) as f64;
+        cfg.serial_cycles_per_image = rng.next_below(10) as f64;
+        cfg.seed = rng.next_below(1 << 30) as u64;
+        let cap = cfg.machine.cores * cfg.machine.threads_per_core;
+        let run = RunConfig {
+            train_images: 1 + rng.next_below(300),
+            test_images: rng.next_below(80),
+            epochs: 1 + rng.next_below(3),
+            threads: 1 + rng.next_below(cap * 2),
+        };
+        let arch = ArchSpec::paper_archs()[case % 3].clone();
+
+        let mut chunked_cfg = cfg.clone();
+        chunked_cfg.fidelity = Fidelity::Chunked;
+        let a = simulate_training(&arch, &run, &chunked_cfg)
+            .unwrap_or_else(|e| panic!("case {case}: {e} ({run:?})"));
+        let mut image_cfg = cfg.clone();
+        image_cfg.fidelity = Fidelity::PerImage;
+        let b = simulate_training(&arch, &run, &image_cfg).unwrap();
+        assert!(
+            (a.total_s - b.total_s).abs() / b.total_s < 1e-9,
+            "case {case}: chunked {} vs per-image {} (cfg={cfg:?} run={run:?})",
+            a.total_s,
+            b.total_s
+        );
+        assert!(b.events > 0 && a.events == 0, "case {case}");
+
+        // Determinism + seed-stability of the measured path: an
+        // identical config replays bit-for-bit, and a config differing
+        // only in seed produces bit-identical times too (the seed feeds
+        // the cache fingerprint, not the arithmetic).
+        let replay = simulate_training(&arch, &run, &chunked_cfg).unwrap();
+        assert_eq!(replay.total_s.to_bits(), a.total_s.to_bits(), "case {case}");
+        let mut reseeded = chunked_cfg.clone();
+        reseeded.seed ^= 0x5EED_F00D;
+        assert_ne!(reseeded.fingerprint(), chunked_cfg.fingerprint());
+        let c = simulate_training(&arch, &run, &reseeded).unwrap();
+        assert_eq!(c.total_s.to_bits(), a.total_s.to_bits(), "case {case}");
     }
 }
 
