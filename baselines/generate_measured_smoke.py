@@ -17,6 +17,14 @@ aggregates the per-cell Δ = |measured − predicted| / predicted × 100
 into per-(grid × architecture × strategy) Δ bands for the three paper
 evaluation grids (Tables IX, X, XI).
 
+It also seeds baselines/closed_loop_smoke.json (--write-closed-loop):
+the Table IX grid under --params sim, replicating the probe-parameter
+model constructors (StrategyA::with_sim / StrategyB::with_sim under
+ParamSource::Simulator — computed op counts, the calibrated
+OperationFactor, per-image times and contention probed from the cost
+model) against the same measured path. Canonical regeneration is
+`repro conformance --write-closed-loop`.
+
 Before writing anything it self-checks against every anchor the green
 Rust test suite pins:
 
@@ -45,7 +53,7 @@ import os
 from generate_ci_smoke import (
     ARCHS, CLOCK_HZ, CORES, EPOCHS, MACHINE, MEASURED_THREADS,
     TEST_IMAGES, THREADS_PER_CORE, TRAIN_IMAGES,
-    CPI_LADDER, FPROP_OPS, BPROP_OPS,
+    CPI_LADDER, FPROP_OPS, BPROP_OPS, PREP_OPS, cpi,
     predict_a, predict_b, self_check as ci_smoke_self_check,
 )
 
@@ -447,12 +455,226 @@ def build():
     }, results
 
 
+# ---------------------------------------------------------------------------
+# Closed-loop grid (table9 under --params sim): model parameters probed
+# from the same simulator that produces the measurements
+# (GridSpec::table9_closed_loop / sweep::conformance::closed_loop_grids)
+# ---------------------------------------------------------------------------
+
+CLOSED_LOOP_GRID = "table9_closed_loop"
+
+# The paper layer stacks (rust/src/config/arch.rs), as
+# (kind, arg1, arg2) over the 29x29 input: conv(maps, kernel),
+# pool(window), dense(units).
+LAYER_STACKS = {
+    "small": [("conv", 5, 4), ("pool", 2, 0), ("dense", 10, 0)],
+    "medium": [("conv", 20, 4), ("pool", 2, 0), ("conv", 40, 5), ("pool", 3, 0),
+               ("dense", 150, 0), ("dense", 10, 0)],
+    "large": [("conv", 20, 4), ("pool", 2, 0), ("conv", 60, 3), ("conv", 100, 6),
+              ("pool", 2, 0), ("dense", 150, 0), ("dense", 10, 0)],
+}
+
+# opcount.rs counting constants.
+ACT_FWD_OPS = 4
+ACT_BWD_OPS = 3
+WEIGHT_UPDATE_OPS = 3
+
+
+def computed_op_counts(arch):
+    """opcount::count (OpSource::Computed), operation for operation:
+    first-principles fwd/bwd totals from the layer geometry."""
+    hw, maps, prev_neurons = 29, 1, 29 * 29
+    fwd_total, bwd_total = 0, 0
+    for (kind, a, b) in LAYER_STACKS[arch]:
+        if kind == "conv":
+            out_hw = hw - b + 1
+            neurons = a * out_hw * out_hw
+            fan_in = maps * b * b
+            weights = a * (fan_in + 1)
+            fwd_total += neurons * (2 * fan_in + ACT_FWD_OPS)
+            bwd_total += neurons * (2 * fan_in + ACT_BWD_OPS) \
+                + weights * WEIGHT_UPDATE_OPS
+            hw, maps, prev_neurons = out_hw, a, neurons
+        elif kind == "pool":
+            out_hw = hw // a
+            neurons = maps * out_hw * out_hw
+            fwd_total += neurons * (a * a + 1)
+            bwd_total += neurons * 2
+            hw, prev_neurons = out_hw, neurons
+        else:  # dense
+            fan_in = prev_neurons
+            weights = a * (fan_in + 1)
+            fwd_total += a * (2 * fan_in + ACT_FWD_OPS)
+            bwd_total += a * (2 * fan_in + ACT_BWD_OPS) \
+                + weights * WEIGHT_UPDATE_OPS
+            prev_neurons = a
+    return float(fwd_total), float(bwd_total)
+
+
+def operation_factor_sim(arch):
+    """StrategyA::with_sim under ParamSource::Simulator: the per-op cycle
+    constants weighted by the (FProp + BProp + FProp) term mix."""
+    f, b = computed_op_counts(arch)
+    return (2.0 * f * FWD_CYCLES_PER_OP + b * BWD_CYCLES_PER_OP) / (2.0 * f + b)
+
+
+def sim_contention_s(cm, p):
+    """probe::contention_probe_with: 16 deterministic rounds averaged
+    (the loop is replicated so IEEE rounding matches bit for bit)."""
+    total = 0.0
+    for _round in range(16):
+        total += contention_s(cm, p)
+    return total / 16.0
+
+
+def t_mem_sim_s(cm, ep, i, p):
+    return sim_contention_s(cm, p) * float(ep) * float(i) / float(p)
+
+
+def predict_a_sim(arch, i, it, ep, p):
+    """StrategyA::with_sim(Simulator).predict: computed op counts, the
+    calibrated OperationFactor, probe-derived contention."""
+    s = CLOCK_HZ
+    of = operation_factor_sim(arch)
+    c = cpi(p)
+    chunk_i = float(i) / float(p)
+    chunk_it = float(it) / float(p)
+    f, b = computed_op_counts(arch)
+    cm = cost_model(arch)
+    # PREP_OPS: paper architectures keep the Table II estimate
+    # (MODEL_PREP_OPS) under either source.
+    prep_s_ = (PREP_OPS[arch] * of + 4.0 * i + 2.0 * it + 10.0 * ep) / s
+    train_s = (f + b + f) * chunk_i * ep * of * c / s
+    test_s = f * chunk_it * ep * of * c / s
+    mem_s = t_mem_sim_s(cm, ep, i, p)
+    return prep_s_ + train_s + test_s + mem_s
+
+
+def predict_b_sim(arch, i, it, ep, p):
+    """StrategyB::with_sim(Simulator).predict: per-image times probed
+    from micsim at one thread (probe::measure_image_times)."""
+    c = cpi(p)
+    chunk_i = float(i) / float(p)
+    chunk_it = float(it) / float(p)
+    cm = cost_model(arch)
+    tf = fwd_image_s(cm, 1, 0)
+    tb = train_image_s(cm, 1, 0) - tf
+    tprep = prep_s(cm, 240)
+    train_s = (tf + tb + tf) * chunk_i * ep * c
+    test_s = tf * chunk_it * ep * c
+    mem_s = t_mem_sim_s(cm, ep, i, p)
+    return tprep + train_s + test_s + mem_s
+
+
+def closed_loop_grid_def():
+    """(id, spec-json, scenarios) for the closed-loop grid: the Table IX
+    domain with params = sim."""
+    spec = {
+        "archs": ARCHS,
+        "threads": MEASURED_THREADS,
+        "images": [[TRAIN_IMAGES, TEST_IMAGES]],
+        "strategies": ["a", "b"],
+        "params": "sim",
+        "measure": True,
+    }
+    scenarios = []
+    for arch in ARCHS:
+        for p in MEASURED_THREADS:
+            for s in ("a", "b"):
+                scenarios.append((arch, TRAIN_IMAGES, TEST_IMAGES,
+                                  EPOCHS[arch], p, s))
+    return (CLOSED_LOOP_GRID, spec, scenarios)
+
+
+def evaluate_closed_loop(scenarios):
+    rows = []
+    for (arch, i, it, ep, p, s) in scenarios:
+        predicted = (predict_a_sim if s == "a" else predict_b_sim)(
+            arch, i, it, ep, p)
+        measured = measured_execution_s(arch, i, it, ep, p)
+        rows.append((arch, i, it, ep, p, s, measured, predicted,
+                     delta_pct(measured, predicted)))
+    return rows
+
+
+def self_check_closed_loop(rows, paper_rows):
+    """Anchors for the closed-loop replication."""
+    # Computed op counts pin the documented counting scheme exactly
+    # (opcount.rs tests::small_exact_values_pinned for small; the other
+    # totals are regression pins for this replication).
+    assert computed_op_counts("small") == (142_845.0, 162_555.0)
+    assert computed_op_counts("medium") == (3_871_820.0, 4_070_000.0)
+    assert computed_op_counts("large") == (18_990_800.0, 20_045_300.0)
+    # Probed strategy-(b) params stay near Table III (probe.rs
+    # measured_params_near_table3: within 12 %).
+    for arch, (f_want, b_want, _) in {
+        "small": (1.45e-3, 5.3e-3, None),
+        "medium": (12.55e-3, 69.73e-3, None),
+        "large": (148.88e-3, 859.19e-3, None),
+    }.items():
+        cm = cost_model(arch)
+        tf = fwd_image_s(cm, 1, 0)
+        tb = train_image_s(cm, 1, 0) - tf
+        assert abs(tf - f_want) / f_want < 0.12, (arch, tf)
+        assert abs(tb - b_want) / b_want < 0.12, (arch, tb)
+    # Every closed-loop cell is finite and nonnegative.
+    assert all(r[8] >= 0.0 and r[8] == r[8] for r in rows)
+    means = {(b["arch"], b["strategy"]): b["mean_delta_pct"]
+             for b in bands_of(rows)}
+    # Strategy (b) fully closes the loop — its parameters (per-image
+    # times, prep, contention) are probed from the measuring simulator —
+    # so the residual Δ is purely structural (fractional vs ceiling
+    # division, L2/ring memory effects): every group stays under 10 %,
+    # and the overall mean beats the open-loop (paper-parameter) run.
+    for arch in ARCHS:
+        assert means[(arch, "b")] < 10.0, (arch, means)
+    closed_b = overall_mean(rows, "b")
+    open_b = overall_mean(paper_rows, "b")
+    assert closed_b < open_b, (closed_b, open_b)
+    # Strategy (a) is only partially closed: contention is probed but
+    # the op counts come from first-principles geometry (ParamSource::
+    # Simulator -> OpSource::Computed) while micsim's calibration uses
+    # the paper's Table VII/VIII counts. small/large land under 25 %;
+    # the medium CNN exposes the documented computed-vs-paper count gap
+    # (opcount.rs fprop_ratios_match_paper_shape) as a 30-80 % Δ. The
+    # band pins that gap so it cannot drift silently.
+    assert means[("small", "a")] < 25.0, means
+    assert means[("large", "a")] < 25.0, means
+    assert 30.0 < means[("medium", "a")] < 80.0, means
+
+
+def build_closed_loop(paper_rows):
+    gid, spec, scenarios = closed_loop_grid_def()
+    rows = evaluate_closed_loop(scenarios)
+    self_check_closed_loop(rows, paper_rows)
+    claims = []
+    for idx, strategy in enumerate(("a", "b")):
+        paper = sum(v[idx] for v in PAPER_DELTA_PCT.values()) / 3.0
+        observed = overall_mean(rows, strategy)
+        claims.append({
+            "strategy": strategy,
+            "grid": gid,
+            "paper_mean_pct": paper,
+            "ceiling_pct": max(paper, observed + CLAIM_HEADROOM_PP),
+        })
+    doc = {
+        "kind": "micdl-conformance-baseline",
+        "version": 1,
+        "claims": claims,
+        "grids": [{"id": gid, "spec": spec, "bands": bands_of(rows)}],
+    }
+    return doc, rows
+
+
 def main():
     import argparse
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--write", action="store_true",
                     help="overwrite baselines/measured_smoke.json "
                          "(default: self-check + print the bands only)")
+    ap.add_argument("--write-closed-loop", action="store_true",
+                    help="overwrite baselines/closed_loop_smoke.json "
+                         "(the table9 --params sim grid)")
     args = ap.parse_args()
     doc, results = build()
     for grid in doc["grids"]:
@@ -466,15 +688,37 @@ def main():
     for claim in doc["claims"]:
         print(f"claim {claim['strategy']}: paper {claim['paper_mean_pct']:.2f}% "
               f"ceiling {claim['ceiling_pct']:.2f}%")
-    if not args.write:
-        print("self-check OK; pass --write to overwrite measured_smoke.json")
-        return
-    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                       "measured_smoke.json")
-    with open(out, "w") as f:
-        json.dump(doc, f, indent=1)
-        f.write("\n")
-    print(f"wrote {out}")
+    cl_doc, cl_rows = build_closed_loop(results["table9"])
+    print(f"{CLOSED_LOOP_GRID}: {len(cl_rows)} cells")
+    for band in cl_doc["grids"][0]["bands"]:
+        print(f"  {band['arch']}/{band['strategy']}: "
+              f"mean Δ {band['mean_delta_pct']:.3f}%  "
+              f"max Δ {band['max_delta_pct']:.3f}% "
+              f"@ p={band['max_at_threads']} "
+              f"({band['points']} points)")
+    for claim in cl_doc["claims"]:
+        print(f"closed-loop claim {claim['strategy']}: "
+              f"paper {claim['paper_mean_pct']:.2f}% "
+              f"ceiling {claim['ceiling_pct']:.2f}%")
+    here = os.path.dirname(os.path.abspath(__file__))
+    wrote = False
+    if args.write:
+        out = os.path.join(here, "measured_smoke.json")
+        with open(out, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"wrote {out}")
+        wrote = True
+    if args.write_closed_loop:
+        out = os.path.join(here, "closed_loop_smoke.json")
+        with open(out, "w") as f:
+            json.dump(cl_doc, f, indent=1)
+            f.write("\n")
+        print(f"wrote {out}")
+        wrote = True
+    if not wrote:
+        print("self-check OK; pass --write and/or --write-closed-loop "
+              "to overwrite the baseline file(s)")
 
 
 if __name__ == "__main__":

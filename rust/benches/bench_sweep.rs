@@ -48,6 +48,24 @@ fn main() {
         SweepRunner::new(0).run(&big).unwrap().len()
     });
 
+    // Sim-ablation axis: 4 seed variants × the measured mid grid. Seeds
+    // share no cache entries across variants (distinct fingerprints), so
+    // this times the worst-case ablation path.
+    let ablation = GridSpec {
+        sims: (0..4)
+            .map(|i| micdl::sweep::SimVariant {
+                name: format!("seed{i}"),
+                seed: Some(0x5EED + i as u64),
+                ..Default::default()
+            })
+            .collect(),
+        measure: true,
+        ..mid_grid()
+    };
+    b.case("sweep/parallel+measure+ablation4/1464", || {
+        SweepRunner::new(0).run(&ablation).unwrap().len()
+    });
+
     b.print_report("scenario sweep engine");
 
     let cases: Vec<Json> = b

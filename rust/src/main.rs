@@ -35,8 +35,8 @@ use micdl::report::Table;
 use micdl::simulator::{probe, simulate_training, Fidelity, SimConfig};
 use micdl::sweep::baseline::DEFAULT_TOLERANCE;
 use micdl::sweep::{
-    conformance, parse_axis, Baseline, ConformanceBaseline, GridSpec, Strategy,
-    SweepRunner,
+    conformance, parse_axis, Baseline, ConformanceBaseline, GridSpec, SimVariant,
+    Strategy, SweepRunner,
 };
 
 /// `format!` into the crate's config error.
@@ -111,20 +111,36 @@ USAGE:
   repro sweep    [--spec FILE.json] [--arch all|NAME[,NAME...]] [--threads LIST]
                  [--images IxIT[,IxIT...]] [--epochs LIST] [--strategy a|b|both]
                  [--params paper|sim] [--clock-ghz F[,F...]] [--measure]
+                 [--sim-clock-ghz F[,F...]] [--sim-cores LIST] [--sim-threads LIST]
+                 [--sim-fwd-cycles F[,F...]] [--sim-bwd-cycles F[,F...]]
+                 [--sim-exec-fraction F[,F...]] [--sim-l2-alpha F[,F...]]
+                 [--sim-l2-cap F[,F...]] [--sim-ring-beta F[,F...]]
+                 [--sim-oversub F[,F...]] [--sim-fidelity chunked|image[,...]]
+                 [--sim-seed LIST]
                  [--workers N | --serial] [--json OUT.json] [--csv] [--full]
                  [--write-baseline OUT.json] [--compare BASELINE.json]
                  [--tolerance F]
                  (LIST = comma items and/or inclusive ranges: 1,15,30 or 1..244 or 8..64..8)
                  (--compare alone re-runs the baseline's own grid; grid flags
-                  override it. Exit 2 on baseline regression.)
+                  override it. Exit 2 on baseline regression. The --sim-*
+                  flags build an ablation axis over simulator constants —
+                  the cross product of every given list; sim overrides win
+                  over --clock-ghz machine variants, with a warning. See
+                  docs/SWEEP.md.)
   repro conformance [--baseline FILE | --write-baseline FILE] [--report OUT.json]
-                 [--workers N | --serial]
+                 [--closed-loop FILE | --write-closed-loop FILE]
+                 [--closed-loop-report OUT.json] [--workers N | --serial]
                  (measured-mode Δ-band conformance over the Tables IX-XI
                   grids. --baseline re-runs the file's grids and checks its
                   Δ bands and paper claims, exit 2 on regression; --write-
-                  baseline pins the observed bands; with neither flag the
-                  observed bands are printed, nothing asserted. Check mode
-                  puts the report JSON on stdout, findings on stderr.)
+                  baseline pins the observed bands. --closed-loop does the
+                  same for the closed-loop grid — Table IX under --params
+                  sim, model parameters probed from the measuring
+                  simulator — against baselines/closed_loop_smoke.json;
+                  both checks may run in one invocation. With no check or
+                  write flag the observed bands are printed, nothing
+                  asserted. Check mode puts the report JSON on stdout,
+                  findings on stderr.)
   repro probe    [--arch A]
   repro train    [--backend engine|pjrt] [--arch A] [--epochs E] [--images N]
                  [--test-images N] [--workers W] [--lr F] [--artifacts DIR]
@@ -249,11 +265,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let arch = parse_arch(args)?;
     let run = parse_run(args, &arch.name)?;
     let mut cfg = SimConfig::default();
-    cfg.fidelity = match args.get("fidelity").unwrap_or("chunked") {
-        "chunked" => Fidelity::Chunked,
-        "image" | "per-image" => Fidelity::PerImage,
-        other => bail!("--fidelity must be chunked|image, got {other:?}"),
-    };
+    cfg.fidelity = Fidelity::parse(args.get("fidelity").unwrap_or("chunked"))?;
     let r = simulate_training(&arch, &run, &cfg)?;
     println!(
         "micsim: arch={} threads={} epochs={} i={} it={}",
@@ -328,7 +340,7 @@ fn parse_images(text: &str) -> Result<Vec<(usize, usize)>> {
 /// One table drives both the missing-value check and the "did the user
 /// give an explicit grid" test, so the per-flag handlers in [`cmd_sweep`]
 /// cannot drift out of sync with either.
-const SWEEP_FLAGS: [(&str, bool, bool); 17] = [
+const SWEEP_FLAGS: [(&str, bool, bool); 29] = [
     ("spec", true, true),
     ("arch", true, true),
     ("threads", true, true),
@@ -338,6 +350,18 @@ const SWEEP_FLAGS: [(&str, bool, bool); 17] = [
     ("params", true, true),
     ("clock-ghz", true, true),
     ("measure", false, true),
+    ("sim-clock-ghz", true, true),
+    ("sim-cores", true, true),
+    ("sim-threads", true, true),
+    ("sim-fwd-cycles", true, true),
+    ("sim-bwd-cycles", true, true),
+    ("sim-exec-fraction", true, true),
+    ("sim-l2-alpha", true, true),
+    ("sim-l2-cap", true, true),
+    ("sim-ring-beta", true, true),
+    ("sim-oversub", true, true),
+    ("sim-fidelity", true, true),
+    ("sim-seed", true, true),
     ("workers", true, false),
     ("serial", false, false),
     ("json", true, false),
@@ -347,6 +371,88 @@ const SWEEP_FLAGS: [(&str, bool, bool); 17] = [
     ("write-baseline", true, false),
     ("tolerance", true, false),
 ];
+
+/// Parse a comma-separated float list (`--sim-clock-ghz 1.0,1.238,1.5`).
+fn parse_float_list(text: &str, flag: &str) -> Result<Vec<f64>> {
+    text.split(',')
+        .map(|v| {
+            v.trim()
+                .parse()
+                .map_err(|_| err!("--{flag} wants floats, got {v:?}"))
+        })
+        .collect()
+}
+
+/// Build the sim-ablation axis from the `--sim-*` flags: the cross
+/// product of every given list (each unset field inherits the base
+/// simulator). `None` when no `--sim-*` flag was given, so a `--spec`
+/// file's `sim` axis survives.
+fn parse_sim_axis(args: &Args) -> Result<Option<Vec<SimVariant>>> {
+    fn cross<T: Copy>(
+        variants: Vec<SimVariant>,
+        values: &[T],
+        set: impl Fn(&mut SimVariant, T),
+    ) -> Vec<SimVariant> {
+        let mut out = Vec::with_capacity(variants.len() * values.len());
+        for v in &variants {
+            for &value in values {
+                let mut next = v.clone();
+                set(&mut next, value);
+                out.push(next);
+            }
+        }
+        out
+    }
+    let mut variants = vec![SimVariant::default()];
+    let mut any = false;
+    macro_rules! axis_f64 {
+        ($flag:literal, $field:ident) => {
+            if let Some(text) = args.get($flag) {
+                any = true;
+                let values = parse_float_list(text, $flag)?;
+                variants = cross(variants, &values, |v, x| v.$field = Some(x));
+            }
+        };
+    }
+    axis_f64!("sim-clock-ghz", clock_ghz);
+    axis_f64!("sim-fwd-cycles", fwd_cycles_per_op);
+    axis_f64!("sim-bwd-cycles", bwd_cycles_per_op);
+    axis_f64!("sim-exec-fraction", exec_fraction);
+    axis_f64!("sim-l2-alpha", l2_alpha);
+    axis_f64!("sim-l2-cap", l2_ratio_cap);
+    axis_f64!("sim-ring-beta", ring_beta);
+    axis_f64!("sim-oversub", oversub_overhead);
+    if let Some(text) = args.get("sim-cores") {
+        any = true;
+        let values = parse_axis(text)?;
+        variants = cross(variants, &values, |v, x| v.cores = Some(x));
+    }
+    if let Some(text) = args.get("sim-threads") {
+        any = true;
+        let values = parse_axis(text)?;
+        variants = cross(variants, &values, |v, x| v.threads_per_core = Some(x));
+    }
+    if let Some(text) = args.get("sim-seed") {
+        any = true;
+        let values = parse_axis(text)?;
+        variants = cross(variants, &values, |v, x| v.seed = Some(x as u64));
+    }
+    if let Some(text) = args.get("sim-fidelity") {
+        any = true;
+        let values = text
+            .split(',')
+            .map(|f| Fidelity::parse(f.trim()))
+            .collect::<Result<Vec<_>>>()?;
+        variants = cross(variants, &values, |v, x| v.fidelity = Some(x));
+    }
+    if !any {
+        return Ok(None);
+    }
+    for v in &mut variants {
+        v.name = v.auto_name();
+    }
+    Ok(Some(variants))
+}
 
 fn cmd_sweep(args: &Args) -> Result<()> {
     // A typo'd or valueless flag must error, not silently no-op — a
@@ -429,7 +535,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
             })
             .collect::<Result<Vec<_>>>()?;
     }
+    if let Some(sims) = parse_sim_axis(args)? {
+        grid.sims = sims;
+    }
     grid.normalize();
+    // The machine/sim composition is explicit: sim overrides win, and a
+    // collision with the machine axis warns instead of silently dropping
+    // one side (the old behaviour under --measure).
+    for warning in grid.sim_machine_conflicts() {
+        eprintln!("warning: {warning}");
+    }
     let workers = if args.has("serial") {
         1
     } else {
@@ -466,10 +581,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
 /// The conformance flag inventory: (name, takes a value). One table
 /// drives both validation passes, like [`SWEEP_FLAGS`].
-const CONFORMANCE_FLAGS: [(&str, bool); 5] = [
+const CONFORMANCE_FLAGS: [(&str, bool); 8] = [
     ("baseline", true),
     ("write-baseline", true),
     ("report", true),
+    ("closed-loop", true),
+    ("write-closed-loop", true),
+    ("closed-loop-report", true),
     ("workers", true),
     ("serial", false),
 ];
@@ -488,10 +606,21 @@ fn cmd_conformance(args: &Args) -> Result<()> {
     if args.has("baseline") && args.has("write-baseline") {
         bail!("--baseline and --write-baseline are mutually exclusive");
     }
+    if args.has("closed-loop") && args.has("write-closed-loop") {
+        bail!("--closed-loop and --write-closed-loop are mutually exclusive");
+    }
+    let writes = args.has("write-baseline") || args.has("write-closed-loop");
+    let checks = args.has("baseline") || args.has("closed-loop");
+    if writes && checks {
+        bail!("write and check modes are mutually exclusive in one invocation");
+    }
     // Only check mode produces a report — accepting --report elsewhere
     // would silently no-op and leave a script reading a stale file.
     if args.has("report") && !args.has("baseline") {
         bail!("--report requires --baseline (only check mode writes a report)");
+    }
+    if args.has("closed-loop-report") && !args.has("closed-loop") {
+        bail!("--closed-loop-report requires --closed-loop");
     }
     let workers = if args.has("serial") {
         1
@@ -499,21 +628,35 @@ fn cmd_conformance(args: &Args) -> Result<()> {
         args.get_usize("workers", 0)?
     };
     let runner = SweepRunner::new(workers);
-    if let Some(path) = args.get("write-baseline") {
-        let base = ConformanceBaseline::capture(&runner)?;
-        std::fs::write(path, base.to_json().emit())?;
-        eprintln!(
-            "wrote conformance baseline ({} grids, {} bands, {} claims) to {path}",
-            base.grids.len(),
-            base.grids.iter().map(|g| g.bands.len()).sum::<usize>(),
-            base.claims.len()
-        );
+    if writes {
+        if let Some(path) = args.get("write-baseline") {
+            let base = ConformanceBaseline::capture(&runner)?;
+            std::fs::write(path, base.to_json().emit())?;
+            eprintln!(
+                "wrote conformance baseline ({} grids, {} bands, {} claims) to {path}",
+                base.grids.len(),
+                base.grids.iter().map(|g| g.bands.len()).sum::<usize>(),
+                base.claims.len()
+            );
+        }
+        if let Some(path) = args.get("write-closed-loop") {
+            let base = ConformanceBaseline::capture_closed_loop(&runner)?;
+            std::fs::write(path, base.to_json().emit())?;
+            eprintln!(
+                "wrote closed-loop baseline ({} grids, {} bands, {} claims) to {path}",
+                base.grids.len(),
+                base.grids.iter().map(|g| g.bands.len()).sum::<usize>(),
+                base.claims.len()
+            );
+        }
         return Ok(());
     }
-    let Some(path) = args.get("baseline") else {
-        // Observational mode: run the Tables IX-XI grids and print the
-        // observed Δ bands without asserting anything.
-        let runs = conformance::run_paper_grids(&runner)?;
+    if !checks {
+        // Observational mode: run the Tables IX-XI grids plus the
+        // closed-loop grid and print the observed Δ bands without
+        // asserting anything.
+        let mut runs = conformance::run_paper_grids(&runner)?;
+        runs.extend(conformance::run_closed_loop_grids(&runner)?);
         let mut t = Table::new(
             "measured-mode Δ bands (observed; nothing asserted)",
             &["grid", "arch", "strat", "points", "mean Δ %", "max Δ %", "at p"],
@@ -546,18 +689,48 @@ fn cmd_conformance(args: &Args) -> Result<()> {
         }
         print!("{}", t.render());
         return Ok(());
-    };
-    // Check mode: stdout carries the machine-readable report, stderr the
-    // human-readable findings. Exit 2 on any band/claim regression.
-    let base = ConformanceBaseline::load(std::path::Path::new(path))?;
-    let report = base.check(&runner)?;
-    let json = report.to_json().emit();
-    if let Some(out) = args.get("report") {
-        std::fs::write(out, &json)?;
     }
-    println!("{json}");
-    eprint!("{}", report.render());
-    if !report.is_clean() {
+    // Check mode: stdout carries the machine-readable report (one report
+    // object, or a combined document when both baselines are checked),
+    // stderr the human-readable findings. Exit 2 on any regression.
+    let mut clean = true;
+    let mut payloads: Vec<(&str, String)> = Vec::new();
+    if let Some(path) = args.get("baseline") {
+        let base = ConformanceBaseline::load(std::path::Path::new(path))?;
+        let report = base.check(&runner)?;
+        let json = report.to_json().emit();
+        if let Some(out) = args.get("report") {
+            std::fs::write(out, &json)?;
+        }
+        eprint!("{}", report.render());
+        clean &= report.is_clean();
+        payloads.push(("measured", json));
+    }
+    if let Some(path) = args.get("closed-loop") {
+        let base = ConformanceBaseline::load(std::path::Path::new(path))?;
+        let report = base.check(&runner)?;
+        let json = report.to_json().emit();
+        if let Some(out) = args.get("closed-loop-report") {
+            std::fs::write(out, &json)?;
+        }
+        eprint!("{}", report.render());
+        clean &= report.is_clean();
+        payloads.push(("closed_loop", json));
+    }
+    match payloads.as_slice() {
+        [(_, json)] => println!("{json}"),
+        _ => {
+            let parts: Vec<String> = payloads
+                .iter()
+                .map(|(key, json)| format!("\"{key}\":{json}"))
+                .collect();
+            println!(
+                "{{\"kind\":\"micdl-conformance-run\",\"clean\":{clean},{}}}",
+                parts.join(",")
+            );
+        }
+    }
+    if !clean {
         std::process::exit(2);
     }
     Ok(())

@@ -61,9 +61,11 @@ impl Interconnect {
 /// Cluster-level prediction.
 #[derive(Debug, Clone, Copy)]
 pub struct ClusterPrediction {
+    /// The per-node (sharded-workload) prediction.
     pub node: Prediction,
     /// Communication seconds over the whole run.
     pub comm_s: f64,
+    /// Total predicted cluster execution time, seconds.
     pub total_s: f64,
     /// Speedup over the single-node prediction.
     pub speedup: f64,
@@ -73,12 +75,16 @@ pub struct ClusterPrediction {
 
 /// The multi-node model wrapping a single-Phi strategy.
 pub struct ClusterModel<M: PerfModel> {
+    /// The single-node strategy being scaled out.
     pub node_model: M,
+    /// Trainable weights synchronized per step (allreduce payload).
     pub weights: usize,
+    /// Interconnect description for the communication term.
     pub interconnect: Interconnect,
 }
 
 impl<M: PerfModel> ClusterModel<M> {
+    /// Wrap `node_model` for `arch` behind `interconnect`.
     pub fn new(arch: &ArchSpec, node_model: M, interconnect: Interconnect) -> Result<Self> {
         Ok(ClusterModel {
             node_model,

@@ -48,6 +48,7 @@ pub struct ContentionSource {
 }
 
 impl ContentionSource {
+    /// A source probing the default simulator configuration.
     pub fn new(arch: &ArchSpec, source: ParamSource) -> Self {
         ContentionSource {
             arch: arch.clone(),

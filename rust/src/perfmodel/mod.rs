@@ -24,6 +24,8 @@
 //! every measured parameter from micsim, closing the loop the way the
 //! authors did on real hardware.
 
+#![warn(missing_docs)]
+
 pub mod accuracy;
 pub mod cluster;
 pub mod contention;

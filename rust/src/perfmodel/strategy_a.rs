@@ -33,20 +33,44 @@ use crate::report::paper;
 /// Strategy (a) with resolved parameters.
 #[derive(Debug, Clone)]
 pub struct StrategyA {
+    /// Machine the CPI/clock terms evaluate against.
     pub machine: MachineConfig,
-    /// FProp operations per image.
+    /// FProp operations per image — the Table V training/validation/
+    /// test propagation terms (Table VII totals).
     pub fprop_ops: f64,
-    /// BProp operations per image.
+    /// BProp operations per image — the Table V training term
+    /// (Table VIII totals).
     pub bprop_ops: f64,
-    /// Prep operation estimate (Table II).
+    /// Prep operation estimate — the Table V `Prep·OF/s` term
+    /// (Table II: 10⁹/10¹⁰/10¹¹).
     pub prep_ops: f64,
-    /// OperationFactor (Table III).
+    /// OperationFactor `OF` scaling every compute term (Table III).
     pub operation_factor: f64,
     contention: ContentionSource,
 }
 
 impl StrategyA {
+    /// Build the model against the default simulator configuration
+    /// ([`StrategyA::with_sim`] with
+    /// [`crate::simulator::SimConfig::default`]).
     pub fn new(arch: &ArchSpec, source: ParamSource) -> Result<StrategyA> {
+        StrategyA::with_sim(arch, source, &crate::simulator::SimConfig::default())
+    }
+
+    /// Build the model with every derived/measured parameter taken from
+    /// `sim` — the closed-loop constructor the sweep cache uses for the
+    /// grid's sim axis. Under [`ParamSource::Simulator`] the
+    /// OperationFactor calibration, the custom-architecture Prep
+    /// estimate, and the contention probe all run against exactly this
+    /// configuration (the same simulator that produces the sweep's
+    /// measurements); under [`ParamSource::Paper`] the published
+    /// Tables II–IV values are used and only the CPI/clock terms and the
+    /// machine follow `sim`.
+    pub fn with_sim(
+        arch: &ArchSpec,
+        source: ParamSource,
+        sim: &crate::simulator::SimConfig,
+    ) -> Result<StrategyA> {
         let op_source = match source {
             ParamSource::Paper => OpSource::Paper,
             ParamSource::Simulator => OpSource::Computed,
@@ -62,10 +86,9 @@ impl StrategyA {
             // cycle constants, weighted by the model's (FProp + BProp +
             // FProp) term mix.
             _ => {
-                let scfg = crate::simulator::SimConfig::default();
                 let f = counts.fprop.total() as f64;
                 let b = counts.bprop.total() as f64;
-                (2.0 * f * scfg.fwd_cycles_per_op + b * scfg.bwd_cycles_per_op)
+                (2.0 * f * sim.fwd_cycles_per_op + b * sim.bwd_cycles_per_op)
                     / (2.0 * f + b)
             }
         };
@@ -74,21 +97,18 @@ impl StrategyA {
         // reference 240 instances), converted back to "operations" through
         // the same OperationFactor so the Table V structure is preserved.
         let prep_ops = idx.map(|i| paper::MODEL_PREP_OPS[i]).unwrap_or_else(|| {
-            let scfg = crate::simulator::SimConfig::default();
-            match crate::simulator::CostModel::new(arch, &scfg) {
-                Ok(cm) => {
-                    cm.prep_s(&scfg, 240) * scfg.machine.clock_hz / operation_factor
-                }
+            match crate::simulator::CostModel::new(arch, sim) {
+                Ok(cm) => cm.prep_s(sim, 240) * sim.machine.clock_hz / operation_factor,
                 Err(_) => 1e9,
             }
         });
         Ok(StrategyA {
-            machine: MachineConfig::xeon_phi_7120p(),
+            machine: sim.machine.clone(),
             fprop_ops: counts.fprop.total() as f64,
             bprop_ops: counts.bprop.total() as f64,
             prep_ops,
             operation_factor,
-            contention: ContentionSource::new(arch, source),
+            contention: ContentionSource::new(arch, source).with_sim_config(sim.clone()),
         })
     }
 

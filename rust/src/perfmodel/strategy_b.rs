@@ -32,18 +32,40 @@ use crate::simulator::{probe, SimConfig};
 /// Strategy (b) with resolved measured parameters.
 #[derive(Debug, Clone)]
 pub struct StrategyB {
+    /// Machine the CPI terms evaluate against.
     pub machine: MachineConfig,
-    /// Measured forward time per image, seconds.
+    /// Measured forward time per image, seconds — `T_Fprop` in the
+    /// Table VI training/validation/test terms (Table III row 1).
     pub t_fprop_s: f64,
-    /// Measured backward time per image, seconds.
+    /// Measured backward time per image, seconds — `T_Bprop` in the
+    /// Table VI training term (Table III row 2).
     pub t_bprop_s: f64,
-    /// Measured preparation time, seconds.
+    /// Measured preparation time, seconds — the Table VI `T_prep`
+    /// constant term (Table III row 3).
     pub t_prep_s: f64,
     contention: ContentionSource,
 }
 
 impl StrategyB {
+    /// Build the model against the default simulator configuration
+    /// ([`StrategyB::with_sim`] with [`SimConfig::default`]).
     pub fn new(arch: &ArchSpec, source: ParamSource) -> Result<StrategyB> {
+        StrategyB::with_sim(arch, source, &SimConfig::default())
+    }
+
+    /// Build the model with its measured parameters probed from `sim` —
+    /// the closed-loop constructor the sweep cache uses for the grid's
+    /// sim axis. Under [`ParamSource::Simulator`] (and for custom
+    /// architectures the paper never measured) `T_Fprop`/`T_Bprop`/
+    /// `T_prep` come from [`probe::measure_image_times`] against exactly
+    /// this configuration — the same simulator that produces the sweep's
+    /// measurements; under [`ParamSource::Paper`] the Table III values
+    /// are used and only the CPI terms and the machine follow `sim`.
+    pub fn with_sim(
+        arch: &ArchSpec,
+        source: ParamSource,
+        sim: &SimConfig,
+    ) -> Result<StrategyB> {
         let (t_fprop_s, t_bprop_s, t_prep_s) = match source {
             ParamSource::Paper => {
                 if let Some(idx) = paper::arch_index(&arch.name) {
@@ -51,21 +73,21 @@ impl StrategyB {
                 } else {
                     // No paper measurements for custom archs: fall back to
                     // the simulator probe.
-                    let m = probe::measure_image_times(arch, &SimConfig::default())?;
+                    let m = probe::measure_image_times(arch, sim)?;
                     (m.t_fprop_s, m.t_bprop_s, m.t_prep_s)
                 }
             }
             ParamSource::Simulator => {
-                let m = probe::measure_image_times(arch, &SimConfig::default())?;
+                let m = probe::measure_image_times(arch, sim)?;
                 (m.t_fprop_s, m.t_bprop_s, m.t_prep_s)
             }
         };
         Ok(StrategyB {
-            machine: MachineConfig::xeon_phi_7120p(),
+            machine: sim.machine.clone(),
             t_fprop_s,
             t_bprop_s,
             t_prep_s,
-            contention: ContentionSource::new(arch, source),
+            contention: ContentionSource::new(arch, source).with_sim_config(sim.clone()),
         })
     }
 
@@ -166,6 +188,26 @@ mod tests {
             assert!(t < prev, "p={p}");
             prev = t;
         }
+    }
+
+    #[test]
+    fn with_sim_probes_the_given_simulator() {
+        // The closed-loop constructor: measured parameters follow the
+        // passed simulator configuration under ParamSource::Simulator.
+        let arch = ArchSpec::small();
+        let base =
+            StrategyB::with_sim(&arch, ParamSource::Simulator, &SimConfig::default())
+                .unwrap();
+        let mut slower = SimConfig::default();
+        slower.fwd_cycles_per_op *= 2.0;
+        let slow = StrategyB::with_sim(&arch, ParamSource::Simulator, &slower).unwrap();
+        assert!(slow.t_fprop_s > base.t_fprop_s);
+        // Paper source keeps the Table III values regardless of sim.
+        let paper = StrategyB::with_sim(&arch, ParamSource::Paper, &slower).unwrap();
+        assert_eq!(paper.t_fprop_s, 1.45e-3);
+        // And new() is exactly with_sim(default).
+        let plain = StrategyB::new(&arch, ParamSource::Simulator).unwrap();
+        assert_eq!(plain.t_fprop_s.to_bits(), base.t_fprop_s.to_bits());
     }
 
     #[test]

@@ -53,6 +53,7 @@ pub struct CostModel {
 }
 
 impl CostModel {
+    /// Resolve and calibrate the per-image costs for one architecture.
     pub fn new(arch: &ArchSpec, cfg: &SimConfig) -> Result<CostModel> {
         // Paper op counts where available (the calibration anchors); fall
         // back to first-principles counts for custom architectures.

@@ -55,6 +55,7 @@ impl<T> Default for Engine<T> {
 }
 
 impl<T> Engine<T> {
+    /// An empty engine at simulation time 0.
     pub fn new() -> Self {
         Self::default()
     }

@@ -12,12 +12,14 @@ use crate::config::MachineConfig;
 /// Placement view of `p` software threads on the machine.
 #[derive(Debug, Clone)]
 pub struct PhiMachine {
+    /// The machine being simulated.
     pub config: MachineConfig,
     /// Software threads in flight.
     pub threads: usize,
 }
 
 impl PhiMachine {
+    /// Place `threads` software threads on `config` (scatter affinity).
     pub fn new(config: MachineConfig, threads: usize) -> Self {
         assert!(threads >= 1, "need at least one thread");
         PhiMachine { config, threads }

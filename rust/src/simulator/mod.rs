@@ -37,6 +37,8 @@
 //! and ~10³× faster; per-image exists for traces and as the reference
 //! semantics (EXPERIMENTS.md §Perf).
 
+#![warn(missing_docs)]
+
 pub mod cost;
 pub mod event;
 pub mod machine;
@@ -53,7 +55,19 @@ pub use workload::{simulate_training, simulate_training_with, Fidelity};
 use crate::config::MachineConfig;
 use crate::nn::OpSource;
 
-/// All tunable simulator constants (ablation benches sweep these).
+/// All tunable simulator constants (`repro sweep --sim-*` and the sweep
+/// grid's sim axis ablate these — see `docs/SWEEP.md`).
+///
+/// ```
+/// use micdl::simulator::SimConfig;
+///
+/// let mut cfg = SimConfig::default();
+/// let base = cfg.fingerprint();
+/// // Any field change is a different simulator — and a different
+/// // memoization key, so sweep caches never serve stale measurements.
+/// cfg.fwd_cycles_per_op *= 2.0;
+/// assert_ne!(cfg.fingerprint(), base);
+/// ```
 #[derive(Debug, Clone)]
 pub struct SimConfig {
     /// Machine description (defaults to the 7120P).

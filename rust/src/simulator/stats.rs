@@ -16,6 +16,7 @@ pub struct PhaseTimes {
 }
 
 impl PhaseTimes {
+    /// Sum of every phase, seconds.
     pub fn total(&self) -> f64 {
         self.prep_s + self.train_s + self.validation_s + self.test_s + self.serial_s
     }
@@ -29,13 +30,15 @@ pub struct SimResult {
     /// The paper's reported "execution time" excludes initialization
     /// (Section V): total minus prep.
     pub execution_s: f64,
+    /// Per-phase breakdown.
     pub phases: PhaseTimes,
     /// Threads simulated.
     pub threads: usize,
     /// Events processed (0 in chunked mode).
     pub events: u64,
-    /// Busy seconds of the slowest and fastest worker (imbalance window).
+    /// Busy seconds of the slowest worker (imbalance window, upper).
     pub slowest_busy_s: f64,
+    /// Busy seconds of the fastest worker (imbalance window, lower).
     pub fastest_busy_s: f64,
 }
 

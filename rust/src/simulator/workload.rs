@@ -29,6 +29,29 @@ pub enum Fidelity {
     Chunked,
 }
 
+impl Fidelity {
+    /// Canonical token ("chunked" / "image") — the CLI and JSON-spec
+    /// encoding, inverted by [`Fidelity::parse`].
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Fidelity::Chunked => "chunked",
+            Fidelity::PerImage => "image",
+        }
+    }
+
+    /// Parse a fidelity token (`chunked`, `image`, or the `per-image`
+    /// alias).
+    pub fn parse(text: &str) -> crate::error::Result<Fidelity> {
+        match text {
+            "chunked" => Ok(Fidelity::Chunked),
+            "image" | "per-image" => Ok(Fidelity::PerImage),
+            other => Err(crate::error::Error::Config(format!(
+                "fidelity must be chunked|image, got {other:?}"
+            ))),
+        }
+    }
+}
+
 /// Images assigned to thread `t` out of `total` split over `p` threads.
 pub fn chunk_of(total: usize, p: usize, t: usize) -> usize {
     let base = total / p;

@@ -35,12 +35,22 @@ pub const DEFAULT_TOLERANCE: f64 = 1e-6;
 /// One pinned scenario: the full axis key plus the pinned values.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BaselineCell {
+    /// Sim-variant name (`None` for grids without a sim axis — the
+    /// pre-ablation cell format, which older baselines keep).
+    pub sim: Option<String>,
+    /// Architecture name.
     pub arch: String,
+    /// Machine-configuration name.
     pub machine: String,
+    /// Processing units `p`.
     pub threads: usize,
+    /// Training image count.
     pub train_images: usize,
+    /// Test image count.
     pub test_images: usize,
+    /// Training epochs.
     pub epochs: usize,
+    /// Model strategy.
     pub strategy: Strategy,
     /// Predicted total execution time, seconds.
     pub total_s: f64,
@@ -56,7 +66,7 @@ impl BaselineCell {
     /// [`Baseline::compare`] — one encoding, so reports always name
     /// cells by exactly the identity they matched under.
     pub fn key(&self) -> String {
-        format!(
+        let mut key = format!(
             "{}/{}/p={}/i={}/it={}/ep={}/strat={}",
             self.arch,
             self.machine,
@@ -65,11 +75,19 @@ impl BaselineCell {
             self.test_images,
             self.epochs,
             self.strategy
-        )
+        );
+        if let Some(sim) = &self.sim {
+            key.push_str(&format!("/sim={sim}"));
+        }
+        key
     }
 
     fn to_json(&self) -> Json {
-        let mut pairs = vec![
+        let mut pairs = Vec::with_capacity(11);
+        if let Some(sim) = &self.sim {
+            pairs.push(("sim", Json::str(sim.clone())));
+        }
+        pairs.extend([
             ("arch", Json::str(self.arch.clone())),
             ("machine", Json::str(self.machine.clone())),
             ("threads", Json::num(self.threads as f64)),
@@ -78,7 +96,7 @@ impl BaselineCell {
             ("epochs", Json::num(self.epochs as f64)),
             ("strategy", Json::str(self.strategy.as_str())),
             ("total_s", Json::num(self.total_s)),
-        ];
+        ]);
         if let Some(m) = self.measured_s {
             pairs.push(("measured_s", Json::num(m)));
         }
@@ -114,7 +132,16 @@ impl BaselineCell {
                 )))
             }
         };
+        let sim = match node.get("sim") {
+            None => None,
+            Some(v) => Some(
+                v.as_str()
+                    .map(str::to_string)
+                    .ok_or_else(|| Error::Json("baseline cell sim must be a string".into()))?,
+            ),
+        };
         Ok(BaselineCell {
+            sim,
             arch: field_str("arch")?,
             machine: field_str("machine")?,
             threads: field_usize("threads")?,
@@ -134,6 +161,7 @@ impl BaselineCell {
 pub struct Baseline {
     /// Spec document re-runnable via [`GridSpec::from_json`].
     pub grid_spec: Json,
+    /// One pinned cell per scenario, in enumeration order.
     pub cells: Vec<BaselineCell>,
 }
 
@@ -147,6 +175,7 @@ fn cells_of(results: &SweepResults) -> Vec<BaselineCell> {
         .map(|r| {
             let s = &r.scenario;
             BaselineCell {
+                sim: g.sim_name(s).map(str::to_string),
                 arch: g.archs[s.arch].name.clone(),
                 machine: g.machines[s.machine].name.clone(),
                 threads: s.threads,
@@ -189,6 +218,7 @@ impl Baseline {
         GridSpec::from_json(&self.grid_spec.emit())
     }
 
+    /// Serialize as the committed baseline file format.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("kind", Json::str("micdl-sweep-baseline")),
@@ -201,6 +231,7 @@ impl Baseline {
         ])
     }
 
+    /// Parse a baseline file (version-checked).
     pub fn parse(text: &str) -> Result<Baseline> {
         let doc = Json::parse(text)?;
         match doc.get("version").and_then(Json::as_usize) {
@@ -318,18 +349,24 @@ fn rel_err(a: f64, b: f64) -> f64 {
 pub struct CellDiff {
     /// The offending scenario, as [`BaselineCell::key`].
     pub cell: String,
+    /// Which pinned value drifted (`total_s` / `measured_s` / `delta_pct`).
     pub field: &'static str,
+    /// The pinned value (NaN for a structurally missing side).
     pub baseline: f64,
+    /// The freshly computed value (NaN for a structurally missing side).
     pub current: f64,
+    /// Symmetric relative error between the two (∞ for structural).
     pub rel_err: f64,
 }
 
 /// The machine-readable outcome of [`Baseline::compare`].
 #[derive(Debug, Clone)]
 pub struct DiffReport {
+    /// The per-cell relative tolerance the diff ran under.
     pub tolerance: f64,
     /// Cells present on both sides and value-compared.
     pub cells_compared: usize,
+    /// Values outside the tolerance.
     pub mismatches: Vec<CellDiff>,
     /// Baseline cells the fresh sweep did not produce.
     pub missing_in_run: Vec<String>,
@@ -346,6 +383,7 @@ impl DiffReport {
             && self.missing_in_baseline.is_empty()
     }
 
+    /// Serialize the diff as the machine-readable stdout payload.
     pub fn to_json(&self) -> Json {
         let strs = |v: &[String]| Json::Arr(v.iter().map(|s| Json::str(s.clone())).collect());
         // Structural mismatches carry NaN/∞ sentinels, which JSON cannot
@@ -542,6 +580,44 @@ mod tests {
         assert!(Baseline::parse("{}").is_err());
         assert!(Baseline::parse(r#"{"version": 99, "grid": {}, "cells": []}"#).is_err());
         assert!(Baseline::parse(r#"{"version": 1, "grid": {}, "cells": []}"#).is_err());
+    }
+
+    #[test]
+    fn ablation_grids_baseline_with_sim_keyed_cells() {
+        use crate::sweep::grid::SimVariant;
+        let grid = GridSpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![15],
+            strategies: vec![Strategy::A],
+            sims: vec![
+                SimVariant { name: "slow".into(), clock_ghz: Some(1.0), ..Default::default() },
+                SimVariant { name: "fast".into(), clock_ghz: Some(1.5), ..Default::default() },
+            ],
+            measure: true,
+            ..GridSpec::default()
+        };
+        let res = SweepRunner::serial().run(&grid).unwrap();
+        let base = Baseline::from_results(&res).unwrap();
+        assert_eq!(base.cells.len(), 2);
+        assert_eq!(base.cells[0].sim.as_deref(), Some("slow"));
+        assert_eq!(base.cells[1].sim.as_deref(), Some("fast"));
+        assert!(base.cells[0].key().ends_with("/sim=slow"));
+        // Same workload, different variants → distinct keys, no collision.
+        assert_ne!(base.cells[0].key(), base.cells[1].key());
+        // File round-trip preserves the sim key and compares clean
+        // against a fresh run of the embedded (ablation) grid.
+        let back = Baseline::parse(&base.to_json().emit()).unwrap();
+        assert_eq!(back.cells, base.cells);
+        let regrid = back.grid().unwrap();
+        assert_eq!(regrid, grid);
+        let fresh = SweepRunner::serial().run(&regrid).unwrap();
+        assert!(back.compare(&fresh, DEFAULT_TOLERANCE).unwrap().is_clean());
+        // A variant mismatch is structural, not silent.
+        let mut renamed = back.clone();
+        renamed.cells[0].sim = Some("renamed".into());
+        let report = renamed.compare(&fresh, DEFAULT_TOLERANCE).unwrap();
+        assert!(!report.is_clean());
+        assert_eq!(report.missing_in_run.len(), 1);
     }
 
     #[test]

@@ -5,10 +5,18 @@
 //!
 //! * model construction (op-count resolution via [`crate::nn::opcount`],
 //!   probe measurement, contention calibration) depends only on
-//!   (architecture, strategy, machine) — not on threads/images/epochs;
+//!   (architecture, strategy, resolved simulator configuration) — not on
+//!   threads/images/epochs;
 //! * the micsim cost model ([`crate::simulator::cost`]) depends only on
-//!   (architecture, machine);
+//!   (architecture, resolved simulator configuration);
 //! * a micsim "measurement" depends on the workload but not the strategy.
+//!
+//! "Resolved" means the base [`SimConfig`] with the scenario's machine
+//! axis substituted and its sim-axis variant applied
+//! ([`GridSpec::resolved_sim`]); entries are keyed by
+//! [`SimConfig::fingerprint`], so ablation sweeps over simulator
+//! constants share every entry within a variant and can never leak
+//! values across variants.
 //!
 //! The cache keys each by exactly its inputs, so a 10k-scenario sweep
 //! builds each model once and spends the rest of its time in the cheap
@@ -33,15 +41,19 @@ pub type SharedModel = Arc<dyn PerfModel + Send + Sync>;
 /// Hit/miss counters for one sweep run.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct CacheStats {
+    /// Lookups served from a memoized entry.
     pub hits: u64,
+    /// Lookups that had to compute.
     pub misses: u64,
 }
 
 impl CacheStats {
+    /// Total counted lookups.
     pub fn lookups(&self) -> u64 {
         self.hits + self.misses
     }
 
+    /// Fraction of lookups served from the memo (0 when idle).
     pub fn hit_rate(&self) -> f64 {
         if self.lookups() == 0 {
             0.0
@@ -53,33 +65,41 @@ impl CacheStats {
 
 /// The per-sweep memo: models, cost models, and micsim measurements.
 ///
-/// Measured-mode entries (cost models and measurements) are keyed by the
-/// [`SimConfig::fingerprint`] of the cache's simulator configuration in
-/// addition to their axes, so [`SweepCache::set_sim`] invalidates them
-/// wholesale — a changed simulator must never serve stale measurements.
+/// Every entry that depends on the simulator is keyed by the
+/// [`SimConfig::fingerprint`] of the scenario's **resolved** simulator
+/// configuration — the cache's base `sim` with the scenario's machine
+/// substituted and its sim-axis variant ([`crate::sweep::SimVariant`])
+/// applied on top. Cells sharing a (machine, variant) pair therefore
+/// share cost-model and measurement entries, while [`SweepCache::set_sim`]
+/// and differing variants can never serve each other stale values — a
+/// changed simulator is a changed key.
 pub struct SweepCache {
-    /// Base simulator configuration for the measured path; the machine
-    /// field is overridden per scenario by the grid's machine axis.
+    /// Base simulator configuration for the measured path; per scenario
+    /// the grid's machine axis and sim-variant overrides apply on top.
     sim: SimConfig,
-    sim_fp: u64,
-    models: Mutex<HashMap<(String, Strategy, usize), SharedModel>>,
-    costs: Mutex<HashMap<(String, usize, u64), Arc<CostModel>>>,
-    measured: Mutex<HashMap<(String, usize, usize, usize, usize, usize, u64), f64>>,
+    /// Resolved (config, fingerprint) per (machine, sim) axis pair —
+    /// internal plumbing, not counted in the hit/miss telemetry.
+    resolved: Mutex<HashMap<(usize, usize), (Arc<SimConfig>, u64)>>,
+    models: Mutex<HashMap<(String, Strategy, u64), SharedModel>>,
+    costs: Mutex<HashMap<(String, u64), Arc<CostModel>>>,
+    measured: Mutex<HashMap<(String, usize, usize, usize, usize, u64), f64>>,
     hits: AtomicU64,
     misses: AtomicU64,
 }
 
 impl SweepCache {
+    /// A cache whose measured path runs under [`SimConfig::default`].
     pub fn new() -> SweepCache {
         SweepCache::with_sim(SimConfig::default())
     }
 
     /// A cache whose measured path runs under `sim` (the
-    /// `SweepRunner::run_with_sim` hook).
+    /// `SweepRunner::run_with_sim` hook). Grid sim variants apply on top
+    /// of this base.
     pub fn with_sim(sim: SimConfig) -> SweepCache {
         SweepCache {
-            sim_fp: sim.fingerprint(),
             sim,
+            resolved: Mutex::new(HashMap::new()),
             models: Mutex::new(HashMap::new()),
             costs: Mutex::new(HashMap::new()),
             measured: Mutex::new(HashMap::new()),
@@ -88,26 +108,34 @@ impl SweepCache {
         }
     }
 
-    /// The simulator configuration the measured path runs under.
+    /// The base simulator configuration the measured path runs under.
     pub fn sim(&self) -> &SimConfig {
         &self.sim
     }
 
-    /// Swap the simulator configuration. Memoized cost models and
-    /// measurements keyed under the old fingerprint become unreachable
+    /// Swap the base simulator configuration. Memoized cost models and
+    /// measurements keyed under the old fingerprints become unreachable
     /// (but are retained: switching back re-hits them).
     pub fn set_sim(&mut self, sim: SimConfig) {
-        self.sim_fp = sim.fingerprint();
         self.sim = sim;
+        self.resolved.lock().unwrap().clear();
     }
 
-    /// The effective simulator configuration for one scenario: the base
-    /// `sim` with the scenario's machine substituted in.
-    fn sim_for(&self, grid: &GridSpec, scn: &Scenario) -> SimConfig {
-        SimConfig {
-            machine: grid.machines[scn.machine].clone(),
-            ..self.sim.clone()
+    /// The resolved simulator configuration (+ fingerprint) for one
+    /// scenario, memoized per (machine, sim) axis pair.
+    fn resolved_sim(&self, grid: &GridSpec, scn: &Scenario) -> (Arc<SimConfig>, u64) {
+        let key = (scn.machine, scn.sim);
+        if let Some(entry) = self.resolved.lock().unwrap().get(&key) {
+            return entry.clone();
         }
+        let sim = Arc::new(grid.resolved_sim(&self.sim, scn));
+        let fp = sim.fingerprint();
+        self.resolved
+            .lock()
+            .unwrap()
+            .entry(key)
+            .or_insert((sim, fp))
+            .clone()
     }
 
     /// Counted map probe (any table).
@@ -122,17 +150,22 @@ impl SweepCache {
     }
 
     /// The performance model for a scenario, built at most once per
-    /// (architecture, strategy, machine).
+    /// (architecture, strategy, resolved sim config) — the fingerprint
+    /// covers the machine, like the cost/measured keys. Models are
+    /// constructed against the scenario's resolved simulator — under
+    /// [`crate::perfmodel::ParamSource::Simulator`] the measured
+    /// parameters are probed from exactly the configuration that
+    /// produces the measurements (the closed loop).
     pub fn model(&self, grid: &GridSpec, scn: &Scenario) -> Result<SharedModel> {
         let arch = &grid.archs[scn.arch];
-        let key = (arch.name.clone(), scn.strategy, scn.machine);
+        let (sim, fp) = self.resolved_sim(grid, scn);
+        let key = (arch.name.clone(), scn.strategy, fp);
         if let Some(model) = self.probe(&self.models, &key) {
             return Ok(model);
         }
-        let machine = grid.machines[scn.machine].clone();
         let built: SharedModel = match scn.strategy {
-            Strategy::A => Arc::new(StrategyA::new(arch, grid.params)?.with_machine(machine)),
-            Strategy::B => Arc::new(StrategyB::new(arch, grid.params)?.with_machine(machine)),
+            Strategy::A => Arc::new(StrategyA::with_sim(arch, grid.params, &sim)?),
+            Strategy::B => Arc::new(StrategyB::with_sim(arch, grid.params, &sim)?),
         };
         Ok(self
             .models
@@ -143,15 +176,17 @@ impl SweepCache {
             .clone())
     }
 
-    /// The micsim cost model for (architecture, machine, sim config),
-    /// shared by every measured workload on that triple.
+    /// The micsim cost model for (architecture, resolved sim config),
+    /// shared by every measured workload on that pair — the fingerprint
+    /// covers the machine, so cells sharing a sim variant share entries.
     pub fn cost(&self, grid: &GridSpec, scn: &Scenario) -> Result<Arc<CostModel>> {
         let arch = &grid.archs[scn.arch];
-        let key = (arch.name.clone(), scn.machine, self.sim_fp);
+        let (sim, fp) = self.resolved_sim(grid, scn);
+        let key = (arch.name.clone(), fp);
         if let Some(cost) = self.probe(&self.costs, &key) {
             return Ok(cost);
         }
-        let built = Arc::new(CostModel::new(arch, &self.sim_for(grid, scn))?);
+        let built = Arc::new(CostModel::new(arch, &sim)?);
         Ok(self
             .costs
             .lock()
@@ -165,24 +200,24 @@ impl SweepCache {
     /// independent: the (a) and (b) rows of one point share it).
     pub fn measured_s(&self, grid: &GridSpec, scn: &Scenario) -> Result<f64> {
         let arch = &grid.archs[scn.arch];
+        let (sim, fp) = self.resolved_sim(grid, scn);
         let key = (
             arch.name.clone(),
-            scn.machine,
             scn.threads,
             scn.train_images,
             scn.test_images,
             scn.epochs,
-            self.sim_fp,
+            fp,
         );
         if let Some(v) = self.probe(&self.measured, &key) {
             return Ok(v);
         }
-        let sim = self.sim_for(grid, scn);
         let cost = self.cost(grid, scn)?;
         let v = simulate_training_with(&cost, &scn.run(), &sim)?.execution_s;
         Ok(*self.measured.lock().unwrap().entry(key).or_insert(v))
     }
 
+    /// Hit/miss counters accumulated so far.
     pub fn stats(&self) -> CacheStats {
         CacheStats {
             hits: self.hits.load(Ordering::Relaxed),
@@ -300,6 +335,99 @@ mod tests {
         let back = cache.measured_s(&grid, scn).unwrap();
         assert_eq!(back.to_bits(), base.to_bits());
         assert_eq!(cache.stats(), CacheStats { hits: 2, misses: 4 });
+    }
+
+    #[test]
+    fn sim_axis_cells_share_within_and_never_across_variants() {
+        use crate::sweep::grid::SimVariant;
+        // 2 variants × 2 threads × 2 strategies, measured: within each
+        // variant the (a, b) rows share the measurement and all cells
+        // share one cost model; across variants nothing is shared.
+        let grid = GridSpec {
+            strategies: vec![Strategy::A, Strategy::B],
+            sims: vec![
+                SimVariant { name: "slow".into(), clock_ghz: Some(1.0), ..Default::default() },
+                SimVariant { name: "fast".into(), clock_ghz: Some(1.5), ..Default::default() },
+            ],
+            measure: true,
+            ..tiny_grid()
+        };
+        let cache = SweepCache::new();
+        let scenarios = grid.enumerate();
+        assert_eq!(scenarios.len(), 8);
+        for scn in &scenarios {
+            cache.measured_s(&grid, scn).unwrap();
+        }
+        // Per variant: 2 measured misses + 1 cost miss, 2 measured hits
+        // + 1 cost hit — identical accounting to the non-ablation grid,
+        // doubled.
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 2 * 3);
+        assert_eq!(stats.hits, 2 * 3);
+        // Different clocks produce different values (no cross-variant
+        // leakage), and 1.5 GHz beats 1.0 GHz.
+        let slow = cache.measured_s(&grid, &scenarios[0]).unwrap();
+        let fast = cache.measured_s(&grid, &scenarios[4]).unwrap();
+        assert!(fast < slow, "{fast} !< {slow}");
+    }
+
+    #[test]
+    fn identical_variant_values_share_entries_across_names() {
+        use crate::sweep::grid::SimVariant;
+        // Two differently-named variants with identical overrides resolve
+        // to the same fingerprint: the second variant's cells hit.
+        let grid = GridSpec {
+            sims: vec![
+                SimVariant { name: "x".into(), seed: Some(9), ..Default::default() },
+                SimVariant { name: "y".into(), seed: Some(9), ..Default::default() },
+            ],
+            measure: true,
+            ..tiny_grid()
+        };
+        let cache = SweepCache::new();
+        let scenarios = grid.enumerate();
+        assert_eq!(scenarios.len(), 4);
+        for scn in &scenarios {
+            cache.measured_s(&grid, scn).unwrap();
+        }
+        // Variant x: 2 measured misses + 1 cost miss; variant y: 2
+        // measured hits and no cost probe (hits happen on the measured
+        // table before cost is consulted).
+        let stats = cache.stats();
+        assert_eq!(stats.misses, 3);
+        assert_eq!(stats.hits, 3);
+    }
+
+    #[test]
+    fn closed_loop_models_probe_the_variant_simulator() {
+        use crate::perfmodel::ParamSource;
+        use crate::sweep::grid::SimVariant;
+        // Under --params sim, a variant that slows the simulator must
+        // slow the *model's* probed parameters too (the closed loop):
+        // predictions differ across variants.
+        let grid = GridSpec {
+            params: ParamSource::Simulator,
+            sims: vec![
+                SimVariant { name: "base".into(), ..Default::default() },
+                SimVariant {
+                    name: "slow".into(),
+                    fwd_cycles_per_op: Some(62.0),
+                    ..Default::default()
+                },
+            ],
+            ..tiny_grid()
+        };
+        let cache = SweepCache::new();
+        let scenarios = grid.enumerate();
+        let run = scenarios[0].run();
+        let base = cache.model(&grid, &scenarios[0]).unwrap().predict(&run).unwrap();
+        let slow = cache.model(&grid, &scenarios[2]).unwrap().predict(&run).unwrap();
+        assert!(
+            slow.total_s > base.total_s,
+            "{} !> {}",
+            slow.total_s,
+            base.total_s
+        );
     }
 
     #[test]

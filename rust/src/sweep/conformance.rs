@@ -25,6 +25,15 @@
 //! percent): beyond 244 threads the models extrapolate optimistically
 //! while micsim pays oversubscription, so those bands pin the
 //! divergence itself rather than any published accuracy number.
+//!
+//! A second, **closed-loop** grid set ([`closed_loop_grids`]) re-runs
+//! the Table IX domain with `--params sim`
+//! ([`GridSpec::table9_closed_loop`]): every model parameter is probed
+//! from the same simulator that produces the measurements, so the
+//! pinned Δ isolates the models' structural error (fractional vs
+//! ceiling division, the L2/ring memory effects the closed forms lack)
+//! from parameter error. `repro conformance --closed-loop FILE` checks
+//! it against `baselines/closed_loop_smoke.json` the same way.
 
 use crate::error::{Error, Result};
 use crate::perfmodel::Band;
@@ -41,13 +50,21 @@ pub const BASELINE_VERSION: u64 = 1;
 /// accuracy domain.
 pub const CLAIM_GRID: &str = "table9";
 
+/// The claim grid of the closed-loop baseline: the Table IX domain with
+/// every model parameter probed from the measuring simulator.
+pub const CLOSED_LOOP_CLAIM_GRID: &str = "table9_closed_loop";
+
 /// Band-tolerance policy for [`ConformanceBaseline::capture`], matching
 /// `baselines/generate_measured_smoke.py`: ±max(floor, 2 % relative)
-/// percentage points. The floors dominate at the Table IX scale
-/// (Δ ≈ 5–25 %); the relative term takes over on the extrapolation
-/// grids where Δ runs to hundreds of percent.
+/// percentage points on the mean. The floors dominate at the Table IX
+/// scale (Δ ≈ 5–25 %); the relative term takes over on the
+/// extrapolation grids where Δ runs to hundreds of percent.
 pub const MEAN_TOL_PP_FLOOR: f64 = 1.0;
+/// Percentage-point tolerance floor on a band's max Δ (see
+/// [`MEAN_TOL_PP_FLOOR`]).
 pub const MAX_TOL_PP_FLOOR: f64 = 2.0;
+/// Relative tolerance term: ±2 % of the pinned value, whichever of
+/// floor/relative is larger.
 pub const TOL_REL: f64 = 0.02;
 
 /// Headroom over the observed overall mean when writing a claim whose
@@ -77,7 +94,25 @@ pub fn paper_grids() -> Vec<(&'static str, GridSpec)> {
 
 /// Run every paper grid, labelled.
 pub fn run_paper_grids(runner: &SweepRunner) -> Result<Vec<(String, SweepResults)>> {
-    paper_grids()
+    run_labelled(runner, paper_grids())
+}
+
+/// The closed-loop grid set: the Table IX domain under `--params sim`
+/// ([`GridSpec::table9_closed_loop`]).
+pub fn closed_loop_grids() -> Vec<(&'static str, GridSpec)> {
+    vec![(CLOSED_LOOP_CLAIM_GRID, GridSpec::table9_closed_loop())]
+}
+
+/// Run every closed-loop grid, labelled.
+pub fn run_closed_loop_grids(runner: &SweepRunner) -> Result<Vec<(String, SweepResults)>> {
+    run_labelled(runner, closed_loop_grids())
+}
+
+fn run_labelled(
+    runner: &SweepRunner,
+    grids: Vec<(&'static str, GridSpec)>,
+) -> Result<Vec<(String, SweepResults)>> {
+    grids
         .into_iter()
         .map(|(id, grid)| Ok((id.to_string(), runner.run(&grid)?)))
         .collect()
@@ -109,11 +144,15 @@ fn field_usize(node: &Json, key: &str, what: &str) -> Result<usize> {
 /// with absolute percentage-point tolerances.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BandSpec {
+    /// Architecture name of the pinned group.
     pub arch: String,
+    /// Model strategy of the pinned group.
     pub strategy: Strategy,
     /// Measured points the group must contain.
     pub points: usize,
+    /// Pinned mean Δ over the group, percent.
     pub mean_delta_pct: f64,
+    /// Pinned worst-point Δ over the group, percent.
     pub max_delta_pct: f64,
     /// Thread count of the pinned worst point (informational).
     pub max_at_threads: usize,
@@ -170,9 +209,12 @@ impl BandSpec {
 /// measured point set ([`SweepResults::accuracy_overall`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClaimSpec {
+    /// Strategy the claim constrains.
     pub strategy: Strategy,
-    /// Grid id the claim folds over (normally [`CLAIM_GRID`]).
+    /// Grid id the claim folds over ([`CLAIM_GRID`] or
+    /// [`CLOSED_LOOP_CLAIM_GRID`]).
     pub grid: String,
+    /// Paper value + ceiling the observed mean must stay under.
     pub band: Band,
 }
 
@@ -206,9 +248,12 @@ impl ClaimSpec {
 /// One grid's pinned bands plus its re-runnable spec document.
 #[derive(Debug, Clone)]
 pub struct GridBands {
+    /// Grid label (`table9` / `table10` / `table11` /
+    /// `table9_closed_loop`).
     pub id: String,
     /// Spec document re-runnable via [`GridSpec::from_json`].
     pub spec: Json,
+    /// One pinned band per measured (architecture × strategy) group.
     pub bands: Vec<BandSpec>,
 }
 
@@ -216,7 +261,9 @@ pub struct GridBands {
 /// per-strategy paper claims (`baselines/measured_smoke.json`).
 #[derive(Debug, Clone)]
 pub struct ConformanceBaseline {
+    /// The per-strategy paper-claim ceilings.
     pub claims: Vec<ClaimSpec>,
+    /// The pinned grids with their Δ bands.
     pub grids: Vec<GridBands>,
 }
 
@@ -231,10 +278,40 @@ impl ConformanceBaseline {
         ConformanceBaseline::from_runs(&run_paper_grids(runner)?)
     }
 
-    /// Build a baseline from already-evaluated labelled runs.
+    /// Run the closed-loop grid set ([`closed_loop_grids`]) and pin the
+    /// observed bands — the `repro conformance --write-closed-loop`
+    /// path. Claims fold over [`CLOSED_LOOP_CLAIM_GRID`].
+    pub fn capture_closed_loop(runner: &SweepRunner) -> Result<ConformanceBaseline> {
+        ConformanceBaseline::from_runs_with_claim(
+            &run_closed_loop_grids(runner)?,
+            CLOSED_LOOP_CLAIM_GRID,
+        )
+    }
+
+    /// Build a baseline from already-evaluated labelled runs, folding
+    /// the per-strategy claims over [`CLAIM_GRID`].
     pub fn from_runs(runs: &[(String, SweepResults)]) -> Result<ConformanceBaseline> {
+        ConformanceBaseline::from_runs_with_claim(runs, CLAIM_GRID)
+    }
+
+    /// [`ConformanceBaseline::from_runs`] with an explicit claim grid
+    /// (the closed-loop baseline folds its claims over
+    /// [`CLOSED_LOOP_CLAIM_GRID`] instead).
+    pub fn from_runs_with_claim(
+        runs: &[(String, SweepResults)],
+        claim_grid: &str,
+    ) -> Result<ConformanceBaseline> {
         let mut grids = Vec::with_capacity(runs.len());
         for (id, res) in runs {
+            // Conformance bands key groups by (arch, strategy) alone;
+            // ablation grids would alias groups across sim variants —
+            // pin those with `repro sweep --write-baseline` instead.
+            if !res.grid.sims.is_empty() {
+                return Err(Error::Config(format!(
+                    "conformance grid {id:?} has a sim axis — ablation grids \
+                     are pinned via sweep baselines, not conformance bands"
+                )));
+            }
             let bands: Vec<BandSpec> = res
                 .accuracy()
                 .iter()
@@ -263,10 +340,10 @@ impl ConformanceBaseline {
         }
         let (_, claim_run) = runs
             .iter()
-            .find(|(id, _)| id == CLAIM_GRID)
+            .find(|(id, _)| id == claim_grid)
             .ok_or_else(|| {
                 Error::Config(format!(
-                    "conformance runs lack the claim grid {CLAIM_GRID:?}"
+                    "conformance runs lack the claim grid {claim_grid:?}"
                 ))
             })?;
         let mut claims = Vec::new();
@@ -277,7 +354,7 @@ impl ConformanceBaseline {
             let paper_pct = paper_claim_mean_pct(strategy);
             claims.push(ClaimSpec {
                 strategy,
-                grid: CLAIM_GRID.to_string(),
+                grid: claim_grid.to_string(),
                 band: Band {
                     paper_pct,
                     ceiling_pct: paper_pct
@@ -293,6 +370,7 @@ impl ConformanceBaseline {
         Ok(ConformanceBaseline { claims, grids })
     }
 
+    /// Serialize as the committed baseline file format.
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("kind", Json::str("micdl-conformance-baseline")),
@@ -324,6 +402,7 @@ impl ConformanceBaseline {
         ])
     }
 
+    /// Parse a baseline file (version- and shape-checked).
     pub fn parse(text: &str) -> Result<ConformanceBaseline> {
         let doc = Json::parse(text)?;
         match doc.get("version").and_then(Json::as_usize) {
@@ -407,6 +486,19 @@ impl ConformanceBaseline {
                 report.problems.push(format!("grid {:?} was not run", g.id));
                 continue;
             };
+            // Mirror the capture-side rejection: bands address groups by
+            // (arch, strategy) alone, so on an ablation grid only the
+            // first variant's groups would ever be compared — a silent
+            // pass for every other variant. Surface it structurally.
+            if !res.grid.sims.is_empty() {
+                report.problems.push(format!(
+                    "grid {}: run has a sim axis — conformance bands cannot \
+                     address sim-variant groups (pin ablation grids with \
+                     sweep baselines)",
+                    g.id
+                ));
+                continue;
+            }
             report.scenarios += res.len();
             let observed = res.accuracy();
             for band in &g.bands {
@@ -476,17 +568,26 @@ impl ConformanceBaseline {
 /// One band compared against a fresh run.
 #[derive(Debug, Clone)]
 pub struct BandCheck {
+    /// Grid the band belongs to.
     pub grid: String,
+    /// The pinned band.
     pub band: BandSpec,
+    /// Freshly observed mean Δ, percent.
     pub observed_mean_pct: f64,
+    /// Freshly observed max Δ, percent.
     pub observed_max_pct: f64,
+    /// Freshly observed measured-point count.
     pub observed_points: usize,
+    /// Mean drift within tolerance.
     pub mean_ok: bool,
+    /// Max drift within tolerance.
     pub max_ok: bool,
+    /// Point count matches the pin.
     pub points_ok: bool,
 }
 
 impl BandCheck {
+    /// All three sub-checks hold.
     pub fn pass(&self) -> bool {
         self.mean_ok && self.max_ok && self.points_ok
     }
@@ -495,15 +596,20 @@ impl BandCheck {
 /// One paper claim compared against a fresh run.
 #[derive(Debug, Clone)]
 pub struct ClaimCheck {
+    /// The pinned claim.
     pub claim: ClaimSpec,
+    /// Freshly observed overall mean Δ, percent.
     pub observed_mean_pct: f64,
+    /// Observation stayed under the ceiling.
     pub pass: bool,
 }
 
 /// The machine-readable outcome of a conformance check.
 #[derive(Debug, Clone)]
 pub struct ConformanceReport {
+    /// One check per pinned band.
     pub bands: Vec<BandCheck>,
+    /// One check per pinned claim.
     pub claims: Vec<ClaimCheck>,
     /// Structural findings: grids not run, groups without bands, bands
     /// without groups.
@@ -522,6 +628,7 @@ impl ConformanceReport {
             && self.claims.iter().all(|c| c.pass)
     }
 
+    /// Serialize as the machine-readable stdout payload.
     pub fn to_json(&self) -> Json {
         let bands = self
             .bands
@@ -798,6 +905,103 @@ mod tests {
         let err = ConformanceBaseline::parse(&base.to_json().emit());
         assert!(err.is_err());
         assert!(err.unwrap_err().to_string().contains("no claims"));
+    }
+
+    #[test]
+    fn closed_loop_capture_checks_clean_and_round_trips() {
+        // A scaled-down closed-loop claim grid: params = sim, measured.
+        let grid = GridSpec {
+            archs: vec![crate::config::ArchSpec::small()],
+            threads: vec![1, 15],
+            strategies: vec![Strategy::A, Strategy::B],
+            params: crate::perfmodel::ParamSource::Simulator,
+            measure: true,
+            ..GridSpec::default()
+        };
+        let runs = vec![(
+            CLOSED_LOOP_CLAIM_GRID.to_string(),
+            SweepRunner::serial().run(&grid).unwrap(),
+        )];
+        let base =
+            ConformanceBaseline::from_runs_with_claim(&runs, CLOSED_LOOP_CLAIM_GRID).unwrap();
+        assert_eq!(base.claims.len(), 2);
+        for claim in &base.claims {
+            assert_eq!(claim.grid, CLOSED_LOOP_CLAIM_GRID);
+        }
+        // The embedded spec re-runs under sim params.
+        let back = ConformanceBaseline::parse(&base.to_json().emit()).unwrap();
+        let regrid = GridSpec::from_json(&back.grids[0].spec.emit()).unwrap();
+        assert_eq!(regrid.params, crate::perfmodel::ParamSource::Simulator);
+        let report = back.check_results(&runs);
+        assert!(report.is_clean(), "{}", report.render());
+        // Using the wrong claim grid errors instead of silently pinning
+        // nothing.
+        assert!(ConformanceBaseline::from_runs(&runs).is_err());
+    }
+
+    #[test]
+    fn closed_loop_grid_set_is_table9_under_sim_params() {
+        let grids = closed_loop_grids();
+        assert_eq!(grids.len(), 1);
+        assert_eq!(grids[0].0, CLOSED_LOOP_CLAIM_GRID);
+        assert_eq!(grids[0].1.len(), 42);
+        assert!(grids[0].1.measure);
+        assert_eq!(grids[0].1.params, crate::perfmodel::ParamSource::Simulator);
+    }
+
+    #[test]
+    fn ablation_grids_are_rejected_by_conformance_capture() {
+        use crate::sweep::grid::SimVariant;
+        let grid = GridSpec {
+            archs: vec![crate::config::ArchSpec::small()],
+            threads: vec![1],
+            strategies: vec![Strategy::A],
+            sims: vec![SimVariant { name: "x".into(), seed: Some(1), ..Default::default() }],
+            measure: true,
+            ..GridSpec::default()
+        };
+        let runs = vec![(
+            CLAIM_GRID.to_string(),
+            SweepRunner::serial().run(&grid).unwrap(),
+        )];
+        let err = ConformanceBaseline::from_runs(&runs);
+        assert!(err.is_err());
+        assert!(err.unwrap_err().to_string().contains("sim axis"));
+    }
+
+    #[test]
+    fn ablation_runs_fail_the_check_structurally() {
+        use crate::sweep::grid::SimVariant;
+        // The check side mirrors the capture-side rejection: a baseline
+        // whose embedded spec grows a sim axis (hand-edited — the spec
+        // format accepts one) must fail structurally, not silently check
+        // only the first variant's groups.
+        let runs = small_runs();
+        let base = ConformanceBaseline::from_runs(&runs).unwrap();
+        let ablated_grid = GridSpec {
+            archs: vec![crate::config::ArchSpec::small()],
+            threads: vec![1, 15],
+            strategies: vec![Strategy::A, Strategy::B],
+            sims: vec![
+                SimVariant { name: "x".into(), ..Default::default() },
+                SimVariant { name: "y".into(), seed: Some(9), ..Default::default() },
+            ],
+            measure: true,
+            ..GridSpec::default()
+        };
+        let ablated_runs = vec![(
+            CLAIM_GRID.to_string(),
+            SweepRunner::serial().run(&ablated_grid).unwrap(),
+        )];
+        let report = base.check_results(&ablated_runs);
+        assert!(!report.is_clean());
+        assert!(
+            report.problems.iter().any(|p| p.contains("sim axis")),
+            "{:?}",
+            report.problems
+        );
+        // No band was (mis)compared against a variant group.
+        assert!(report.bands.is_empty());
     }
 
     #[test]

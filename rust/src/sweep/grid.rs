@@ -3,16 +3,25 @@
 //!
 //! A [`GridSpec`] names one value list per axis — architecture, machine
 //! configuration, (train, test) image counts, epochs, thread count, model
-//! strategy — and [`GridSpec::enumerate`] expands the cross-product into a
-//! deterministic, stably-ordered scenario list. The order is lexicographic
-//! in axis position (arch → machine → images → epochs → threads →
+//! strategy, and (optionally) simulator configuration — and
+//! [`GridSpec::enumerate`] expands the cross-product into a deterministic,
+//! stably-ordered scenario list. The order is lexicographic in axis
+//! position (sim → arch → machine → images → epochs → threads →
 //! strategy), so a scenario's id is pure stride arithmetic over the axis
 //! indices and results can be addressed in O(1)
 //! ([`crate::sweep::SweepResults::at`]).
+//!
+//! The **sim axis** ([`SimVariant`]) makes the simulator configuration a
+//! first-class sweep dimension: each variant is a named set of overrides
+//! on [`SimConfig`] (clock, core/thread counts, cycle and cache/latency
+//! constants, fidelity, seed), applied on top of the scenario's machine.
+//! An empty axis means "the default simulator" and reproduces the
+//! pre-ablation grid exactly.
 
 use crate::config::{ArchSpec, MachineConfig, RunConfig};
 use crate::error::{Error, Result};
 use crate::perfmodel::ParamSource;
+use crate::simulator::{Fidelity, SimConfig};
 use crate::util::json::Json;
 
 /// Which analytic model evaluates a scenario (paper Tables V / VI).
@@ -25,6 +34,7 @@ pub enum Strategy {
 }
 
 impl Strategy {
+    /// Lower-case paper label ("a" / "b") — the JSON/CSV encoding.
     pub fn as_str(self) -> &'static str {
         match self {
             Strategy::A => "a",
@@ -51,19 +61,345 @@ impl std::fmt::Display for Strategy {
     }
 }
 
+/// One named simulator-configuration override set — a point on the grid's
+/// sim axis.
+///
+/// Every field is optional: `None` inherits the base [`SimConfig`] (and,
+/// for the machine fields, the grid's machine axis). Overrides **win**
+/// over the machine axis: a variant that sets `clock_ghz` pins the
+/// simulated clock for its cells regardless of `--clock-ghz` machine
+/// variants — [`GridSpec::sim_machine_conflicts`] names such collisions
+/// so the CLI can warn instead of silently dropping one side.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct SimVariant {
+    /// Unique axis label (keys output rows and baseline cells).
+    pub name: String,
+    /// Override the simulated core clock, GHz (machine field — sim wins).
+    pub clock_ghz: Option<f64>,
+    /// Override the simulated physical core count (machine field).
+    pub cores: Option<usize>,
+    /// Override hardware threads per core (machine field).
+    pub threads_per_core: Option<usize>,
+    /// Override calibrated cycles per abstract forward operation.
+    pub fwd_cycles_per_op: Option<f64>,
+    /// Override calibrated cycles per abstract backward operation.
+    pub bwd_cycles_per_op: Option<f64>,
+    /// Override the issue-bound fraction of per-image cycles.
+    pub exec_fraction: Option<f64>,
+    /// Override the L2-sharing pressure coefficient α.
+    pub l2_alpha: Option<f64>,
+    /// Override the cap on the L2 working-set pressure ratio.
+    pub l2_ratio_cap: Option<f64>,
+    /// Override the ring/tag-directory latency coefficient β.
+    pub ring_beta: Option<f64>,
+    /// Override the per-software-thread oversubscription overhead.
+    pub oversub_overhead: Option<f64>,
+    /// Override the simulation granularity.
+    pub fidelity: Option<Fidelity>,
+    /// Override the simulator's deterministic jitter seed.
+    pub seed: Option<u64>,
+}
+
+impl SimVariant {
+    /// The JSON keys a variant object may carry (unknown keys are
+    /// rejected — a typo must not silently ablate nothing).
+    const KNOWN_KEYS: [&'static str; 13] = [
+        "name",
+        "clock_ghz",
+        "cores",
+        "threads_per_core",
+        "fwd_cycles_per_op",
+        "bwd_cycles_per_op",
+        "exec_fraction",
+        "l2_alpha",
+        "l2_ratio_cap",
+        "ring_beta",
+        "oversub_overhead",
+        "fidelity",
+        "seed",
+    ];
+
+    /// Does this variant override any simulated-machine field (clock,
+    /// cores, threads per core)? Such overrides win over the grid's
+    /// machine axis.
+    pub fn overrides_machine(&self) -> bool {
+        self.clock_ghz.is_some() || self.cores.is_some() || self.threads_per_core.is_some()
+    }
+
+    /// Apply the overrides on top of `base` (whose `machine` is already
+    /// the scenario's machine-axis value). Machine-field overrides
+    /// replace the corresponding machine fields — **sim wins** over the
+    /// machine axis.
+    pub fn apply(&self, base: &SimConfig) -> SimConfig {
+        let mut sim = base.clone();
+        if let Some(ghz) = self.clock_ghz {
+            sim.machine.clock_hz = ghz * 1e9;
+        }
+        if let Some(cores) = self.cores {
+            sim.machine.cores = cores;
+        }
+        if let Some(tpc) = self.threads_per_core {
+            sim.machine.threads_per_core = tpc;
+        }
+        if let Some(v) = self.fwd_cycles_per_op {
+            sim.fwd_cycles_per_op = v;
+        }
+        if let Some(v) = self.bwd_cycles_per_op {
+            sim.bwd_cycles_per_op = v;
+        }
+        if let Some(v) = self.exec_fraction {
+            sim.exec_fraction = v;
+        }
+        if let Some(v) = self.l2_alpha {
+            sim.l2_alpha = v;
+        }
+        if let Some(v) = self.l2_ratio_cap {
+            sim.l2_ratio_cap = v;
+        }
+        if let Some(v) = self.ring_beta {
+            sim.ring_beta = v;
+        }
+        if let Some(v) = self.oversub_overhead {
+            sim.oversub_overhead = v;
+        }
+        if let Some(f) = self.fidelity {
+            sim.fidelity = f;
+        }
+        if let Some(s) = self.seed {
+            sim.seed = s;
+        }
+        sim
+    }
+
+    /// A compact name derived from the set overrides (used when a spec or
+    /// the CLI gives none): `"clock=1.5,seed=7"`, or `"default"` for a
+    /// no-op variant.
+    pub fn auto_name(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        if let Some(v) = self.clock_ghz {
+            parts.push(format!("clock={v}"));
+        }
+        if let Some(v) = self.cores {
+            parts.push(format!("cores={v}"));
+        }
+        if let Some(v) = self.threads_per_core {
+            parts.push(format!("tpc={v}"));
+        }
+        if let Some(v) = self.fwd_cycles_per_op {
+            parts.push(format!("fwd={v}"));
+        }
+        if let Some(v) = self.bwd_cycles_per_op {
+            parts.push(format!("bwd={v}"));
+        }
+        if let Some(v) = self.exec_fraction {
+            parts.push(format!("exec={v}"));
+        }
+        if let Some(v) = self.l2_alpha {
+            parts.push(format!("l2a={v}"));
+        }
+        if let Some(v) = self.l2_ratio_cap {
+            parts.push(format!("l2cap={v}"));
+        }
+        if let Some(v) = self.ring_beta {
+            parts.push(format!("ring={v}"));
+        }
+        if let Some(v) = self.oversub_overhead {
+            parts.push(format!("oversub={v}"));
+        }
+        if let Some(f) = self.fidelity {
+            parts.push(format!("fidelity={}", f.as_str()));
+        }
+        if let Some(s) = self.seed {
+            parts.push(format!("seed={s}"));
+        }
+        if parts.is_empty() {
+            "default".to_string()
+        } else {
+            parts.join(",")
+        }
+    }
+
+    /// Reject override values the simulator cannot run under.
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            return Err(Error::Config("sim variant has an empty name".into()));
+        }
+        let finite_pos = |key: &str, v: Option<f64>| -> Result<()> {
+            match v {
+                Some(v) if !(v.is_finite() && v > 0.0) => Err(Error::Config(format!(
+                    "sim variant {:?}: {key} must be finite and > 0, got {v}",
+                    self.name
+                ))),
+                _ => Ok(()),
+            }
+        };
+        finite_pos("clock_ghz", self.clock_ghz)?;
+        finite_pos("fwd_cycles_per_op", self.fwd_cycles_per_op)?;
+        finite_pos("bwd_cycles_per_op", self.bwd_cycles_per_op)?;
+        finite_pos("l2_ratio_cap", self.l2_ratio_cap)?;
+        if let Some(v) = self.exec_fraction {
+            if !(v.is_finite() && v > 0.0 && v <= 1.0) {
+                return Err(Error::Config(format!(
+                    "sim variant {:?}: exec_fraction must be in (0, 1], got {v}",
+                    self.name
+                )));
+            }
+        }
+        let finite_nonneg = |key: &str, v: Option<f64>| -> Result<()> {
+            match v {
+                Some(v) if !(v.is_finite() && v >= 0.0) => Err(Error::Config(format!(
+                    "sim variant {:?}: {key} must be finite and >= 0, got {v}",
+                    self.name
+                ))),
+                _ => Ok(()),
+            }
+        };
+        finite_nonneg("l2_alpha", self.l2_alpha)?;
+        finite_nonneg("ring_beta", self.ring_beta)?;
+        finite_nonneg("oversub_overhead", self.oversub_overhead)?;
+        if self.cores == Some(0) || self.threads_per_core == Some(0) {
+            return Err(Error::Config(format!(
+                "sim variant {:?}: cores/threads_per_core must be >= 1",
+                self.name
+            )));
+        }
+        // The ring factor divides by (cores − 1): a single simulated core
+        // is not a machine micsim models.
+        if self.cores == Some(1) {
+            return Err(Error::Config(format!(
+                "sim variant {:?}: micsim needs >= 2 cores (ring model)",
+                self.name
+            )));
+        }
+        // The spec document stores the seed as a JSON number (f64);
+        // beyond 2^53 the round-trip would silently alter it.
+        if self.seed.map(|s| s > (1 << 53)).unwrap_or(false) {
+            return Err(Error::Config(format!(
+                "sim variant {:?}: seed must be <= 2^53 (it round-trips \
+                 through a JSON number)",
+                self.name
+            )));
+        }
+        Ok(())
+    }
+
+    /// Emit as a spec-document object ([`SimVariant::from_json`] inverse).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("name", Json::str(self.name.clone()))];
+        let mut num = |key: &'static str, v: Option<f64>| {
+            if let Some(v) = v {
+                pairs.push((key, Json::num(v)));
+            }
+        };
+        num("clock_ghz", self.clock_ghz);
+        num("fwd_cycles_per_op", self.fwd_cycles_per_op);
+        num("bwd_cycles_per_op", self.bwd_cycles_per_op);
+        num("exec_fraction", self.exec_fraction);
+        num("l2_alpha", self.l2_alpha);
+        num("l2_ratio_cap", self.l2_ratio_cap);
+        num("ring_beta", self.ring_beta);
+        num("oversub_overhead", self.oversub_overhead);
+        if let Some(v) = self.cores {
+            pairs.push(("cores", Json::num(v as f64)));
+        }
+        if let Some(v) = self.threads_per_core {
+            pairs.push(("threads_per_core", Json::num(v as f64)));
+        }
+        if let Some(f) = self.fidelity {
+            pairs.push(("fidelity", Json::str(f.as_str())));
+        }
+        if let Some(s) = self.seed {
+            pairs.push(("seed", Json::num(s as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    /// Parse one variant object of a spec document's `sim` array. The
+    /// `name` key is optional ([`SimVariant::auto_name`] fills it in).
+    pub fn from_json(node: &Json) -> Result<SimVariant> {
+        let Some(pairs) = node.as_obj() else {
+            return Err(Error::Config("sim entries must be JSON objects".into()));
+        };
+        for (key, _) in pairs {
+            if !Self::KNOWN_KEYS.contains(&key.as_str()) {
+                return Err(Error::Config(format!(
+                    "unknown sim variant key {key:?} (known keys: {:?})",
+                    Self::KNOWN_KEYS
+                )));
+            }
+        }
+        let num = |key: &str| -> Result<Option<f64>> {
+            match node.get(key) {
+                None => Ok(None),
+                Some(v) => v.as_f64().map(Some).ok_or_else(|| {
+                    Error::Config(format!("sim variant {key} must be a number"))
+                }),
+            }
+        };
+        let int = |key: &str| -> Result<Option<usize>> {
+            match node.get(key) {
+                None => Ok(None),
+                Some(v) => v.as_usize().map(Some).ok_or_else(|| {
+                    Error::Config(format!("sim variant {key} must be an integer"))
+                }),
+            }
+        };
+        let fidelity = match node.get("fidelity") {
+            None => None,
+            Some(v) => {
+                let text = v.as_str().ok_or_else(|| {
+                    Error::Config("sim variant fidelity must be a string".into())
+                })?;
+                Some(Fidelity::parse(text)?)
+            }
+        };
+        let mut variant = SimVariant {
+            name: String::new(),
+            clock_ghz: num("clock_ghz")?,
+            cores: int("cores")?,
+            threads_per_core: int("threads_per_core")?,
+            fwd_cycles_per_op: num("fwd_cycles_per_op")?,
+            bwd_cycles_per_op: num("bwd_cycles_per_op")?,
+            exec_fraction: num("exec_fraction")?,
+            l2_alpha: num("l2_alpha")?,
+            l2_ratio_cap: num("l2_ratio_cap")?,
+            ring_beta: num("ring_beta")?,
+            oversub_overhead: num("oversub_overhead")?,
+            fidelity,
+            seed: int("seed")?.map(|s| s as u64),
+        };
+        variant.name = match node.get("name").map(|n| n.as_str()) {
+            None => variant.auto_name(),
+            Some(Some(name)) => name.to_string(),
+            Some(None) => {
+                return Err(Error::Config("sim variant name must be a string".into()))
+            }
+        };
+        Ok(variant)
+    }
+}
+
 /// One point of the grid, with every axis resolved to a concrete value.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Scenario {
     /// Stable index into the enumeration order (also the result slot).
     pub id: usize,
+    /// Index into [`GridSpec::sims`] (0 when the sim axis is empty — the
+    /// implicit default-simulator variant).
+    pub sim: usize,
     /// Index into [`GridSpec::archs`].
     pub arch: usize,
     /// Index into [`GridSpec::machines`].
     pub machine: usize,
+    /// Training (and validation) image count.
     pub train_images: usize,
+    /// Test image count.
     pub test_images: usize,
+    /// Training epochs.
     pub epochs: usize,
+    /// Processing units `p`.
     pub threads: usize,
+    /// Which analytic model evaluates this point.
     pub strategy: Strategy,
 }
 
@@ -80,6 +416,30 @@ impl Scenario {
 }
 
 /// A declarative scenario grid (one value list per axis).
+///
+/// ```
+/// use micdl::sweep::{GridSpec, SimVariant, Strategy, SweepRunner};
+///
+/// // An ablation grid: the small CNN at two clock speeds, measured.
+/// let grid = GridSpec {
+///     archs: vec![micdl::config::ArchSpec::small()],
+///     threads: vec![15, 240],
+///     strategies: vec![Strategy::B],
+///     sims: vec![
+///         SimVariant { name: "slow".into(), clock_ghz: Some(1.0), ..Default::default() },
+///         SimVariant { name: "fast".into(), clock_ghz: Some(1.5), ..Default::default() },
+///     ],
+///     measure: true,
+///     ..GridSpec::default()
+/// };
+/// assert_eq!(grid.len(), 4); // 2 sim variants × 2 thread counts
+/// let results = SweepRunner::serial().run(&grid).unwrap();
+/// assert_eq!(results.len(), 4);
+/// // The "fast" variant's simulated time beats the "slow" one.
+/// let slow = results.at_sim(0, 0, 0, 0, 0, 1, 0).measured_s.unwrap();
+/// let fast = results.at_sim(1, 0, 0, 0, 0, 1, 0).measured_s.unwrap();
+/// assert!(fast < slow);
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct GridSpec {
     /// Architecture axis. Names must be unique (they key the sweep cache).
@@ -95,6 +455,9 @@ pub struct GridSpec {
     pub threads: Vec<usize>,
     /// Model strategy axis.
     pub strategies: Vec<Strategy>,
+    /// Simulator-configuration (ablation) axis. Empty means "the default
+    /// simulator" — a single implicit variant; names must be unique.
+    pub sims: Vec<SimVariant>,
     /// Parameter provenance for every model in the grid.
     pub params: ParamSource,
     /// Also "measure" each (arch, machine, workload) point on micsim and
@@ -111,6 +474,7 @@ impl Default for GridSpec {
             epochs: Vec::new(),
             threads: RunConfig::MEASURED_THREADS.to_vec(),
             strategies: vec![Strategy::A, Strategy::B],
+            sims: Vec::new(),
             params: ParamSource::Paper,
             measure: false,
         }
@@ -133,7 +497,8 @@ fn dedup_preserve<T: PartialEq + Clone>(values: &mut Vec<T>) {
 impl GridSpec {
     /// Number of scenarios the grid expands to.
     pub fn len(&self) -> usize {
-        self.archs.len()
+        self.sims.len().max(1)
+            * self.archs.len()
             * self.machines.len()
             * self.images.len()
             * self.epochs.len().max(1)
@@ -141,8 +506,67 @@ impl GridSpec {
             * self.strategies.len()
     }
 
+    /// True when the grid expands to no scenarios.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Sim-axis length including the implicit default variant (≥ 1).
+    pub fn sim_count(&self) -> usize {
+        self.sims.len().max(1)
+    }
+
+    /// The sim-axis label for one scenario (`None` when the axis is
+    /// empty — the implicit default simulator).
+    pub fn sim_name(&self, scn: &Scenario) -> Option<&str> {
+        self.sims.get(scn.sim).map(|v| v.name.as_str())
+    }
+
+    /// The effective simulator configuration for one scenario: `base`
+    /// with the scenario's machine-axis value substituted in, then the
+    /// scenario's sim-variant overrides applied on top (**sim wins** over
+    /// the machine axis on conflicting fields).
+    pub fn resolved_sim(&self, base: &SimConfig, scn: &Scenario) -> SimConfig {
+        let sim = SimConfig {
+            machine: self.machines[scn.machine].clone(),
+            ..base.clone()
+        };
+        match self.sims.get(scn.sim) {
+            Some(variant) => variant.apply(&sim),
+            None => sim,
+        }
+    }
+
+    /// Machine-axis values that a sim variant will override (the
+    /// composition is explicit: sim wins). One human-readable finding per
+    /// (variant, machine) collision — the CLI prints these as warnings so
+    /// `--clock-ghz 1.0 --sim-clock-ghz 1.5` is never silent.
+    pub fn sim_machine_conflicts(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for v in &self.sims {
+            if !v.overrides_machine() {
+                continue;
+            }
+            for m in &self.machines {
+                let clock_clash = v
+                    .clock_ghz
+                    .map(|ghz| (ghz * 1e9 - m.clock_hz).abs() > 1e-3)
+                    .unwrap_or(false);
+                let cores_clash = v.cores.map(|c| c != m.cores).unwrap_or(false);
+                let tpc_clash = v
+                    .threads_per_core
+                    .map(|t| t != m.threads_per_core)
+                    .unwrap_or(false);
+                if clock_clash || cores_clash || tpc_clash {
+                    out.push(format!(
+                        "sim variant {:?} overrides machine {:?} \
+                         (sim axis wins over the machine axis)",
+                        v.name, m.name
+                    ));
+                }
+            }
+        }
+        out
     }
 
     /// Reject grids the runner cannot evaluate.
@@ -195,6 +619,17 @@ impl GridSpec {
         for arch in &self.archs {
             arch.validate()?;
         }
+        let mut sim_names: Vec<&str> = self.sims.iter().map(|v| v.name.as_str()).collect();
+        sim_names.sort_unstable();
+        if sim_names.windows(2).any(|w| w[0] == w[1]) {
+            return Err(Error::Config(
+                "sim variant names must be unique (they key output rows and baselines)"
+                    .into(),
+            ));
+        }
+        for variant in &self.sims {
+            variant.validate()?;
+        }
         Ok(())
     }
 
@@ -215,6 +650,7 @@ impl GridSpec {
         dedup_preserve(&mut self.epochs);
         dedup_preserve(&mut self.threads);
         dedup_preserve(&mut self.strategies);
+        dedup_preserve(&mut self.sims);
     }
 
     /// Epoch values for one architecture (the paper default when the axis
@@ -227,28 +663,33 @@ impl GridSpec {
         }
     }
 
-    /// Expand the cross-product in deterministic lexicographic order.
+    /// Expand the cross-product in deterministic lexicographic order
+    /// (sim outermost, so a sim-free grid enumerates exactly as before
+    /// the axis existed).
     pub fn enumerate(&self) -> Vec<Scenario> {
         let mut out = Vec::with_capacity(self.len());
         let mut id = 0;
-        for (ai, arch) in self.archs.iter().enumerate() {
-            let epochs = self.epochs_for(arch);
-            for mi in 0..self.machines.len() {
-                for &(i, it) in &self.images {
-                    for &ep in &epochs {
-                        for &p in &self.threads {
-                            for &s in &self.strategies {
-                                out.push(Scenario {
-                                    id,
-                                    arch: ai,
-                                    machine: mi,
-                                    train_images: i,
-                                    test_images: it,
-                                    epochs: ep,
-                                    threads: p,
-                                    strategy: s,
-                                });
-                                id += 1;
+        for si in 0..self.sim_count() {
+            for (ai, arch) in self.archs.iter().enumerate() {
+                let epochs = self.epochs_for(arch);
+                for mi in 0..self.machines.len() {
+                    for &(i, it) in &self.images {
+                        for &ep in &epochs {
+                            for &p in &self.threads {
+                                for &s in &self.strategies {
+                                    out.push(Scenario {
+                                        id,
+                                        sim: si,
+                                        arch: ai,
+                                        machine: mi,
+                                        train_images: i,
+                                        test_images: it,
+                                        epochs: ep,
+                                        threads: p,
+                                        strategy: s,
+                                    });
+                                    id += 1;
+                                }
                             }
                         }
                     }
@@ -296,6 +737,21 @@ impl GridSpec {
         }
     }
 
+    /// The closed-loop conformance grid: the Table IX evaluation domain
+    /// with `params = sim` — every model parameter (op counts, per-image
+    /// times, contention) is probed from the **same** simulator that
+    /// produces the measurements, the way the paper's authors measured
+    /// theirs on the real testbed. The resulting Δ isolates the models'
+    /// *structural* error (fractional vs ceiling division, L2/ring
+    /// effects the analytic forms lack) from parameter error; `repro
+    /// conformance` pins it against `baselines/closed_loop_smoke.json`.
+    pub fn table9_closed_loop() -> GridSpec {
+        GridSpec {
+            params: ParamSource::Simulator,
+            ..GridSpec::table9()
+        }
+    }
+
     /// Build a grid from a JSON spec document. Every key is optional and
     /// falls back to the paper defaults; unknown keys are rejected (a
     /// typo must not silently sweep the wrong grid). `threads` and
@@ -311,13 +767,14 @@ impl GridSpec {
     ///   "strategies": ["a", "b"],
     ///   "params": "paper",
     ///   "clock_ghz": [1.238],
+    ///   "sim": [{"name": "hot", "clock_ghz": 1.5, "seed": 7}],
     ///   "measure": false
     /// }
     /// ```
     pub fn from_json(text: &str) -> Result<GridSpec> {
-        const KNOWN_KEYS: [&str; 9] = [
+        const KNOWN_KEYS: [&str; 10] = [
             "archs", "threads", "threads_range", "images", "epochs", "strategies",
-            "params", "clock_ghz", "measure",
+            "params", "clock_ghz", "sim", "measure",
         ];
         let doc = Json::parse(text)?;
         let Some(pairs) = doc.as_obj() else {
@@ -417,6 +874,15 @@ impl GridSpec {
                 })
                 .collect::<Result<Vec<_>>>()?;
         }
+        if let Some(sims) = doc.get("sim") {
+            let arr = sims.as_arr().ok_or_else(|| {
+                Error::Config("sim must be an array of variant objects".into())
+            })?;
+            grid.sims = arr
+                .iter()
+                .map(SimVariant::from_json)
+                .collect::<Result<Vec<_>>>()?;
+        }
         if let Some(measure) = doc.get("measure").and_then(Json::as_bool) {
             grid.measure = measure;
         }
@@ -483,6 +949,12 @@ impl GridSpec {
                         .map(|m| Json::num(m.clock_hz / 1e9))
                         .collect(),
                 ),
+            ));
+        }
+        if !self.sims.is_empty() {
+            pairs.push((
+                "sim",
+                Json::Arr(self.sims.iter().map(SimVariant::to_json).collect()),
             ));
         }
         pairs.push(("measure", Json::Bool(self.measure)));
@@ -712,6 +1184,231 @@ mod tests {
         let spec = grid.to_spec_json().unwrap().emit();
         let back = GridSpec::from_json(&spec).unwrap();
         assert_eq!(back.archs, vec![custom]);
+    }
+
+    fn two_clock_variants() -> Vec<SimVariant> {
+        vec![
+            SimVariant {
+                name: "slow".into(),
+                clock_ghz: Some(1.0),
+                ..Default::default()
+            },
+            SimVariant {
+                name: "fast".into(),
+                clock_ghz: Some(1.5),
+                ..Default::default()
+            },
+        ]
+    }
+
+    #[test]
+    fn sim_axis_multiplies_grid_and_is_outermost() {
+        let grid = GridSpec { sims: two_clock_variants(), ..GridSpec::default() };
+        assert_eq!(grid.len(), 84); // 2 × the 42-cell default grid
+        assert!(grid.validate().is_ok());
+        let scenarios = grid.enumerate();
+        assert_eq!(scenarios.len(), 84);
+        // Sim is the outermost axis: the first block is variant 0 and its
+        // inner enumeration matches the sim-free grid exactly.
+        assert!(scenarios.iter().take(42).all(|s| s.sim == 0));
+        assert!(scenarios.iter().skip(42).all(|s| s.sim == 1));
+        let plain = GridSpec::default().enumerate();
+        for (a, b) in plain.iter().zip(scenarios.iter()) {
+            assert_eq!((a.arch, a.threads, a.strategy), (b.arch, b.threads, b.strategy));
+        }
+        assert_eq!(grid.sim_name(&scenarios[0]), Some("slow"));
+        assert_eq!(grid.sim_name(&scenarios[83]), Some("fast"));
+        assert_eq!(GridSpec::default().sim_name(&plain[0]), None);
+    }
+
+    #[test]
+    fn variant_apply_overrides_exactly_the_set_fields() {
+        let base = SimConfig::default();
+        let v = SimVariant {
+            name: "x".into(),
+            clock_ghz: Some(2.0),
+            seed: Some(7),
+            l2_alpha: Some(0.5),
+            fidelity: Some(Fidelity::PerImage),
+            ..Default::default()
+        };
+        let out = v.apply(&base);
+        assert_eq!(out.machine.clock_hz, 2.0e9);
+        assert_eq!(out.seed, 7);
+        assert_eq!(out.l2_alpha, 0.5);
+        assert_eq!(out.fidelity, Fidelity::PerImage);
+        // Untouched fields inherit the base.
+        assert_eq!(out.fwd_cycles_per_op, base.fwd_cycles_per_op);
+        assert_eq!(out.machine.cores, base.machine.cores);
+        // A no-op variant is the identity (same fingerprint).
+        let noop = SimVariant { name: "noop".into(), ..Default::default() };
+        assert_eq!(noop.apply(&base).fingerprint(), base.fingerprint());
+        assert!(!noop.overrides_machine());
+        assert!(v.overrides_machine());
+    }
+
+    #[test]
+    fn sim_override_wins_over_machine_axis_and_conflict_is_named() {
+        // The composition bugfix: --clock-ghz 1.0 with --sim-clock-ghz
+        // 1.5 must resolve to 1.5 GHz (sim wins), and the grid must be
+        // able to name the collision for a CLI warning.
+        let grid = GridSpec {
+            machines: vec![MachineConfig::xeon_phi_7120p_at_ghz(1.0)],
+            sims: vec![SimVariant {
+                name: "fast".into(),
+                clock_ghz: Some(1.5),
+                ..Default::default()
+            }],
+            ..GridSpec::default()
+        };
+        let scn = &grid.enumerate()[0];
+        let resolved = grid.resolved_sim(&SimConfig::default(), scn);
+        assert_eq!(resolved.machine.clock_hz, 1.5e9, "sim override must win");
+        let conflicts = grid.sim_machine_conflicts();
+        assert_eq!(conflicts.len(), 1, "{conflicts:?}");
+        assert!(conflicts[0].contains("fast") && conflicts[0].contains("wins"));
+        // Agreeing values are not a conflict.
+        let agree = GridSpec {
+            machines: vec![MachineConfig::xeon_phi_7120p_at_ghz(1.5)],
+            ..grid.clone()
+        };
+        assert!(agree.sim_machine_conflicts().is_empty());
+        // A non-machine override never conflicts.
+        let seed_only = GridSpec {
+            sims: vec![SimVariant { name: "s".into(), seed: Some(1), ..Default::default() }],
+            ..agree
+        };
+        assert!(seed_only.sim_machine_conflicts().is_empty());
+    }
+
+    #[test]
+    fn sim_spec_round_trips_and_auto_names() {
+        let grid = GridSpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![15],
+            strategies: vec![Strategy::A],
+            sims: two_clock_variants(),
+            measure: true,
+            ..GridSpec::default()
+        };
+        let spec = grid.to_spec_json().unwrap().emit();
+        let back = GridSpec::from_json(&spec).unwrap();
+        assert_eq!(back, grid, "{spec}");
+        // A nameless variant object gets its auto-derived name.
+        let parsed = GridSpec::from_json(
+            r#"{"sim": [{"clock_ghz": 1.5, "seed": 7}, {}]}"#,
+        )
+        .unwrap();
+        assert_eq!(parsed.sims[0].name, "clock=1.5,seed=7");
+        assert_eq!(parsed.sims[1].name, "default");
+        // Unknown variant keys are rejected like unknown spec keys.
+        assert!(GridSpec::from_json(r#"{"sim": [{"clokc_ghz": 1.5}]}"#).is_err());
+        assert!(GridSpec::from_json(r#"{"sim": [1]}"#).is_err());
+        assert!(GridSpec::from_json(r#"{"sim": [{"fidelity": "x"}]}"#).is_err());
+    }
+
+    #[test]
+    fn fully_populated_variant_exercises_every_parallel_list() {
+        // SimVariant's field set is mirrored in KNOWN_KEYS, apply,
+        // auto_name, validate, to_json, and from_json. This literal sets
+        // every override, so a field added to the struct but missed in
+        // one of those lists fails here (once added to this literal —
+        // the struct-update syntax below refuses to compile if the
+        // literal itself falls behind the struct... it has no ..rest).
+        let v = SimVariant {
+            name: "full".into(),
+            clock_ghz: Some(1.1),
+            cores: Some(32),
+            threads_per_core: Some(2),
+            fwd_cycles_per_op: Some(20.0),
+            bwd_cycles_per_op: Some(10.0),
+            exec_fraction: Some(0.5),
+            l2_alpha: Some(0.2),
+            l2_ratio_cap: Some(2.0),
+            ring_beta: Some(0.1),
+            oversub_overhead: Some(0.02),
+            fidelity: Some(Fidelity::PerImage),
+            seed: Some(123),
+        };
+        assert!(v.validate().is_ok());
+        // JSON round-trip preserves every override, and the emitted
+        // object carries every known key.
+        let emitted = v.to_json();
+        assert_eq!(SimVariant::from_json(&emitted).unwrap(), v);
+        for key in SimVariant::KNOWN_KEYS {
+            assert!(emitted.get(key).is_some(), "to_json dropped {key:?}");
+        }
+        // auto_name derives one part per non-name override.
+        let unnamed = SimVariant { name: String::new(), ..v.clone() };
+        assert_eq!(
+            unnamed.auto_name().split(',').count(),
+            SimVariant::KNOWN_KEYS.len() - 1,
+            "{}",
+            unnamed.auto_name()
+        );
+        // apply() rewrites every corresponding resolved field.
+        let base = SimConfig::default();
+        let out = v.apply(&base);
+        assert_eq!(out.machine.clock_hz, 1.1e9);
+        assert_eq!(out.machine.cores, 32);
+        assert_eq!(out.machine.threads_per_core, 2);
+        assert_eq!(out.fwd_cycles_per_op, 20.0);
+        assert_eq!(out.bwd_cycles_per_op, 10.0);
+        assert_eq!(out.exec_fraction, 0.5);
+        assert_eq!(out.l2_alpha, 0.2);
+        assert_eq!(out.l2_ratio_cap, 2.0);
+        assert_eq!(out.ring_beta, 0.1);
+        assert_eq!(out.oversub_overhead, 0.02);
+        assert_eq!(out.fidelity, Fidelity::PerImage);
+        assert_eq!(out.seed, 123);
+    }
+
+    #[test]
+    fn validate_rejects_bad_sim_axes() {
+        let dup = GridSpec {
+            sims: vec![
+                SimVariant { name: "x".into(), ..Default::default() },
+                SimVariant { name: "x".into(), seed: Some(1), ..Default::default() },
+            ],
+            ..GridSpec::default()
+        };
+        assert!(dup.validate().is_err());
+        for bad in [
+            SimVariant { name: "".into(), ..Default::default() },
+            SimVariant { name: "z".into(), clock_ghz: Some(0.0), ..Default::default() },
+            SimVariant { name: "z".into(), clock_ghz: Some(f64::NAN), ..Default::default() },
+            SimVariant { name: "z".into(), exec_fraction: Some(1.5), ..Default::default() },
+            SimVariant { name: "z".into(), cores: Some(1), ..Default::default() },
+            SimVariant { name: "z".into(), threads_per_core: Some(0), ..Default::default() },
+            SimVariant { name: "z".into(), l2_alpha: Some(-1.0), ..Default::default() },
+            SimVariant { name: "z".into(), seed: Some(1 << 54), ..Default::default() },
+        ] {
+            let grid = GridSpec { sims: vec![bad.clone()], ..GridSpec::default() };
+            assert!(grid.validate().is_err(), "{bad:?} must be rejected");
+        }
+        // Exact-duplicate variants are dropped by normalize (first wins).
+        let mut dup_value = GridSpec {
+            sims: vec![
+                SimVariant { name: "x".into(), ..Default::default() },
+                SimVariant { name: "x".into(), ..Default::default() },
+            ],
+            ..GridSpec::default()
+        };
+        dup_value.normalize();
+        assert_eq!(dup_value.sims.len(), 1);
+        assert!(dup_value.validate().is_ok());
+    }
+
+    #[test]
+    fn closed_loop_grid_is_table9_under_sim_params() {
+        let grid = GridSpec::table9_closed_loop();
+        assert_eq!(grid.len(), 42);
+        assert!(grid.measure);
+        assert_eq!(grid.params, ParamSource::Simulator);
+        assert!(grid.validate().is_ok());
+        // It baselines: the spec document round-trips exactly.
+        let back = GridSpec::from_json(&grid.to_spec_json().unwrap().emit()).unwrap();
+        assert_eq!(back, grid);
     }
 
     #[test]

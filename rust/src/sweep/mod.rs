@@ -8,23 +8,36 @@
 //! This module makes "evaluate 10k scenarios fast" the default shape:
 //!
 //! * [`grid`] — [`GridSpec`], the declarative cross-product, with a
-//!   deterministic enumeration order and a JSON spec format;
+//!   deterministic enumeration order, a JSON spec format, and the
+//!   **sim axis** ([`SimVariant`]): named simulator-configuration
+//!   overrides that turn the simulator's constants (clock, core/thread
+//!   counts, cycle and cache/latency constants, fidelity, seed) into an
+//!   ablation dimension;
 //! * [`cache`] — [`SweepCache`], memoizing model construction, micsim
-//!   cost models, and measurements by exactly their input axes;
+//!   cost models, and measurements by exactly their input axes (the
+//!   resolved simulator's [`crate::simulator::SimConfig::fingerprint`]
+//!   included, so variants share within and never leak across);
 //! * [`runner`] — [`SweepRunner`], the scoped-thread worker pool whose
 //!   parallel results are bit-identical to a serial run;
 //! * [`summary`] — [`SweepResults`], O(1) stride addressing, grid-level
-//!   accuracy aggregation (mean/max Δ per architecture × strategy — the
-//!   sweep-native Table IX), JSON dump, and paper-style tables;
+//!   accuracy aggregation (mean/max Δ per sim variant × architecture ×
+//!   strategy — the sweep-native Table IX), JSON dump, and paper-style
+//!   tables;
 //! * [`baseline`] — [`Baseline`]/[`DiffReport`], the golden-baseline
-//!   regression mode behind `repro sweep --compare`/`--write-baseline`;
+//!   regression mode behind `repro sweep --compare`/`--write-baseline`
+//!   (ablation grids pin with their sim-variant keys);
 //! * [`conformance`] — the measured-mode conformance harness: Δ-band
 //!   golden baselines over the Tables IX–XI grids plus the paper's
-//!   ≈ 15 %/11 % mean-Δ claims, behind `repro conformance`.
+//!   ≈ 15 %/11 % mean-Δ claims, behind `repro conformance`, and the
+//!   closed-loop grid (`--params sim`, model parameters probed from the
+//!   measuring simulator) behind `repro conformance --closed-loop`.
 //!
 //! The `repro sweep`/`repro conformance` subcommands drive it from the
 //! CLI, and the `experiments` table/figure entries for Figs. 5–7 and
-//! Tables IX/X/XI are thin grid definitions executed here.
+//! Tables IX/X/XI are thin grid definitions executed here. See
+//! `docs/SWEEP.md` for the full CLI reference.
+
+#![warn(missing_docs)]
 
 pub mod baseline;
 pub mod cache;
@@ -38,6 +51,6 @@ pub use cache::{CacheStats, SweepCache};
 pub use conformance::{
     BandCheck, BandSpec, ClaimCheck, ClaimSpec, ConformanceBaseline, ConformanceReport,
 };
-pub use grid::{parse_axis, GridSpec, Scenario, Strategy};
+pub use grid::{parse_axis, GridSpec, Scenario, SimVariant, Strategy};
 pub use runner::SweepRunner;
 pub use summary::{AccuracyAggregate, ScenarioResult, SweepResults};

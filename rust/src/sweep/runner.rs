@@ -47,8 +47,10 @@ impl SweepRunner {
         self.run_with_cache(grid, SweepCache::new())
     }
 
-    /// Evaluate with an explicit simulator configuration for the measured
-    /// path — micsim memoization keys include the config's
+    /// Evaluate with an explicit **base** simulator configuration — the
+    /// grid's machine axis and sim-variant overrides
+    /// ([`crate::sweep::SimVariant`]) apply per scenario on top of it.
+    /// Micsim memoization keys include the resolved config's
     /// [`crate::simulator::SimConfig::fingerprint`], so sweeps under
     /// different simulator settings never share stale measurements.
     pub fn run_with_sim(

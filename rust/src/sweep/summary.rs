@@ -7,14 +7,18 @@ use crate::sweep::cache::CacheStats;
 use crate::sweep::grid::{GridSpec, Scenario, Strategy};
 use crate::util::json::Json;
 
-/// Grid-level prediction accuracy for one (architecture, strategy) group
-/// — one Table IX cell, computed over every measured scenario of the
-/// group in enumeration order (so the mean is bit-identical to
-/// [`crate::perfmodel::average_delta`] over the same points).
+/// Grid-level prediction accuracy for one (sim variant, architecture,
+/// strategy) group — one Table IX cell, computed over every measured
+/// scenario of the group in enumeration order (so the mean is
+/// bit-identical to [`crate::perfmodel::average_delta`] over the same
+/// points).
 #[derive(Debug, Clone)]
 pub struct AccuracyAggregate {
+    /// Sim-variant name (`None` when the grid has no sim axis).
+    pub sim: Option<String>,
     /// Architecture name.
     pub arch: String,
+    /// Model strategy of the group.
     pub strategy: Strategy,
     /// Measured scenarios folded into this group.
     pub points: usize,
@@ -29,7 +33,9 @@ pub struct AccuracyAggregate {
 /// One evaluated scenario.
 #[derive(Debug, Clone)]
 pub struct ScenarioResult {
+    /// The grid point this row evaluates.
     pub scenario: Scenario,
+    /// The model's term-level prediction.
     pub prediction: Prediction,
     /// Micsim execution seconds (grids with `measure = true` only).
     pub measured_s: Option<f64>,
@@ -40,23 +46,33 @@ pub struct ScenarioResult {
 /// Everything one sweep produced, in enumeration order.
 #[derive(Debug)]
 pub struct SweepResults {
+    /// The grid that was evaluated.
     pub grid: GridSpec,
+    /// One result per scenario, in enumeration order.
     pub results: Vec<ScenarioResult>,
+    /// Cache hit/miss telemetry for the run.
     pub cache: CacheStats,
+    /// Wall-clock seconds the sweep took.
     pub wall_s: f64,
+    /// Worker threads the sweep ran on.
     pub workers: usize,
 }
 
 impl SweepResults {
+    /// Number of evaluated scenarios.
     pub fn len(&self) -> usize {
         self.results.len()
     }
 
+    /// True when the sweep produced no results.
     pub fn is_empty(&self) -> bool {
         self.results.is_empty()
     }
 
-    /// O(1) lookup by axis indices (the enumeration-order strides).
+    /// O(1) lookup by axis indices (the enumeration-order strides),
+    /// within the first sim-axis block — equivalent to
+    /// [`SweepResults::at_sim`] with `sim = 0`, which is the whole grid
+    /// whenever the sim axis is empty (every experiment definition).
     ///
     /// Panics if an index is out of range for its axis — the experiment
     /// definitions address only points they put into the grid.
@@ -69,8 +85,24 @@ impl SweepResults {
         thread: usize,
         strategy: usize,
     ) -> &ScenarioResult {
+        self.at_sim(0, arch, machine, image, epoch, thread, strategy)
+    }
+
+    /// O(1) lookup by axis indices including the sim axis (index 0 is
+    /// valid for grids without one).
+    pub fn at_sim(
+        &self,
+        sim: usize,
+        arch: usize,
+        machine: usize,
+        image: usize,
+        epoch: usize,
+        thread: usize,
+        strategy: usize,
+    ) -> &ScenarioResult {
         let g = &self.grid;
-        let (nm, ni, ne, nt, ns) = (
+        let (na, nm, ni, ne, nt, ns) = (
+            g.archs.len(),
             g.machines.len(),
             g.images.len(),
             g.epochs.len().max(1),
@@ -78,10 +110,18 @@ impl SweepResults {
             g.strategies.len(),
         );
         assert!(
-            machine < nm && image < ni && epoch < ne && thread < nt && strategy < ns,
+            sim < g.sim_count()
+                && arch < na
+                && machine < nm
+                && image < ni
+                && epoch < ne
+                && thread < nt
+                && strategy < ns,
             "axis index out of range"
         );
-        let id = ((((arch * nm + machine) * ni + image) * ne + epoch) * nt + thread) * ns
+        let id = (((((sim * na + arch) * nm + machine) * ni + image) * ne + epoch) * nt
+            + thread)
+            * ns
             + strategy;
         let result = &self.results[id];
         debug_assert_eq!(result.scenario.id, id);
@@ -102,8 +142,9 @@ impl SweepResults {
         })
     }
 
-    /// Fold one (architecture, strategy) group's Δ values, in
-    /// enumeration order (`None` when the group has no measured points).
+    /// Fold one (architecture, strategy) group's Δ values across the
+    /// whole sim axis, in enumeration order (`None` when the group has
+    /// no measured points).
     fn fold_group(&self, ai: usize, strategy: Strategy) -> Option<AccuracyAggregate> {
         let mut acc = DeltaAccumulator::default();
         for r in &self.results {
@@ -116,6 +157,7 @@ impl SweepResults {
         }
         let (mean, (max, max_at)) = (acc.mean_pct()?, acc.max_pct()?);
         Some(AccuracyAggregate {
+            sim: None,
             arch: self.grid.archs[ai].name.clone(),
             strategy,
             points: acc.count(),
@@ -125,17 +167,56 @@ impl SweepResults {
         })
     }
 
-    /// Grid-level accuracy aggregation: mean/max Δ per (architecture,
-    /// strategy), in axis order. Empty unless the grid measured
-    /// (`measure = true`) — prediction-only sweeps have no Δ to
-    /// aggregate. This is the sweep-native Table IX.
+    /// The flat group slot for one scenario: (sim, arch, strategy) in
+    /// axis order — shared by [`SweepResults::accuracy`] and the summary
+    /// table so both make one pass over the results instead of one scan
+    /// per group (the sim axis multiplies the group count).
+    fn group_slot(&self, scn: &Scenario) -> usize {
+        let g = &self.grid;
+        let sti = g
+            .strategies
+            .iter()
+            .position(|&s| s == scn.strategy)
+            .expect("scenario strategy is on the grid's strategy axis");
+        (scn.sim * g.archs.len() + scn.arch) * g.strategies.len() + sti
+    }
+
+    /// Grid-level accuracy aggregation: mean/max Δ per (sim variant,
+    /// architecture, strategy), in axis order. Empty unless the grid
+    /// measured (`measure = true`) — prediction-only sweeps have no Δ to
+    /// aggregate. This is the sweep-native Table IX; on ablation grids
+    /// each sim variant gets its own row set. Single pass over the
+    /// results in enumeration order, so every group's mean is
+    /// bit-identical to the per-group fold.
     pub fn accuracy(&self) -> Vec<AccuracyAggregate> {
         let g = &self.grid;
+        let groups = g.sim_count() * g.archs.len() * g.strategies.len();
+        let mut accs = vec![DeltaAccumulator::default(); groups];
+        for r in &self.results {
+            if let Some(d) = r.delta_pct {
+                accs[self.group_slot(&r.scenario)].push(d, r.scenario.threads);
+            }
+        }
         let mut out = Vec::new();
-        for ai in 0..g.archs.len() {
-            for &strategy in &g.strategies {
-                if let Some(agg) = self.fold_group(ai, strategy) {
-                    out.push(agg);
+        let mut slot = 0;
+        for si in 0..g.sim_count() {
+            for ai in 0..g.archs.len() {
+                for &strategy in &g.strategies {
+                    let acc = &accs[slot];
+                    slot += 1;
+                    let (Some(mean), Some((max, max_at))) = (acc.mean_pct(), acc.max_pct())
+                    else {
+                        continue;
+                    };
+                    out.push(AccuracyAggregate {
+                        sim: g.sims.get(si).map(|v| v.name.clone()),
+                        arch: g.archs[ai].name.clone(),
+                        strategy,
+                        points: acc.count(),
+                        mean_delta_pct: mean,
+                        max_delta_pct: max,
+                        max_at_threads: max_at,
+                    });
                 }
             }
         }
@@ -143,7 +224,7 @@ impl SweepResults {
     }
 
     /// The whole-grid aggregate for one strategy: every architecture's
-    /// measured Δ folded in enumeration order. This is the per-strategy
+    /// (and sim variant's) measured Δ folded in enumeration order. This is the per-strategy
     /// headline statistic the paper's accuracy claim quotes (mean Δ
     /// ≈ 15 % for model (a), ≈ 11 % for model (b)) and what
     /// [`crate::sweep::conformance`] checks claim ceilings against.
@@ -160,6 +241,7 @@ impl SweepResults {
         }
         let (mean, (max, max_at)) = (acc.mean_pct()?, acc.max_pct()?);
         Some(AccuracyAggregate {
+            sim: None,
             arch: "all".into(),
             strategy,
             points: acc.count(),
@@ -169,16 +251,18 @@ impl SweepResults {
         })
     }
 
-    /// The aggregate for one (architecture, strategy) group, if measured.
-    /// Folds only the requested group — callers wanting every group
-    /// should use [`SweepResults::accuracy`] once instead of repeated
-    /// lookups.
+    /// The aggregate for one (architecture, strategy) group, if measured,
+    /// folded across the whole sim axis. Folds only the requested group —
+    /// callers wanting every group should use [`SweepResults::accuracy`]
+    /// once instead of repeated lookups.
     pub fn accuracy_for(&self, arch_name: &str, strategy: Strategy) -> Option<AccuracyAggregate> {
         let ai = self.grid.archs.iter().position(|a| a.name == arch_name)?;
         self.fold_group(ai, strategy)
     }
 
     /// Full machine-readable dump (the `repro sweep --json` payload).
+    /// On ablation grids (non-empty sim axis) every `results[]` and
+    /// `accuracy[]` row carries a `sim` key naming its variant.
     pub fn to_json(&self) -> Json {
         let g = &self.grid;
         let rows: Vec<Json> = self
@@ -186,7 +270,11 @@ impl SweepResults {
             .iter()
             .map(|r| {
                 let s = &r.scenario;
-                let mut pairs = vec![
+                let mut pairs = Vec::with_capacity(16);
+                if let Some(sim) = g.sim_name(s) {
+                    pairs.push(("sim", Json::str(sim.to_string())));
+                }
+                pairs.extend([
                     ("arch", Json::str(g.archs[s.arch].name.clone())),
                     ("machine", Json::str(g.machines[s.machine].name.clone())),
                     ("threads", Json::num(s.threads as f64)),
@@ -200,7 +288,7 @@ impl SweepResults {
                     ("mem_s", Json::num(r.prediction.mem_s)),
                     ("total_s", Json::num(r.prediction.total_s)),
                     ("total_min", Json::num(r.prediction.total_s / 60.0)),
-                ];
+                ]);
                 if let Some(m) = r.measured_s {
                     pairs.push(("measured_s", Json::num(m)));
                 }
@@ -210,45 +298,40 @@ impl SweepResults {
                 Json::obj(pairs)
             })
             .collect();
-        Json::obj(vec![
+        let mut grid_pairs = vec![
             (
-                "grid",
-                Json::obj(vec![
-                    (
-                        "archs",
-                        Json::Arr(
-                            g.archs.iter().map(|a| Json::str(a.name.clone())).collect(),
-                        ),
-                    ),
-                    (
-                        "machines",
-                        Json::Arr(
-                            g.machines.iter().map(|m| Json::str(m.name.clone())).collect(),
-                        ),
-                    ),
-                    ("threads", Json::arr_usize(&g.threads)),
-                    (
-                        "images",
-                        Json::Arr(
-                            g.images
-                                .iter()
-                                .map(|&(i, it)| Json::arr_usize(&[i, it]))
-                                .collect(),
-                        ),
-                    ),
-                    ("epochs", Json::arr_usize(&g.epochs)),
-                    (
-                        "strategies",
-                        Json::Arr(
-                            g.strategies
-                                .iter()
-                                .map(|s| Json::str(s.as_str()))
-                                .collect(),
-                        ),
-                    ),
-                    ("measure", Json::Bool(g.measure)),
-                ]),
+                "archs",
+                Json::Arr(g.archs.iter().map(|a| Json::str(a.name.clone())).collect()),
             ),
+            (
+                "machines",
+                Json::Arr(g.machines.iter().map(|m| Json::str(m.name.clone())).collect()),
+            ),
+            ("threads", Json::arr_usize(&g.threads)),
+            (
+                "images",
+                Json::Arr(
+                    g.images
+                        .iter()
+                        .map(|&(i, it)| Json::arr_usize(&[i, it]))
+                        .collect(),
+                ),
+            ),
+            ("epochs", Json::arr_usize(&g.epochs)),
+            (
+                "strategies",
+                Json::Arr(g.strategies.iter().map(|s| Json::str(s.as_str())).collect()),
+            ),
+        ];
+        if !g.sims.is_empty() {
+            grid_pairs.push((
+                "sims",
+                Json::Arr(g.sims.iter().map(|v| Json::str(v.name.clone())).collect()),
+            ));
+        }
+        grid_pairs.push(("measure", Json::Bool(g.measure)));
+        Json::obj(vec![
+            ("grid", Json::obj(grid_pairs)),
             ("scenarios", Json::num(self.len() as f64)),
             ("workers", Json::num(self.workers as f64)),
             ("wall_s", Json::num(self.wall_s)),
@@ -265,14 +348,19 @@ impl SweepResults {
                     self.accuracy()
                         .iter()
                         .map(|a| {
-                            Json::obj(vec![
+                            let mut pairs = Vec::with_capacity(7);
+                            if let Some(sim) = &a.sim {
+                                pairs.push(("sim", Json::str(sim.clone())));
+                            }
+                            pairs.extend([
                                 ("arch", Json::str(a.arch.clone())),
                                 ("strategy", Json::str(a.strategy.as_str())),
                                 ("points", Json::num(a.points as f64)),
                                 ("mean_delta_pct", Json::num(a.mean_delta_pct)),
                                 ("max_delta_pct", Json::num(a.max_delta_pct)),
                                 ("max_at_threads", Json::num(a.max_at_threads as f64)),
-                            ])
+                            ]);
+                            Json::obj(pairs)
                         })
                         .collect(),
                 ),
@@ -293,16 +381,23 @@ impl SweepResults {
 
     fn table_full(&self) -> Table {
         let g = &self.grid;
-        let mut t = Table::new(
-            format!("sweep — {} scenarios", self.len()),
-            &[
-                "arch", "machine", "p", "i", "it", "ep", "strat", "prep s", "train+val s",
-                "test s", "T_mem s", "total s", "min", "measured s", "Δ %",
-            ],
-        );
+        let ablation = !g.sims.is_empty();
+        let mut cols = vec![];
+        if ablation {
+            cols.push("sim");
+        }
+        cols.extend([
+            "arch", "machine", "p", "i", "it", "ep", "strat", "prep s", "train+val s",
+            "test s", "T_mem s", "total s", "min", "measured s", "Δ %",
+        ]);
+        let mut t = Table::new(format!("sweep — {} scenarios", self.len()), &cols);
         for r in &self.results {
             let s = &r.scenario;
-            t.row(vec![
+            let mut row = Vec::with_capacity(cols.len());
+            if ablation {
+                row.push(g.sim_name(s).unwrap_or("default").to_string());
+            }
+            row.extend([
                 g.archs[s.arch].name.clone(),
                 g.machines[s.machine].name.clone(),
                 s.threads.to_string(),
@@ -319,61 +414,99 @@ impl SweepResults {
                 r.measured_s.map(|m| format!("{m:.1}")).unwrap_or_else(|| "-".into()),
                 r.delta_pct.map(|d| format!("{d:.1}")).unwrap_or_else(|| "-".into()),
             ]);
+            t.row(row);
         }
         t
     }
 
     fn table_summary(&self) -> Table {
         let g = &self.grid;
+        let ablation = !g.sims.is_empty();
+        let mut cols = vec![];
+        if ablation {
+            cols.push("sim");
+        }
+        cols.extend([
+            "arch", "strat", "points", "best total [min]", "at p", "worst total [min]",
+            "at p", "mean Δ %", "max Δ %", "at p",
+        ]);
         let mut t = Table::new(
             format!("sweep summary — {} scenarios", self.len()),
-            &[
-                "arch", "strat", "points", "best total [min]", "at p", "worst total [min]",
-                "at p", "mean Δ %", "max Δ %", "at p",
-            ],
+            &cols,
         );
-        for (ai, arch) in g.archs.iter().enumerate() {
-            for &strat in &g.strategies {
-                let mut best: Option<&ScenarioResult> = None;
-                let mut worst: Option<&ScenarioResult> = None;
-                let mut count = 0usize;
-                let mut acc = DeltaAccumulator::default();
-                for r in &self.results {
-                    if r.scenario.arch != ai || r.scenario.strategy != strat {
+        // One pass over the results, accumulating into (sim, arch,
+        // strategy) group slots — see [`SweepResults::group_slot`].
+        struct Group<'a> {
+            best: Option<&'a ScenarioResult>,
+            worst: Option<&'a ScenarioResult>,
+            count: usize,
+            acc: DeltaAccumulator,
+        }
+        let groups = g.sim_count() * g.archs.len() * g.strategies.len();
+        let mut state: Vec<Group<'_>> = (0..groups)
+            .map(|_| Group {
+                best: None,
+                worst: None,
+                count: 0,
+                acc: DeltaAccumulator::default(),
+            })
+            .collect();
+        for r in &self.results {
+            let slot = &mut state[self.group_slot(&r.scenario)];
+            slot.count += 1;
+            slot.best = match slot.best {
+                Some(b) if b.prediction.total_s <= r.prediction.total_s => Some(b),
+                _ => Some(r),
+            };
+            slot.worst = match slot.worst {
+                Some(w) if w.prediction.total_s >= r.prediction.total_s => Some(w),
+                _ => Some(r),
+            };
+            if let Some(d) = r.delta_pct {
+                slot.acc.push(d, r.scenario.threads);
+            }
+        }
+        let mut slot = 0;
+        for si in 0..g.sim_count() {
+            for arch in &g.archs {
+                for &strat in &g.strategies {
+                    let group = &state[slot];
+                    slot += 1;
+                    let (Some(best), Some(worst)) = (group.best, group.worst) else {
                         continue;
-                    }
-                    count += 1;
-                    best = match best {
-                        Some(b) if b.prediction.total_s <= r.prediction.total_s => Some(b),
-                        _ => Some(r),
                     };
-                    worst = match worst {
-                        Some(w) if w.prediction.total_s >= r.prediction.total_s => Some(w),
-                        _ => Some(r),
-                    };
-                    if let Some(d) = r.delta_pct {
-                        acc.push(d, r.scenario.threads);
+                    let mut row = Vec::with_capacity(cols.len());
+                    if ablation {
+                        row.push(
+                            g.sims.get(si).map(|v| v.name.clone()).unwrap_or_default(),
+                        );
                     }
+                    row.extend([
+                        arch.name.clone(),
+                        strat.as_str().into(),
+                        group.count.to_string(),
+                        format!("{:.1}", best.prediction.total_s / 60.0),
+                        best.scenario.threads.to_string(),
+                        format!("{:.1}", worst.prediction.total_s / 60.0),
+                        worst.scenario.threads.to_string(),
+                        group
+                            .acc
+                            .mean_pct()
+                            .map(|d| format!("{d:.1}"))
+                            .unwrap_or_else(|| "-".into()),
+                        group
+                            .acc
+                            .max_pct()
+                            .map(|(d, _)| format!("{d:.1}"))
+                            .unwrap_or_else(|| "-".into()),
+                        group
+                            .acc
+                            .max_pct()
+                            .map(|(_, p)| p.to_string())
+                            .unwrap_or_else(|| "-".into()),
+                    ]);
+                    t.row(row);
                 }
-                let (Some(best), Some(worst)) = (best, worst) else { continue };
-                t.row(vec![
-                    arch.name.clone(),
-                    strat.as_str().into(),
-                    count.to_string(),
-                    format!("{:.1}", best.prediction.total_s / 60.0),
-                    best.scenario.threads.to_string(),
-                    format!("{:.1}", worst.prediction.total_s / 60.0),
-                    worst.scenario.threads.to_string(),
-                    acc.mean_pct()
-                        .map(|d| format!("{d:.1}"))
-                        .unwrap_or_else(|| "-".into()),
-                    acc.max_pct()
-                        .map(|(d, _)| format!("{d:.1}"))
-                        .unwrap_or_else(|| "-".into()),
-                    acc.max_pct()
-                        .map(|(_, p)| p.to_string())
-                        .unwrap_or_else(|| "-".into()),
-                ]);
             }
         }
         t
@@ -539,6 +672,75 @@ mod tests {
         let unmeasured = run_small().render(false);
         // Prediction-only grids render dashes in the Δ columns.
         assert!(unmeasured.contains('-'), "{unmeasured}");
+    }
+
+    fn run_ablation() -> SweepResults {
+        use crate::sweep::grid::SimVariant;
+        let grid = GridSpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![15, 240],
+            strategies: vec![Strategy::A],
+            sims: vec![
+                SimVariant { name: "slow".into(), clock_ghz: Some(1.0), ..Default::default() },
+                SimVariant { name: "fast".into(), clock_ghz: Some(1.5), ..Default::default() },
+            ],
+            measure: true,
+            ..GridSpec::default()
+        };
+        SweepRunner::serial().run(&grid).unwrap()
+    }
+
+    #[test]
+    fn ablation_rows_carry_the_sim_variant_key() {
+        let res = run_ablation();
+        assert_eq!(res.len(), 4);
+        let doc = Json::parse(&res.to_json().emit()).unwrap();
+        let rows = doc.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rows[0].get("sim").unwrap().as_str(), Some("slow"));
+        assert_eq!(rows[3].get("sim").unwrap().as_str(), Some("fast"));
+        let acc = doc.get("accuracy").unwrap().as_arr().unwrap();
+        assert_eq!(acc.len(), 2); // one group per sim variant
+        assert_eq!(acc[0].get("sim").unwrap().as_str(), Some("slow"));
+        assert_eq!(acc[1].get("sim").unwrap().as_str(), Some("fast"));
+        assert_eq!(
+            doc.get("grid").unwrap().get("sims").unwrap().as_arr().unwrap().len(),
+            2
+        );
+        // Sim-free grids keep the pre-ablation JSON shape (no sim keys).
+        let plain = Json::parse(&run_measured().to_json().emit()).unwrap();
+        assert!(plain.get("results").unwrap().as_arr().unwrap()[0].get("sim").is_none());
+        assert!(plain.get("grid").unwrap().get("sims").is_none());
+    }
+
+    #[test]
+    fn at_sim_addresses_every_variant_block() {
+        let res = run_ablation();
+        for si in 0..2 {
+            for ti in 0..2 {
+                let r = res.at_sim(si, 0, 0, 0, 0, ti, 0);
+                assert_eq!(r.scenario.sim, si);
+                assert_eq!(r.scenario.threads, res.grid.threads[ti]);
+            }
+        }
+        // at() is the sim-0 block.
+        assert_eq!(res.at(0, 0, 0, 0, 1, 0).scenario.id, 1);
+        // The clock ablation orders the measured times.
+        let slow = res.at_sim(0, 0, 0, 0, 0, 1, 0).measured_s.unwrap();
+        let fast = res.at_sim(1, 0, 0, 0, 0, 1, 0).measured_s.unwrap();
+        assert!(fast < slow);
+    }
+
+    #[test]
+    fn ablation_tables_have_a_sim_column() {
+        let res = run_ablation();
+        let full = res.render(true);
+        assert!(full.contains("sim"), "{full}");
+        assert!(full.contains("slow") && full.contains("fast"), "{full}");
+        let summary = res.render(false);
+        assert!(summary.contains("slow") && summary.contains("fast"), "{summary}");
+        // Sim-free tables keep their pre-ablation header.
+        let plain = run_measured().render(false);
+        assert!(!plain.contains("sim"), "{plain}");
     }
 
     #[test]

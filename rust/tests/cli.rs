@@ -159,6 +159,94 @@ fn sweep_csv_mode() {
 }
 
 #[test]
+fn sweep_sim_ablation_grid_carries_variant_keys_and_cache_wins() {
+    // The acceptance criterion: an ablation grid over simulator clocks
+    // whose results[]/accuracy[] rows carry the sim-variant key, with a
+    // cache hit rate at least that of the non-ablation equivalent.
+    let dir = micdl::util::tmp::TempDir::new("cli-sweep-sim").unwrap();
+    let json_path = dir.path().join("out.json");
+    let plain_path = dir.path().join("plain.json");
+    let out = repro(&["sweep", "--arch", "small", "--measure",
+                      "--sim-clock-ghz", "1.0,1.238,1.5", "--serial",
+                      "--json", json_path.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let doc = micdl::util::json::Json::parse(
+        &std::fs::read_to_string(&json_path).unwrap(),
+    )
+    .unwrap();
+    // 3 sim variants × the 14-cell small measured grid.
+    assert_eq!(doc.get("scenarios").unwrap().as_usize(), Some(42));
+    let rows = doc.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 42);
+    for (i, row) in rows.iter().enumerate() {
+        let sim = row.get("sim").unwrap().as_str().unwrap();
+        let want = ["clock=1", "clock=1.238", "clock=1.5"][i / 14];
+        assert_eq!(sim, want, "row {i}");
+        assert!(row.get("measured_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(row.get("delta_pct").is_some());
+    }
+    let acc = doc.get("accuracy").unwrap().as_arr().unwrap();
+    assert_eq!(acc.len(), 6); // 3 variants × 2 strategies
+    for a in acc {
+        assert!(a.get("sim").unwrap().as_str().is_some());
+    }
+    // Hit rate: per-variant sharing is identical to the non-ablation
+    // grid's, so the whole-run rate must not fall below it.
+    let out = repro(&["sweep", "--arch", "small", "--measure", "--serial",
+                      "--json", plain_path.to_str().unwrap()]);
+    assert!(out.status.success());
+    let plain = micdl::util::json::Json::parse(
+        &std::fs::read_to_string(&plain_path).unwrap(),
+    )
+    .unwrap();
+    let rate = |d: &micdl::util::json::Json| {
+        let c = d.get("cache").unwrap();
+        let h = c.get("hits").unwrap().as_f64().unwrap();
+        let m = c.get("misses").unwrap().as_f64().unwrap();
+        h / (h + m)
+    };
+    assert!(
+        rate(&doc) >= rate(&plain) - 1e-12,
+        "ablation hit rate {} < plain {}",
+        rate(&doc),
+        rate(&plain)
+    );
+}
+
+#[test]
+fn sweep_sim_override_beats_machine_axis_with_warning() {
+    // The composition bugfix: --clock-ghz with a disagreeing
+    // --sim-clock-ghz warns (sim wins) instead of silently dropping one.
+    let out = repro(&["sweep", "--arch", "small", "--threads", "15",
+                      "--strategy", "a", "--serial", "--measure",
+                      "--clock-ghz", "1.0", "--sim-clock-ghz", "1.5", "--full"]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("warning:") && stderr.contains("wins"), "{stderr}");
+    // Agreement produces no warning.
+    let out = repro(&["sweep", "--arch", "small", "--threads", "15",
+                      "--strategy", "a", "--serial",
+                      "--sim-seed", "7"]);
+    assert!(out.status.success());
+    assert!(!String::from_utf8_lossy(&out.stderr).contains("warning:"));
+}
+
+#[test]
+fn sweep_rejects_bad_sim_flags() {
+    let out = repro(&["sweep", "--sim-clock-ghz", "fast"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("wants floats"));
+    let out = repro(&["sweep", "--sim-fidelity", "quantum"]);
+    assert!(!out.status.success());
+    let out = repro(&["sweep", "--sim-clock-ghz"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("needs a value"));
+    let out = repro(&["sweep", "--sim-clokc-ghz", "1.0"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown sweep flag"));
+}
+
+#[test]
 fn sweep_rejects_bad_axis() {
     let out = repro(&["sweep", "--threads", "240..1"]);
     assert!(!out.status.success());

@@ -21,6 +21,10 @@ fn committed_baseline_path() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../baselines/measured_smoke.json")
 }
 
+fn committed_closed_loop_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../baselines/closed_loop_smoke.json")
+}
+
 // ---------------------------------------------------------------------------
 // Library level
 // ---------------------------------------------------------------------------
@@ -119,6 +123,70 @@ fn committed_baseline_matches_capture_within_tolerance() {
 }
 
 // ---------------------------------------------------------------------------
+// The committed closed-loop golden baseline (--params sim)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn committed_closed_loop_baseline_is_clean() {
+    // The closed-loop analogue: the Table IX grid under --params sim
+    // (model parameters probed from the measuring simulator) must hold
+    // the Δ bands pinned in baselines/closed_loop_smoke.json.
+    let base = ConformanceBaseline::load(&committed_closed_loop_path())
+        .expect("load baselines/closed_loop_smoke.json");
+    assert_eq!(base.grids.len(), 1);
+    assert_eq!(base.grids[0].id, conformance::CLOSED_LOOP_CLAIM_GRID);
+    assert_eq!(base.grids[0].bands.len(), 6);
+    let report = base.check(&SweepRunner::serial()).unwrap();
+    assert!(report.is_clean(), "{}", report.render());
+    assert_eq!(report.scenarios, 42);
+    assert_eq!(report.claims.len(), 2);
+    // Strategy (b) fully closes the loop: its probed parameters remove
+    // the Table III measurement offset, so the observed mean runs well
+    // under the open-loop run (≈ 6.1 %) — and far under the paper claim.
+    let b = report
+        .claims
+        .iter()
+        .find(|c| c.claim.strategy == micdl::sweep::Strategy::B)
+        .unwrap();
+    assert!(b.pass);
+    assert!(b.observed_mean_pct < 6.0, "{}", b.observed_mean_pct);
+    // Strategy (a) is only partially closed (computed op counts vs the
+    // paper-calibrated simulator); its baseline ceiling documents that
+    // divergence rather than hiding it.
+    let a = report
+        .claims
+        .iter()
+        .find(|c| c.claim.strategy == micdl::sweep::Strategy::A)
+        .unwrap();
+    assert!(a.pass);
+    assert!(a.claim.band.ceiling_pct > a.claim.band.paper_pct);
+}
+
+#[test]
+fn committed_closed_loop_matches_capture_within_tolerance() {
+    let committed = ConformanceBaseline::load(&committed_closed_loop_path()).unwrap();
+    let captured = ConformanceBaseline::capture_closed_loop(&SweepRunner::serial()).unwrap();
+    assert_eq!(committed.grids.len(), captured.grids.len());
+    for (want, got) in committed.grids.iter().zip(captured.grids.iter()) {
+        assert_eq!(want.id, got.id);
+        assert_eq!(want.bands.len(), got.bands.len());
+        for (wb, gb) in want.bands.iter().zip(got.bands.iter()) {
+            assert_eq!((wb.arch.as_str(), wb.strategy), (gb.arch.as_str(), gb.strategy));
+            assert_eq!(wb.points, gb.points);
+            assert!(
+                (wb.mean_delta_pct - gb.mean_delta_pct).abs() <= wb.mean_tol_pp,
+                "{}/{}/{}: committed mean {} vs captured {}",
+                want.id,
+                wb.arch,
+                wb.strategy,
+                wb.mean_delta_pct,
+                gb.mean_delta_pct
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // CLI level (the acceptance path)
 // ---------------------------------------------------------------------------
 
@@ -184,9 +252,80 @@ fn cli_observational_mode_prints_bands() {
     let out = repro(&["conformance", "--serial"]);
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let stdout = String::from_utf8_lossy(&out.stdout);
-    for needle in ["table9", "table10", "table11", "mean Δ %", "all"] {
+    for needle in ["table9", "table10", "table11", "table9_closed_loop", "mean Δ %", "all"] {
         assert!(stdout.contains(needle), "missing {needle:?} in {stdout}");
     }
+}
+
+#[test]
+fn cli_closed_loop_check_writes_report_and_exits_zero() {
+    let dir = TempDir::new("conformance-cli-cl").unwrap();
+    let report_path = dir.path().join("closed_loop_report.json");
+    let out = repro(&[
+        "conformance",
+        "--closed-loop",
+        committed_closed_loop_path().to_str().unwrap(),
+        "--serial",
+        "--closed-loop-report",
+        report_path.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let doc = Json::parse(stdout.trim()).unwrap();
+    assert_eq!(doc.get("clean").unwrap().as_bool(), Some(true));
+    assert_eq!(doc.get("scenarios").unwrap().as_usize(), Some(42));
+    assert_eq!(doc.get("bands").unwrap().as_arr().unwrap().len(), 6);
+    let file = std::fs::read_to_string(&report_path).unwrap();
+    assert_eq!(file, stdout.trim());
+}
+
+#[test]
+fn cli_checks_both_baselines_in_one_invocation() {
+    let out = repro(&[
+        "conformance",
+        "--baseline",
+        committed_baseline_path().to_str().unwrap(),
+        "--closed-loop",
+        committed_closed_loop_path().to_str().unwrap(),
+        "--serial",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let doc = Json::parse(String::from_utf8_lossy(&out.stdout).trim()).unwrap();
+    assert_eq!(doc.get("kind").unwrap().as_str(), Some("micdl-conformance-run"));
+    assert_eq!(doc.get("clean").unwrap().as_bool(), Some(true));
+    assert_eq!(
+        doc.get("measured").unwrap().get("scenarios").unwrap().as_usize(),
+        Some(84)
+    );
+    assert_eq!(
+        doc.get("closed_loop").unwrap().get("scenarios").unwrap().as_usize(),
+        Some(42)
+    );
+}
+
+#[test]
+fn cli_perturbed_closed_loop_baseline_exits_two() {
+    let dir = TempDir::new("conformance-cli-cl-fail").unwrap();
+    let path = dir.path().join("perturbed.json");
+    let mut base = ConformanceBaseline::load(&committed_closed_loop_path()).unwrap();
+    base.grids[0].bands[0].mean_delta_pct += 50.0;
+    std::fs::write(&path, base.to_json().emit()).unwrap();
+    let out = repro(&["conformance", "--closed-loop", path.to_str().unwrap(), "--serial"]);
+    assert_eq!(out.status.code(), Some(2), "regression must exit 2");
+    assert!(String::from_utf8_lossy(&out.stderr).contains("BAND REGRESSION"));
+}
+
+#[test]
+fn cli_write_closed_loop_then_check_round_trips() {
+    let dir = TempDir::new("conformance-cli-cl-write").unwrap();
+    let path = dir.path().join("golden.json");
+    let out = repro(&["conformance", "--write-closed-loop", path.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("closed-loop baseline"));
+    let out = repro(&["conformance", "--closed-loop", path.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let doc = Json::parse(String::from_utf8_lossy(&out.stdout).trim()).unwrap();
+    assert_eq!(doc.get("clean").unwrap().as_bool(), Some(true));
 }
 
 #[test]
@@ -204,6 +343,17 @@ fn cli_rejects_unknown_and_conflicting_flags() {
     let out = repro(&["conformance", "--report", "out.json"]);
     assert_eq!(out.status.code(), Some(1));
     assert!(String::from_utf8_lossy(&out.stderr).contains("--report requires"));
+    // The closed-loop flags follow the same rules.
+    let out = repro(&["conformance", "--closed-loop", "a.json", "--write-closed-loop", "b.json"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("mutually exclusive"));
+    let out = repro(&["conformance", "--closed-loop-report", "out.json"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--closed-loop-report requires"));
+    // Mixing a write mode with a check mode is ambiguous.
+    let out = repro(&["conformance", "--baseline", "a.json", "--write-closed-loop", "b.json"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("mutually exclusive"));
 }
 
 // ---------------------------------------------------------------------------

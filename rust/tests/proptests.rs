@@ -541,3 +541,204 @@ fn prop_simulator_robust_across_machine_configs() {
         assert!(r.execution_s <= r.total_s);
     }
 }
+
+// ---------------------------------------------------------------------------
+// Sim-axis memoization soundness (the ablation-sweep cache contract)
+// ---------------------------------------------------------------------------
+
+/// A random sim-axis variant: every override drawn independently, `None`
+/// with positive probability so partial override sets are exercised.
+fn random_sim_variant(rng: &mut XorShift64, name: String) -> micdl::sweep::SimVariant {
+    let mut v = micdl::sweep::SimVariant { name, ..Default::default() };
+    if rng.next_below(2) == 0 {
+        v.clock_ghz = Some(0.5 + rng.next_below(30) as f64 * 0.1);
+    }
+    if rng.next_below(3) == 0 {
+        v.cores = Some(2 + rng.next_below(96));
+    }
+    if rng.next_below(3) == 0 {
+        v.threads_per_core = Some(1 + rng.next_below(6));
+    }
+    if rng.next_below(2) == 0 {
+        v.fwd_cycles_per_op = Some(5.0 + rng.next_below(60) as f64);
+    }
+    if rng.next_below(3) == 0 {
+        v.bwd_cycles_per_op = Some(5.0 + rng.next_below(30) as f64);
+    }
+    if rng.next_below(3) == 0 {
+        v.exec_fraction = Some(0.3 + rng.next_below(7) as f64 * 0.1);
+    }
+    if rng.next_below(3) == 0 {
+        v.l2_alpha = Some(rng.next_below(100) as f64 * 0.01);
+    }
+    if rng.next_below(4) == 0 {
+        v.ring_beta = Some(rng.next_below(60) as f64 * 0.01);
+    }
+    if rng.next_below(4) == 0 {
+        v.oversub_overhead = Some(rng.next_below(20) as f64 * 0.01);
+    }
+    if rng.next_below(4) == 0 {
+        v.l2_ratio_cap = Some(0.5 + rng.next_below(6) as f64);
+    }
+    if rng.next_below(2) == 0 {
+        v.seed = Some(rng.next_below(1 << 30) as u64);
+    }
+    v
+}
+
+#[test]
+fn prop_distinct_resolved_sims_never_share_fingerprints() {
+    // Differing fingerprints never collide: any variant that changes at
+    // least one resolved field must key differently from the base and
+    // from other differing variants; value-identical variants must key
+    // identically (that is what lets same-config cells share entries).
+    let mut rng = XorShift64::new(777);
+    let base = SimConfig::default();
+    let base_fp = base.fingerprint();
+    for case in 0..CASES {
+        let mut v = random_sim_variant(&mut rng, format!("v{case}"));
+        // Fidelity is drawn here rather than in random_sim_variant: the
+        // memoization properties run real measurements, where per-image
+        // DES over paper-scale workloads would be prohibitively slow —
+        // the fingerprint property only hashes.
+        if rng.next_below(3) == 0 {
+            v.fidelity = Some(if rng.next_below(2) == 0 {
+                Fidelity::PerImage
+            } else {
+                Fidelity::Chunked
+            });
+        }
+        let resolved = v.apply(&base);
+        let changed = resolved.machine != base.machine
+            || resolved.fwd_cycles_per_op != base.fwd_cycles_per_op
+            || resolved.bwd_cycles_per_op != base.bwd_cycles_per_op
+            || resolved.exec_fraction != base.exec_fraction
+            || resolved.l2_alpha != base.l2_alpha
+            || resolved.l2_ratio_cap != base.l2_ratio_cap
+            || resolved.ring_beta != base.ring_beta
+            || resolved.oversub_overhead != base.oversub_overhead
+            || resolved.fidelity != base.fidelity
+            || resolved.seed != base.seed;
+        if changed {
+            assert_ne!(resolved.fingerprint(), base_fp, "case {case}: {v:?}");
+        } else {
+            assert_eq!(resolved.fingerprint(), base_fp, "case {case}: {v:?}");
+        }
+        // Renaming a variant never changes its resolved fingerprint.
+        let mut renamed = v.clone();
+        renamed.name = format!("renamed{case}");
+        assert_eq!(
+            renamed.apply(&base).fingerprint(),
+            resolved.fingerprint(),
+            "case {case}"
+        );
+        // Applying the same variant twice is idempotent on the key.
+        assert_eq!(
+            v.apply(&resolved).fingerprint(),
+            resolved.fingerprint(),
+            "case {case}"
+        );
+    }
+}
+
+#[test]
+fn prop_sim_axis_memoization_is_sound() {
+    use micdl::sweep::{GridSpec, Strategy, SweepCache};
+    // For random ablation grids: cells whose resolved fingerprints match
+    // share cache entries (observable as hits + bit-identical values),
+    // and a full second pass over the grid is 100% hits returning
+    // bit-identical values.
+    let mut rng = XorShift64::new(888);
+    for case in 0..12 {
+        let v = random_sim_variant(&mut rng, "x".into());
+        let mut twin = v.clone();
+        twin.name = "y".into(); // same values, different name
+        let distinct = {
+            let mut d = random_sim_variant(&mut rng, "z".into());
+            // Force at least one resolved difference from v.
+            d.seed = Some(v.seed.unwrap_or(SimConfig::default().seed) ^ 0xBEEF);
+            d
+        };
+        let grid = GridSpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![1 + rng.next_below(240), 241 + rng.next_below(200)],
+            strategies: vec![Strategy::A],
+            sims: vec![v, twin, distinct],
+            measure: true,
+            ..GridSpec::default()
+        };
+        let cache = SweepCache::new();
+        let scenarios = grid.enumerate();
+        assert_eq!(scenarios.len(), 6);
+        let first: Vec<f64> = scenarios
+            .iter()
+            .map(|s| cache.measured_s(&grid, s).unwrap())
+            .collect();
+        // Variant "y" (ids 2,3) re-hit "x"'s entries (ids 0,1)
+        // bit-for-bit; the distinct variant never shares with either.
+        assert_eq!(first[0].to_bits(), first[2].to_bits(), "case {case}");
+        assert_eq!(first[1].to_bits(), first[3].to_bits(), "case {case}");
+        let after_first = cache.stats();
+        // Exactly two variants computed: 2 workloads × 2 + 2 cost builds.
+        assert_eq!(after_first.misses, 6, "case {case}: {after_first:?}");
+        // Second pass: pure hits, bit-identical.
+        let second: Vec<f64> = scenarios
+            .iter()
+            .map(|s| cache.measured_s(&grid, s).unwrap())
+            .collect();
+        for (i, (a, b)) in first.iter().zip(second.iter()).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "case {case} cell {i}");
+        }
+        let after_second = cache.stats();
+        assert_eq!(after_second.misses, after_first.misses, "case {case}");
+        assert_eq!(
+            after_second.hits,
+            after_first.hits + 6,
+            "case {case}"
+        );
+    }
+}
+
+#[test]
+fn prop_parallel_ablation_sweeps_bit_identical_to_serial() {
+    use micdl::sweep::{GridSpec, Strategy, SweepRunner};
+    let mut rng = XorShift64::new(999);
+    for case in 0..6 {
+        let sims = (0..2 + rng.next_below(3))
+            .map(|i| random_sim_variant(&mut rng, format!("v{i}")))
+            .collect::<Vec<_>>();
+        let mut grid = GridSpec {
+            archs: vec![ArchSpec::small(), ArchSpec::medium()],
+            threads: vec![1 + rng.next_below(120), 121 + rng.next_below(240)],
+            strategies: vec![Strategy::A, Strategy::B],
+            sims,
+            measure: true,
+            ..GridSpec::default()
+        };
+        grid.normalize();
+        let serial = SweepRunner::serial().run(&grid).unwrap();
+        let parallel = SweepRunner::new(4).run(&grid).unwrap();
+        assert_eq!(serial.len(), parallel.len(), "case {case}");
+        for (s, p) in serial.results.iter().zip(parallel.results.iter()) {
+            assert_eq!(s.scenario, p.scenario, "case {case}");
+            assert_eq!(
+                s.prediction.total_s.to_bits(),
+                p.prediction.total_s.to_bits(),
+                "case {case} id {}",
+                s.scenario.id
+            );
+            assert_eq!(
+                s.measured_s.unwrap().to_bits(),
+                p.measured_s.unwrap().to_bits(),
+                "case {case} id {}",
+                s.scenario.id
+            );
+            assert_eq!(
+                s.delta_pct.unwrap().to_bits(),
+                p.delta_pct.unwrap().to_bits(),
+                "case {case} id {}",
+                s.scenario.id
+            );
+        }
+    }
+}
