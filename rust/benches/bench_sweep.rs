@@ -6,6 +6,10 @@
 //! case) so the perf trajectory is diffable across PRs:
 //! `cargo bench --bench bench_sweep`.
 
+use micdl::calibration::Calibration;
+use micdl::config::ArchSpec;
+use micdl::perfmodel::ParamSource;
+use micdl::simulator::SimConfig;
 use micdl::sweep::{GridSpec, SweepRunner};
 use micdl::util::bench::Bench;
 use micdl::util::json::Json;
@@ -64,6 +68,27 @@ fn main() {
     };
     b.case("sweep/parallel+measure+ablation4/1464", || {
         SweepRunner::new(0).run(&ablation).unwrap().len()
+    });
+
+    // Calibration resolution — the probe-memoization hot path every
+    // ParamSource::Simulator sweep cell rides. Cold: a fresh Calibration
+    // per iteration (full probe + fit per architecture). Hot: one shared
+    // Calibration, so iterations time the memo hit.
+    let archs = ArchSpec::paper_archs();
+    let sim = SimConfig::default();
+    b.case("calibration/resolve-cold/3archs", || {
+        let cal = Calibration::new(ParamSource::Simulator);
+        for arch in &archs {
+            cal.resolve(arch, &sim).unwrap();
+        }
+        cal.resolutions()
+    });
+    let shared = Calibration::new(ParamSource::Simulator);
+    b.case("calibration/resolve-hot/3archs", || {
+        for arch in &archs {
+            shared.resolve(arch, &sim).unwrap();
+        }
+        shared.resolutions()
     });
 
     b.print_report("scenario sweep engine");

@@ -15,6 +15,13 @@
 //! ([`ContentionSource::with_sim_config`]) and is observable through
 //! [`ContentionSource::probe_calibrations`], which the memoization tests
 //! pin to exactly one build per source.
+//!
+//! This module lives in the `calibration` subsystem (it migrated here
+//! from `perfmodel::contention`, which still re-exports it): contention
+//! is one of the estimated model parameters, and
+//! [`crate::calibration::Calibration::resolve`] hands both strategies a
+//! *shared* source per (architecture, simulator) so the probe
+//! calibration runs once for the (a, b) pair instead of once per model.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -1,0 +1,294 @@
+//! `micdl::calibration` — the parameter-estimation subsystem.
+//!
+//! The paper's two models differ only in *how their parameter values are
+//! estimated*: minimal measurement for model (a) (op counts + one
+//! calibrated OperationFactor), measurement-heavy for model (b)
+//! (per-image times measured directly). This module owns that entire
+//! estimation step behind one API:
+//!
+//! ```text
+//! Calibration::new(ParamSource)            which discipline
+//!     .resolve(arch, sim) -> ModelParams   every resolved constant
+//! ```
+//!
+//! A [`Calibrator`] turns an architecture plus a simulator configuration
+//! (the stand-in for the paper's testbed) into a full [`ModelParams`]:
+//! the Table V operands for strategy (a) ([`StrategyAParams`]), the
+//! Table VI measured times for strategy (b) ([`StrategyBParams`]), and a
+//! shared memoized [`ContentionSource`] for the `T_mem` term. Three
+//! implementations cover the estimation disciplines ([`source`]):
+//!
+//! * [`PaperSource`] — the published Tables II–IV/VII/VIII constants
+//!   (exact reproduction; what [`crate::perfmodel::ParamSource::Paper`]
+//!   maps to);
+//! * [`ProbeSource`] — times measured from micsim probes, the way the
+//!   authors measured model (b) on hardware;
+//! * [`ComputedSource`] — computed op counts with the op-count→cycles
+//!   mapping *fitted* to the probes: the closed-loop parameterization of
+//!   strategy (a) (what [`crate::perfmodel::ParamSource::Simulator`]
+//!   maps to).
+//!
+//! The [`Calibration`] facade memoizes resolutions per (architecture,
+//! [`SimConfig::fingerprint`]) — the sweep cache resolves once per
+//! (arch, resolved simulator) and both strategies' models are built from
+//! the same [`ModelParams`], sharing one contention-probe calibration.
+//!
+//! ```
+//! use micdl::calibration::Calibration;
+//! use micdl::config::ArchSpec;
+//! use micdl::perfmodel::ParamSource;
+//! use micdl::simulator::SimConfig;
+//!
+//! let cal = Calibration::new(ParamSource::Paper);
+//! let params = cal.resolve(&ArchSpec::small(), &SimConfig::default()).unwrap();
+//! assert_eq!(params.strategy_b().unwrap().t_fprop_s, 1.45e-3); // Table III
+//! ```
+
+#![warn(missing_docs)]
+
+pub mod contention;
+pub mod source;
+
+pub use contention::ContentionSource;
+pub use source::{ComputedSource, PaperSource, ProbeSource};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::{ArchSpec, MachineConfig};
+use crate::error::{Error, Result};
+use crate::perfmodel::ParamSource;
+use crate::simulator::SimConfig;
+
+/// Strategy (a)'s resolved operands — the Table V terms
+/// (see [`crate::perfmodel::StrategyA`] for the formula they feed).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StrategyAParams {
+    /// `FProp` operations per image (Table VII totals, or computed).
+    pub fprop_ops: f64,
+    /// `BProp` operations per image (Table VIII totals, or computed).
+    pub bprop_ops: f64,
+    /// `Prep` operation estimate (Table II, or back-derived from the
+    /// probed preparation time).
+    pub prep_ops: f64,
+    /// The OperationFactor `OF` scaling every compute term (Table III's
+    /// published value, or fitted against the measuring simulator).
+    pub operation_factor: f64,
+}
+
+/// Strategy (b)'s resolved operands — the Table VI measured times.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StrategyBParams {
+    /// Measured forward time per image at one thread, seconds.
+    pub t_fprop_s: f64,
+    /// Measured backward time per image at one thread, seconds.
+    pub t_bprop_s: f64,
+    /// Measured preparation time, seconds.
+    pub t_prep_s: f64,
+}
+
+/// Every model parameter one calibrator resolved for one (architecture,
+/// simulator configuration) pair — what both strategies construct from.
+#[derive(Debug, Clone)]
+pub struct ModelParams {
+    /// Architecture the parameters were resolved for.
+    pub arch: String,
+    /// Name of the calibrator that produced them
+    /// ([`Calibrator::name`]).
+    pub calibrator: &'static str,
+    /// Machine the CPI/clock terms evaluate against (the resolved
+    /// simulator's machine).
+    pub machine: MachineConfig,
+    /// Strategy (a) operands — `None` when the calibrator cannot
+    /// estimate them (e.g. [`PaperSource`] on a custom architecture with
+    /// no published op counts).
+    pub a: Option<StrategyAParams>,
+    /// Strategy (b) operands — `None` only for calibrators that resolve
+    /// no measured times (none of the shipped ones).
+    pub b: Option<StrategyBParams>,
+    /// Shared MemoryContention(p) resolver; clones share one memoized
+    /// probe calibration.
+    pub contention: ContentionSource,
+}
+
+impl ModelParams {
+    /// The strategy-(a) operands, or a configuration error naming the
+    /// calibrator that could not estimate them.
+    pub fn strategy_a(&self) -> Result<StrategyAParams> {
+        self.a.ok_or_else(|| {
+            Error::Config(format!(
+                "calibrator {:?} resolves no strategy-(a) parameters for \
+                 arch {:?} (no published op counts; use --params sim)",
+                self.calibrator, self.arch
+            ))
+        })
+    }
+
+    /// The strategy-(b) operands, or a configuration error.
+    pub fn strategy_b(&self) -> Result<StrategyBParams> {
+        self.b.ok_or_else(|| {
+            Error::Config(format!(
+                "calibrator {:?} resolves no strategy-(b) parameters for arch {:?}",
+                self.calibrator, self.arch
+            ))
+        })
+    }
+}
+
+/// One parameter-estimation discipline: resolve every model constant for
+/// an architecture against a simulator configuration.
+pub trait Calibrator: Send + Sync {
+    /// Short identifier for reports and error messages.
+    fn name(&self) -> &'static str;
+    /// Resolve the full parameter set. Deterministic: equal inputs
+    /// (architecture, [`SimConfig::fingerprint`]) give bit-identical
+    /// parameters.
+    fn resolve(&self, arch: &ArchSpec, sim: &SimConfig) -> Result<ModelParams>;
+}
+
+/// The calibration facade: maps a [`ParamSource`] to its calibrator and
+/// memoizes resolutions per (architecture, simulator fingerprint).
+///
+/// [`ParamSource::Paper`] resolves through [`PaperSource`];
+/// [`ParamSource::Simulator`] through [`ComputedSource`] (which probes
+/// via [`ProbeSource`] internally) — the single place the mapping
+/// lives, so the model constructors and the sweep cache cannot drift.
+pub struct Calibration {
+    source: ParamSource,
+    calibrator: Box<dyn Calibrator>,
+    memo: Mutex<HashMap<(String, u64), Arc<ModelParams>>>,
+    resolutions: AtomicU64,
+}
+
+impl std::fmt::Debug for Calibration {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Calibration")
+            .field("source", &self.source)
+            .field("calibrator", &self.calibrator.name())
+            .field("resolutions", &self.resolutions())
+            .finish()
+    }
+}
+
+impl Calibration {
+    /// The calibration for one parameter source.
+    pub fn new(source: ParamSource) -> Calibration {
+        let calibrator: Box<dyn Calibrator> = match source {
+            ParamSource::Paper => Box::new(PaperSource),
+            ParamSource::Simulator => Box::new(ComputedSource),
+        };
+        Calibration {
+            source,
+            calibrator,
+            memo: Mutex::new(HashMap::new()),
+            resolutions: AtomicU64::new(0),
+        }
+    }
+
+    /// The parameter source this calibration maps.
+    pub fn source(&self) -> ParamSource {
+        self.source
+    }
+
+    /// The underlying calibrator's name ("paper" / "computed").
+    pub fn calibrator_name(&self) -> &'static str {
+        self.calibrator.name()
+    }
+
+    /// Resolve (memoized) the parameters for one architecture against
+    /// one simulator configuration. Entries are keyed by (architecture
+    /// name, [`SimConfig::fingerprint`]), so any simulator change is a
+    /// fresh resolution and equal configurations share one — including
+    /// between the (a) and (b) models of a sweep cell.
+    ///
+    /// Lookups are lock-drop-compute-insert (the sweep-cache policy):
+    /// two workers missing the same key concurrently may both run the
+    /// calibrator — every resolution is deterministic and the first
+    /// insert wins, so results stay bit-identical;
+    /// [`Calibration::resolutions`] counts actual runs, which is
+    /// exactly one per key only without concurrent cold misses.
+    pub fn resolve(&self, arch: &ArchSpec, sim: &SimConfig) -> Result<Arc<ModelParams>> {
+        let key = (arch.name.clone(), sim.fingerprint());
+        if let Some(params) = self.memo.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(params));
+        }
+        let built = Arc::new(self.calibrator.resolve(arch, sim)?);
+        self.resolutions.fetch_add(1, Ordering::Relaxed);
+        Ok(Arc::clone(
+            self.memo.lock().unwrap().entry(key).or_insert(built),
+        ))
+    }
+
+    /// How many resolutions actually ran (memo misses) — the
+    /// probe-memoization observability hook `bench_sweep` and the tests
+    /// pin.
+    pub fn resolutions(&self) -> u64 {
+        self.resolutions.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_source_maps_to_the_documented_calibrators() {
+        assert_eq!(Calibration::new(ParamSource::Paper).calibrator_name(), "paper");
+        assert_eq!(
+            Calibration::new(ParamSource::Simulator).calibrator_name(),
+            "computed"
+        );
+    }
+
+    #[test]
+    fn resolve_is_memoized_per_arch_and_fingerprint() {
+        let cal = Calibration::new(ParamSource::Simulator);
+        let arch = ArchSpec::small();
+        let sim = SimConfig::default();
+        assert_eq!(cal.resolutions(), 0, "resolution must be lazy");
+        let first = cal.resolve(&arch, &sim).unwrap();
+        let second = cal.resolve(&arch, &sim).unwrap();
+        assert!(Arc::ptr_eq(&first, &second), "equal inputs share one entry");
+        assert_eq!(cal.resolutions(), 1);
+        // A different simulator is a fresh resolution...
+        let mut slower = SimConfig::default();
+        slower.fwd_cycles_per_op *= 2.0;
+        let slow = cal.resolve(&arch, &slower).unwrap();
+        assert!(!Arc::ptr_eq(&first, &slow));
+        assert_eq!(cal.resolutions(), 2);
+        // ...and so is a different architecture.
+        cal.resolve(&ArchSpec::medium(), &sim).unwrap();
+        assert_eq!(cal.resolutions(), 3);
+    }
+
+    #[test]
+    fn memoized_params_bit_identical_to_fresh_resolution() {
+        let cal = Calibration::new(ParamSource::Simulator);
+        let arch = ArchSpec::large();
+        let sim = SimConfig::default();
+        let memoized = cal.resolve(&arch, &sim).unwrap();
+        let fresh = ComputedSource.resolve(&arch, &sim).unwrap();
+        let (ma, fa) = (
+            memoized.strategy_a().unwrap(),
+            fresh.strategy_a().unwrap(),
+        );
+        assert_eq!(ma.operation_factor.to_bits(), fa.operation_factor.to_bits());
+        assert_eq!(ma.prep_ops.to_bits(), fa.prep_ops.to_bits());
+        let (mb, fb) = (
+            memoized.strategy_b().unwrap(),
+            fresh.strategy_b().unwrap(),
+        );
+        assert_eq!(mb.t_fprop_s.to_bits(), fb.t_fprop_s.to_bits());
+    }
+
+    #[test]
+    fn missing_params_error_names_the_calibrator() {
+        let mut arch = ArchSpec::small();
+        arch.name = "custom".into();
+        let cal = Calibration::new(ParamSource::Paper);
+        let params = cal.resolve(&arch, &SimConfig::default()).unwrap();
+        let err = params.strategy_a().unwrap_err().to_string();
+        assert!(err.contains("paper") && err.contains("custom"), "{err}");
+    }
+}

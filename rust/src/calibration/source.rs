@@ -1,0 +1,288 @@
+//! The three parameter-estimation strategies behind
+//! [`Calibrator`](crate::calibration::Calibrator).
+//!
+//! | Source | Estimation discipline | Owns |
+//! |---|---|---|
+//! | [`PaperSource`] | published constants (Tables II–IV, VII, VIII) | everything |
+//! | [`ProbeSource`] | measured from micsim probes (the model-(b) methodology) | `T_Fprop`/`T_Bprop`/`T_prep`, contention |
+//! | [`ComputedSource`] | computed op counts × cycles *fitted* to the probes | the model-(a) parameterization |
+//!
+//! [`ComputedSource`] is what closes strategy (a)'s loop: the paper
+//! calibrated its OperationFactor "to closely match the measured value
+//! for 15 threads"; we do the same against the measuring simulator —
+//! per-direction cycles-per-op are fitted so the *computed* Table VII/
+//! VIII counts reproduce the probed per-image times exactly, instead of
+//! reusing micsim's paper-count cycle constants (which left the medium
+//! CNN's closed-loop band at ~58 % — the computed-vs-paper op-count
+//! gap). The residual Δ is then structural: the single shared
+//! OperationFactor distorts the test term (`FProp·OF` vs the measured
+//! `T_Fprop`), which is the honest cost of Table V's one-factor form.
+
+use crate::calibration::{
+    Calibrator, ContentionSource, ModelParams, StrategyAParams, StrategyBParams,
+};
+use crate::config::ArchSpec;
+use crate::error::Result;
+use crate::nn::opcount;
+use crate::perfmodel::ParamSource;
+use crate::report::paper;
+use crate::simulator::{probe, SimConfig};
+
+/// Published-constant calibration: the paper's Tables II–IV, VII and
+/// VIII, for exact table reproduction ([`ParamSource::Paper`]).
+///
+/// Custom architectures have no published rows; like the pre-subsystem
+/// constructors, strategy (b) falls back to the simulator probe and
+/// strategy (a) resolves to nothing (constructing the model errors).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PaperSource;
+
+impl Calibrator for PaperSource {
+    fn name(&self) -> &'static str {
+        "paper"
+    }
+
+    fn resolve(&self, arch: &ArchSpec, sim: &SimConfig) -> Result<ModelParams> {
+        let idx = paper::arch_index(&arch.name);
+        let a = match (idx, paper::op_counts(&arch.name)) {
+            (Some(i), Some(counts)) => Some(StrategyAParams {
+                fprop_ops: counts.fprop.total() as f64,
+                bprop_ops: counts.bprop.total() as f64,
+                prep_ops: paper::MODEL_PREP_OPS[i],
+                operation_factor: paper::OPERATION_FACTOR[i],
+            }),
+            _ => None,
+        };
+        let b = match idx {
+            Some(i) => StrategyBParams {
+                t_fprop_s: paper::T_FPROP_S[i],
+                t_bprop_s: paper::T_BPROP_S[i],
+                t_prep_s: paper::T_PREP_S[i],
+            },
+            // No paper measurements for custom archs: fall back to the
+            // simulator probe (the pre-subsystem StrategyB behaviour).
+            None => {
+                let m = probe::measure_image_times(arch, sim)?;
+                StrategyBParams {
+                    t_fprop_s: m.t_fprop_s,
+                    t_bprop_s: m.t_bprop_s,
+                    t_prep_s: m.t_prep_s,
+                }
+            }
+        };
+        Ok(ModelParams {
+            arch: arch.name.clone(),
+            calibrator: self.name(),
+            machine: sim.machine.clone(),
+            a,
+            b: Some(b),
+            contention: ContentionSource::new(arch, ParamSource::Paper)
+                .with_sim_config(sim.clone()),
+        })
+    }
+}
+
+/// Measurement-heavy calibration: every *measured* quantity is probed
+/// from the simulator ([`probe::measure_image_times`] for the per-image
+/// and preparation times, the Table IV contention probe for `T_mem`) —
+/// exactly how the authors parameterized model (b) on the real Phi.
+///
+/// Probes are time measurements; the op-count parameterization of model
+/// (a) is not a probe product, so this source resolves no
+/// [`StrategyAParams`] — [`ComputedSource`] layers them on top.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProbeSource;
+
+impl Calibrator for ProbeSource {
+    fn name(&self) -> &'static str {
+        "probe"
+    }
+
+    fn resolve(&self, arch: &ArchSpec, sim: &SimConfig) -> Result<ModelParams> {
+        let m = probe::measure_image_times(arch, sim)?;
+        Ok(ModelParams {
+            arch: arch.name.clone(),
+            calibrator: self.name(),
+            machine: sim.machine.clone(),
+            a: None,
+            b: Some(StrategyBParams {
+                t_fprop_s: m.t_fprop_s,
+                t_bprop_s: m.t_bprop_s,
+                t_prep_s: m.t_prep_s,
+            }),
+            contention: ContentionSource::new(arch, ParamSource::Simulator)
+                .with_sim_config(sim.clone()),
+        })
+    }
+}
+
+/// Computed-count calibration: first-principles Table VII/VIII op counts
+/// ([`opcount::count`], i.e. `OpSource::Computed` end-to-end) with the
+/// op-count→cycles mapping *fitted* against the measuring simulator —
+/// the closed-loop parameterization of strategy (a).
+///
+/// Per-direction cycles-per-op are fitted so the computed counts
+/// reproduce the probed per-image times bit-for-bit at one thread
+/// (`fwd = T_Fprop·s/FProp`, `bwd = T_Bprop·s/BProp`), then folded into
+/// the single Table V OperationFactor with the model's
+/// `(FProp + BProp + FProp)` term mix, and the Prep estimate is
+/// back-derived from the probed preparation time through that factor.
+/// Strategy (b)'s parameters and the contention source are the
+/// [`ProbeSource`] resolution (the fit anchors).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ComputedSource;
+
+impl Calibrator for ComputedSource {
+    fn name(&self) -> &'static str {
+        "computed"
+    }
+
+    fn resolve(&self, arch: &ArchSpec, sim: &SimConfig) -> Result<ModelParams> {
+        let probed = ProbeSource.resolve(arch, sim)?;
+        let m = probed.b.expect("ProbeSource always resolves strategy-(b) params");
+        let counts = opcount::resolve(arch, ParamSource::Simulator.op_source())?;
+        let f = counts.fprop.total() as f64;
+        let b = counts.bprop.total() as f64;
+        let clock = sim.machine.clock_hz;
+        // Fit per-direction cycles-per-op over the *computed* counts so
+        // they reproduce the probed per-image times exactly.
+        let fwd_cycles_fit = m.t_fprop_s * clock / f;
+        let bwd_cycles_fit = m.t_bprop_s * clock / b;
+        // Fold into the Table V single OperationFactor, weighted by the
+        // model's (FProp + BProp + FProp) training/validation term mix.
+        let operation_factor =
+            (2.0 * f * fwd_cycles_fit + b * bwd_cycles_fit) / (2.0 * f + b);
+        // Back-derive the Prep operation estimate from the probed
+        // preparation time so the `Prep·OF/s` term lands on it.
+        let prep_ops = m.t_prep_s * clock / operation_factor;
+        Ok(ModelParams {
+            a: Some(StrategyAParams {
+                fprop_ops: f,
+                bprop_ops: b,
+                prep_ops,
+                operation_factor,
+            }),
+            calibrator: self.name(),
+            ..probed
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    #[test]
+    fn paper_source_resolves_published_constants_exactly() {
+        let sim = SimConfig::default();
+        for (i, arch) in ArchSpec::paper_archs().iter().enumerate() {
+            let params = PaperSource.resolve(arch, &sim).unwrap();
+            let a = params.strategy_a().unwrap();
+            assert_eq!(a.operation_factor, paper::OPERATION_FACTOR[i]);
+            assert_eq!(a.prep_ops, paper::MODEL_PREP_OPS[i]);
+            let counts = paper::op_counts(&arch.name).unwrap();
+            assert_eq!(a.fprop_ops, counts.fprop.total() as f64);
+            assert_eq!(a.bprop_ops, counts.bprop.total() as f64);
+            let b = params.strategy_b().unwrap();
+            assert_eq!(b.t_fprop_s, paper::T_FPROP_S[i]);
+            assert_eq!(b.t_bprop_s, paper::T_BPROP_S[i]);
+            assert_eq!(b.t_prep_s, paper::T_PREP_S[i]);
+        }
+    }
+
+    #[test]
+    fn paper_source_custom_arch_has_probed_b_and_no_a() {
+        let mut arch = ArchSpec::small();
+        arch.name = "custom".into();
+        let sim = SimConfig::default();
+        let params = PaperSource.resolve(&arch, &sim).unwrap();
+        assert!(params.strategy_a().is_err(), "no paper op counts for customs");
+        let b = params.strategy_b().unwrap();
+        let m = probe::measure_image_times(&arch, &sim).unwrap();
+        assert_eq!(b.t_fprop_s.to_bits(), m.t_fprop_s.to_bits());
+    }
+
+    #[test]
+    fn probe_source_matches_measure_image_times() {
+        let sim = SimConfig::default();
+        for arch in ArchSpec::paper_archs() {
+            let params = ProbeSource.resolve(&arch, &sim).unwrap();
+            assert!(params.strategy_a().is_err(), "probes measure times, not counts");
+            let b = params.strategy_b().unwrap();
+            let m = probe::measure_image_times(&arch, &sim).unwrap();
+            assert_eq!(b.t_fprop_s.to_bits(), m.t_fprop_s.to_bits());
+            assert_eq!(b.t_bprop_s.to_bits(), m.t_bprop_s.to_bits());
+            assert_eq!(b.t_prep_s.to_bits(), m.t_prep_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn computed_source_fit_reproduces_probed_times() {
+        // The fitted calibration round-trips: computed counts × fitted
+        // OperationFactor land back on the probed train-image time, so
+        // strategy (a)'s training term equals strategy (b)'s.
+        let sim = SimConfig::default();
+        for arch in ArchSpec::paper_archs() {
+            let params = ComputedSource.resolve(&arch, &sim).unwrap();
+            let a = params.strategy_a().unwrap();
+            let b = params.strategy_b().unwrap();
+            let clock = sim.machine.clock_hz;
+            let train_cycles =
+                (2.0 * a.fprop_ops + a.bprop_ops) * a.operation_factor / clock;
+            let probed = 2.0 * b.t_fprop_s + b.t_bprop_s;
+            assert!(
+                (train_cycles - probed).abs() / probed < 1e-12,
+                "{}: {train_cycles} vs {probed}",
+                arch.name
+            );
+            // The prep term lands on the probed preparation time.
+            let prep = a.prep_ops * a.operation_factor / clock;
+            assert!((prep - b.t_prep_s).abs() / b.t_prep_s < 1e-12, "{}", arch.name);
+        }
+    }
+
+    #[test]
+    fn computed_source_uses_computed_counts() {
+        let sim = SimConfig::default();
+        let arch = ArchSpec::small();
+        let a = ComputedSource.resolve(&arch, &sim).unwrap().strategy_a().unwrap();
+        let counts = opcount::count(&arch).unwrap();
+        assert_eq!(a.fprop_ops, counts.fprop.total() as f64);
+        assert_eq!(a.bprop_ops, counts.bprop.total() as f64);
+        // And they differ from the paper tables (the gap the fit absorbs).
+        assert_ne!(a.fprop_ops, 58_000.0);
+    }
+
+    #[test]
+    fn computed_source_is_seed_independent() {
+        // The probes are closed-form and deterministic; only genuine
+        // simulator-constant changes may move the fit.
+        let arch = ArchSpec::medium();
+        let base = ComputedSource.resolve(&arch, &SimConfig::default()).unwrap();
+        let mut reseeded = SimConfig::default();
+        reseeded.seed ^= 0xDEAD_BEEF;
+        let again = ComputedSource.resolve(&arch, &reseeded).unwrap();
+        let (a1, a2) = (base.strategy_a().unwrap(), again.strategy_a().unwrap());
+        assert_eq!(a1.operation_factor.to_bits(), a2.operation_factor.to_bits());
+        assert_eq!(a1.prep_ops.to_bits(), a2.prep_ops.to_bits());
+        let mut slower = SimConfig::default();
+        slower.fwd_cycles_per_op *= 2.0;
+        let slow = ComputedSource.resolve(&arch, &slower).unwrap().strategy_a().unwrap();
+        assert!(slow.operation_factor > a1.operation_factor);
+    }
+
+    #[test]
+    fn sources_share_one_contention_resolution_per_params() {
+        // The (a, b) pair built from one resolution shares the contention
+        // memo: the probe calibration runs once, not once per model.
+        let sim = SimConfig::default();
+        let params = ComputedSource.resolve(&ArchSpec::small(), &sim).unwrap();
+        let run = RunConfig::paper_default("small", 240);
+        let c1 = params.contention.clone();
+        let c2 = params.contention.clone();
+        c1.t_mem_s(run.epochs, run.train_images, run.threads).unwrap();
+        c2.t_mem_s(run.epochs, run.train_images, 120).unwrap();
+        assert_eq!(params.contention.probe_calibrations(), 1);
+    }
+}

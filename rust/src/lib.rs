@@ -23,6 +23,7 @@
 //!
 //! | Module | Role |
 //! |---|---|
+//! | [`calibration`] | Parameter estimation: paper constants, probes, fitted computed counts |
 //! | [`config`] | Architecture / machine / run configuration system |
 //! | [`nn`] | Layer graph, shape walk, weight init, operation counting |
 //! | [`engine`] | Pure-Rust CNN forward/backward (oracle + fallback backend) |
@@ -36,6 +37,7 @@
 //! | [`sweep`] | Parallel scenario-sweep engine (grid × cache × worker pool) |
 //! | [`experiments`] | One entry per paper table/figure (the reproduction index) |
 
+pub mod calibration;
 pub mod config;
 pub mod coordinator;
 pub mod dataset;

@@ -9,6 +9,7 @@
 //! repro predict --arch A --threads P [...]          run the performance models
 //! repro sweep [--spec FILE | axis flags]            evaluate a whole scenario grid
 //! repro conformance [--baseline FILE]               measured-mode Δ-band conformance
+//! repro sensitivity [--arch LIST] [--json FILE]     ranked ∂Δ/∂constant report
 //! repro probe --arch A                              Table IV contention probe
 //! repro train [...]                                 really train (engine or PJRT backend)
 //! repro selfcheck                                   invariant + artifact checks
@@ -35,8 +36,8 @@ use micdl::report::Table;
 use micdl::simulator::{probe, simulate_training, Fidelity, SimConfig};
 use micdl::sweep::baseline::DEFAULT_TOLERANCE;
 use micdl::sweep::{
-    conformance, parse_axis, Baseline, ConformanceBaseline, GridSpec, SimVariant,
-    Strategy, SweepRunner,
+    conformance, parse_axis, sensitivity, Baseline, ConformanceBaseline, GridSpec,
+    SensitivitySpec, SimConstant, SimVariant, Strategy, SweepRunner,
 };
 
 /// `format!` into the crate's config error.
@@ -140,7 +141,21 @@ USAGE:
                   both checks may run in one invocation. With no check or
                   write flag the observed bands are printed, nothing
                   asserted. Check mode puts the report JSON on stdout,
-                  findings on stderr.)
+                  findings on stderr; --report FILE additionally writes
+                  the stdout payload — the combined document when both
+                  checks run — to a path for CI artifacts.)
+  repro sensitivity [--arch all|NAME[,NAME...]] [--threads LIST]
+                 [--strategy a|b|both] [--params paper|sim] [--step F]
+                 [--constants LIST] [--json OUT.json] [--workers N | --serial]
+                 (one-at-a-time ablation over the simulator constants:
+                  perturb each by ±step (default 0.1 = ±10%), re-measure
+                  the Table IX Δ per architecture × strategy, and report
+                  the ranked central-difference gradients ∂Δ/∂constant.
+                  --constants picks from: clock_ghz fwd_cycles_per_op
+                  bwd_cycles_per_op exec_fraction l2_alpha l2_ratio_cap
+                  ring_beta oversub_overhead. --json writes the machine-
+                  readable report, bit-identical parallel vs serial. See
+                  docs/SWEEP.md.)
   repro probe    [--arch A]
   repro train    [--backend engine|pjrt] [--arch A] [--epochs E] [--images N]
                  [--test-images N] [--workers W] [--lr F] [--artifacts DIR]
@@ -196,6 +211,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "predict" => cmd_predict(&args),
         "sweep" => cmd_sweep(&args),
         "conformance" => cmd_conformance(&args),
+        "sensitivity" => cmd_sensitivity(&args),
         "probe" => cmd_probe(&args),
         "train" => cmd_train(&args),
         "selfcheck" => cmd_selfcheck(&args),
@@ -372,6 +388,26 @@ const SWEEP_FLAGS: [(&str, bool, bool); 29] = [
     ("tolerance", true, false),
 ];
 
+/// Reject unknown flags and valued flags given without a value — a
+/// typo'd or valueless flag must error, not silently no-op (a dropped
+/// `--compare` would make a CI gate vacuous, a dropped `--json` starves
+/// the script capturing the dump). One helper shared by every
+/// flag-table-driven subcommand so the two validation passes cannot
+/// drift between them.
+fn check_flags(args: &Args, flags: &[(&str, bool)], cmd: &str) -> Result<()> {
+    for (flag, _) in &args.flags {
+        if !flags.iter().any(|&(f, _)| f == flag.as_str()) {
+            bail!("unknown {cmd} flag --{flag}");
+        }
+    }
+    for &(flag, valued) in flags {
+        if valued && args.has(flag) && args.get(flag).is_none() {
+            bail!("--{flag} needs a value");
+        }
+    }
+    Ok(())
+}
+
 /// Parse a comma-separated float list (`--sim-clock-ghz 1.0,1.238,1.5`).
 fn parse_float_list(text: &str, flag: &str) -> Result<Vec<f64>> {
     text.split(',')
@@ -455,19 +491,7 @@ fn parse_sim_axis(args: &Args) -> Result<Option<Vec<SimVariant>>> {
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    // A typo'd or valueless flag must error, not silently no-op — a
-    // dropped `--compare` would make a CI gate vacuous, a dropped
-    // `--json` starves the script capturing the dump.
-    for (flag, _) in &args.flags {
-        if !SWEEP_FLAGS.iter().any(|&(f, _, _)| f == flag.as_str()) {
-            bail!("unknown sweep flag --{flag}");
-        }
-    }
-    for (flag, valued, _) in SWEEP_FLAGS {
-        if valued && args.has(flag) && args.get(flag).is_none() {
-            bail!("--{flag} needs a value");
-        }
-    }
+    check_flags(args, &SWEEP_FLAGS.map(|(f, v, _)| (f, v)), "sweep")?;
     let baseline = args
         .get("compare")
         .map(|path| Baseline::load(std::path::Path::new(path)))
@@ -593,16 +617,7 @@ const CONFORMANCE_FLAGS: [(&str, bool); 8] = [
 ];
 
 fn cmd_conformance(args: &Args) -> Result<()> {
-    for (flag, _) in &args.flags {
-        if !CONFORMANCE_FLAGS.iter().any(|&(f, _)| f == flag.as_str()) {
-            bail!("unknown conformance flag --{flag}");
-        }
-    }
-    for (flag, valued) in CONFORMANCE_FLAGS {
-        if valued && args.has(flag) && args.get(flag).is_none() {
-            bail!("--{flag} needs a value");
-        }
-    }
+    check_flags(args, &CONFORMANCE_FLAGS, "conformance")?;
     if args.has("baseline") && args.has("write-baseline") {
         bail!("--baseline and --write-baseline are mutually exclusive");
     }
@@ -616,8 +631,11 @@ fn cmd_conformance(args: &Args) -> Result<()> {
     }
     // Only check mode produces a report — accepting --report elsewhere
     // would silently no-op and leave a script reading a stale file.
-    if args.has("report") && !args.has("baseline") {
-        bail!("--report requires --baseline (only check mode writes a report)");
+    if args.has("report") && !checks {
+        bail!(
+            "--report requires a check flag (--baseline or --closed-loop; \
+             only check mode writes a report)"
+        );
     }
     if args.has("closed-loop-report") && !args.has("closed-loop") {
         bail!("--closed-loop-report requires --closed-loop");
@@ -698,13 +716,9 @@ fn cmd_conformance(args: &Args) -> Result<()> {
     if let Some(path) = args.get("baseline") {
         let base = ConformanceBaseline::load(std::path::Path::new(path))?;
         let report = base.check(&runner)?;
-        let json = report.to_json().emit();
-        if let Some(out) = args.get("report") {
-            std::fs::write(out, &json)?;
-        }
         eprint!("{}", report.render());
         clean &= report.is_clean();
-        payloads.push(("measured", json));
+        payloads.push(("measured", report.to_json().emit()));
     }
     if let Some(path) = args.get("closed-loop") {
         let base = ConformanceBaseline::load(std::path::Path::new(path))?;
@@ -717,22 +731,93 @@ fn cmd_conformance(args: &Args) -> Result<()> {
         clean &= report.is_clean();
         payloads.push(("closed_loop", json));
     }
-    match payloads.as_slice() {
-        [(_, json)] => println!("{json}"),
+    // The stdout payload: one report object, or the combined document
+    // when both baselines were checked. `--report` mirrors exactly this
+    // payload to a file (the CI artifact path), whatever the mode.
+    let payload = match payloads.as_slice() {
+        [(_, json)] => json.clone(),
         _ => {
             let parts: Vec<String> = payloads
                 .iter()
                 .map(|(key, json)| format!("\"{key}\":{json}"))
                 .collect();
-            println!(
+            format!(
                 "{{\"kind\":\"micdl-conformance-run\",\"clean\":{clean},{}}}",
                 parts.join(",")
-            );
+            )
         }
+    };
+    if let Some(out) = args.get("report") {
+        std::fs::write(out, &payload)?;
     }
+    println!("{payload}");
     if !clean {
         std::process::exit(2);
     }
+    Ok(())
+}
+
+/// The sensitivity flag inventory: (name, takes a value) — one table
+/// drives both validation passes, like [`SWEEP_FLAGS`].
+const SENSITIVITY_FLAGS: [(&str, bool); 9] = [
+    ("arch", true),
+    ("threads", true),
+    ("strategy", true),
+    ("params", true),
+    ("step", true),
+    ("constants", true),
+    ("json", true),
+    ("workers", true),
+    ("serial", false),
+];
+
+fn cmd_sensitivity(args: &Args) -> Result<()> {
+    check_flags(args, &SENSITIVITY_FLAGS, "sensitivity")?;
+    let mut spec = SensitivitySpec::default();
+    if let Some(v) = args.get("arch") {
+        spec.archs = if v == "all" {
+            ArchSpec::paper_archs()
+        } else {
+            v.split(',')
+                .map(|name| ArchSpec::by_name(name.trim()))
+                .collect::<Result<Vec<_>>>()?
+        };
+    }
+    if let Some(v) = args.get("threads") {
+        spec.threads = parse_axis(v)?;
+    }
+    if let Some(v) = args.get("strategy") {
+        spec.strategies = Strategy::parse_list(v)?;
+    }
+    if args.has("params") {
+        spec.params = parse_params(args)?;
+    }
+    if let Some(v) = args.get("step") {
+        spec.step = v
+            .parse()
+            .map_err(|_| err!("--step wants a float, got {v:?}"))?;
+    }
+    if let Some(v) = args.get("constants") {
+        spec.constants = v
+            .split(',')
+            .map(|c| SimConstant::parse(c.trim()))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    let workers = if args.has("serial") {
+        1
+    } else {
+        args.get_usize("workers", 0)?
+    };
+    let report = sensitivity::run(&spec, &SweepRunner::new(workers))?;
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, report.to_json().emit())?;
+        eprintln!(
+            "wrote sensitivity report ({} entries, {} ranked constants) to {path}",
+            report.entries.len(),
+            report.ranking.len()
+        );
+    }
+    print!("{}", report.render());
     Ok(())
 }
 

@@ -18,27 +18,35 @@
 //! `T_mem(ep, i, p) = MemoryContention(p) · ep · i / p` ([`contention`])
 //! and the prediction-accuracy metric Δ ([`accuracy`]).
 //!
-//! Parameter provenance is explicit: [`ParamSource::Paper`] reproduces
-//! the paper's tables exactly (Tables II–IV, VII, VIII embedded in
-//! [`crate::report::paper`]); [`ParamSource::Simulator`] re-measures
-//! every measured parameter from micsim, closing the loop the way the
-//! authors did on real hardware.
+//! Parameter provenance is explicit and lives in one subsystem
+//! ([`crate::calibration`]): [`ParamSource::Paper`] reproduces the
+//! paper's tables exactly (Tables II–IV, VII, VIII embedded in
+//! [`crate::report::paper`], resolved by
+//! [`crate::calibration::PaperSource`]); [`ParamSource::Simulator`]
+//! re-estimates every parameter from micsim
+//! ([`crate::calibration::ComputedSource`]: probed times + computed op
+//! counts with fitted cycles), closing the loop the way the authors did
+//! on real hardware.
 
 #![warn(missing_docs)]
 
 pub mod accuracy;
 pub mod cluster;
-pub mod contention;
 pub mod strategy_a;
 pub mod strategy_b;
 
+// Migrated to the calibration subsystem; re-exported so existing
+// `perfmodel::contention` / `perfmodel::ContentionSource` paths hold.
+pub use crate::calibration::contention;
+pub use crate::calibration::ContentionSource;
+
 pub use accuracy::{average_delta, delta_pct, Band, DeltaAccumulator};
-pub use contention::ContentionSource;
 pub use strategy_a::StrategyA;
 pub use strategy_b::StrategyB;
 
 use crate::config::{ArchSpec, MachineConfig, RunConfig};
 use crate::error::Result;
+use crate::nn::OpSource;
 
 /// Where the models' measured/derived parameters come from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -46,8 +54,22 @@ pub enum ParamSource {
     /// The paper's published values (exact table reproduction).
     #[default]
     Paper,
-    /// Re-measured from the micsim probes (self-consistent reproduction).
+    /// Re-estimated against the micsim probes (self-consistent
+    /// reproduction — the closed loop).
     Simulator,
+}
+
+impl ParamSource {
+    /// The op-count source this parameter source implies — the single
+    /// place the `ParamSource → OpSource` mapping lives (it used to be
+    /// hard-wired in the strategy constructors, where the two enums
+    /// could drift; the calibrators route through here).
+    pub fn op_source(self) -> OpSource {
+        match self {
+            ParamSource::Paper => OpSource::Paper,
+            ParamSource::Simulator => OpSource::Computed,
+        }
+    }
 }
 
 /// A prediction with its term-level breakdown (the Table V/VI structure).
@@ -109,5 +131,11 @@ mod tests {
             assert!(both_models(&arch, ParamSource::Paper).is_ok());
             assert!(both_models(&arch, ParamSource::Simulator).is_ok());
         }
+    }
+
+    #[test]
+    fn param_source_op_source_mapping_is_total() {
+        assert_eq!(ParamSource::Paper.op_source(), OpSource::Paper);
+        assert_eq!(ParamSource::Simulator.op_source(), OpSource::Computed);
     }
 }

@@ -22,13 +22,17 @@
 //! and medium within 5% (`tests::table10_matches_paper`), while without
 //! it the large-CNN column is ~20% off — so this is the reading of
 //! Table V most consistent with the paper's published numbers.
+//!
+//! Every operand comes from the [`crate::calibration`] subsystem:
+//! [`ParamSource::Paper`] resolves the published constants,
+//! [`ParamSource::Simulator`] the closed-loop fit
+//! ([`crate::calibration::ComputedSource`] — computed op counts with
+//! cycles fitted against the measuring simulator).
 
+use crate::calibration::{Calibration, ModelParams};
 use crate::config::{ArchSpec, MachineConfig, RunConfig};
 use crate::error::Result;
-use crate::nn::opcount::{self, OpSource};
-use crate::perfmodel::contention::ContentionSource;
-use crate::perfmodel::{model_cpi, ParamSource, PerfModel, Prediction};
-use crate::report::paper;
+use crate::perfmodel::{model_cpi, ContentionSource, ParamSource, PerfModel, Prediction};
 
 /// Strategy (a) with resolved parameters.
 #[derive(Debug, Clone)]
@@ -57,10 +61,10 @@ impl StrategyA {
         StrategyA::with_sim(arch, source, &crate::simulator::SimConfig::default())
     }
 
-    /// Build the model with every derived/measured parameter taken from
-    /// `sim` — the closed-loop constructor the sweep cache uses for the
-    /// grid's sim axis. Under [`ParamSource::Simulator`] the
-    /// OperationFactor calibration, the custom-architecture Prep
+    /// Build the model with every derived/measured parameter resolved by
+    /// the [`Calibration`] for `source` against `sim` — the closed-loop
+    /// constructor the sweep cache uses for the grid's sim axis. Under
+    /// [`ParamSource::Simulator`] the OperationFactor fit, the Prep
     /// estimate, and the contention probe all run against exactly this
     /// configuration (the same simulator that produces the sweep's
     /// measurements); under [`ParamSource::Paper`] the published
@@ -71,44 +75,22 @@ impl StrategyA {
         source: ParamSource,
         sim: &crate::simulator::SimConfig,
     ) -> Result<StrategyA> {
-        let op_source = match source {
-            ParamSource::Paper => OpSource::Paper,
-            ParamSource::Simulator => OpSource::Computed,
-        };
-        let counts = opcount::resolve(arch, op_source)?;
-        let idx = paper::arch_index(&arch.name);
-        let operation_factor = match source {
-            // Paper reproduction: Table III's value.
-            ParamSource::Paper if idx.is_some() => paper::OPERATION_FACTOR[idx.unwrap()],
-            // Self-consistent mode (and custom architectures): calibrate
-            // the factor the way the paper did — against a measurement at
-            // low thread count — which here means the simulator's per-op
-            // cycle constants, weighted by the model's (FProp + BProp +
-            // FProp) term mix.
-            _ => {
-                let f = counts.fprop.total() as f64;
-                let b = counts.bprop.total() as f64;
-                (2.0 * f * sim.fwd_cycles_per_op + b * sim.bwd_cycles_per_op)
-                    / (2.0 * f + b)
-            }
-        };
-        // Custom architectures take their Prep estimate from the simulator's
-        // preparation model (I/O + per-instance weight init at the paper's
-        // reference 240 instances), converted back to "operations" through
-        // the same OperationFactor so the Table V structure is preserved.
-        let prep_ops = idx.map(|i| paper::MODEL_PREP_OPS[i]).unwrap_or_else(|| {
-            match crate::simulator::CostModel::new(arch, sim) {
-                Ok(cm) => cm.prep_s(sim, 240) * sim.machine.clock_hz / operation_factor,
-                Err(_) => 1e9,
-            }
-        });
+        StrategyA::from_params(&Calibration::new(source).resolve(arch, sim)?)
+    }
+
+    /// Build the model from an already-resolved parameter set (what the
+    /// sweep cache does, so the (a, b) pair of a cell shares one
+    /// calibration). Errors when the calibrator resolved no
+    /// strategy-(a) operands (paper source on a custom architecture).
+    pub fn from_params(params: &ModelParams) -> Result<StrategyA> {
+        let a = params.strategy_a()?;
         Ok(StrategyA {
-            machine: sim.machine.clone(),
-            fprop_ops: counts.fprop.total() as f64,
-            bprop_ops: counts.bprop.total() as f64,
-            prep_ops,
-            operation_factor,
-            contention: ContentionSource::new(arch, source).with_sim_config(sim.clone()),
+            machine: params.machine.clone(),
+            fprop_ops: a.fprop_ops,
+            bprop_ops: a.bprop_ops,
+            prep_ops: a.prep_ops,
+            operation_factor: a.operation_factor,
+            contention: params.contention.clone(),
         })
     }
 
@@ -172,6 +154,7 @@ impl PerfModel for StrategyA {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::report::paper;
 
     fn predict_minutes(arch: &str, p: usize) -> f64 {
         let arch = ArchSpec::by_name(arch).unwrap();
@@ -263,5 +246,30 @@ mod tests {
             .predict(&RunConfig { train_images: 1000, test_images: 100, epochs: 2, threads: 16 })
             .unwrap();
         assert!(pr.total_s.is_finite() && pr.total_s > 0.0);
+    }
+
+    #[test]
+    fn custom_arch_under_paper_source_errors() {
+        // No published Table VII/VIII rows for customs: the paper
+        // calibrator resolves no strategy-(a) operands.
+        let mut arch = ArchSpec::small();
+        arch.name = "custom".into();
+        assert!(StrategyA::new(&arch, ParamSource::Paper).is_err());
+    }
+
+    #[test]
+    fn closed_loop_fit_matches_strategy_b_train_term() {
+        // Under ParamSource::Simulator the fitted OperationFactor makes
+        // the (2·FProp + BProp)·OF/s training cycles land exactly on the
+        // probed 2·T_Fprop + T_Bprop — strategy (a)'s training term
+        // coincides with (b)'s, leaving only the Table V single-factor
+        // structure (the test term) as residual.
+        let arch = ArchSpec::medium();
+        let a = StrategyA::new(&arch, ParamSource::Simulator).unwrap();
+        let b = crate::perfmodel::StrategyB::new(&arch, ParamSource::Simulator).unwrap();
+        let a_train =
+            (2.0 * a.fprop_ops + a.bprop_ops) * a.operation_factor / a.machine.clock_hz;
+        let b_train = 2.0 * b.t_fprop_s + b.t_bprop_s;
+        assert!((a_train - b_train).abs() / b_train < 1e-12, "{a_train} vs {b_train}");
     }
 }

@@ -22,12 +22,11 @@
 //! strategy-(b) cells of Table X to three significant figures
 //! (`tests::table10_matches_paper_exactly`).
 
+use crate::calibration::{Calibration, ModelParams};
 use crate::config::{ArchSpec, MachineConfig, RunConfig};
 use crate::error::Result;
-use crate::perfmodel::contention::ContentionSource;
-use crate::perfmodel::{model_cpi, ParamSource, PerfModel, Prediction};
-use crate::report::paper;
-use crate::simulator::{probe, SimConfig};
+use crate::perfmodel::{model_cpi, ContentionSource, ParamSource, PerfModel, Prediction};
+use crate::simulator::SimConfig;
 
 /// Strategy (b) with resolved measured parameters.
 #[derive(Debug, Clone)]
@@ -53,41 +52,34 @@ impl StrategyB {
         StrategyB::with_sim(arch, source, &SimConfig::default())
     }
 
-    /// Build the model with its measured parameters probed from `sim` —
-    /// the closed-loop constructor the sweep cache uses for the grid's
-    /// sim axis. Under [`ParamSource::Simulator`] (and for custom
-    /// architectures the paper never measured) `T_Fprop`/`T_Bprop`/
-    /// `T_prep` come from [`probe::measure_image_times`] against exactly
-    /// this configuration — the same simulator that produces the sweep's
-    /// measurements; under [`ParamSource::Paper`] the Table III values
-    /// are used and only the CPI terms and the machine follow `sim`.
+    /// Build the model with its measured parameters resolved by the
+    /// [`Calibration`] for `source` against `sim` — the closed-loop
+    /// constructor the sweep cache uses for the grid's sim axis. Under
+    /// [`ParamSource::Simulator`] (and for custom architectures the
+    /// paper never measured) `T_Fprop`/`T_Bprop`/`T_prep` are probed
+    /// from exactly this configuration — the same simulator that
+    /// produces the sweep's measurements; under [`ParamSource::Paper`]
+    /// the Table III values are used and only the CPI terms and the
+    /// machine follow `sim`.
     pub fn with_sim(
         arch: &ArchSpec,
         source: ParamSource,
         sim: &SimConfig,
     ) -> Result<StrategyB> {
-        let (t_fprop_s, t_bprop_s, t_prep_s) = match source {
-            ParamSource::Paper => {
-                if let Some(idx) = paper::arch_index(&arch.name) {
-                    (paper::T_FPROP_S[idx], paper::T_BPROP_S[idx], paper::T_PREP_S[idx])
-                } else {
-                    // No paper measurements for custom archs: fall back to
-                    // the simulator probe.
-                    let m = probe::measure_image_times(arch, sim)?;
-                    (m.t_fprop_s, m.t_bprop_s, m.t_prep_s)
-                }
-            }
-            ParamSource::Simulator => {
-                let m = probe::measure_image_times(arch, sim)?;
-                (m.t_fprop_s, m.t_bprop_s, m.t_prep_s)
-            }
-        };
+        StrategyB::from_params(&Calibration::new(source).resolve(arch, sim)?)
+    }
+
+    /// Build the model from an already-resolved parameter set (what the
+    /// sweep cache does, so the (a, b) pair of a cell shares one
+    /// calibration).
+    pub fn from_params(params: &ModelParams) -> Result<StrategyB> {
+        let b = params.strategy_b()?;
         Ok(StrategyB {
-            machine: sim.machine.clone(),
-            t_fprop_s,
-            t_bprop_s,
-            t_prep_s,
-            contention: ContentionSource::new(arch, source).with_sim_config(sim.clone()),
+            machine: params.machine.clone(),
+            t_fprop_s: b.t_fprop_s,
+            t_bprop_s: b.t_bprop_s,
+            t_prep_s: b.t_prep_s,
+            contention: params.contention.clone(),
         })
     }
 

@@ -30,8 +30,9 @@ use std::hash::Hash;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
+use crate::calibration::Calibration;
 use crate::error::Result;
-use crate::perfmodel::{PerfModel, StrategyA, StrategyB};
+use crate::perfmodel::{ParamSource, PerfModel, StrategyA, StrategyB};
 use crate::simulator::{simulate_training_with, CostModel, SimConfig};
 use crate::sweep::grid::{GridSpec, Scenario, Strategy};
 
@@ -80,6 +81,12 @@ pub struct SweepCache {
     /// Resolved (config, fingerprint) per (machine, sim) axis pair —
     /// internal plumbing, not counted in the hit/miss telemetry.
     resolved: Mutex<HashMap<(usize, usize), (Arc<SimConfig>, u64)>>,
+    /// One [`Calibration`] per parameter source (grids carry one source,
+    /// but the cache does not assume it): parameter resolution is
+    /// memoized per (arch, fingerprint), so the (a) and (b) models of a
+    /// cell share one probe/fit pass — internal plumbing, like
+    /// `resolved`, not counted in the hit/miss telemetry.
+    calibrations: Mutex<HashMap<u8, Arc<Calibration>>>,
     models: Mutex<HashMap<(String, Strategy, u64), SharedModel>>,
     costs: Mutex<HashMap<(String, u64), Arc<CostModel>>>,
     measured: Mutex<HashMap<(String, usize, usize, usize, usize, u64), f64>>,
@@ -100,6 +107,7 @@ impl SweepCache {
         SweepCache {
             sim,
             resolved: Mutex::new(HashMap::new()),
+            calibrations: Mutex::new(HashMap::new()),
             models: Mutex::new(HashMap::new()),
             costs: Mutex::new(HashMap::new()),
             measured: Mutex::new(HashMap::new()),
@@ -149,13 +157,31 @@ impl SweepCache {
         got
     }
 
+    /// The shared [`Calibration`] for one parameter source (lazily
+    /// built, one per source for the cache's lifetime).
+    fn calibration(&self, source: ParamSource) -> Arc<Calibration> {
+        let key = match source {
+            ParamSource::Paper => 0u8,
+            ParamSource::Simulator => 1u8,
+        };
+        Arc::clone(
+            self.calibrations
+                .lock()
+                .unwrap()
+                .entry(key)
+                .or_insert_with(|| Arc::new(Calibration::new(source))),
+        )
+    }
+
     /// The performance model for a scenario, built at most once per
     /// (architecture, strategy, resolved sim config) — the fingerprint
     /// covers the machine, like the cost/measured keys. Models are
-    /// constructed against the scenario's resolved simulator — under
-    /// [`crate::perfmodel::ParamSource::Simulator`] the measured
-    /// parameters are probed from exactly the configuration that
-    /// produces the measurements (the closed loop).
+    /// constructed from the scenario's [`Calibration`] resolution
+    /// against the resolved simulator — under
+    /// [`crate::perfmodel::ParamSource::Simulator`] every parameter is
+    /// estimated from exactly the configuration that produces the
+    /// measurements (the closed loop), and the (a)/(b) rows of a cell
+    /// share one resolution (probe pass + contention memo).
     pub fn model(&self, grid: &GridSpec, scn: &Scenario) -> Result<SharedModel> {
         let arch = &grid.archs[scn.arch];
         let (sim, fp) = self.resolved_sim(grid, scn);
@@ -163,9 +189,10 @@ impl SweepCache {
         if let Some(model) = self.probe(&self.models, &key) {
             return Ok(model);
         }
+        let params = self.calibration(grid.params).resolve(arch, &sim)?;
         let built: SharedModel = match scn.strategy {
-            Strategy::A => Arc::new(StrategyA::with_sim(arch, grid.params, &sim)?),
-            Strategy::B => Arc::new(StrategyB::with_sim(arch, grid.params, &sim)?),
+            Strategy::A => Arc::new(StrategyA::from_params(&params)?),
+            Strategy::B => Arc::new(StrategyB::from_params(&params)?),
         };
         Ok(self
             .models
@@ -428,6 +455,25 @@ mod tests {
             slow.total_s,
             base.total_s
         );
+    }
+
+    #[test]
+    fn closed_loop_cell_shares_one_calibration_resolution() {
+        use crate::perfmodel::ParamSource;
+        // 2 strategies × 2 thread counts over one (arch, sim): both
+        // models must come out of a single Calibration::resolve (one
+        // probe/fit pass, one shared contention memo).
+        let grid = GridSpec {
+            strategies: vec![Strategy::A, Strategy::B],
+            params: ParamSource::Simulator,
+            ..tiny_grid()
+        };
+        let cache = SweepCache::new();
+        for scn in &grid.enumerate() {
+            cache.model(&grid, scn).unwrap();
+        }
+        let cal = cache.calibration(ParamSource::Simulator);
+        assert_eq!(cal.resolutions(), 1, "a/b must share one resolution");
     }
 
     #[test]

@@ -29,8 +29,12 @@
 //! * [`conformance`] — the measured-mode conformance harness: Δ-band
 //!   golden baselines over the Tables IX–XI grids plus the paper's
 //!   ≈ 15 %/11 % mean-Δ claims, behind `repro conformance`, and the
-//!   closed-loop grid (`--params sim`, model parameters probed from the
-//!   measuring simulator) behind `repro conformance --closed-loop`.
+//!   closed-loop grid (`--params sim`, model parameters calibrated
+//!   against the measuring simulator via [`crate::calibration`]) behind
+//!   `repro conformance --closed-loop`;
+//! * [`sensitivity`] — ∂Δ/∂constant analysis over a one-at-a-time
+//!   ablation grid of the simulator constants, ranked per constant
+//!   (`repro sensitivity`).
 //!
 //! The `repro sweep`/`repro conformance` subcommands drive it from the
 //! CLI, and the `experiments` table/figure entries for Figs. 5–7 and
@@ -44,6 +48,7 @@ pub mod cache;
 pub mod conformance;
 pub mod grid;
 pub mod runner;
+pub mod sensitivity;
 pub mod summary;
 
 pub use baseline::{Baseline, BaselineCell, CellDiff, DiffReport};
@@ -53,4 +58,7 @@ pub use conformance::{
 };
 pub use grid::{parse_axis, GridSpec, Scenario, SimVariant, Strategy};
 pub use runner::SweepRunner;
+pub use sensitivity::{
+    RankedConstant, SensitivityEntry, SensitivityReport, SensitivitySpec, SimConstant,
+};
 pub use summary::{AccuracyAggregate, ScenarioResult, SweepResults};

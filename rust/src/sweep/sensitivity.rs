@@ -1,0 +1,610 @@
+//! Sensitivity analysis: rank the simulator constants by how hard they
+//! drive prediction error — `∂Δ/∂constant` over a one-at-a-time
+//! ablation grid (the ResPerfNet-style "which model constants matter"
+//! report, `repro sensitivity`).
+//!
+//! For every [`SimConstant`] `c` with base value `c₀` and relative step
+//! `h`, the spec builds two [`SimVariant`]s pinning `c` to `c₀·(1−h)`
+//! and `c₀·(1+h)` (every other constant inherited), plus one unmodified
+//! `base` variant, and runs them as a single measured sweep grid — so
+//! the whole analysis flows through the fingerprint-keyed
+//! [`crate::sweep::SweepCache`]: cells within a variant share cost
+//! models and measurements, variants never leak into each other, and
+//! parallel results are bit-identical to serial ones. The per-(variant ×
+//! architecture × strategy) mean Δ aggregation then yields a central
+//! difference per (constant, architecture, strategy):
+//!
+//! ```text
+//! ∂Δ/∂c · c₀/100 ≈ (Δ₊ − Δ₋) / (2·h·100)    [pp per +1 % of c]
+//! ```
+//!
+//! reported per group and ranked overall (mean |gradient| across
+//! groups). Under `--params paper` the models keep predicting the
+//! calibration-point simulator while the measurement drifts — the
+//! gradient says how fast each constant degrades the paper-parameter
+//! accuracy. Under `--params sim` the models re-calibrate against every
+//! perturbed variant ([`crate::calibration`]), so the gradient isolates
+//! what the closed loop cannot absorb (structural sensitivity).
+
+use crate::config::{ArchSpec, RunConfig};
+use crate::error::{Error, Result};
+use crate::perfmodel::ParamSource;
+use crate::report::Table;
+use crate::simulator::SimConfig;
+use crate::sweep::cache::CacheStats;
+use crate::sweep::grid::{GridSpec, SimVariant, Strategy};
+use crate::sweep::runner::SweepRunner;
+use crate::sweep::summary::SweepResults;
+use crate::util::json::Json;
+
+/// Name of the unperturbed variant on the ablation grid.
+pub const BASE_VARIANT: &str = "base";
+
+/// The `±h` suffix of a perturbed variant's name (`"+10%"` / `"-10%"`),
+/// rounded to 2 decimals so float noise (0.1 × 100 ≠ 10 exactly) never
+/// leaks into variant names. One helper shared by grid construction and
+/// the fold, so the two cannot drift.
+fn pct_label(step: f64, sign: f64) -> String {
+    let pct = (step * 1e4).round() / 100.0;
+    format!("{:+}%", sign * pct)
+}
+
+/// A tunable simulator constant the sensitivity sweep can ablate — the
+/// `--sim-*` f64 axes of `repro sweep`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SimConstant {
+    /// Simulated core clock, GHz ([`crate::config::MachineConfig::clock_hz`]).
+    ClockGhz,
+    /// Calibrated cycles per abstract forward operation.
+    FwdCyclesPerOp,
+    /// Calibrated cycles per abstract backward operation.
+    BwdCyclesPerOp,
+    /// Issue-bound fraction of per-image cycles.
+    ExecFraction,
+    /// L2-sharing pressure coefficient α.
+    L2Alpha,
+    /// Cap on the L2 working-set pressure ratio.
+    L2RatioCap,
+    /// Ring/tag-directory latency coefficient β.
+    RingBeta,
+    /// Per-software-thread oversubscription overhead.
+    OversubOverhead,
+}
+
+impl SimConstant {
+    /// Every ablatable constant, in the canonical report order.
+    pub const ALL: [SimConstant; 8] = [
+        SimConstant::ClockGhz,
+        SimConstant::FwdCyclesPerOp,
+        SimConstant::BwdCyclesPerOp,
+        SimConstant::ExecFraction,
+        SimConstant::L2Alpha,
+        SimConstant::L2RatioCap,
+        SimConstant::RingBeta,
+        SimConstant::OversubOverhead,
+    ];
+
+    /// Stable key used in reports and `--constants` parsing (matches the
+    /// [`SimConfig`] field names).
+    pub fn key(self) -> &'static str {
+        match self {
+            SimConstant::ClockGhz => "clock_ghz",
+            SimConstant::FwdCyclesPerOp => "fwd_cycles_per_op",
+            SimConstant::BwdCyclesPerOp => "bwd_cycles_per_op",
+            SimConstant::ExecFraction => "exec_fraction",
+            SimConstant::L2Alpha => "l2_alpha",
+            SimConstant::L2RatioCap => "l2_ratio_cap",
+            SimConstant::RingBeta => "ring_beta",
+            SimConstant::OversubOverhead => "oversub_overhead",
+        }
+    }
+
+    /// Parse one `--constants` item (a [`SimConstant::key`]).
+    pub fn parse(text: &str) -> Result<SimConstant> {
+        SimConstant::ALL
+            .into_iter()
+            .find(|c| c.key() == text)
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "unknown sim constant {text:?} (known: {})",
+                    SimConstant::ALL.map(|c| c.key()).join(", ")
+                ))
+            })
+    }
+
+    /// The constant's value in `sim` (the perturbation center `c₀`).
+    pub fn base_value(self, sim: &SimConfig) -> f64 {
+        match self {
+            SimConstant::ClockGhz => sim.machine.clock_hz / 1e9,
+            SimConstant::FwdCyclesPerOp => sim.fwd_cycles_per_op,
+            SimConstant::BwdCyclesPerOp => sim.bwd_cycles_per_op,
+            SimConstant::ExecFraction => sim.exec_fraction,
+            SimConstant::L2Alpha => sim.l2_alpha,
+            SimConstant::L2RatioCap => sim.l2_ratio_cap,
+            SimConstant::RingBeta => sim.ring_beta,
+            SimConstant::OversubOverhead => sim.oversub_overhead,
+        }
+    }
+
+    /// A [`SimVariant`] pinning only this constant to `value`.
+    pub fn variant(self, name: String, value: f64) -> SimVariant {
+        let mut v = SimVariant { name, ..SimVariant::default() };
+        match self {
+            SimConstant::ClockGhz => v.clock_ghz = Some(value),
+            SimConstant::FwdCyclesPerOp => v.fwd_cycles_per_op = Some(value),
+            SimConstant::BwdCyclesPerOp => v.bwd_cycles_per_op = Some(value),
+            SimConstant::ExecFraction => v.exec_fraction = Some(value),
+            SimConstant::L2Alpha => v.l2_alpha = Some(value),
+            SimConstant::L2RatioCap => v.l2_ratio_cap = Some(value),
+            SimConstant::RingBeta => v.ring_beta = Some(value),
+            SimConstant::OversubOverhead => v.oversub_overhead = Some(value),
+        }
+        v
+    }
+}
+
+impl std::fmt::Display for SimConstant {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.key())
+    }
+}
+
+/// What to ablate and over which evaluation domain.
+#[derive(Debug, Clone)]
+pub struct SensitivitySpec {
+    /// Architectures to evaluate (Δ groups are per architecture).
+    pub archs: Vec<ArchSpec>,
+    /// Thread counts of the measured domain (default: the paper's
+    /// Table IX measured thread set).
+    pub threads: Vec<usize>,
+    /// Strategies to evaluate.
+    pub strategies: Vec<Strategy>,
+    /// Parameter provenance for the models (see module docs on how the
+    /// reading differs between `paper` and `sim`).
+    pub params: ParamSource,
+    /// Relative perturbation step `h` (`0.1` = ±10 %).
+    pub step: f64,
+    /// Constants to ablate (default: [`SimConstant::ALL`]).
+    pub constants: Vec<SimConstant>,
+}
+
+impl Default for SensitivitySpec {
+    fn default() -> Self {
+        SensitivitySpec {
+            archs: ArchSpec::paper_archs(),
+            threads: RunConfig::MEASURED_THREADS.to_vec(),
+            strategies: vec![Strategy::A, Strategy::B],
+            params: ParamSource::Paper,
+            step: 0.10,
+            constants: SimConstant::ALL.to_vec(),
+        }
+    }
+}
+
+impl SensitivitySpec {
+    /// Reject specs the ablation cannot run.
+    pub fn validate(&self, base: &SimConfig) -> Result<()> {
+        if !(self.step.is_finite() && self.step > 0.0 && self.step < 1.0) {
+            return Err(Error::Config(format!(
+                "sensitivity step must be in (0, 1), got {}",
+                self.step
+            )));
+        }
+        if self.constants.is_empty() {
+            return Err(Error::Config("sensitivity spec ablates no constants".into()));
+        }
+        let mut keys: Vec<&str> = self.constants.iter().map(|c| c.key()).collect();
+        keys.sort_unstable();
+        if keys.windows(2).any(|w| w[0] == w[1]) {
+            return Err(Error::Config(
+                "sensitivity constants must be unique (they key the report)".into(),
+            ));
+        }
+        for &c in &self.constants {
+            let plus = c.base_value(base) * (1.0 + self.step);
+            if c == SimConstant::ExecFraction && plus > 1.0 {
+                return Err(Error::Config(format!(
+                    "step {} pushes exec_fraction to {plus} (> 1); lower --step \
+                     or drop the constant",
+                    self.step
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// The one-at-a-time ablation grid: a `base` variant plus a
+    /// (−h, +h) variant pair per constant, over the spec's measured
+    /// evaluation domain.
+    pub fn to_grid(&self, base: &SimConfig) -> Result<GridSpec> {
+        self.validate(base)?;
+        let mut sims = vec![SimVariant {
+            name: BASE_VARIANT.into(),
+            ..SimVariant::default()
+        }];
+        for &c in &self.constants {
+            let c0 = c.base_value(base);
+            for sign in [-1.0, 1.0] {
+                let name = format!("{}{}", c.key(), pct_label(self.step, sign));
+                sims.push(c.variant(name, c0 * (1.0 + sign * self.step)));
+            }
+        }
+        Ok(GridSpec {
+            archs: self.archs.clone(),
+            threads: self.threads.clone(),
+            strategies: self.strategies.clone(),
+            params: self.params,
+            sims,
+            measure: true,
+            ..GridSpec::default()
+        })
+    }
+}
+
+/// One (constant × architecture × strategy) cell of the report.
+#[derive(Debug, Clone)]
+pub struct SensitivityEntry {
+    /// The ablated constant.
+    pub constant: SimConstant,
+    /// Architecture of the Δ group.
+    pub arch: String,
+    /// Strategy of the Δ group.
+    pub strategy: Strategy,
+    /// The constant's unperturbed value `c₀`.
+    pub base_value: f64,
+    /// Mean Δ of the group on the unperturbed simulator, percent.
+    pub base_delta_pct: f64,
+    /// Mean Δ at `c₀·(1−h)`, percent.
+    pub minus_delta_pct: f64,
+    /// Mean Δ at `c₀·(1+h)`, percent.
+    pub plus_delta_pct: f64,
+    /// Central-difference gradient: percentage points of mean Δ per
+    /// +1 % change of the constant.
+    pub gradient_pp_per_pct: f64,
+}
+
+/// One constant's overall rank across every (architecture × strategy)
+/// group.
+#[derive(Debug, Clone)]
+pub struct RankedConstant {
+    /// The ablated constant.
+    pub constant: SimConstant,
+    /// Mean |gradient| over the groups, pp per +1 %.
+    pub mean_abs_gradient: f64,
+    /// Worst-group |gradient|, pp per +1 %.
+    pub max_abs_gradient: f64,
+}
+
+/// The full `repro sensitivity` outcome: per-group gradients (ranked
+/// within each group) plus the overall constant ranking.
+#[derive(Debug)]
+pub struct SensitivityReport {
+    /// Relative perturbation step `h` the gradients were measured at.
+    pub step: f64,
+    /// Parameter provenance the models ran under.
+    pub params: ParamSource,
+    /// Scenarios evaluated across the whole ablation grid.
+    pub scenarios: usize,
+    /// Sweep-cache telemetry (not serialized: parallel runs may count
+    /// concurrent misses differently; the numeric payload is
+    /// bit-identical regardless).
+    pub cache: CacheStats,
+    /// Per-group entries, sorted by |gradient| within each
+    /// (architecture, strategy) group, groups in axis order.
+    pub entries: Vec<SensitivityEntry>,
+    /// Overall ranking, most error-driving constant first.
+    pub ranking: Vec<RankedConstant>,
+}
+
+/// Run the sensitivity analysis: one measured ablation sweep over the
+/// spec's grid, folded into gradients and a ranking.
+pub fn run(spec: &SensitivitySpec, runner: &SweepRunner) -> Result<SensitivityReport> {
+    let base_sim = SimConfig::default();
+    let grid = spec.to_grid(&base_sim)?;
+    let results = runner.run(&grid)?;
+    fold(spec, &base_sim, &results)
+}
+
+/// Pure fold from an already-evaluated ablation sweep (the grid must be
+/// the spec's [`SensitivitySpec::to_grid`]).
+pub fn fold(
+    spec: &SensitivitySpec,
+    base_sim: &SimConfig,
+    results: &SweepResults,
+) -> Result<SensitivityReport> {
+    // Mean Δ per (variant, arch, strategy), keyed by variant name.
+    let accuracy = results.accuracy();
+    let mean_of = |sim: &str, arch: &str, strategy: Strategy| -> Result<f64> {
+        accuracy
+            .iter()
+            .find(|a| {
+                a.sim.as_deref() == Some(sim) && a.arch == arch && a.strategy == strategy
+            })
+            .map(|a| a.mean_delta_pct)
+            .ok_or_else(|| {
+                Error::Config(format!(
+                    "sensitivity sweep produced no measured Δ group for \
+                     {sim}/{arch}/{strategy} (was the grid altered?)"
+                ))
+            })
+    };
+    let mut entries = Vec::new();
+    for arch in &spec.archs {
+        for &strategy in &spec.strategies {
+            let base_delta = mean_of(BASE_VARIANT, &arch.name, strategy)?;
+            let mut group = Vec::with_capacity(spec.constants.len());
+            for &c in &spec.constants {
+                let minus_name = format!("{}{}", c.key(), pct_label(spec.step, -1.0));
+                let plus_name = format!("{}{}", c.key(), pct_label(spec.step, 1.0));
+                let minus = mean_of(&minus_name, &arch.name, strategy)?;
+                let plus = mean_of(&plus_name, &arch.name, strategy)?;
+                group.push(SensitivityEntry {
+                    constant: c,
+                    arch: arch.name.clone(),
+                    strategy,
+                    base_value: c.base_value(base_sim),
+                    base_delta_pct: base_delta,
+                    minus_delta_pct: minus,
+                    plus_delta_pct: plus,
+                    gradient_pp_per_pct: (plus - minus) / (2.0 * spec.step * 100.0),
+                });
+            }
+            // Rank within the group, deterministic under f64 ties.
+            group.sort_by(|x, y| {
+                y.gradient_pp_per_pct
+                    .abs()
+                    .total_cmp(&x.gradient_pp_per_pct.abs())
+                    .then_with(|| x.constant.key().cmp(y.constant.key()))
+            });
+            entries.extend(group);
+        }
+    }
+    let mut ranking = Vec::with_capacity(spec.constants.len());
+    for &c in &spec.constants {
+        let grads: Vec<f64> = entries
+            .iter()
+            .filter(|e| e.constant == c)
+            .map(|e| e.gradient_pp_per_pct.abs())
+            .collect();
+        ranking.push(RankedConstant {
+            constant: c,
+            mean_abs_gradient: grads.iter().sum::<f64>() / grads.len() as f64,
+            max_abs_gradient: grads.iter().fold(0.0f64, |a, &b| a.max(b)),
+        });
+    }
+    ranking.sort_by(|x, y| {
+        y.mean_abs_gradient
+            .total_cmp(&x.mean_abs_gradient)
+            .then_with(|| x.constant.key().cmp(y.constant.key()))
+    });
+    Ok(SensitivityReport {
+        step: spec.step,
+        params: spec.params,
+        scenarios: results.len(),
+        cache: results.cache,
+        entries,
+        ranking,
+    })
+}
+
+impl SensitivityReport {
+    /// Serialize as the machine-readable payload (`--json FILE`). Wall
+    /// time and cache counters are deliberately omitted so the document
+    /// is bit-identical between serial and parallel runs.
+    pub fn to_json(&self) -> Json {
+        let entries = self
+            .entries
+            .iter()
+            .map(|e| {
+                Json::obj(vec![
+                    ("constant", Json::str(e.constant.key())),
+                    ("arch", Json::str(e.arch.clone())),
+                    ("strategy", Json::str(e.strategy.as_str())),
+                    ("base_value", Json::num(e.base_value)),
+                    ("base_delta_pct", Json::num(e.base_delta_pct)),
+                    ("minus_delta_pct", Json::num(e.minus_delta_pct)),
+                    ("plus_delta_pct", Json::num(e.plus_delta_pct)),
+                    ("gradient_pp_per_pct", Json::num(e.gradient_pp_per_pct)),
+                ])
+            })
+            .collect();
+        let ranking = self
+            .ranking
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("constant", Json::str(r.constant.key())),
+                    ("mean_abs_gradient", Json::num(r.mean_abs_gradient)),
+                    ("max_abs_gradient", Json::num(r.max_abs_gradient)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("kind", Json::str("micdl-sensitivity-report")),
+            ("step", Json::num(self.step)),
+            (
+                "params",
+                Json::str(match self.params {
+                    ParamSource::Paper => "paper",
+                    ParamSource::Simulator => "sim",
+                }),
+            ),
+            ("scenarios", Json::num(self.scenarios as f64)),
+            ("entries", Json::Arr(entries)),
+            ("ranking", Json::Arr(ranking)),
+        ])
+    }
+
+    /// Human-readable tables: overall ranking first, then the per-group
+    /// gradients, plus a run footer.
+    pub fn render(&self) -> String {
+        let mut rank = Table::new(
+            format!(
+                "sensitivity ranking — ∂Δ/∂constant at ±{}% (pp per +1%)",
+                // Same 2-decimal rounding as the variant names
+                // (pct_label), so header and rows can never disagree.
+                (self.step * 1e4).round() / 100.0
+            ),
+            &["rank", "constant", "mean |∂Δ|", "max |∂Δ|"],
+        );
+        for (i, r) in self.ranking.iter().enumerate() {
+            rank.row(vec![
+                (i + 1).to_string(),
+                r.constant.key().into(),
+                format!("{:.4}", r.mean_abs_gradient),
+                format!("{:.4}", r.max_abs_gradient),
+            ]);
+        }
+        let mut detail = Table::new(
+            "per-group gradients (ranked within each arch × strategy)",
+            &[
+                "constant", "arch", "strat", "base value", "Δ@-h %", "Δ@base %",
+                "Δ@+h %", "∂Δ [pp/+1%]",
+            ],
+        );
+        for e in &self.entries {
+            detail.row(vec![
+                e.constant.key().into(),
+                e.arch.clone(),
+                e.strategy.as_str().into(),
+                format!("{:.4}", e.base_value),
+                format!("{:.3}", e.minus_delta_pct),
+                format!("{:.3}", e.base_delta_pct),
+                format!("{:.3}", e.plus_delta_pct),
+                format!("{:+.4}", e.gradient_pp_per_pct),
+            ]);
+        }
+        format!(
+            "{}{}{} scenarios | cache: {} hits / {} misses ({:.0}% hit rate)\n",
+            rank.render(),
+            detail.render(),
+            self.scenarios,
+            self.cache.hits,
+            self.cache.misses,
+            self.cache.hit_rate() * 100.0,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> SensitivitySpec {
+        SensitivitySpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![15, 240],
+            strategies: vec![Strategy::A],
+            constants: vec![SimConstant::ClockGhz, SimConstant::FwdCyclesPerOp],
+            ..SensitivitySpec::default()
+        }
+    }
+
+    #[test]
+    fn constant_inventory_round_trips() {
+        for c in SimConstant::ALL {
+            assert_eq!(SimConstant::parse(c.key()).unwrap(), c);
+            // Each constant's variant overrides exactly one field: the
+            // resolved config differs from base in fingerprint, and
+            // applying the base value is the identity.
+            let base = SimConfig::default();
+            let v = c.variant("x".into(), c.base_value(&base) * 1.5);
+            assert_ne!(v.apply(&base).fingerprint(), base.fingerprint(), "{c}");
+            let noop = c.variant("x".into(), c.base_value(&base));
+            assert_eq!(noop.apply(&base).fingerprint(), base.fingerprint(), "{c}");
+        }
+        assert!(SimConstant::parse("l2alpha").is_err());
+    }
+
+    #[test]
+    fn grid_has_base_plus_two_variants_per_constant() {
+        let spec = tiny_spec();
+        let grid = spec.to_grid(&SimConfig::default()).unwrap();
+        assert_eq!(grid.sims.len(), 1 + 2 * spec.constants.len());
+        assert_eq!(grid.sims[0].name, BASE_VARIANT);
+        assert_eq!(grid.sims[1].name, "clock_ghz-10%");
+        assert_eq!(grid.sims[2].name, "clock_ghz+10%");
+        assert!(grid.measure);
+        assert!(grid.validate().is_ok());
+        // 5 variants × 1 arch × 2 threads × 1 strategy.
+        assert_eq!(grid.len(), 10);
+    }
+
+    #[test]
+    fn spec_validation_rejects_bad_inputs() {
+        let base = SimConfig::default();
+        let mut spec = tiny_spec();
+        spec.step = 0.0;
+        assert!(spec.validate(&base).is_err());
+        spec.step = 1.5;
+        assert!(spec.validate(&base).is_err());
+        let mut dup = tiny_spec();
+        dup.constants = vec![SimConstant::ClockGhz, SimConstant::ClockGhz];
+        assert!(dup.validate(&base).is_err());
+        let mut empty = tiny_spec();
+        empty.constants.clear();
+        assert!(empty.validate(&base).is_err());
+        // exec_fraction would leave (0, 1].
+        let mut exec = tiny_spec();
+        exec.constants = vec![SimConstant::ExecFraction];
+        exec.step = 0.5;
+        let err = exec.validate(&base).unwrap_err().to_string();
+        assert!(err.contains("exec_fraction"), "{err}");
+    }
+
+    #[test]
+    fn report_has_one_entry_per_constant_group_and_a_full_ranking() {
+        let spec = tiny_spec();
+        let report = run(&spec, &SweepRunner::serial()).unwrap();
+        assert_eq!(report.scenarios, 10);
+        assert_eq!(report.entries.len(), 2); // 2 constants × 1 arch × 1 strategy
+        assert_eq!(report.ranking.len(), 2);
+        // Entries within the group are |gradient|-descending.
+        assert!(
+            report.entries[0].gradient_pp_per_pct.abs()
+                >= report.entries[1].gradient_pp_per_pct.abs()
+        );
+        // The clock swings the measured side hard: its gradient is
+        // nonzero and the ranking is populated.
+        assert!(report.ranking[0].mean_abs_gradient > 0.0);
+        for e in &report.entries {
+            assert!(e.minus_delta_pct.is_finite() && e.plus_delta_pct.is_finite());
+        }
+    }
+
+    #[test]
+    fn gradient_matches_hand_central_difference() {
+        let spec = tiny_spec();
+        let grid = spec.to_grid(&SimConfig::default()).unwrap();
+        let results = SweepRunner::serial().run(&grid).unwrap();
+        let report = fold(&spec, &SimConfig::default(), &results).unwrap();
+        let acc = results.accuracy();
+        let mean = |sim: &str| {
+            acc.iter()
+                .find(|a| a.sim.as_deref() == Some(sim))
+                .unwrap()
+                .mean_delta_pct
+        };
+        let e = report
+            .entries
+            .iter()
+            .find(|e| e.constant == SimConstant::ClockGhz)
+            .unwrap();
+        let want = (mean("clock_ghz+10%") - mean("clock_ghz-10%")) / (2.0 * 0.10 * 100.0);
+        assert_eq!(e.gradient_pp_per_pct.to_bits(), want.to_bits());
+        assert_eq!(e.base_delta_pct.to_bits(), mean(BASE_VARIANT).to_bits());
+    }
+
+    #[test]
+    fn json_payload_is_complete_and_parseable() {
+        let report = run(&tiny_spec(), &SweepRunner::serial()).unwrap();
+        let doc = Json::parse(&report.to_json().emit()).unwrap();
+        assert_eq!(doc.get("kind").unwrap().as_str(), Some("micdl-sensitivity-report"));
+        assert_eq!(doc.get("entries").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(doc.get("ranking").unwrap().as_arr().unwrap().len(), 2);
+        assert_eq!(doc.get("params").unwrap().as_str(), Some("paper"));
+        let text = report.render();
+        assert!(text.contains("sensitivity ranking"), "{text}");
+        assert!(text.contains("clock_ghz"), "{text}");
+    }
+}

@@ -1,0 +1,235 @@
+//! Calibration-subsystem integration tests: pre-refactor equivalence
+//! (Paper-source predictions are bit-identical to the published-constant
+//! closed forms on the Table IX/X/XI grids), closed-loop determinism
+//! (ComputedSource across seeds, serial vs parallel), and the tightened
+//! strategy-(a) closed-loop band.
+
+use micdl::calibration::{Calibration, Calibrator, ComputedSource, PaperSource};
+use micdl::config::{ArchSpec, RunConfig};
+use micdl::perfmodel::{model_cpi, ParamSource, PerfModel, StrategyA, StrategyB};
+use micdl::report::paper;
+use micdl::simulator::SimConfig;
+use micdl::sweep::{GridSpec, Strategy, SweepRunner};
+
+/// The old StrategyA paper-constant construction + predict, replicated
+/// term for term (the pre-subsystem arithmetic): any reordering inside
+/// the calibration path shows up as a bit mismatch.
+fn predict_a_paper_reference(arch_idx: usize, run: &RunConfig) -> f64 {
+    let machine = micdl::config::MachineConfig::xeon_phi_7120p();
+    let s = machine.clock_hz;
+    let of = paper::OPERATION_FACTOR[arch_idx];
+    let cpi = model_cpi(&machine, run.threads);
+    let arch_name = paper::ARCH_NAMES[arch_idx];
+    let counts = paper::op_counts(arch_name).unwrap();
+    let (f, b) = (counts.fprop.total() as f64, counts.bprop.total() as f64);
+    let (i, it, ep) = (
+        run.train_images as f64,
+        run.test_images as f64,
+        run.epochs as f64,
+    );
+    let chunk_i = i / run.threads as f64;
+    let chunk_it = it / run.threads as f64;
+    let prep_s = (paper::MODEL_PREP_OPS[arch_idx] * of + 4.0 * i + 2.0 * it + 10.0 * ep) / s;
+    let train_s = (f + b + f) * chunk_i * ep * of * cpi / s;
+    let test_s = f * chunk_it * ep * of * cpi / s;
+    let mem_s = paper::contention_s(arch_name, run.threads).unwrap() * run.epochs as f64
+        * run.train_images as f64
+        / run.threads as f64;
+    prep_s + train_s + test_s + mem_s
+}
+
+/// The old StrategyB paper-constant closed form, replicated term for
+/// term.
+fn predict_b_paper_reference(arch_idx: usize, run: &RunConfig) -> f64 {
+    let machine = micdl::config::MachineConfig::xeon_phi_7120p();
+    let cpi = model_cpi(&machine, run.threads);
+    let ep = run.epochs as f64;
+    let chunk_i = run.train_images as f64 / run.threads as f64;
+    let chunk_it = run.test_images as f64 / run.threads as f64;
+    let (tf, tb) = (paper::T_FPROP_S[arch_idx], paper::T_BPROP_S[arch_idx]);
+    let prep_s = paper::T_PREP_S[arch_idx];
+    let train_s = (tf + tb + tf) * chunk_i * ep * cpi;
+    let test_s = tf * chunk_it * ep * cpi;
+    let mem_s = paper::contention_s(paper::ARCH_NAMES[arch_idx], run.threads).unwrap()
+        * run.epochs as f64
+        * run.train_images as f64
+        / run.threads as f64;
+    prep_s + train_s + test_s + mem_s
+}
+
+/// Every workload of the Table IX, X and XI evaluation grids, per
+/// architecture index.
+fn paper_grid_runs(arch_idx: usize) -> Vec<RunConfig> {
+    let name = paper::ARCH_NAMES[arch_idx];
+    let mut runs = Vec::new();
+    // Table IX: the measured domain.
+    for &p in &RunConfig::MEASURED_THREADS {
+        runs.push(RunConfig::paper_default(name, p));
+    }
+    // Table X: the extrapolation thread counts.
+    for &p in &paper::TABLE10_THREADS {
+        runs.push(RunConfig::paper_default(name, p));
+    }
+    // Table XI: workload scaling (defined on the small CNN).
+    if name == "small" {
+        for &(i, it) in &paper::TABLE11_IMAGES {
+            for &ep in &paper::TABLE11_EPOCHS {
+                for &p in &paper::TABLE11_THREADS {
+                    runs.push(RunConfig {
+                        train_images: i,
+                        test_images: it,
+                        epochs: ep,
+                        threads: p,
+                    });
+                }
+            }
+        }
+    }
+    runs
+}
+
+#[test]
+fn paper_source_predictions_bit_identical_on_paper_grids() {
+    // The acceptance pin: ParamSource::Paper routed through the new
+    // calibration subsystem reproduces the pre-refactor published-
+    // constant closed forms bit for bit over Tables IX, X and XI.
+    for (idx, arch) in ArchSpec::paper_archs().iter().enumerate() {
+        let a = StrategyA::new(arch, ParamSource::Paper).unwrap();
+        let b = StrategyB::new(arch, ParamSource::Paper).unwrap();
+        for run in paper_grid_runs(idx) {
+            let got_a = a.predict(&run).unwrap().total_s;
+            let want_a = predict_a_paper_reference(idx, &run);
+            assert_eq!(
+                got_a.to_bits(),
+                want_a.to_bits(),
+                "{} (a) p={} i={}: {got_a} vs {want_a}",
+                arch.name,
+                run.threads,
+                run.train_images
+            );
+            let got_b = b.predict(&run).unwrap().total_s;
+            let want_b = predict_b_paper_reference(idx, &run);
+            assert_eq!(
+                got_b.to_bits(),
+                want_b.to_bits(),
+                "{} (b) p={} i={}: {got_b} vs {want_b}",
+                arch.name,
+                run.threads,
+                run.train_images
+            );
+        }
+    }
+}
+
+#[test]
+fn paper_source_params_equal_published_tables() {
+    let sim = SimConfig::default();
+    for (i, arch) in ArchSpec::paper_archs().iter().enumerate() {
+        let params = PaperSource.resolve(arch, &sim).unwrap();
+        let a = params.strategy_a().unwrap();
+        assert_eq!(a.operation_factor.to_bits(), paper::OPERATION_FACTOR[i].to_bits());
+        assert_eq!(a.prep_ops.to_bits(), paper::MODEL_PREP_OPS[i].to_bits());
+        let b = params.strategy_b().unwrap();
+        assert_eq!(b.t_fprop_s.to_bits(), paper::T_FPROP_S[i].to_bits());
+        assert_eq!(b.t_bprop_s.to_bits(), paper::T_BPROP_S[i].to_bits());
+        assert_eq!(b.t_prep_s.to_bits(), paper::T_PREP_S[i].to_bits());
+    }
+}
+
+#[test]
+fn computed_source_deterministic_across_seeds_and_worker_counts() {
+    // The fit depends only on genuine simulator constants: a reseeded
+    // configuration resolves bit-identical strategy-(a) parameters, and
+    // the whole closed-loop grid is bit-identical parallel vs serial.
+    let arch = ArchSpec::medium();
+    let base = ComputedSource
+        .resolve(&arch, &SimConfig::default())
+        .unwrap()
+        .strategy_a()
+        .unwrap();
+    for seed in [1u64, 0xDEAD_BEEF, 1 << 40] {
+        let sim = SimConfig { seed, ..SimConfig::default() };
+        let again = ComputedSource.resolve(&arch, &sim).unwrap().strategy_a().unwrap();
+        assert_eq!(base.operation_factor.to_bits(), again.operation_factor.to_bits());
+        assert_eq!(base.prep_ops.to_bits(), again.prep_ops.to_bits());
+        assert_eq!(base.fprop_ops.to_bits(), again.fprop_ops.to_bits());
+    }
+    let grid = GridSpec::table9_closed_loop();
+    let serial = SweepRunner::serial().run(&grid).unwrap();
+    let parallel = SweepRunner::new(4).run(&grid).unwrap();
+    for (s, p) in serial.results.iter().zip(parallel.results.iter()) {
+        assert_eq!(s.prediction.total_s.to_bits(), p.prediction.total_s.to_bits());
+        assert_eq!(
+            s.measured_s.unwrap().to_bits(),
+            p.measured_s.unwrap().to_bits()
+        );
+    }
+}
+
+#[test]
+fn closed_loop_strategy_a_band_tightens_to_structural_percent() {
+    // The tentpole payoff: with the ComputedSource fit, strategy (a)'s
+    // closed-loop medium-CNN band drops from the documented ~58 %
+    // (computed-vs-paper op-count gap) to the structural few percent.
+    let res = SweepRunner::new(0).run(&GridSpec::table9_closed_loop()).unwrap();
+    let medium_a = res.accuracy_for("medium", Strategy::A).unwrap();
+    assert!(
+        medium_a.mean_delta_pct < 10.0,
+        "medium/a closed-loop mean Δ = {:.2}% (pre-calibration: ~58%)",
+        medium_a.mean_delta_pct
+    );
+    // Every (a) group sits in single digits now.
+    for arch in ["small", "medium", "large"] {
+        let g = res.accuracy_for(arch, Strategy::A).unwrap();
+        assert!(g.mean_delta_pct < 10.0, "{arch}/a: {:.2}%", g.mean_delta_pct);
+    }
+    // And the closed loop beats the open loop (paper parameters) for
+    // strategy (a) overall.
+    let open = SweepRunner::new(0).run(&GridSpec::table9()).unwrap();
+    let closed_a = res.accuracy_overall(Strategy::A).unwrap().mean_delta_pct;
+    let open_a = open.accuracy_overall(Strategy::A).unwrap().mean_delta_pct;
+    assert!(closed_a < open_a, "closed {closed_a:.2}% !< open {open_a:.2}%");
+}
+
+#[test]
+fn calibration_facade_memoizes_across_strategy_constructions() {
+    // Resolving twice (as the a/b pair of a sweep cell does) runs the
+    // calibrator once; models built from the shared params agree with
+    // the direct constructors bit for bit.
+    let cal = Calibration::new(ParamSource::Simulator);
+    let arch = ArchSpec::small();
+    let sim = SimConfig::default();
+    let params = cal.resolve(&arch, &sim).unwrap();
+    let params_again = cal.resolve(&arch, &sim).unwrap();
+    assert_eq!(cal.resolutions(), 1);
+    let a = StrategyA::from_params(&params).unwrap();
+    let b = StrategyB::from_params(&params_again).unwrap();
+    let direct_a = StrategyA::with_sim(&arch, ParamSource::Simulator, &sim).unwrap();
+    let direct_b = StrategyB::with_sim(&arch, ParamSource::Simulator, &sim).unwrap();
+    let run = RunConfig::paper_default("small", 240);
+    assert_eq!(
+        a.predict(&run).unwrap().total_s.to_bits(),
+        direct_a.predict(&run).unwrap().total_s.to_bits()
+    );
+    assert_eq!(
+        b.predict(&run).unwrap().total_s.to_bits(),
+        direct_b.predict(&run).unwrap().total_s.to_bits()
+    );
+}
+
+#[test]
+fn param_source_op_source_routing_matches_resolved_counts() {
+    // The satellite pin: the ParamSource → OpSource mapping lives in one
+    // place and the calibrators route through it — Simulator resolves
+    // computed counts, Paper resolves the published tables.
+    use micdl::nn::opcount;
+    let arch = ArchSpec::small();
+    let sim = SimConfig::default();
+    let computed = ComputedSource.resolve(&arch, &sim).unwrap().strategy_a().unwrap();
+    let counts = opcount::resolve(&arch, ParamSource::Simulator.op_source()).unwrap();
+    assert_eq!(computed.fprop_ops, counts.fprop.total() as f64);
+    let paper_params = PaperSource.resolve(&arch, &sim).unwrap().strategy_a().unwrap();
+    let paper_counts = opcount::resolve(&arch, ParamSource::Paper.op_source()).unwrap();
+    assert_eq!(paper_params.fprop_ops, paper_counts.fprop.total() as f64);
+    assert_ne!(computed.fprop_ops, paper_params.fprop_ops);
+}

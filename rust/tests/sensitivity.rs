@@ -1,0 +1,187 @@
+//! Sensitivity-report integration tests: ranked ∂Δ/∂constant output,
+//! bit-identical parallel vs serial, ranking stability across runs
+//! (cache hits vs cold), cache efficiency vs a plain ablation sweep,
+//! and the `repro sensitivity` CLI.
+
+use std::process::{Command, Output};
+
+use micdl::config::ArchSpec;
+use micdl::simulator::SimConfig;
+use micdl::sweep::{sensitivity, SensitivitySpec, SimConstant, Strategy, SweepRunner};
+use micdl::util::json::Json;
+use micdl::util::tmp::TempDir;
+
+fn repro(args: &[&str]) -> Output {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(args)
+        .output()
+        .expect("spawn repro")
+}
+
+fn acceptance_spec() -> SensitivitySpec {
+    // The acceptance criterion's domain: --arch small,medium, both
+    // strategies, the full constant set.
+    SensitivitySpec {
+        archs: vec![ArchSpec::small(), ArchSpec::medium()],
+        ..SensitivitySpec::default()
+    }
+}
+
+#[test]
+fn ranked_report_is_bit_identical_parallel_vs_serial() {
+    let spec = acceptance_spec();
+    let serial = sensitivity::run(&spec, &SweepRunner::serial()).unwrap();
+    let parallel = sensitivity::run(&spec, &SweepRunner::new(4)).unwrap();
+    // The machine-readable payload is the acceptance surface: identical
+    // bytes regardless of worker count or scheduling.
+    assert_eq!(serial.to_json().emit(), parallel.to_json().emit());
+    // Ranked and populated: every constant ranked, every (constant ×
+    // arch × strategy) group reported.
+    assert_eq!(serial.ranking.len(), SimConstant::ALL.len());
+    assert_eq!(serial.entries.len(), SimConstant::ALL.len() * 2 * 2);
+    assert!(serial.ranking[0].mean_abs_gradient > 0.0, "empty ranking");
+    assert!(
+        serial
+            .ranking
+            .windows(2)
+            .all(|w| w[0].mean_abs_gradient >= w[1].mean_abs_gradient),
+        "ranking must be descending"
+    );
+}
+
+#[test]
+fn rankings_stable_across_cold_and_warm_runs() {
+    // Two cold runs agree bit for bit (all folds deterministic), and a
+    // single run's internal cache reuse (base + 16 perturbed variants
+    // share per-variant entries between the a/b rows) cannot perturb
+    // the ranking: the memoized values are bit-identical to fresh
+    // computation by construction, asserted via the repeat run.
+    let spec = SensitivitySpec {
+        archs: vec![ArchSpec::small()],
+        threads: vec![15, 240],
+        ..SensitivitySpec::default()
+    };
+    let runner = SweepRunner::serial();
+    let first = sensitivity::run(&spec, &runner).unwrap();
+    let second = sensitivity::run(&spec, &runner).unwrap();
+    assert_eq!(first.to_json().emit(), second.to_json().emit());
+    let order_a: Vec<&str> = first.ranking.iter().map(|r| r.constant.key()).collect();
+    let order_b: Vec<&str> = second.ranking.iter().map(|r| r.constant.key()).collect();
+    assert_eq!(order_a, order_b);
+}
+
+#[test]
+fn cache_hit_rate_at_least_plain_ablation_sweeps() {
+    // The sensitivity analysis rides the same fingerprint-keyed cache as
+    // a hand-built `repro sweep --sim-*` ablation over the identical
+    // variant set: its hit rate must not regress below that path's.
+    let spec = SensitivitySpec {
+        archs: vec![ArchSpec::small()],
+        threads: vec![15, 240],
+        ..SensitivitySpec::default()
+    };
+    let grid = spec.to_grid(&SimConfig::default()).unwrap();
+    let plain = SweepRunner::serial().run(&grid).unwrap();
+    let report = sensitivity::run(&spec, &SweepRunner::serial()).unwrap();
+    assert!(
+        report.cache.hit_rate() >= plain.cache.hit_rate(),
+        "sensitivity {:.3} < plain ablation {:.3}",
+        report.cache.hit_rate(),
+        plain.cache.hit_rate()
+    );
+    assert!(report.cache.hits > 0, "ablation grid must share cache entries");
+}
+
+#[test]
+fn closed_loop_sensitivity_recalibrates_per_variant() {
+    // Under --params sim the models re-fit against every perturbed
+    // variant, so cycle-constant perturbations are largely absorbed
+    // (the fit tracks them) while under --params paper they hit the
+    // measured side at full strength: the paper-params gradient for
+    // fwd_cycles_per_op must exceed the closed-loop one.
+    let base = SensitivitySpec {
+        archs: vec![ArchSpec::small()],
+        threads: vec![15, 240],
+        strategies: vec![Strategy::B],
+        constants: vec![SimConstant::FwdCyclesPerOp],
+        ..SensitivitySpec::default()
+    };
+    let open = sensitivity::run(&base, &SweepRunner::serial()).unwrap();
+    let closed_spec = SensitivitySpec {
+        params: micdl::perfmodel::ParamSource::Simulator,
+        ..base
+    };
+    let closed = sensitivity::run(&closed_spec, &SweepRunner::serial()).unwrap();
+    let g_open = open.entries[0].gradient_pp_per_pct.abs();
+    let g_closed = closed.entries[0].gradient_pp_per_pct.abs();
+    assert!(
+        g_closed < g_open,
+        "closed loop must absorb the constant: {g_closed} !< {g_open}"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// CLI level (the acceptance path)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cli_sensitivity_writes_ranked_json_report() {
+    let dir = TempDir::new("sensitivity-cli").unwrap();
+    let path = dir.path().join("out.json");
+    let out = repro(&[
+        "sensitivity",
+        "--arch",
+        "small",
+        "--threads",
+        "15,240",
+        "--serial",
+        "--json",
+        path.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("sensitivity ranking"), "{stdout}");
+    let doc = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(doc.get("kind").unwrap().as_str(), Some("micdl-sensitivity-report"));
+    let ranking = doc.get("ranking").unwrap().as_arr().unwrap();
+    assert_eq!(ranking.len(), SimConstant::ALL.len());
+    assert!(doc.get("entries").unwrap().as_arr().unwrap().len() >= ranking.len());
+    assert_eq!(doc.get("params").unwrap().as_str(), Some("paper"));
+}
+
+#[test]
+fn cli_sensitivity_constant_subset_and_step() {
+    let out = repro(&[
+        "sensitivity",
+        "--arch",
+        "small",
+        "--threads",
+        "15",
+        "--constants",
+        "clock_ghz,ring_beta",
+        "--step",
+        "0.05",
+        "--serial",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("clock_ghz") && stdout.contains("ring_beta"), "{stdout}");
+    assert!(stdout.contains("±5%"), "{stdout}");
+    assert!(!stdout.contains("l2_alpha"), "{stdout}");
+}
+
+#[test]
+fn cli_sensitivity_rejects_bad_flags() {
+    let out = repro(&["sensitivity", "--archs", "small"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown sensitivity flag"));
+    let out = repro(&["sensitivity", "--step"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("needs a value"));
+    let out = repro(&["sensitivity", "--constants", "l2alpha"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown sim constant"));
+    let out = repro(&["sensitivity", "--step", "2.0"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("step"));
+}
