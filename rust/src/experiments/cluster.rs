@@ -5,12 +5,14 @@
 //! ([`crate::perfmodel::cluster`]). Not a paper table — the extension
 //! deliverable.
 
+use crate::calibration::Calibration;
 use crate::config::{ArchSpec, RunConfig};
 use crate::error::Result;
 use crate::experiments::ExpOptions;
 use crate::perfmodel::cluster::{ClusterModel, Interconnect};
-use crate::perfmodel::StrategyB;
 use crate::report::Table;
+use crate::simulator::SimConfig;
+use crate::sweep::Strategy;
 
 pub fn run(opts: &ExpOptions) -> Result<String> {
     let nodes = [1usize, 2, 4, 8, 16];
@@ -24,9 +26,19 @@ pub fn run(opts: &ExpOptions) -> Result<String> {
             &["nodes", "IB: minutes", "IB: efficiency", "10GbE: minutes", "10GbE: efficiency"],
         );
         let run = RunConfig::paper_default(&arch.name, 240);
-        let node_b = |_| StrategyB::new(&arch, opts.params);
-        let ib = ClusterModel::new(&arch, node_b(())?, Interconnect::infiniband_fdr())?;
-        let ge = ClusterModel::new(&arch, node_b(())?, Interconnect::ten_gbe())?;
+        // One resolution feeds both interconnect variants.
+        let cal = Calibration::new(opts.params);
+        let sim = SimConfig::default();
+        let ib = ClusterModel::new(
+            &arch,
+            cal.strategy(&arch, Strategy::B, &sim)?,
+            Interconnect::infiniband_fdr(),
+        )?;
+        let ge = ClusterModel::new(
+            &arch,
+            cal.strategy(&arch, Strategy::B, &sim)?,
+            Interconnect::ten_gbe(),
+        )?;
         for &n in &nodes {
             let a = ib.predict(&run, n)?;
             let b = ge.predict(&run, n)?;

@@ -48,6 +48,7 @@ pub fn run(opts: &ExpOptions) -> Result<String> {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // exercises the deprecated direct constructors
 mod tests {
     use super::*;
     use crate::config::{ArchSpec, RunConfig};

@@ -1,0 +1,185 @@
+//! `micdl::lab` — the persistent experiment lab (ROADMAP item 1).
+//!
+//! Everything the sweep subsystem memoizes in-process — resolved model
+//! parameters, evaluated cells, simulator measurements — is written
+//! through to a content-addressed, JSON-on-disk [`Store`] and served
+//! from disk on later invocations. Re-running an identical grid against
+//! a warm lab performs zero model / cost-model / measurement
+//! recomputation, and an interrupted sweep resumed against the same lab
+//! completes bit-identically to a cold full run: cells are keyed by
+//! their full axis coordinates (architecture × strategy × workload ×
+//! thread count × parameter provenance × `SimConfig::fingerprint()`),
+//! so "resume" is nothing more than re-enumerating the grid and letting
+//! persisted cells hit.
+//!
+//! [`Lab`] is the facade the `repro` CLI fronts (`--lab PATH`,
+//! `repro lab list|gc|trace-params`, `sweep --resume/--no-store`):
+//!
+//! ```no_run
+//! use micdl::lab::Lab;
+//! use micdl::sweep::GridSpec;
+//!
+//! let lab = Lab::open("./result")?;
+//! let results = lab.run(&GridSpec::table9(), 0)?; // cold: computes + persists
+//! let again = lab.run(&GridSpec::table9(), 0)?;   // warm: pure store hits
+//! assert_eq!(results.results.len(), again.results.len());
+//! # Ok::<(), micdl::Error>(())
+//! ```
+//!
+//! Store layout, key grammar, gc semantics and the resume contract are
+//! documented in docs/LAB.md.
+
+#![warn(missing_docs)]
+
+pub mod store;
+
+pub use store::{
+    cell_key, fnv1a, measured_key, params_key, run_id, source_tag, GcReport, Kind, Store,
+    StoreStats, ENTRY_KIND, RUN_KIND, STORE_VERSION,
+};
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::error::Result;
+use crate::perfmodel::ParamSource;
+use crate::simulator::SimConfig;
+use crate::sweep::{GridSpec, SweepResults, SweepRunner};
+use crate::util::json::Json;
+
+/// A persistent experiment lab: a [`Store`] plus the run/resume
+/// orchestration layered on top of [`SweepRunner`].
+#[derive(Debug)]
+pub struct Lab {
+    store: Arc<Store>,
+}
+
+impl Lab {
+    /// Open (creating if needed) the lab rooted at `path`.
+    pub fn open(path: impl AsRef<Path>) -> Result<Lab> {
+        Ok(Lab {
+            store: Arc::new(Store::open(path)?),
+        })
+    }
+
+    /// The underlying store (shared; hand clones to runners or cache
+    /// layers).
+    pub fn store(&self) -> &Arc<Store> {
+        &self.store
+    }
+
+    /// A sweep runner wired to this lab's store (`workers` as in
+    /// [`SweepRunner::new`]).
+    pub fn runner(&self, workers: usize) -> SweepRunner {
+        SweepRunner::new(workers).with_store(Arc::clone(&self.store))
+    }
+
+    /// The deterministic run id of a grid (FNV-1a of its exact spec
+    /// JSON).
+    pub fn run_id_for(grid: &GridSpec) -> Result<String> {
+        Ok(store::run_id(&grid.to_spec_json()?.emit()))
+    }
+
+    /// Run a grid with persistence: writes a `running` manifest, sweeps
+    /// (persisted cells hit, missing cells compute and write through),
+    /// then marks the manifest `complete`. Calling this again with the
+    /// same grid — including after an interruption — serves every
+    /// already-persisted cell from disk and recomputes only the rest,
+    /// with bit-identical merged results.
+    pub fn run(&self, grid: &GridSpec, workers: usize) -> Result<SweepResults> {
+        let spec = grid.to_spec_json()?;
+        let id = store::run_id(&spec.emit());
+        self.store
+            .write_run(&id, &Self::manifest(&id, &spec, grid.len(), "running"))?;
+        let results = self.runner(workers).run(grid)?;
+        self.store
+            .write_run(&id, &Self::manifest(&id, &spec, grid.len(), "complete"))?;
+        Ok(results)
+    }
+
+    fn manifest(id: &str, spec: &Json, scenarios: usize, status: &str) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(RUN_KIND)),
+            ("version", Json::num(1)),
+            ("id", Json::str(id)),
+            ("spec", spec.clone()),
+            ("scenarios", Json::num(scenarios as f64)),
+            ("status", Json::str(status)),
+        ])
+    }
+
+    /// The manifest of a previous run of `grid`, if one exists
+    /// (`--resume` consults this to report what it is resuming).
+    pub fn find_run(&self, grid: &GridSpec) -> Result<Option<Json>> {
+        Ok(self.store.read_run(&Self::run_id_for(grid)?))
+    }
+
+    /// All run manifests in the lab, sorted by id.
+    pub fn list_runs(&self) -> Result<Vec<Json>> {
+        self.store.list_runs()
+    }
+
+    /// Garbage-collect damaged store files (see [`Store::gc`]).
+    pub fn gc(&self, dry_run: bool) -> Result<GcReport> {
+        self.store.gc(dry_run)
+    }
+
+    /// The persisted calibration entry for (`arch`, `source`, `sim`):
+    /// the canonical key plus the stored payload with its resolution
+    /// provenance, or `None` when nothing has been persisted yet. Does
+    /// not perturb store hit/miss accounting.
+    pub fn trace_params(&self, arch: &str, source: ParamSource, sim: &SimConfig) -> Option<Json> {
+        let key = store::params_key(arch, source, sim.fingerprint());
+        let payload = self.store.peek(Kind::Params, &key)?;
+        Some(Json::obj(vec![
+            ("key", Json::str(key)),
+            ("entry", payload),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_lifecycle_and_listing() {
+        let dir = crate::util::tmp::TempDir::new("lab").unwrap();
+        let lab = Lab::open(dir.path()).unwrap();
+        let grid = GridSpec {
+            archs: vec![crate::config::ArchSpec::small()],
+            threads: vec![15],
+            strategies: vec![crate::sweep::Strategy::A],
+            ..GridSpec::default()
+        };
+        assert!(lab.find_run(&grid).unwrap().is_none());
+        let results = lab.run(&grid, 0).unwrap();
+        assert_eq!(results.results.len(), 1);
+        let manifest = lab.find_run(&grid).unwrap().expect("manifest written");
+        assert_eq!(manifest.get("status").unwrap().as_str(), Some("complete"));
+        assert_eq!(manifest.get("scenarios").unwrap().as_usize(), Some(1));
+        assert_eq!(lab.list_runs().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn trace_params_after_a_run() {
+        let dir = crate::util::tmp::TempDir::new("lab").unwrap();
+        let lab = Lab::open(dir.path()).unwrap();
+        let grid = GridSpec {
+            archs: vec![crate::config::ArchSpec::medium()],
+            threads: vec![240],
+            strategies: vec![crate::sweep::Strategy::B],
+            ..GridSpec::default()
+        };
+        let sim = SimConfig::default();
+        assert!(lab.trace_params("medium", ParamSource::Paper, &sim).is_none());
+        lab.run(&grid, 0).unwrap();
+        let trace = lab
+            .trace_params("medium", ParamSource::Paper, &sim)
+            .expect("params persisted by the run");
+        let key = trace.get("key").unwrap().as_str().unwrap();
+        assert!(key.starts_with("params:v1:medium:paper:"), "{key}");
+        let entry = trace.get("entry").unwrap();
+        assert_eq!(entry.get("calibrator").unwrap().as_str(), Some("paper"));
+    }
+}

@@ -1,0 +1,510 @@
+//! The content-addressed JSON-on-disk entry store behind [`crate::lab::Lab`].
+//!
+//! Layout under the store root (see docs/LAB.md for the full contract):
+//!
+//! ```text
+//! <root>/
+//!   params/    resolved ModelParams per (arch, source, sim fingerprint)
+//!   cells/     full sweep-cell predictions per scenario axis key
+//!   measured/  simulator measurements per (arch, workload, fingerprint)
+//!   runs/      sweep run manifests (not content-addressed entries)
+//! ```
+//!
+//! Every entry file is named by the FNV-1a 64-bit hash of its canonical
+//! key string (`{hash:016x}.json`) and wraps its payload in a versioned
+//! envelope that repeats the full key:
+//!
+//! ```text
+//! {"kind": "micdl-lab-entry", "version": 1, "key": "<canonical key>", "payload": {…}}
+//! ```
+//!
+//! [`Store::get`] re-verifies the envelope kind, version and the *full*
+//! stored key string, so a (vanishingly unlikely) hash collision, a
+//! corrupt file or a foreign file in the directory reads as a miss — the
+//! entry is then recomputed and overwritten — never as wrong data.
+//! Writes go through a temp file + atomic rename; payload values are
+//! deterministic for their key, so concurrent same-key writers race
+//! harmlessly.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::error::Result;
+use crate::perfmodel::ParamSource;
+use crate::util::json::Json;
+
+/// Store schema version. Bump on any incompatible change to the entry
+/// envelope, the canonical key grammar, or a payload layout; entries
+/// written by another version read as misses and are garbage-collected
+/// by [`Store::gc`].
+pub const STORE_VERSION: u64 = 1;
+
+/// Envelope `kind` tag on every content-addressed entry file.
+pub const ENTRY_KIND: &str = "micdl-lab-entry";
+
+/// Envelope `kind` tag on run manifests under `runs/`.
+pub const RUN_KIND: &str = "micdl-lab-run";
+
+/// FNV-1a 64-bit hash — the store's content address. Stable across
+/// platforms and releases (it is a file-name contract, not an in-process
+/// detail), which is why this is hand-rolled rather than `DefaultHasher`.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The short provenance tag a [`ParamSource`] contributes to canonical
+/// keys ("paper" table constants vs "sim"-calibrated parameters).
+pub fn source_tag(source: ParamSource) -> &'static str {
+    match source {
+        ParamSource::Paper => "paper",
+        ParamSource::Simulator => "sim",
+    }
+}
+
+/// Canonical key for a resolved parameter set (calibration output).
+pub fn params_key(arch: &str, source: ParamSource, fingerprint: u64) -> String {
+    format!("params:v1:{arch}:{}:{fingerprint:016x}", source_tag(source))
+}
+
+/// Canonical key for a fully evaluated sweep cell (prediction plus
+/// optional measurement) — the scenario axes crossed with parameter
+/// provenance and the simulator fingerprint.
+#[allow(clippy::too_many_arguments)]
+pub fn cell_key(
+    arch: &str,
+    strategy: &str,
+    threads: usize,
+    train_images: usize,
+    test_images: usize,
+    epochs: usize,
+    source: ParamSource,
+    fingerprint: u64,
+) -> String {
+    format!(
+        "cell:v1:{arch}:{strategy}:{threads}:{train_images}:{test_images}:{epochs}:{}:{fingerprint:016x}",
+        source_tag(source)
+    )
+}
+
+/// Canonical key for a simulator measurement (strategy-independent).
+pub fn measured_key(
+    arch: &str,
+    threads: usize,
+    train_images: usize,
+    test_images: usize,
+    epochs: usize,
+    fingerprint: u64,
+) -> String {
+    format!("measured:v1:{arch}:{threads}:{train_images}:{test_images}:{epochs}:{fingerprint:016x}")
+}
+
+/// The run id for a grid: FNV-1a of the grid's exact spec JSON. The
+/// same grid always maps to the same manifest, which is what makes
+/// `--resume` a pure lookup.
+pub fn run_id(spec_json: &str) -> String {
+    format!("{:016x}", fnv1a(spec_json.as_bytes()))
+}
+
+/// The three content-addressed entry namespaces.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Resolved `ModelParams` (calibration results, with provenance).
+    Params,
+    /// Evaluated sweep cells (prediction + optional measurement).
+    Cells,
+    /// Simulator measurements keyed independently of strategy.
+    Measured,
+}
+
+impl Kind {
+    /// All entry namespaces, in directory order.
+    pub const ALL: [Kind; 3] = [Kind::Params, Kind::Cells, Kind::Measured];
+
+    /// Directory name under the store root.
+    pub fn dir(self) -> &'static str {
+        match self {
+            Kind::Params => "params",
+            Kind::Cells => "cells",
+            Kind::Measured => "measured",
+        }
+    }
+}
+
+/// Disk-store hit/miss counters, reported separately from the
+/// in-process [`crate::sweep::CacheStats`] — a warm lab shows up here
+/// even when the in-process memo starts cold.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StoreStats {
+    /// Lookups served from disk.
+    pub hits: u64,
+    /// Lookups that missed (entry absent, corrupt, or version-skewed).
+    pub misses: u64,
+}
+
+impl StoreStats {
+    /// hits / (hits + misses); 0 when nothing was looked up.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// Counter delta since an earlier snapshot of the same store.
+    pub fn since(&self, earlier: &StoreStats) -> StoreStats {
+        StoreStats {
+            hits: self.hits - earlier.hits,
+            misses: self.misses - earlier.misses,
+        }
+    }
+}
+
+/// What [`Store::gc`] did (or, with `dry_run`, would do).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GcReport {
+    /// Files examined across all store directories.
+    pub scanned: usize,
+    /// Files removed (corrupt, version-skewed, or leftover temp files).
+    pub removed: usize,
+    /// Healthy files kept.
+    pub kept: usize,
+    /// True when nothing was actually deleted.
+    pub dry_run: bool,
+}
+
+/// A content-addressed, disk-backed entry store. Cheap to open; safe to
+/// share across threads behind an `Arc` (all counters are atomic, all
+/// writes atomic-rename).
+#[derive(Debug)]
+pub struct Store {
+    root: PathBuf,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl Store {
+    /// Open (creating if needed) a store rooted at `root`.
+    pub fn open(root: impl AsRef<Path>) -> Result<Store> {
+        let root = root.as_ref().to_path_buf();
+        for kind in Kind::ALL {
+            fs::create_dir_all(root.join(kind.dir()))?;
+        }
+        fs::create_dir_all(root.join("runs"))?;
+        Ok(Store {
+            root,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        })
+    }
+
+    /// The store's root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Current hit/miss counters (monotonic over the store's lifetime;
+    /// callers wanting per-run numbers snapshot before and
+    /// [`StoreStats::since`] after).
+    pub fn stats(&self) -> StoreStats {
+        StoreStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+        }
+    }
+
+    fn entry_path(&self, kind: Kind, key: &str) -> PathBuf {
+        self.root
+            .join(kind.dir())
+            .join(format!("{:016x}.json", fnv1a(key.as_bytes())))
+    }
+
+    fn read_entry(path: &Path, key: &str) -> Option<Json> {
+        let text = fs::read_to_string(path).ok()?;
+        let doc = Json::parse(&text).ok()?;
+        if doc.get("kind")?.as_str()? != ENTRY_KIND {
+            return None;
+        }
+        if doc.get("version")?.as_usize()? as u64 != STORE_VERSION {
+            return None;
+        }
+        // Full-key equality: a hash collision or foreign file is a miss,
+        // never silently wrong data.
+        if doc.get("key")?.as_str()? != key {
+            return None;
+        }
+        doc.get("payload").cloned()
+    }
+
+    /// Look up an entry's payload, counting a hit or miss. Corrupt,
+    /// version-skewed or key-mismatched files read as misses.
+    pub fn get(&self, kind: Kind, key: &str) -> Option<Json> {
+        let payload = self.peek(kind, key);
+        self.record(payload.is_some());
+        payload
+    }
+
+    /// Count one hit (`true`) or miss (`false`). For layers that
+    /// [`Store::peek`] and then apply extra validity conditions (e.g. a
+    /// measuring sweep rejecting a measurement-less cell) before
+    /// deciding what the lookup really was.
+    pub fn record(&self, hit: bool) {
+        if hit {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Like [`Store::get`] but without touching the hit/miss counters —
+    /// for introspection paths (`trace-params`) that must not perturb
+    /// per-run store accounting.
+    pub fn peek(&self, kind: Kind, key: &str) -> Option<Json> {
+        Self::read_entry(&self.entry_path(kind, key), key)
+    }
+
+    /// Write an entry (versioned envelope + payload) via temp file and
+    /// atomic rename. Same-key writers race harmlessly: payloads are
+    /// deterministic functions of their key.
+    pub fn put(&self, kind: Kind, key: &str, payload: Json) -> Result<()> {
+        let doc = Json::obj(vec![
+            ("kind", Json::str(ENTRY_KIND)),
+            ("version", Json::num(STORE_VERSION as f64)),
+            ("key", Json::str(key)),
+            ("payload", payload),
+        ]);
+        self.write_atomic(&self.entry_path(kind, key), &doc)
+    }
+
+    fn write_atomic(&self, path: &Path, doc: &Json) -> Result<()> {
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        fs::write(&tmp, doc.emit())?;
+        fs::rename(&tmp, path)?;
+        Ok(())
+    }
+
+    /// Path of the manifest for run `id` (exists or not).
+    pub fn run_path(&self, id: &str) -> PathBuf {
+        self.root.join("runs").join(format!("{id}.json"))
+    }
+
+    /// Read a run manifest. Manifest reads bypass the hit/miss counters
+    /// — they are bookkeeping, not memoized computation.
+    pub fn read_run(&self, id: &str) -> Option<Json> {
+        let doc = Json::parse(&fs::read_to_string(self.run_path(id)).ok()?).ok()?;
+        if doc.get("kind")?.as_str()? != RUN_KIND {
+            return None;
+        }
+        Some(doc)
+    }
+
+    /// Write (or overwrite) a run manifest atomically.
+    pub fn write_run(&self, id: &str, manifest: &Json) -> Result<()> {
+        self.write_atomic(&self.run_path(id), manifest)
+    }
+
+    /// All parseable run manifests, sorted by id.
+    pub fn list_runs(&self) -> Result<Vec<Json>> {
+        let mut runs = Vec::new();
+        for entry in fs::read_dir(self.root.join("runs"))? {
+            let path = entry?.path();
+            if path.extension().and_then(|e| e.to_str()) != Some("json") {
+                continue;
+            }
+            if let Some(id) = path.file_stem().and_then(|s| s.to_str()) {
+                if let Some(doc) = self.read_run(id) {
+                    runs.push(doc);
+                }
+            }
+        }
+        runs.sort_by(|a, b| {
+            let id = |d: &Json| d.get("id").and_then(|i| i.as_str().map(String::from));
+            id(a).cmp(&id(b))
+        });
+        Ok(runs)
+    }
+
+    /// Remove damaged files: unparseable entries, entries from another
+    /// [`STORE_VERSION`], and leftover temp files. Healthy entries are
+    /// never removed — they are content-addressed and shared across
+    /// runs, so "unreferenced" is not a meaningful state — and run
+    /// manifests that parse are always kept (a `running` manifest is
+    /// what `--resume` looks for).
+    pub fn gc(&self, dry_run: bool) -> Result<GcReport> {
+        let mut report = GcReport {
+            dry_run,
+            ..GcReport::default()
+        };
+        let mut dirs: Vec<PathBuf> =
+            Kind::ALL.iter().map(|k| self.root.join(k.dir())).collect();
+        dirs.push(self.root.join("runs"));
+        for dir in dirs {
+            let in_runs = dir.ends_with("runs");
+            for entry in fs::read_dir(&dir)? {
+                let path = entry?.path();
+                if !path.is_file() {
+                    continue;
+                }
+                report.scanned += 1;
+                let healthy = if path.extension().and_then(|e| e.to_str()) != Some("json") {
+                    false // leftover temp file
+                } else if in_runs {
+                    path.file_stem()
+                        .and_then(|s| s.to_str())
+                        .and_then(|id| self.read_run(id))
+                        .is_some()
+                } else {
+                    fs::read_to_string(&path)
+                        .ok()
+                        .and_then(|text| Json::parse(&text).ok())
+                        .map(|doc| {
+                            doc.get("kind").and_then(Json::as_str) == Some(ENTRY_KIND)
+                                && doc.get("version").and_then(Json::as_usize)
+                                    == Some(STORE_VERSION as usize)
+                                && doc.get("key").and_then(Json::as_str).is_some()
+                        })
+                        .unwrap_or(false)
+                };
+                if healthy {
+                    report.kept += 1;
+                } else {
+                    report.removed += 1;
+                    if !dry_run {
+                        fs::remove_file(&path)?;
+                    }
+                }
+            }
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn roundtrip_and_counters() {
+        let dir = TempDir::new("store").unwrap();
+        let store = Store::open(dir.path()).unwrap();
+        let key = params_key("small", ParamSource::Paper, 7);
+        assert!(store.get(Kind::Params, &key).is_none());
+        let payload = Json::obj(vec![("x", Json::num(1.5))]);
+        store.put(Kind::Params, &key, payload.clone()).unwrap();
+        assert_eq!(store.get(Kind::Params, &key), Some(payload));
+        assert_eq!(store.stats(), StoreStats { hits: 1, misses: 1 });
+    }
+
+    #[test]
+    fn key_mismatch_reads_as_miss() {
+        let dir = TempDir::new("store").unwrap();
+        let store = Store::open(dir.path()).unwrap();
+        let key = "cell:v1:x";
+        store.put(Kind::Cells, key, Json::num(1)).unwrap();
+        // Overwrite the file with an envelope carrying a different key
+        // (what a hash collision would look like).
+        let path = store.entry_path(Kind::Cells, key);
+        let forged = Json::obj(vec![
+            ("kind", Json::str(ENTRY_KIND)),
+            ("version", Json::num(STORE_VERSION as f64)),
+            ("key", Json::str("cell:v1:other")),
+            ("payload", Json::num(2)),
+        ]);
+        std::fs::write(&path, forged.emit()).unwrap();
+        assert!(store.get(Kind::Cells, key).is_none());
+    }
+
+    #[test]
+    fn corrupt_and_version_skew_read_as_miss_and_gc_removes_them() {
+        let dir = TempDir::new("store").unwrap();
+        let store = Store::open(dir.path()).unwrap();
+        store.put(Kind::Params, "params:v1:ok", Json::num(1)).unwrap();
+        let corrupt = store.entry_path(Kind::Params, "params:v1:bad");
+        std::fs::write(&corrupt, "{ not json").unwrap();
+        let skewed = store.entry_path(Kind::Cells, "cell:v1:old");
+        let old = Json::obj(vec![
+            ("kind", Json::str(ENTRY_KIND)),
+            ("version", Json::num(99)),
+            ("key", Json::str("cell:v1:old")),
+            ("payload", Json::num(2)),
+        ]);
+        std::fs::write(&skewed, old.emit()).unwrap();
+        let tmp = dir.path().join("measured").join("feed.tmp.123");
+        std::fs::write(&tmp, "partial").unwrap();
+        assert!(store.get(Kind::Params, "params:v1:bad").is_none());
+        assert!(store.get(Kind::Cells, "cell:v1:old").is_none());
+
+        let dry = store.gc(true).unwrap();
+        assert_eq!(dry, GcReport { scanned: 4, removed: 3, kept: 1, dry_run: true });
+        assert!(corrupt.exists() && skewed.exists() && tmp.exists());
+        let real = store.gc(false).unwrap();
+        assert_eq!(real, GcReport { scanned: 4, removed: 3, kept: 1, dry_run: false });
+        assert!(!corrupt.exists() && !skewed.exists() && !tmp.exists());
+        assert!(store.peek(Kind::Params, "params:v1:ok").is_some());
+    }
+
+    #[test]
+    fn gc_keeps_parseable_run_manifests() {
+        let dir = TempDir::new("store").unwrap();
+        let store = Store::open(dir.path()).unwrap();
+        let manifest = Json::obj(vec![
+            ("kind", Json::str(RUN_KIND)),
+            ("version", Json::num(1)),
+            ("id", Json::str("abc")),
+            ("status", Json::str("running")),
+        ]);
+        store.write_run("abc", &manifest).unwrap();
+        std::fs::write(store.run_path("junk"), "garbage").unwrap();
+        let report = store.gc(false).unwrap();
+        assert_eq!(report.removed, 1);
+        assert!(store.read_run("abc").is_some());
+        assert!(store.read_run("junk").is_none());
+    }
+
+    #[test]
+    fn run_manifest_listing_sorted() {
+        let dir = TempDir::new("store").unwrap();
+        let store = Store::open(dir.path()).unwrap();
+        for id in ["bb", "aa"] {
+            let m = Json::obj(vec![
+                ("kind", Json::str(RUN_KIND)),
+                ("version", Json::num(1)),
+                ("id", Json::str(id)),
+                ("status", Json::str("complete")),
+            ]);
+            store.write_run(id, &m).unwrap();
+        }
+        let runs = store.list_runs().unwrap();
+        let ids: Vec<&str> = runs
+            .iter()
+            .map(|r| r.get("id").unwrap().as_str().unwrap())
+            .collect();
+        assert_eq!(ids, ["aa", "bb"]);
+    }
+
+    #[test]
+    fn keys_embed_all_axes() {
+        let k = cell_key("small", "a", 240, 60_000, 10_000, 70, ParamSource::Simulator, 0xAB);
+        assert_eq!(k, "cell:v1:small:a:240:60000:10000:70:sim:00000000000000ab");
+        let m = measured_key("large", 15, 600, 100, 2, 1);
+        assert_eq!(m, "measured:v1:large:15:600:100:2:0000000000000001");
+        let p = params_key("medium", ParamSource::Paper, u64::MAX);
+        assert_eq!(p, "params:v1:medium:paper:ffffffffffffffff");
+    }
+}

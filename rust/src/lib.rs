@@ -35,6 +35,7 @@
 //! | [`runtime`] | xla/PJRT client: load HLO text artifacts, compile, execute |
 //! | [`report`] | Paper-style table/series rendering + embedded paper data |
 //! | [`sweep`] | Parallel scenario-sweep engine (grid × cache × worker pool) |
+//! | [`lab`] | Persistent experiment lab: content-addressed disk store + resumable runs |
 //! | [`experiments`] | One entry per paper table/figure (the reproduction index) |
 
 pub mod calibration;
@@ -44,6 +45,7 @@ pub mod dataset;
 pub mod engine;
 pub mod error;
 pub mod experiments;
+pub mod lab;
 pub mod nn;
 pub mod perfmodel;
 pub mod report;

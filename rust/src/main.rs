@@ -7,9 +7,11 @@
 //! repro arch [--name N | --json FILE]               architecture summary (Fig. 2)
 //! repro simulate --arch A --threads P [...]         run micsim on a workload
 //! repro predict --arch A --threads P [...]          run the performance models
-//! repro sweep [--spec FILE | axis flags]            evaluate a whole scenario grid
+//! repro sweep run [--spec FILE | axis flags]        evaluate a whole scenario grid
+//! repro sweep baseline write|compare FILE           golden-baseline write / regression gate
 //! repro conformance [--baseline FILE]               measured-mode Δ-band conformance
 //! repro sensitivity [--arch LIST] [--json FILE]     ranked ∂Δ/∂constant report
+//! repro lab list|gc|trace-params [--lab PATH]       inspect a persistent lab store
 //! repro probe --arch A                              Table IV contention probe
 //! repro train [...]                                 really train (engine or PJRT backend)
 //! repro selfcheck                                   invariant + artifact checks
@@ -18,11 +20,22 @@
 //! Argument parsing is hand-rolled (offline build — no clap); see
 //! [`micdl::util`] for the rationale.
 //!
-//! Exit codes: 0 on success; 1 on any configuration, parse, or runtime
-//! error (the error is printed to stderr together with the usage text);
-//! 2 when `sweep --compare` finds a golden-baseline regression or
-//! `conformance --baseline` finds a Δ-band/claim regression (the
-//! machine-readable report goes to stdout, the findings to stderr).
+//! `sweep`, `conformance` and `sensitivity` accept `--lab PATH`
+//! (bare `--lab` means `./result`) to persist every computed cell,
+//! model-parameter set and measurement through a [`micdl::lab`] store:
+//! repeated runs become pure store hits and interrupted sweeps resume
+//! (`--resume`) from the last persisted cell. `--no-store` bypasses an
+//! otherwise-configured lab. The noun-verb spellings above are the
+//! canonical surface; the old verbless flags (`sweep --write-baseline`,
+//! `sweep --compare`) keep working as deprecated aliases.
+//!
+//! Exit codes are unified in [`ExitCode`] and documented in
+//! docs/SWEEP.md: 0 on success; 1 on any configuration, parse, or
+//! runtime error (the error is printed to stderr together with the
+//! usage text); 2 when `sweep baseline compare` finds a golden-baseline
+//! regression or `conformance --baseline` finds a Δ-band/claim
+//! regression (the machine-readable report goes to stdout, the findings
+//! to stderr).
 
 use micdl::config::{ArchSpec, MachineConfig, RunConfig};
 use micdl::coordinator::leader::{LeaderConfig, PjrtTrainer};
@@ -30,6 +43,7 @@ use micdl::coordinator::pool::{DataParallelTrainer, PoolConfig};
 use micdl::dataset;
 use micdl::error::{Error, Result};
 use micdl::experiments::{self, ExpOptions};
+use micdl::lab::Lab;
 use micdl::nn::opcount;
 use micdl::perfmodel::{both_models, ParamSource, PerfModel};
 use micdl::report::Table;
@@ -50,8 +64,22 @@ macro_rules! bail {
     ($($arg:tt)*) => { return Err(err!($($arg)*)) };
 }
 
+/// Process exit codes, unified across every subcommand (the table lives
+/// in docs/SWEEP.md): `Ok` on success, `Error` on any configuration,
+/// parse, or runtime failure, `Regression` when a baseline or Δ-band
+/// check finds a regression.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum ExitCode {
+    /// Success.
+    Ok = 0,
+    /// Usage, configuration, or runtime error.
+    Error = 1,
+    /// A golden-baseline / conformance check found a regression.
+    Regression = 2,
+}
+
 /// Minimal flag parser: positionals + `--key value` + boolean `--flag`.
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 struct Args {
     positional: Vec<String>,
     flags: Vec<(String, Option<String>)>,
@@ -109,7 +137,7 @@ USAGE:
                  [--fidelity chunked|image]
   repro predict  --arch A [--threads P] [--epochs E] [--images I] [--test-images IT]
                  [--strategy a|b|both] [--params paper|sim]
-  repro sweep    [--spec FILE.json] [--arch all|NAME[,NAME...]] [--threads LIST]
+  repro sweep [run] [--spec FILE.json] [--arch all|NAME[,NAME...]] [--threads LIST]
                  [--images IxIT[,IxIT...]] [--epochs LIST] [--strategy a|b|both]
                  [--params paper|sim] [--clock-ghz F[,F...]] [--measure]
                  [--sim-clock-ghz F[,F...]] [--sim-cores LIST] [--sim-threads LIST]
@@ -119,18 +147,25 @@ USAGE:
                  [--sim-oversub F[,F...]] [--sim-fidelity chunked|image[,...]]
                  [--sim-seed LIST]
                  [--workers N | --serial] [--json OUT.json] [--csv] [--full]
-                 [--write-baseline OUT.json] [--compare BASELINE.json]
-                 [--tolerance F]
+                 [--lab [PATH]] [--resume] [--no-store] [--tolerance F]
                  (LIST = comma items and/or inclusive ranges: 1,15,30 or 1..244 or 8..64..8)
-                 (--compare alone re-runs the baseline's own grid; grid flags
-                  override it. Exit 2 on baseline regression. The --sim-*
-                  flags build an ablation axis over simulator constants —
-                  the cross product of every given list; sim overrides win
-                  over --clock-ghz machine variants, with a warning. See
-                  docs/SWEEP.md.)
+                 (The --sim-* flags build an ablation axis over simulator
+                  constants — the cross product of every given list; sim
+                  overrides win over --clock-ghz machine variants, with a
+                  warning. --lab persists every computed cell to a disk
+                  store (bare --lab means ./result); --resume reports the
+                  prior run being resumed; --no-store bypasses the store.
+                  See docs/SWEEP.md and docs/LAB.md.)
+  repro sweep baseline write OUT.json      pin the swept grid as a golden baseline
+  repro sweep baseline compare FILE.json   re-run and diff against a baseline
+                 (compare alone re-runs the baseline's own grid; grid flags
+                  override it. Exit 2 on baseline regression. The old
+                  --write-baseline/--compare flag spellings keep working as
+                  deprecated aliases.)
   repro conformance [--baseline FILE | --write-baseline FILE] [--report OUT.json]
                  [--closed-loop FILE | --write-closed-loop FILE]
                  [--closed-loop-report OUT.json] [--workers N | --serial]
+                 [--lab [PATH]] [--resume] [--no-store]
                  (measured-mode Δ-band conformance over the Tables IX-XI
                   grids. --baseline re-runs the file's grids and checks its
                   Δ bands and paper claims, exit 2 on regression; --write-
@@ -147,6 +182,7 @@ USAGE:
   repro sensitivity [--arch all|NAME[,NAME...]] [--threads LIST]
                  [--strategy a|b|both] [--params paper|sim] [--step F]
                  [--constants LIST] [--json OUT.json] [--workers N | --serial]
+                 [--lab [PATH]] [--resume] [--no-store]
                  (one-at-a-time ablation over the simulator constants:
                   perturb each by ±step (default 0.1 = ±10%), re-measure
                   the Table IX Δ per architecture × strategy, and report
@@ -156,6 +192,13 @@ USAGE:
                   ring_beta oversub_overhead. --json writes the machine-
                   readable report, bit-identical parallel vs serial. See
                   docs/SWEEP.md.)
+  repro lab list                            run manifests in a lab store
+  repro lab gc [--dry-run]                  remove damaged/leftover store files
+  repro lab trace-params --arch A [--params paper|sim]
+                 (all lab verbs take --lab PATH, default ./result; `repro
+                  list|gc|trace-params` are equivalent top-level aliases.
+                  trace-params prints the persisted calibration entry with
+                  its resolution provenance. See docs/LAB.md.)
   repro probe    [--arch A]
   repro train    [--backend engine|pjrt] [--arch A] [--epochs E] [--images N]
                  [--test-images N] [--workers W] [--lr F] [--artifacts DIR]
@@ -165,11 +208,12 @@ USAGE:
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
-    if let Err(e) = dispatch(&argv) {
+    let code = dispatch(&argv).unwrap_or_else(|e| {
         eprintln!("error: {e}");
         eprintln!("{USAGE}");
-        std::process::exit(1);
-    }
+        ExitCode::Error
+    });
+    std::process::exit(code as i32);
 }
 
 fn parse_params(args: &Args) -> Result<ParamSource> {
@@ -198,10 +242,10 @@ fn parse_run(args: &Args, arch: &str) -> Result<RunConfig> {
     })
 }
 
-fn dispatch(argv: &[String]) -> Result<()> {
+fn dispatch(argv: &[String]) -> Result<ExitCode> {
     let Some(cmd) = argv.first().map(String::as_str) else {
         println!("{USAGE}");
-        return Ok(());
+        return Ok(ExitCode::Ok);
     };
     let args = Args::parse(&argv[1..]);
     match cmd {
@@ -212,18 +256,21 @@ fn dispatch(argv: &[String]) -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "conformance" => cmd_conformance(&args),
         "sensitivity" => cmd_sensitivity(&args),
+        "lab" => cmd_lab(&args, None),
+        // Top-level aliases for the lab verbs (repx-style).
+        "list" | "gc" | "trace-params" => cmd_lab(&args, Some(cmd)),
         "probe" => cmd_probe(&args),
         "train" => cmd_train(&args),
         "selfcheck" => cmd_selfcheck(&args),
         "help" | "--help" | "-h" => {
             println!("{USAGE}");
-            Ok(())
+            Ok(ExitCode::Ok)
         }
         other => bail!("unknown command {other:?}"),
     }
 }
 
-fn cmd_exp(args: &Args) -> Result<()> {
+fn cmd_exp(args: &Args) -> Result<ExitCode> {
     let id = args
         .positional
         .first()
@@ -231,10 +278,10 @@ fn cmd_exp(args: &Args) -> Result<()> {
         .ok_or_else(|| err!("exp needs an id (or 'all')"))?;
     let opts = ExpOptions { csv: args.has("csv"), params: parse_params(args)? };
     print!("{}", experiments::run(id, &opts)?);
-    Ok(())
+    Ok(ExitCode::Ok)
 }
 
-fn cmd_arch(args: &Args) -> Result<()> {
+fn cmd_arch(args: &Args) -> Result<ExitCode> {
     let archs = if args.has("name") || args.has("json") {
         vec![parse_arch(args)?]
     } else {
@@ -274,10 +321,10 @@ fn cmd_arch(args: &Args) -> Result<()> {
             arch.total_weights()?
         );
     }
-    Ok(())
+    Ok(ExitCode::Ok)
 }
 
-fn cmd_simulate(args: &Args) -> Result<()> {
+fn cmd_simulate(args: &Args) -> Result<ExitCode> {
     let arch = parse_arch(args)?;
     let run = parse_run(args, &arch.name)?;
     let mut cfg = SimConfig::default();
@@ -299,10 +346,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         r.phases.train_s, r.phases.validation_s, r.phases.test_s, r.phases.serial_s
     );
     println!("  imbalance {:.4} | events {}", r.imbalance(), r.events);
-    Ok(())
+    Ok(ExitCode::Ok)
 }
 
-fn cmd_predict(args: &Args) -> Result<()> {
+fn cmd_predict(args: &Args) -> Result<ExitCode> {
     let arch = parse_arch(args)?;
     let run = parse_run(args, &arch.name)?;
     let (a, b) = both_models(&arch, parse_params(args)?)?;
@@ -330,7 +377,7 @@ fn cmd_predict(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", t.render());
-    Ok(())
+    Ok(ExitCode::Ok)
 }
 
 /// Parse the `--images` axis: `IxIT` pairs, comma-separated
@@ -356,7 +403,7 @@ fn parse_images(text: &str) -> Result<Vec<(usize, usize)>> {
 /// One table drives both the missing-value check and the "did the user
 /// give an explicit grid" test, so the per-flag handlers in [`cmd_sweep`]
 /// cannot drift out of sync with either.
-const SWEEP_FLAGS: [(&str, bool, bool); 29] = [
+const SWEEP_FLAGS: [(&str, bool, bool); 32] = [
     ("spec", true, true),
     ("arch", true, true),
     ("threads", true, true),
@@ -386,7 +433,44 @@ const SWEEP_FLAGS: [(&str, bool, bool); 29] = [
     ("compare", true, false),
     ("write-baseline", true, false),
     ("tolerance", true, false),
+    // `--lab` is registered valueless so the bare spelling (meaning
+    // ./result) passes validation; a given value still parses.
+    ("lab", false, false),
+    ("resume", false, false),
+    ("no-store", false, false),
 ];
+
+/// Open the lab named by `--lab` (bare `--lab` means `./result`).
+/// `None` when the flag is absent — persistence is strictly opt-in — or
+/// when `--no-store` bypasses an otherwise-configured lab. `--resume`
+/// and `--no-store` are meaningless without `--lab`, so both error.
+fn parse_lab(args: &Args) -> Result<Option<Lab>> {
+    if !args.has("lab") {
+        if args.has("resume") {
+            bail!("--resume requires --lab (there is no store to resume from)");
+        }
+        if args.has("no-store") {
+            bail!("--no-store requires --lab (there is no store to bypass)");
+        }
+        return Ok(None);
+    }
+    if args.has("resume") && args.has("no-store") {
+        bail!("--resume and --no-store are mutually exclusive");
+    }
+    if args.has("no-store") {
+        return Ok(None);
+    }
+    Ok(Some(Lab::open(args.get("lab").unwrap_or("./result"))?))
+}
+
+/// The runner for a subcommand: wired to the lab's store when one is
+/// configured, plain otherwise.
+fn runner_for(workers: usize, lab: &Option<Lab>) -> SweepRunner {
+    match lab {
+        Some(lab) => lab.runner(workers),
+        None => SweepRunner::new(workers),
+    }
+}
 
 /// Reject unknown flags and valued flags given without a value — a
 /// typo'd or valueless flag must error, not silently no-op (a dropped
@@ -490,8 +574,42 @@ fn parse_sim_axis(args: &Args) -> Result<Option<Vec<SimVariant>>> {
     Ok(Some(variants))
 }
 
-fn cmd_sweep(args: &Args) -> Result<()> {
+/// Map the noun-verb spellings (`sweep run`, `sweep baseline
+/// write|compare PATH`) onto the flag surface. The verbless legacy
+/// spelling keeps working but earns one deprecation note on stderr.
+fn normalize_sweep_verbs(args: &mut Args) -> Result<()> {
+    let verbs: Vec<&str> = args.positional.iter().map(String::as_str).collect();
+    match verbs.as_slice() {
+        [] => eprintln!(
+            "deprecated: verbless `repro sweep` — use `repro sweep run` \
+             (or `repro sweep baseline write|compare PATH`)"
+        ),
+        ["run"] => {}
+        ["baseline", "write", path] => {
+            let path = path.to_string();
+            args.flags.push(("write-baseline".into(), Some(path)));
+        }
+        ["baseline", "compare", path] => {
+            let path = path.to_string();
+            args.flags.push(("compare".into(), Some(path)));
+        }
+        other => {
+            bail!(
+                "unknown sweep verb {:?} (expected `run` or `baseline write|compare PATH`)",
+                other.join(" ")
+            )
+        }
+    }
+    args.positional.clear();
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<ExitCode> {
+    let mut args = args.clone();
+    normalize_sweep_verbs(&mut args)?;
+    let args = &args;
     check_flags(args, &SWEEP_FLAGS.map(|(f, v, _)| (f, v)), "sweep")?;
+    let lab = parse_lab(args)?;
     let baseline = args
         .get("compare")
         .map(|path| Baseline::load(std::path::Path::new(path)))
@@ -574,7 +692,24 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     } else {
         args.get_usize("workers", 0)?
     };
-    let results = SweepRunner::new(workers).run(&grid)?;
+    let results = match &lab {
+        Some(lab) => {
+            if args.has("resume") {
+                match lab.find_run(&grid)? {
+                    Some(m) => eprintln!(
+                        "note: resuming run {} (was {}) — persisted cells serve from the store",
+                        m.get("id").and_then(|j| j.as_str()).unwrap_or("?"),
+                        m.get("status").and_then(|j| j.as_str()).unwrap_or("?"),
+                    ),
+                    None => eprintln!(
+                        "note: no prior run of this grid in the lab — starting fresh"
+                    ),
+                }
+            }
+            lab.run(&grid, workers)?
+        }
+        None => SweepRunner::new(workers).run(&grid)?,
+    };
     if let Some(path) = args.get("json") {
         std::fs::write(path, results.to_json().emit())?;
         eprintln!("wrote {} scenario results to {path}", results.len());
@@ -590,22 +725,23 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let report = base.compare(&results, tolerance)?;
         println!("{}", report.to_json().emit());
         eprint!("{}", report.render());
-        if !report.is_clean() {
-            std::process::exit(2);
-        }
-        return Ok(());
+        return Ok(if report.is_clean() {
+            ExitCode::Ok
+        } else {
+            ExitCode::Regression
+        });
     }
     if args.has("csv") {
         print!("{}", results.table(true).to_csv());
     } else {
         print!("{}", results.render(args.has("full")));
     }
-    Ok(())
+    Ok(ExitCode::Ok)
 }
 
 /// The conformance flag inventory: (name, takes a value). One table
 /// drives both validation passes, like [`SWEEP_FLAGS`].
-const CONFORMANCE_FLAGS: [(&str, bool); 8] = [
+const CONFORMANCE_FLAGS: [(&str, bool); 11] = [
     ("baseline", true),
     ("write-baseline", true),
     ("report", true),
@@ -614,10 +750,14 @@ const CONFORMANCE_FLAGS: [(&str, bool); 8] = [
     ("closed-loop-report", true),
     ("workers", true),
     ("serial", false),
+    ("lab", false),
+    ("resume", false),
+    ("no-store", false),
 ];
 
-fn cmd_conformance(args: &Args) -> Result<()> {
+fn cmd_conformance(args: &Args) -> Result<ExitCode> {
     check_flags(args, &CONFORMANCE_FLAGS, "conformance")?;
+    let lab = parse_lab(args)?;
     if args.has("baseline") && args.has("write-baseline") {
         bail!("--baseline and --write-baseline are mutually exclusive");
     }
@@ -645,7 +785,10 @@ fn cmd_conformance(args: &Args) -> Result<()> {
     } else {
         args.get_usize("workers", 0)?
     };
-    let runner = SweepRunner::new(workers);
+    // With a lab attached, every conformance grid cell persists and
+    // `--resume` after an interruption serves the persisted cells (the
+    // store is content-addressed, so reuse needs no manifest here).
+    let runner = runner_for(workers, &lab);
     if writes {
         if let Some(path) = args.get("write-baseline") {
             let base = ConformanceBaseline::capture(&runner)?;
@@ -667,7 +810,7 @@ fn cmd_conformance(args: &Args) -> Result<()> {
                 base.claims.len()
             );
         }
-        return Ok(());
+        return Ok(ExitCode::Ok);
     }
     if !checks {
         // Observational mode: run the Tables IX-XI grids plus the
@@ -706,7 +849,7 @@ fn cmd_conformance(args: &Args) -> Result<()> {
             }
         }
         print!("{}", t.render());
-        return Ok(());
+        return Ok(ExitCode::Ok);
     }
     // Check mode: stdout carries the machine-readable report (one report
     // object, or a combined document when both baselines are checked),
@@ -751,15 +894,12 @@ fn cmd_conformance(args: &Args) -> Result<()> {
         std::fs::write(out, &payload)?;
     }
     println!("{payload}");
-    if !clean {
-        std::process::exit(2);
-    }
-    Ok(())
+    Ok(if clean { ExitCode::Ok } else { ExitCode::Regression })
 }
 
 /// The sensitivity flag inventory: (name, takes a value) — one table
 /// drives both validation passes, like [`SWEEP_FLAGS`].
-const SENSITIVITY_FLAGS: [(&str, bool); 9] = [
+const SENSITIVITY_FLAGS: [(&str, bool); 12] = [
     ("arch", true),
     ("threads", true),
     ("strategy", true),
@@ -769,10 +909,14 @@ const SENSITIVITY_FLAGS: [(&str, bool); 9] = [
     ("json", true),
     ("workers", true),
     ("serial", false),
+    ("lab", false),
+    ("resume", false),
+    ("no-store", false),
 ];
 
-fn cmd_sensitivity(args: &Args) -> Result<()> {
+fn cmd_sensitivity(args: &Args) -> Result<ExitCode> {
     check_flags(args, &SENSITIVITY_FLAGS, "sensitivity")?;
+    let lab = parse_lab(args)?;
     let mut spec = SensitivitySpec::default();
     if let Some(v) = args.get("arch") {
         spec.archs = if v == "all" {
@@ -808,7 +952,7 @@ fn cmd_sensitivity(args: &Args) -> Result<()> {
     } else {
         args.get_usize("workers", 0)?
     };
-    let report = sensitivity::run(&spec, &SweepRunner::new(workers))?;
+    let report = sensitivity::run(&spec, &runner_for(workers, &lab))?;
     if let Some(path) = args.get("json") {
         std::fs::write(path, report.to_json().emit())?;
         eprintln!(
@@ -818,10 +962,81 @@ fn cmd_sensitivity(args: &Args) -> Result<()> {
         );
     }
     print!("{}", report.render());
-    Ok(())
+    Ok(ExitCode::Ok)
 }
 
-fn cmd_probe(args: &Args) -> Result<()> {
+/// `repro lab list|gc|trace-params` (and the equivalent top-level
+/// aliases, which pass `verb` explicitly). All verbs address the lab at
+/// `--lab PATH`, default `./result`.
+fn cmd_lab(args: &Args, verb: Option<&str>) -> Result<ExitCode> {
+    const LAB_FLAGS: [(&str, bool); 4] =
+        [("lab", false), ("dry-run", false), ("arch", true), ("params", true)];
+    check_flags(args, &LAB_FLAGS, "lab")?;
+    let verb = match verb {
+        Some(v) => {
+            if !args.positional.is_empty() {
+                bail!("unexpected argument {:?}", args.positional[0]);
+            }
+            v
+        }
+        None => match args.positional.as_slice() {
+            [v] => v.as_str(),
+            [] => bail!("lab needs a verb: list | gc | trace-params"),
+            more => bail!("unexpected argument {:?}", more[1]),
+        },
+    };
+    let lab = Lab::open(args.get("lab").unwrap_or("./result"))?;
+    match verb {
+        "list" => {
+            let runs = lab.list_runs()?;
+            let mut t = Table::new(
+                format!("lab runs — {}", runs.len()),
+                &["id", "status", "scenarios"],
+            );
+            for m in &runs {
+                t.row(vec![
+                    m.get("id").and_then(|j| j.as_str()).unwrap_or("?").to_string(),
+                    m.get("status").and_then(|j| j.as_str()).unwrap_or("?").to_string(),
+                    m.get("scenarios")
+                        .and_then(|j| j.as_usize())
+                        .map(|n| n.to_string())
+                        .unwrap_or_else(|| "?".into()),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+        "gc" => {
+            let report = lab.gc(args.has("dry-run"))?;
+            println!(
+                "gc{}: scanned {} store files, removed {}, kept {}",
+                if report.dry_run { " (dry run)" } else { "" },
+                report.scanned,
+                report.removed,
+                report.kept
+            );
+        }
+        "trace-params" => {
+            let arch = args
+                .get("arch")
+                .ok_or_else(|| err!("trace-params needs --arch"))?;
+            let source = parse_params(args)?;
+            match lab.trace_params(arch, source, &SimConfig::default()) {
+                Some(doc) => println!("{}", doc.emit()),
+                None => {
+                    eprintln!(
+                        "no persisted calibration for ({arch}, {}) in this lab",
+                        micdl::lab::source_tag(source)
+                    );
+                    return Ok(ExitCode::Error);
+                }
+            }
+        }
+        other => bail!("unknown lab verb {other:?} (expected list | gc | trace-params)"),
+    }
+    Ok(ExitCode::Ok)
+}
+
+fn cmd_probe(args: &Args) -> Result<ExitCode> {
     let arch = parse_arch(args)?;
     let cfg = SimConfig::default();
     let mut t = Table::new(
@@ -835,10 +1050,10 @@ fn cmd_probe(args: &Args) -> Result<()> {
         ]);
     }
     print!("{}", t.render());
-    Ok(())
+    Ok(ExitCode::Ok)
 }
 
-fn cmd_train(args: &Args) -> Result<()> {
+fn cmd_train(args: &Args) -> Result<ExitCode> {
     let backend = args.get("backend").unwrap_or("engine");
     let epochs = args.get_usize("epochs", 3)?;
     let n_train = args.get_usize("images", 2000)?;
@@ -898,10 +1113,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         other => bail!("--backend must be engine|pjrt, got {other:?}"),
     }
-    Ok(())
+    Ok(ExitCode::Ok)
 }
 
-fn cmd_selfcheck(args: &Args) -> Result<()> {
+fn cmd_selfcheck(args: &Args) -> Result<ExitCode> {
     // 1. Simulator fidelity crosscheck.
     let cfg = SimConfig::default();
     for arch in ArchSpec::paper_archs() {
@@ -938,5 +1153,5 @@ fn cmd_selfcheck(args: &Args) -> Result<()> {
         Err(e) => println!("artifacts: not available ({e}) — run `make artifacts`"),
     }
     println!("selfcheck OK");
-    Ok(())
+    Ok(ExitCode::Ok)
 }

@@ -116,6 +116,7 @@ pub fn delta_series(
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // exercises the deprecated direct constructors
 mod tests {
     use super::*;
     use crate::perfmodel::{ParamSource, StrategyA, StrategyB};

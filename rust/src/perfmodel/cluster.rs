@@ -122,11 +122,14 @@ impl<M: PerfModel> ClusterModel<M> {
 
 /// Convenience: strategy-(b) cluster model over InfiniBand.
 pub fn default_cluster(arch: &ArchSpec) -> Result<ClusterModel<crate::perfmodel::StrategyB>> {
-    let node = crate::perfmodel::StrategyB::new(arch, ParamSource::Paper)?;
+    let params = crate::calibration::Calibration::new(ParamSource::Paper)
+        .resolve(arch, &crate::simulator::SimConfig::default())?;
+    let node = crate::perfmodel::StrategyB::from_params(&params)?;
     ClusterModel::new(arch, node, Interconnect::infiniband_fdr())
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // exercises the deprecated direct constructors
 mod tests {
     use super::*;
 

@@ -95,6 +95,18 @@ pub trait PerfModel {
     fn name(&self) -> &'static str;
 }
 
+// Boxed models (what `Calibration::strategy` hands out) are models too,
+// so call sites generic over `M: PerfModel` take either form.
+impl<T: PerfModel + ?Sized> PerfModel for Box<T> {
+    fn predict(&self, run: &RunConfig) -> Result<Prediction> {
+        (**self).predict(run)
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
 /// The CPI factor the models apply for `p` threads on `machine`
 /// (Table III: derived from threads-per-core occupancy, saturating at the
 /// ladder's last entry beyond the hardware thread count).
@@ -102,12 +114,17 @@ pub fn model_cpi(machine: &MachineConfig, p: usize) -> f64 {
     machine.cpi(machine.occupancy(p))
 }
 
-/// Convenience: build both models for an architecture.
+/// Convenience: build both models for an architecture. One calibration
+/// resolution is shared by the pair (the [`crate::calibration`] facade
+/// policy), which keeps it bit-identical to the deprecated per-model
+/// constructors.
 pub fn both_models(
     arch: &ArchSpec,
     source: ParamSource,
 ) -> Result<(StrategyA, StrategyB)> {
-    Ok((StrategyA::new(arch, source)?, StrategyB::new(arch, source)?))
+    let params = crate::calibration::Calibration::new(source)
+        .resolve(arch, &crate::simulator::SimConfig::default())?;
+    Ok((StrategyA::from_params(&params)?, StrategyB::from_params(&params)?))
 }
 
 #[cfg(test)]

@@ -57,6 +57,8 @@ impl StrategyA {
     /// Build the model against the default simulator configuration
     /// ([`StrategyA::with_sim`] with
     /// [`crate::simulator::SimConfig::default`]).
+    #[deprecated(note = "use Calibration::strategy(arch, Strategy::A, sim) \
+                         (or StrategyA::from_params on a resolved set)")]
     pub fn new(arch: &ArchSpec, source: ParamSource) -> Result<StrategyA> {
         StrategyA::with_sim(arch, source, &crate::simulator::SimConfig::default())
     }
@@ -70,6 +72,8 @@ impl StrategyA {
     /// measurements); under [`ParamSource::Paper`] the published
     /// Tables II–IV values are used and only the CPI/clock terms and the
     /// machine follow `sim`.
+    #[deprecated(note = "use Calibration::strategy(arch, Strategy::A, sim) \
+                         (or StrategyA::from_params on a resolved set)")]
     pub fn with_sim(
         arch: &ArchSpec,
         source: ParamSource,
@@ -152,6 +156,7 @@ impl PerfModel for StrategyA {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the equivalence pins exercise the deprecated constructors
 mod tests {
     use super::*;
     use crate::report::paper;

@@ -48,6 +48,8 @@ pub struct StrategyB {
 impl StrategyB {
     /// Build the model against the default simulator configuration
     /// ([`StrategyB::with_sim`] with [`SimConfig::default`]).
+    #[deprecated(note = "use Calibration::strategy(arch, Strategy::B, sim) \
+                         (or StrategyB::from_params on a resolved set)")]
     pub fn new(arch: &ArchSpec, source: ParamSource) -> Result<StrategyB> {
         StrategyB::with_sim(arch, source, &SimConfig::default())
     }
@@ -61,6 +63,8 @@ impl StrategyB {
     /// produces the sweep's measurements; under [`ParamSource::Paper`]
     /// the Table III values are used and only the CPI terms and the
     /// machine follow `sim`.
+    #[deprecated(note = "use Calibration::strategy(arch, Strategy::B, sim) \
+                         (or StrategyB::from_params on a resolved set)")]
     pub fn with_sim(
         arch: &ArchSpec,
         source: ParamSource,
@@ -123,6 +127,7 @@ impl PerfModel for StrategyB {
 }
 
 #[cfg(test)]
+#[allow(deprecated)] // the equivalence pins exercise the deprecated constructors
 mod tests {
     use super::*;
 

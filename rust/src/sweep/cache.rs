@@ -32,9 +32,11 @@ use std::sync::{Arc, Mutex};
 
 use crate::calibration::Calibration;
 use crate::error::Result;
-use crate::perfmodel::{ParamSource, PerfModel, StrategyA, StrategyB};
+use crate::lab::{self, Store};
+use crate::perfmodel::{ParamSource, PerfModel, Prediction};
 use crate::simulator::{simulate_training_with, CostModel, SimConfig};
 use crate::sweep::grid::{GridSpec, Scenario, Strategy};
+use crate::util::json::Json;
 
 /// A model usable from any sweep worker.
 pub type SharedModel = Arc<dyn PerfModel + Send + Sync>;
@@ -92,6 +94,11 @@ pub struct SweepCache {
     measured: Mutex<HashMap<(String, usize, usize, usize, usize, u64), f64>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    /// Optional disk layer ([`crate::lab`]): evaluated cells, resolved
+    /// parameters and measurements are served from it on in-process
+    /// misses and written through on compute. Disk traffic is counted in
+    /// the store's own [`lab::StoreStats`], not in [`CacheStats`].
+    store: Option<Arc<Store>>,
 }
 
 impl SweepCache {
@@ -113,7 +120,26 @@ impl SweepCache {
             measured: Mutex::new(HashMap::new()),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
+            store: None,
         }
+    }
+
+    /// Attach a disk store (builder form of [`SweepCache::set_store`]).
+    pub fn with_store(mut self, store: Arc<Store>) -> SweepCache {
+        self.set_store(store);
+        self
+    }
+
+    /// Attach a disk store. Calibrations built before the attach carry
+    /// no store, so the (lazily built) per-source entries are reset.
+    pub fn set_store(&mut self, store: Arc<Store>) {
+        self.store = Some(store);
+        self.calibrations.lock().unwrap().clear();
+    }
+
+    /// The attached disk store, if any.
+    pub fn store(&self) -> Option<&Arc<Store>> {
+        self.store.as_ref()
     }
 
     /// The base simulator configuration the measured path runs under.
@@ -169,7 +195,13 @@ impl SweepCache {
                 .lock()
                 .unwrap()
                 .entry(key)
-                .or_insert_with(|| Arc::new(Calibration::new(source))),
+                .or_insert_with(|| {
+                    let mut cal = Calibration::new(source);
+                    if let Some(store) = &self.store {
+                        cal = cal.with_store(Arc::clone(store));
+                    }
+                    Arc::new(cal)
+                }),
         )
     }
 
@@ -189,11 +221,10 @@ impl SweepCache {
         if let Some(model) = self.probe(&self.models, &key) {
             return Ok(model);
         }
-        let params = self.calibration(grid.params).resolve(arch, &sim)?;
-        let built: SharedModel = match scn.strategy {
-            Strategy::A => Arc::new(StrategyA::from_params(&params)?),
-            Strategy::B => Arc::new(StrategyB::from_params(&params)?),
-        };
+        let built: SharedModel = Arc::from(
+            self.calibration(grid.params)
+                .strategy(arch, scn.strategy, &sim)?,
+        );
         Ok(self
             .models
             .lock()
@@ -239,9 +270,130 @@ impl SweepCache {
         if let Some(v) = self.probe(&self.measured, &key) {
             return Ok(v);
         }
+        // Disk next: a persisted measurement skips the cost-model build
+        // entirely (f64s round-trip bit-exactly through the store).
+        let skey = lab::measured_key(
+            &arch.name,
+            scn.threads,
+            scn.train_images,
+            scn.test_images,
+            scn.epochs,
+            fp,
+        );
+        if let Some(store) = &self.store {
+            if let Some(v) = store
+                .get(lab::Kind::Measured, &skey)
+                .and_then(|p| p.get("execution_s").and_then(Json::as_f64))
+            {
+                return Ok(*self.measured.lock().unwrap().entry(key).or_insert(v));
+            }
+        }
         let cost = self.cost(grid, scn)?;
         let v = simulate_training_with(&cost, &scn.run(), &sim)?.execution_s;
+        if let Some(store) = &self.store {
+            store.put(
+                lab::Kind::Measured,
+                &skey,
+                Json::obj(vec![("execution_s", Json::num(v))]),
+            )?;
+        }
         Ok(*self.measured.lock().unwrap().entry(key).or_insert(v))
+    }
+
+    /// The persisted evaluation of a whole cell, when a store is
+    /// attached and holds one: `(prediction, measured_s, delta_pct)`.
+    ///
+    /// On a measuring grid an entry without a measurement counts as a
+    /// store miss (the cell must be recomputed and overwritten); on a
+    /// non-measuring grid an entry's measurement is *not* served, so
+    /// results stay identical to a storeless run of the same grid.
+    pub fn stored_cell(
+        &self,
+        grid: &GridSpec,
+        scn: &Scenario,
+    ) -> Option<(Prediction, Option<f64>, Option<f64>)> {
+        let store = self.store.as_ref()?;
+        let (_, fp) = self.resolved_sim(grid, scn);
+        let key = Self::cell_key_for(grid, scn, fp);
+        let cell = store
+            .peek(lab::Kind::Cells, &key)
+            .and_then(|payload| Self::cell_from_payload(&payload, grid.measure));
+        store.record(cell.is_some());
+        cell
+    }
+
+    fn cell_from_payload(
+        payload: &Json,
+        measure: bool,
+    ) -> Option<(Prediction, Option<f64>, Option<f64>)> {
+        let p = payload.get("prediction")?;
+        let prediction = Prediction {
+            prep_s: p.get("prep_s")?.as_f64()?,
+            train_s: p.get("train_s")?.as_f64()?,
+            test_s: p.get("test_s")?.as_f64()?,
+            mem_s: p.get("mem_s")?.as_f64()?,
+            total_s: p.get("total_s")?.as_f64()?,
+        };
+        if !measure {
+            return Some((prediction, None, None));
+        }
+        let measured_s = payload.get("measured_s").and_then(Json::as_f64)?;
+        let delta_pct = payload.get("delta_pct").and_then(Json::as_f64)?;
+        Some((prediction, Some(measured_s), Some(delta_pct)))
+    }
+
+    /// Write a fully evaluated cell through to the store (no-op without
+    /// one), carrying its calibration provenance.
+    pub fn put_cell(
+        &self,
+        grid: &GridSpec,
+        scn: &Scenario,
+        prediction: &Prediction,
+        measured_s: Option<f64>,
+        delta_pct: Option<f64>,
+    ) -> Result<()> {
+        let Some(store) = self.store.as_ref() else {
+            return Ok(());
+        };
+        let (_, fp) = self.resolved_sim(grid, scn);
+        let key = Self::cell_key_for(grid, scn, fp);
+        let mut pairs = vec![
+            (
+                "prediction",
+                Json::obj(vec![
+                    ("prep_s", Json::num(prediction.prep_s)),
+                    ("train_s", Json::num(prediction.train_s)),
+                    ("test_s", Json::num(prediction.test_s)),
+                    ("mem_s", Json::num(prediction.mem_s)),
+                    ("total_s", Json::num(prediction.total_s)),
+                ]),
+            ),
+            (
+                "calibrator",
+                Json::str(self.calibration(grid.params).calibrator_name()),
+            ),
+            ("source", Json::str(lab::source_tag(grid.params))),
+        ];
+        if let Some(m) = measured_s {
+            pairs.push(("measured_s", Json::num(m)));
+        }
+        if let Some(d) = delta_pct {
+            pairs.push(("delta_pct", Json::num(d)));
+        }
+        store.put(lab::Kind::Cells, &key, Json::obj(pairs))
+    }
+
+    fn cell_key_for(grid: &GridSpec, scn: &Scenario, fp: u64) -> String {
+        lab::cell_key(
+            &grid.archs[scn.arch].name,
+            scn.strategy.as_str(),
+            scn.threads,
+            scn.train_images,
+            scn.test_images,
+            scn.epochs,
+            grid.params,
+            fp,
+        )
     }
 
     /// Hit/miss counters accumulated so far.

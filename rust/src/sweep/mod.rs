@@ -18,7 +18,10 @@
 //!   resolved simulator's [`crate::simulator::SimConfig::fingerprint`]
 //!   included, so variants share within and never leak across);
 //! * [`runner`] — [`SweepRunner`], the scoped-thread worker pool whose
-//!   parallel results are bit-identical to a serial run;
+//!   parallel results are bit-identical to a serial run, optionally
+//!   persisting every cell through a [`crate::lab`] disk store
+//!   ([`SweepRunner::with_store`]) so repeated runs are pure store hits
+//!   and interrupted sweeps resume from the last persisted cell;
 //! * [`summary`] — [`SweepResults`], O(1) stride addressing, grid-level
 //!   accuracy aggregation (mean/max Δ per sim variant × architecture ×
 //!   strategy — the sweep-native Table IX), JSON dump, and paper-style
@@ -53,6 +56,7 @@ pub mod summary;
 
 pub use baseline::{Baseline, BaselineCell, CellDiff, DiffReport};
 pub use cache::{CacheStats, SweepCache};
+pub use crate::lab::StoreStats;
 pub use conformance::{
     BandCheck, BandSpec, ClaimCheck, ClaimSpec, ConformanceBaseline, ConformanceReport,
 };

@@ -8,20 +8,24 @@
 //! scheduling — asserted by `tests/sweep.rs`.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::error::{Error, Result};
+use crate::lab::Store;
 use crate::perfmodel::delta_pct;
 use crate::sweep::cache::SweepCache;
 use crate::sweep::grid::{GridSpec, Scenario};
 use crate::sweep::summary::{ScenarioResult, SweepResults};
 
-/// Concurrency policy for one sweep.
-#[derive(Debug, Clone, Copy)]
+/// Concurrency policy (plus optional persistence) for one sweep.
+#[derive(Debug, Clone)]
 pub struct SweepRunner {
     /// Worker thread count (≥ 1; see [`SweepRunner::new`]).
     pub workers: usize,
+    /// Optional [`crate::lab`] store attached to every run's cache
+    /// ([`SweepRunner::with_store`]).
+    store: Option<Arc<Store>>,
 }
 
 impl SweepRunner {
@@ -34,12 +38,21 @@ impl SweepRunner {
         } else {
             workers
         };
-        SweepRunner { workers }
+        SweepRunner { workers, store: None }
     }
 
     /// Single-threaded reference runner.
     pub fn serial() -> SweepRunner {
-        SweepRunner { workers: 1 }
+        SweepRunner { workers: 1, store: None }
+    }
+
+    /// Persist through a [`crate::lab`] store: every run's cache serves
+    /// cells/params/measurements from it and writes computed values
+    /// through. [`SweepResults::store`] then carries the run's disk
+    /// hit/miss delta.
+    pub fn with_store(mut self, store: Arc<Store>) -> SweepRunner {
+        self.store = Some(store);
+        self
     }
 
     /// Evaluate every scenario of `grid`.
@@ -61,8 +74,14 @@ impl SweepRunner {
         self.run_with_cache(grid, SweepCache::with_sim(sim.clone()))
     }
 
-    fn run_with_cache(&self, grid: &GridSpec, cache: SweepCache) -> Result<SweepResults> {
+    fn run_with_cache(&self, grid: &GridSpec, mut cache: SweepCache) -> Result<SweepResults> {
         grid.validate()?;
+        if let Some(store) = &self.store {
+            cache.set_store(Arc::clone(store));
+        }
+        // Store counters are store-lifetime monotonic; report this run's
+        // delta.
+        let store_before = self.store.as_ref().map(|s| s.stats());
         let scenarios = grid.enumerate();
         let started = Instant::now();
         let results = if self.workers <= 1 || scenarios.len() < 2 {
@@ -78,14 +97,30 @@ impl SweepRunner {
             grid: grid.clone(),
             results,
             cache: cache.stats(),
+            store: self
+                .store
+                .as_ref()
+                .zip(store_before)
+                .map(|(s, before)| s.stats().since(&before)),
             wall_s: started.elapsed().as_secs_f64(),
             workers: self.workers,
         })
     }
 }
 
-/// Evaluate one scenario against the shared cache.
+/// Evaluate one scenario against the shared cache. A persisted cell
+/// (store attached, entry present and — on measuring grids — carrying a
+/// measurement) short-circuits the whole evaluation: no model build, no
+/// cost model, no simulation.
 fn evaluate(grid: &GridSpec, cache: &SweepCache, scn: &Scenario) -> Result<ScenarioResult> {
+    if let Some((prediction, measured_s, delta)) = cache.stored_cell(grid, scn) {
+        return Ok(ScenarioResult {
+            scenario: scn.clone(),
+            prediction,
+            measured_s,
+            delta_pct: delta,
+        });
+    }
     let model = cache.model(grid, scn)?;
     let prediction = model.predict(&scn.run())?;
     let (measured_s, delta) = if grid.measure {
@@ -94,6 +129,7 @@ fn evaluate(grid: &GridSpec, cache: &SweepCache, scn: &Scenario) -> Result<Scena
     } else {
         (None, None)
     };
+    cache.put_cell(grid, scn, &prediction, measured_s, delta)?;
     Ok(ScenarioResult {
         scenario: scn.clone(),
         prediction,

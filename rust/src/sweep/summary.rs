@@ -52,6 +52,9 @@ pub struct SweepResults {
     pub results: Vec<ScenarioResult>,
     /// Cache hit/miss telemetry for the run.
     pub cache: CacheStats,
+    /// Disk-store hit/miss telemetry for the run (`None` unless the
+    /// runner had a [`crate::lab`] store attached).
+    pub store: Option<crate::lab::StoreStats>,
     /// Wall-clock seconds the sweep took.
     pub wall_s: f64,
     /// Worker threads the sweep ran on.
@@ -330,7 +333,7 @@ impl SweepResults {
             ));
         }
         grid_pairs.push(("measure", Json::Bool(g.measure)));
-        Json::obj(vec![
+        let mut top = vec![
             ("grid", Json::obj(grid_pairs)),
             ("scenarios", Json::num(self.len() as f64)),
             ("workers", Json::num(self.workers as f64)),
@@ -342,6 +345,17 @@ impl SweepResults {
                     ("misses", Json::num(self.cache.misses as f64)),
                 ]),
             ),
+        ];
+        if let Some(store) = &self.store {
+            top.push((
+                "store",
+                Json::obj(vec![
+                    ("hits", Json::num(store.hits as f64)),
+                    ("misses", Json::num(store.misses as f64)),
+                ]),
+            ));
+        }
+        top.extend([
             (
                 "accuracy",
                 Json::Arr(
@@ -366,7 +380,8 @@ impl SweepResults {
                 ),
             ),
             ("results", Json::Arr(rows)),
-        ])
+        ]);
+        Json::obj(top)
     }
 
     /// Paper-style table: every scenario when `full`, otherwise one
@@ -512,12 +527,13 @@ impl SweepResults {
         t
     }
 
-    /// Render a table plus the run footer (wall time + cache telemetry).
+    /// Render a table plus the run footer (wall time + cache telemetry;
+    /// store telemetry too when a lab store was attached).
     pub fn render(&self, full: bool) -> String {
         let mut out = self.table(full).render();
         out.push_str(&format!(
             "{} scenarios in {:.3}s ({} workers) | cache: {} hits / {} misses \
-             ({:.0}% hit rate)\n",
+             ({:.0}% hit rate)",
             self.len(),
             self.wall_s,
             self.workers,
@@ -525,6 +541,13 @@ impl SweepResults {
             self.cache.misses,
             self.cache.hit_rate() * 100.0,
         ));
+        if let Some(store) = &self.store {
+            out.push_str(&format!(
+                " | store: {} hits / {} misses",
+                store.hits, store.misses
+            ));
+        }
+        out.push('\n');
         out
     }
 }

@@ -1,3 +1,5 @@
+#![allow(deprecated)] // the equivalence pins exercise the deprecated constructors
+
 //! Calibration-subsystem integration tests: pre-refactor equivalence
 //! (Paper-source predictions are bit-identical to the published-constant
 //! closed forms on the Table IX/X/XI grids), closed-loop determinism

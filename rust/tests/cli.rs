@@ -253,6 +253,167 @@ fn sweep_rejects_bad_axis() {
     assert!(String::from_utf8_lossy(&out.stderr).contains("range"));
 }
 
+fn stderr(out: &Output) -> String {
+    String::from_utf8_lossy(&out.stderr).to_string()
+}
+
+#[test]
+fn sweep_noun_verb_and_legacy_spellings() {
+    // The canonical spelling: no deprecation note.
+    let out = repro(&["sweep", "run", "--arch", "small", "--threads", "15",
+                      "--strategy", "a", "--serial"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(!stderr(&out).contains("deprecated:"), "{}", stderr(&out));
+    assert!(stdout(&out).contains("sweep summary"));
+    // The verbless legacy spelling still works, with one deprecation note.
+    let out = repro(&["sweep", "--arch", "small", "--threads", "15",
+                      "--strategy", "a", "--serial"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let e = stderr(&out);
+    assert!(e.contains("deprecated:") && e.contains("sweep run"), "{e}");
+    // Unknown verbs are rejected, not silently treated as legacy mode.
+    let out = repro(&["sweep", "frobnicate"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("unknown sweep verb"), "{}", stderr(&out));
+}
+
+#[test]
+fn sweep_baseline_verbs_match_legacy_flags() {
+    let dir = micdl::util::tmp::TempDir::new("cli-baseline").unwrap();
+    let path = dir.path().join("base.json");
+    let p = path.to_str().unwrap();
+    let grid = ["--arch", "small", "--threads", "15,61", "--strategy", "a", "--serial"];
+    // Noun-verb write…
+    let mut args = vec!["sweep", "baseline", "write", p];
+    args.extend_from_slice(&grid);
+    let out = repro(&args);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(path.exists());
+    // …checked by the noun-verb compare (clean → exit 0)…
+    let mut args = vec!["sweep", "baseline", "compare", p];
+    args.extend_from_slice(&grid);
+    let out = repro(&args);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert_eq!(out.status.code(), Some(0));
+    // …and by the legacy flag spelling, which still works.
+    let mut args = vec!["sweep", "--compare", p];
+    args.extend_from_slice(&grid);
+    let out = repro(&args);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stderr(&out).contains("deprecated:"), "{}", stderr(&out));
+}
+
+#[test]
+fn sweep_lab_second_pass_is_pure_store_hits_with_identical_payload() {
+    // The acceptance criterion behind the CI two-pass smoke: an identical
+    // measured sweep against a warm lab performs zero recomputation
+    // (store misses 0) and emits the same grid/results/accuracy payload.
+    let dir = micdl::util::tmp::TempDir::new("cli-lab").unwrap();
+    let lab = dir.path().join("lab");
+    let cold_json = dir.path().join("cold.json");
+    let warm_json = dir.path().join("warm.json");
+    let run = |json: &std::path::Path| {
+        repro(&["sweep", "run", "--arch", "small", "--threads", "1,15",
+                "--strategy", "both", "--measure", "--serial",
+                "--lab", lab.to_str().unwrap(),
+                "--json", json.to_str().unwrap()])
+    };
+    let out = run(&cold_json);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let out = run(&warm_json);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let parse = |p: &std::path::Path| {
+        micdl::util::json::Json::parse(&std::fs::read_to_string(p).unwrap()).unwrap()
+    };
+    let (cold, warm) = (parse(&cold_json), parse(&warm_json));
+    let store = warm.get("store").unwrap();
+    assert_eq!(store.get("misses").unwrap().as_usize(), Some(0), "{store:?}");
+    assert_eq!(store.get("hits").unwrap().as_usize(), Some(4), "{store:?}");
+    for key in ["grid", "results", "accuracy", "scenarios"] {
+        assert_eq!(
+            cold.get(key).unwrap().emit(),
+            warm.get(key).unwrap().emit(),
+            "{key} differs between cold and warm pass"
+        );
+    }
+}
+
+#[test]
+fn sweep_resume_and_no_store_flags() {
+    let dir = micdl::util::tmp::TempDir::new("cli-resume").unwrap();
+    let lab = dir.path().join("lab");
+    let base = ["--arch", "small", "--threads", "15", "--strategy", "a", "--serial"];
+    // --resume/--no-store are meaningless without --lab.
+    let mut args = vec!["sweep", "run", "--resume"];
+    args.extend_from_slice(&base);
+    let out = repro(&args);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("requires --lab"), "{}", stderr(&out));
+    // First --resume: nothing to resume, runs fresh.
+    let mut args = vec!["sweep", "run", "--lab", lab.to_str().unwrap(), "--resume"];
+    args.extend_from_slice(&base);
+    let out = repro(&args);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stderr(&out).contains("starting fresh"), "{}", stderr(&out));
+    // Second --resume: reports the manifest it resumes.
+    let out = repro(&args);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stderr(&out).contains("resuming run"), "{}", stderr(&out));
+    // --no-store bypasses the lab entirely: no store telemetry.
+    let json = dir.path().join("nostore.json");
+    let mut args = vec!["sweep", "run", "--lab", lab.to_str().unwrap(), "--no-store",
+                        "--json", json.to_str().unwrap()];
+    args.extend_from_slice(&base);
+    let out = repro(&args);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let doc = micdl::util::json::Json::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+    assert!(doc.get("store").is_none());
+}
+
+#[test]
+fn lab_verbs_list_gc_trace_params() {
+    let dir = micdl::util::tmp::TempDir::new("cli-lab-verbs").unwrap();
+    let lab = dir.path().join("lab");
+    let lab_s = lab.to_str().unwrap();
+    let out = repro(&["sweep", "run", "--arch", "small", "--threads", "15",
+                      "--strategy", "a", "--serial", "--lab", lab_s]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    // list: one completed run manifest.
+    let out = repro(&["lab", "list", "--lab", lab_s]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.contains("lab runs — 1") && s.contains("complete"), "{s}");
+    // Top-level alias prints the same listing.
+    let out = repro(&["list", "--lab", lab_s]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert_eq!(stdout(&out), s);
+    // gc on a healthy store removes nothing.
+    let out = repro(&["lab", "gc", "--dry-run", "--lab", lab_s]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("(dry run)"), "{}", stdout(&out));
+    assert!(stdout(&out).contains("removed 0"), "{}", stdout(&out));
+    let out = repro(&["gc", "--lab", lab_s]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("removed 0"), "{}", stdout(&out));
+    // trace-params prints the persisted calibration entry with its key.
+    let out = repro(&["lab", "trace-params", "--arch", "small", "--lab", lab_s]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.contains("params:v1:small:paper:") && s.contains("calibrator"), "{s}");
+    // Nothing persisted for the sim source yet → exit 1 with a message.
+    let out = repro(&["trace-params", "--arch", "small", "--params", "sim",
+                      "--lab", lab_s]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("no persisted calibration"), "{}", stderr(&out));
+    // Verb validation.
+    let out = repro(&["lab", "frobnicate", "--lab", lab_s]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("unknown lab verb"), "{}", stderr(&out));
+    let out = repro(&["lab", "--lab", lab_s]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("needs a verb"), "{}", stderr(&out));
+}
+
 #[test]
 fn selfcheck_passes() {
     let out = repro(&["selfcheck"]);

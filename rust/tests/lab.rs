@@ -1,0 +1,160 @@
+//! Lab integration tests: the persistence acceptance criteria.
+//!
+//! * A warm identical run performs zero model / cost-model / measurement
+//!   recomputation — every cell is a store hit — and its results are
+//!   bit-identical to the cold run.
+//! * An interrupted sweep (modelled as a sub-grid run, then the full
+//!   grid with the same lab) resumes without recomputing the persisted
+//!   cells and matches a cold full run bit for bit.
+//! * A store-backed run is bit-identical to a storeless run, and the
+//!   store never serves a measurement-less cell to a measuring grid.
+
+use micdl::config::ArchSpec;
+use micdl::lab::Lab;
+use micdl::sweep::{GridSpec, ScenarioResult, Strategy, StoreStats, SweepRunner};
+use micdl::util::tmp::TempDir;
+
+fn measured_grid(threads: Vec<usize>) -> GridSpec {
+    GridSpec {
+        archs: vec![ArchSpec::small()],
+        threads,
+        strategies: vec![Strategy::A, Strategy::B],
+        measure: true,
+        ..GridSpec::default()
+    }
+}
+
+/// Every result field of `a` equals `b` bit for bit.
+fn assert_bit_identical(a: &[ScenarioResult], b: &[ScenarioResult], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}");
+    for (x, y) in a.iter().zip(b.iter()) {
+        assert_eq!(x.scenario, y.scenario, "{tag}");
+        for (l, r) in [
+            (x.prediction.prep_s, y.prediction.prep_s),
+            (x.prediction.train_s, y.prediction.train_s),
+            (x.prediction.test_s, y.prediction.test_s),
+            (x.prediction.mem_s, y.prediction.mem_s),
+            (x.prediction.total_s, y.prediction.total_s),
+        ] {
+            assert_eq!(l.to_bits(), r.to_bits(), "{tag} id {}", x.scenario.id);
+        }
+        assert_eq!(
+            x.measured_s.map(f64::to_bits),
+            y.measured_s.map(f64::to_bits),
+            "{tag} id {}",
+            x.scenario.id
+        );
+        assert_eq!(
+            x.delta_pct.map(f64::to_bits),
+            y.delta_pct.map(f64::to_bits),
+            "{tag} id {}",
+            x.scenario.id
+        );
+    }
+}
+
+#[test]
+fn warm_rerun_is_pure_store_hits_and_bit_identical() {
+    let dir = TempDir::new("lab-warm").unwrap();
+    let grid = measured_grid(vec![1, 15]);
+    let cold = Lab::open(dir.path()).unwrap().run(&grid, 1).unwrap();
+    // Cold: every store lookup misses — 4 cells + 1 shared param set +
+    // 2 strategy-independent measurements.
+    assert_eq!(cold.store, Some(StoreStats { hits: 0, misses: 7 }), "{:?}", cold.store);
+    // Warm, through a fresh facade (cold in-process caches): every cell
+    // serves from disk before any model is even built.
+    let warm = Lab::open(dir.path()).unwrap().run(&grid, 1).unwrap();
+    let stats = warm.store.expect("store attached");
+    assert_eq!(stats, StoreStats { hits: 4, misses: 0 }, "{stats:?}");
+    assert_eq!(stats.hit_rate(), 1.0);
+    // Nothing recomputed means nothing entered the in-process cache.
+    assert_eq!(warm.cache.misses, 0, "{:?}", warm.cache);
+    assert_bit_identical(&cold.results, &warm.results, "cold vs warm");
+    // The payload a script consumes (grid + per-cell rows + accuracy) is
+    // byte-identical run over run.
+    let strip = |r: &micdl::sweep::SweepResults| {
+        let doc = r.to_json();
+        (
+            doc.get("grid").unwrap().emit(),
+            doc.get("results").unwrap().emit(),
+            doc.get("accuracy").unwrap().emit(),
+        )
+    };
+    assert_eq!(strip(&cold), strip(&warm));
+}
+
+#[test]
+fn interrupted_sweep_resumes_without_recomputing_persisted_cells() {
+    // An interruption mid-grid leaves a prefix of cells persisted; the
+    // resumed run must serve exactly those from the store and compute
+    // only the rest, landing bit-identical to a cold full run.
+    let shared = TempDir::new("lab-resume").unwrap();
+    let partial = Lab::open(shared.path()).unwrap();
+    let sub = measured_grid(vec![1]);
+    let first = partial.run(&sub, 1).unwrap();
+    assert_eq!(first.store.unwrap().hits, 0);
+    // "Resume": the full grid against the same lab.
+    let full = measured_grid(vec![1, 15]);
+    let resumed = Lab::open(shared.path()).unwrap().run(&full, 1).unwrap();
+    let stats = resumed.store.unwrap();
+    // The 2 persisted cells hit (plus the persisted param set); only the
+    // threads=15 half of the grid computes.
+    assert!(stats.hits >= 2, "{stats:?}");
+    assert_eq!(stats.misses, 3, "{stats:?}");
+    // Bit-identical to a cold full run in a fresh lab.
+    let fresh = TempDir::new("lab-cold").unwrap();
+    let cold = Lab::open(fresh.path()).unwrap().run(&full, 1).unwrap();
+    assert_bit_identical(&cold.results, &resumed.results, "cold vs resumed");
+    // The lab kept one manifest per distinct grid, both complete.
+    let lab = Lab::open(shared.path()).unwrap();
+    let runs = lab.list_runs().unwrap();
+    assert_eq!(runs.len(), 2);
+    for m in &runs {
+        assert_eq!(m.get("status").unwrap().as_str(), Some("complete"));
+    }
+    assert!(lab.find_run(&full).unwrap().is_some());
+}
+
+#[test]
+fn store_backed_runs_match_storeless_bitwise() {
+    let dir = TempDir::new("lab-parity").unwrap();
+    let grid = measured_grid(vec![61]);
+    let storeless = SweepRunner::serial().run(&grid).unwrap();
+    assert!(storeless.store.is_none());
+    let stored = Lab::open(dir.path()).unwrap().run(&grid, 1).unwrap();
+    assert!(stored.store.is_some());
+    assert_bit_identical(&storeless.results, &stored.results, "storeless vs stored");
+    // And the storeless footer/JSON carry no store section at all.
+    assert!(storeless.to_json().get("store").is_none());
+    assert!(!storeless.render(false).contains("store:"));
+    assert!(stored.to_json().get("store").is_some());
+    assert!(stored.render(false).contains("store:"));
+}
+
+#[test]
+fn measuring_grid_rejects_prediction_only_cells_then_upgrades_them() {
+    // A cell persisted by a prediction-only sweep must not satisfy a
+    // measuring sweep (it has no measurement); the measuring run
+    // recomputes and overwrites it, after which both grid flavours hit.
+    let dir = TempDir::new("lab-upgrade").unwrap();
+    let mut grid = measured_grid(vec![15]);
+    grid.strategies = vec![Strategy::A];
+    grid.measure = false;
+    let lab = Lab::open(dir.path()).unwrap();
+    let predicted = lab.run(&grid, 1).unwrap();
+    assert_eq!(predicted.store, Some(StoreStats { hits: 0, misses: 2 }));
+    grid.measure = true;
+    let measuring = Lab::open(dir.path()).unwrap().run(&grid, 1).unwrap();
+    let stats = measuring.store.unwrap();
+    // The stale cell reads as a miss; only the param set hits.
+    assert_eq!(stats, StoreStats { hits: 1, misses: 2 }, "{stats:?}");
+    assert!(measuring.results[0].measured_s.is_some());
+    // Upgraded cell now serves both grid flavours from disk.
+    let warm_measure = Lab::open(dir.path()).unwrap().run(&grid, 1).unwrap();
+    assert_eq!(warm_measure.store, Some(StoreStats { hits: 1, misses: 0 }));
+    grid.measure = false;
+    let warm_predict = Lab::open(dir.path()).unwrap().run(&grid, 1).unwrap();
+    assert_eq!(warm_predict.store, Some(StoreStats { hits: 1, misses: 0 }));
+    assert!(warm_predict.results[0].measured_s.is_none());
+    assert_bit_identical(&predicted.results, &warm_predict.results, "predict flavours");
+}

@@ -699,6 +699,109 @@ fn prop_sim_axis_memoization_is_sound() {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Lab store: disk round-trip fidelity and key isolation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_store_roundtrips_any_json_payload_exactly() {
+    // Whatever JSON payload goes into the disk store comes back equal
+    // (the emit/parse round-trip the persistence layer rests on), and
+    // the hit/miss counters track exactly one miss then one hit per key.
+    use micdl::lab::{Kind, Store};
+    let dir = micdl::util::tmp::TempDir::new("prop-store").unwrap();
+    let store = Store::open(dir.path()).unwrap();
+    let mut rng = XorShift64::new(1111);
+    for case in 0..CASES {
+        let payload = random_json(&mut rng, 3);
+        let key = format!("cell:v1:prop:{case}");
+        assert!(store.get(Kind::Cells, &key).is_none(), "case {case}");
+        store.put(Kind::Cells, &key, payload.clone()).unwrap();
+        let back = store.get(Kind::Cells, &key).unwrap();
+        assert_eq!(back, payload, "case {case}");
+    }
+    let stats = store.stats();
+    assert_eq!(stats.misses, CASES as u64);
+    assert_eq!(stats.hits, CASES as u64);
+}
+
+#[test]
+fn prop_store_entries_never_leak_across_fingerprints() {
+    // The no-leak property behind "warm runs are safe": every key embeds
+    // its simulator fingerprint (and the cell keys their full axis
+    // coordinates), so an entry persisted under one resolved simulator
+    // configuration is never served for a different one, and the params
+    // and cell namespaces never collide even for equal axis values.
+    use micdl::lab::{cell_key, measured_key, params_key, Kind, Store};
+    use micdl::sweep::Strategy;
+    let dir = micdl::util::tmp::TempDir::new("prop-store-leak").unwrap();
+    let store = Store::open(dir.path()).unwrap();
+    let base = SimConfig::default();
+    let mut rng = XorShift64::new(2222);
+    for case in 0..CASES {
+        let v = random_sim_variant(&mut rng, format!("v{case}"));
+        let resolved = v.apply(&base);
+        let (fp_a, fp_b) = (base.fingerprint(), resolved.fingerprint());
+        if fp_a == fp_b {
+            continue; // the variant resolved value-identical to the base
+        }
+        let threads = 1 + rng.next_below(3840);
+        let source = if rng.next_below(2) == 0 {
+            ParamSource::Paper
+        } else {
+            ParamSource::Simulator
+        };
+        let strategy = if rng.next_below(2) == 0 { Strategy::A } else { Strategy::B };
+        let keys_a = [
+            params_key("small", source, fp_a),
+            cell_key("small", strategy.as_str(), threads, 60_000, 10_000, 70, source, fp_a),
+            measured_key("small", threads, 60_000, 10_000, 70, fp_a),
+        ];
+        let keys_b = [
+            params_key("small", source, fp_b),
+            cell_key("small", strategy.as_str(), threads, 60_000, 10_000, 70, source, fp_b),
+            measured_key("small", threads, 60_000, 10_000, 70, fp_b),
+        ];
+        for (kind, (a, b)) in [Kind::Params, Kind::Cells, Kind::Measured]
+            .into_iter()
+            .zip(keys_a.iter().zip(keys_b.iter()))
+        {
+            assert_ne!(a, b, "case {case}: fingerprint not in the {kind:?} key");
+            store
+                .put(kind, a, Json::obj(vec![("case", Json::num(case as f64))]))
+                .unwrap();
+            assert!(
+                store.peek(kind, b).is_none(),
+                "case {case}: {kind:?} entry for fp {fp_a:016x} served for {fp_b:016x}"
+            );
+            assert!(store.peek(kind, a).is_some(), "case {case}");
+        }
+        // Same coordinates, different source → different cell entry.
+        let other = match source {
+            ParamSource::Paper => ParamSource::Simulator,
+            _ => ParamSource::Paper,
+        };
+        assert!(
+            store
+                .peek(
+                    Kind::Cells,
+                    &cell_key(
+                        "small",
+                        strategy.as_str(),
+                        threads,
+                        60_000,
+                        10_000,
+                        70,
+                        other,
+                        fp_a
+                    )
+                )
+                .is_none(),
+            "case {case}: cell leaked across param sources"
+        );
+    }
+}
+
 #[test]
 fn prop_parallel_ablation_sweeps_bit_identical_to_serial() {
     use micdl::sweep::{GridSpec, Strategy, SweepRunner};
