@@ -10,7 +10,7 @@ use micdl::calibration::Calibration;
 use micdl::config::ArchSpec;
 use micdl::perfmodel::ParamSource;
 use micdl::simulator::SimConfig;
-use micdl::sweep::{GridSpec, SweepRunner};
+use micdl::sweep::{merge_shards, GridSpec, SweepRunner};
 use micdl::util::bench::Bench;
 use micdl::util::json::Json;
 
@@ -40,6 +40,15 @@ fn main() {
     });
     b.case("sweep/parallel/366", || {
         SweepRunner::new(0).run(&grid).unwrap().len()
+    });
+
+    // Sharded throughput: the mid grid split into 3 in-process shards
+    // plus the merge_shards reassembly — what one `--shards 3` driver
+    // wave costs beyond the whole-grid parallel case above.
+    b.case("sweep/shard3+merge/366", || {
+        let runner = SweepRunner::new(0);
+        let shards: Vec<_> = (0..3).map(|k| runner.run_shard(&grid, k, 3).unwrap()).collect();
+        merge_shards(&grid, shards).unwrap().len()
     });
 
     let measured = GridSpec { measure: true, ..mid_grid() };

@@ -34,8 +34,8 @@
 pub mod store;
 
 pub use store::{
-    cell_key, fnv1a, measured_key, params_key, run_id, source_tag, GcReport, Kind, Store,
-    StoreStats, ENTRY_KIND, RUN_KIND, STORE_VERSION,
+    cell_key, fnv1a, measured_key, params_key, run_id, shard_run_id, source_tag, GcReport,
+    Kind, Store, StoreStats, ENTRY_KIND, RUN_KIND, STORE_VERSION,
 };
 
 use std::path::Path;
@@ -97,6 +97,37 @@ impl Lab {
         Ok(results)
     }
 
+    /// Run shard `k` of `n` (0-based `k`; [`GridSpec::shard`]) with
+    /// persistence. The manifest id derives from the **parent** run id —
+    /// `{parent}.{k+1}of{n}` ([`shard_run_id`]) — rather than hashing
+    /// the sub-grid, and records its shard membership, so `lab list`
+    /// groups shards under the grid they partition and `--resume`
+    /// composes with `--shard` by pure id derivation. Cells persist
+    /// under the same keys an unsharded run writes; shards sharing a
+    /// store therefore compose into a warm full grid.
+    pub fn run_shard(
+        &self,
+        grid: &GridSpec,
+        k: usize,
+        n: usize,
+        workers: usize,
+    ) -> Result<SweepResults> {
+        let spec = grid.to_spec_json()?;
+        let parent = store::run_id(&spec.emit());
+        let id = store::shard_run_id(&parent, k, n);
+        let scenarios = grid.shard(k, n)?.len();
+        self.store.write_run(
+            &id,
+            &Self::shard_manifest(&id, &spec, scenarios, "running", &parent, k, n),
+        )?;
+        let results = self.runner(workers).run_shard(grid, k, n)?;
+        self.store.write_run(
+            &id,
+            &Self::shard_manifest(&id, &spec, scenarios, "complete", &parent, k, n),
+        )?;
+        Ok(results)
+    }
+
     fn manifest(id: &str, spec: &Json, scenarios: usize, status: &str) -> Json {
         Json::obj(vec![
             ("kind", Json::str(RUN_KIND)),
@@ -106,6 +137,42 @@ impl Lab {
             ("scenarios", Json::num(scenarios as f64)),
             ("status", Json::str(status)),
         ])
+    }
+
+    /// A run manifest extended with a `shard` membership object
+    /// (`parent` run id, 1-based `index`, `count`).
+    fn shard_manifest(
+        id: &str,
+        spec: &Json,
+        scenarios: usize,
+        status: &str,
+        parent: &str,
+        k: usize,
+        n: usize,
+    ) -> Json {
+        Json::obj(vec![
+            ("kind", Json::str(RUN_KIND)),
+            ("version", Json::num(1)),
+            ("id", Json::str(id)),
+            ("spec", spec.clone()),
+            ("scenarios", Json::num(scenarios as f64)),
+            ("status", Json::str(status)),
+            (
+                "shard",
+                Json::obj(vec![
+                    ("parent", Json::str(parent)),
+                    ("index", Json::num((k + 1) as f64)),
+                    ("count", Json::num(n as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// The manifest of a previous shard run of `grid`, if one exists
+    /// (`--resume --shard k/n` consults this, by pure id derivation).
+    pub fn find_shard_run(&self, grid: &GridSpec, k: usize, n: usize) -> Result<Option<Json>> {
+        let parent = Self::run_id_for(grid)?;
+        Ok(self.store.read_run(&store::shard_run_id(&parent, k, n)))
     }
 
     /// The manifest of a previous run of `grid`, if one exists
@@ -159,6 +226,50 @@ mod tests {
         assert_eq!(manifest.get("status").unwrap().as_str(), Some("complete"));
         assert_eq!(manifest.get("scenarios").unwrap().as_usize(), Some(1));
         assert_eq!(lab.list_runs().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn shard_manifests_derive_from_the_parent_run() {
+        let dir = crate::util::tmp::TempDir::new("lab").unwrap();
+        let lab = Lab::open(dir.path()).unwrap();
+        let grid = GridSpec {
+            archs: vec![crate::config::ArchSpec::small()],
+            threads: vec![15, 240],
+            strategies: vec![crate::sweep::Strategy::A, crate::sweep::Strategy::B],
+            ..GridSpec::default()
+        };
+        let parent = Lab::run_id_for(&grid).unwrap();
+        assert!(lab.find_shard_run(&grid, 0, 2).unwrap().is_none());
+        let first = lab.run_shard(&grid, 0, 2, 0).unwrap();
+        let second = lab.run_shard(&grid, 1, 2, 0).unwrap();
+        assert_eq!(first.results.len() + second.results.len(), grid.len());
+        let manifest = lab.find_shard_run(&grid, 0, 2).unwrap().expect("written");
+        assert_eq!(
+            manifest.get("id").unwrap().as_str(),
+            Some(format!("{parent}.1of2").as_str())
+        );
+        assert_eq!(manifest.get("status").unwrap().as_str(), Some("complete"));
+        assert_eq!(manifest.get("scenarios").unwrap().as_usize(), Some(2));
+        let shard = manifest.get("shard").unwrap();
+        assert_eq!(shard.get("parent").unwrap().as_str(), Some(parent.as_str()));
+        assert_eq!(shard.get("index").unwrap().as_usize(), Some(1));
+        assert_eq!(shard.get("count").unwrap().as_usize(), Some(2));
+        // Shards list alongside (and sort under) their parent id.
+        let ids: Vec<String> = lab
+            .list_runs()
+            .unwrap()
+            .iter()
+            .map(|m| m.get("id").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(ids, [format!("{parent}.1of2"), format!("{parent}.2of2")]);
+        // Merged shard results cover the grid: every persisted cell key
+        // matches what the unsharded run would write, so a follow-up
+        // full run over the same store is pure hits.
+        let before = lab.store().stats();
+        let full = lab.run(&grid, 0).unwrap();
+        let delta = lab.store().stats().since(&before);
+        assert_eq!(delta.misses, 0, "warm full run after shards: {delta:?}");
+        assert_eq!(full.results.len(), grid.len());
     }
 
     #[test]

@@ -111,6 +111,17 @@ pub fn run_id(spec_json: &str) -> String {
     format!("{:016x}", fnv1a(spec_json.as_bytes()))
 }
 
+/// Manifest id for shard `k` (0-based) of `n` of a parent run:
+/// `{parent}.{k+1}of{n}`. Hashing the shard's sub-grid would mint an id
+/// with no visible relation to the grid it came from; deriving from the
+/// parent id keeps shards grouped under their grid in `lab list` and
+/// lets `--resume --shard` find the manifest by pure derivation. The
+/// `.` separator sorts before every hex digit, so shard manifests list
+/// immediately after their parent.
+pub fn shard_run_id(parent: &str, k: usize, n: usize) -> String {
+    format!("{parent}.{}of{n}", k + 1)
+}
+
 /// The three content-addressed entry namespaces.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Kind {
@@ -165,6 +176,16 @@ impl StoreStats {
             misses: self.misses - earlier.misses,
         }
     }
+
+    /// Sum with another snapshot or delta — how
+    /// [`crate::sweep::merge_shards`] folds per-shard store traffic into
+    /// the merged run's accounting.
+    pub fn merged(&self, other: &StoreStats) -> StoreStats {
+        StoreStats {
+            hits: self.hits + other.hits,
+            misses: self.misses + other.misses,
+        }
+    }
 }
 
 /// What [`Store::gc`] did (or, with `dry_run`, would do).
@@ -186,9 +207,20 @@ pub struct GcReport {
 #[derive(Debug)]
 pub struct Store {
     root: PathBuf,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    /// Hit and miss counters packed into one word — hits in the high 32
+    /// bits, misses in the low 32 — so a [`Store::stats`] snapshot is a
+    /// single atomic load. Two independent counters would let a reader
+    /// tear (load hits, lose the race, load newer misses), which made
+    /// [`StoreStats::since`] deltas mix traffic from concurrent runs
+    /// sharing one `Arc<Store>` — exactly what sharded sweep drivers do.
+    /// 2³² lookups per side outlasts any realistic store lifetime.
+    traffic: AtomicU64,
 }
+
+/// One packed-counter increment for a hit (high half of `traffic`).
+const HIT_UNIT: u64 = 1 << 32;
+/// One packed-counter increment for a miss (low half of `traffic`).
+const MISS_UNIT: u64 = 1;
 
 impl Store {
     /// Open (creating if needed) a store rooted at `root`.
@@ -200,8 +232,7 @@ impl Store {
         fs::create_dir_all(root.join("runs"))?;
         Ok(Store {
             root,
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            traffic: AtomicU64::new(0),
         })
     }
 
@@ -212,11 +243,15 @@ impl Store {
 
     /// Current hit/miss counters (monotonic over the store's lifetime;
     /// callers wanting per-run numbers snapshot before and
-    /// [`StoreStats::since`] after).
+    /// [`StoreStats::since`] after). The snapshot is coherent: both
+    /// counters come from one atomic load of the packed word, so the
+    /// pair was simultaneously true at some instant even while other
+    /// runs sharing the store keep recording.
     pub fn stats(&self) -> StoreStats {
+        let packed = self.traffic.load(Ordering::Relaxed);
         StoreStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
+            hits: packed >> 32,
+            misses: packed & (HIT_UNIT - 1),
         }
     }
 
@@ -256,11 +291,8 @@ impl Store {
     /// measuring sweep rejecting a measurement-less cell) before
     /// deciding what the lookup really was.
     pub fn record(&self, hit: bool) {
-        if hit {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.misses.fetch_add(1, Ordering::Relaxed);
-        }
+        let unit = if hit { HIT_UNIT } else { MISS_UNIT };
+        self.traffic.fetch_add(unit, Ordering::Relaxed);
     }
 
     /// Like [`Store::get`] but without touching the hit/miss counters —
@@ -409,6 +441,66 @@ mod tests {
         store.put(Kind::Params, &key, payload.clone()).unwrap();
         assert_eq!(store.get(Kind::Params, &key), Some(payload));
         assert_eq!(store.stats(), StoreStats { hits: 1, misses: 1 });
+    }
+
+    #[test]
+    fn stats_snapshots_are_coherent_under_concurrent_recording() {
+        let dir = TempDir::new("store").unwrap();
+        let store = Store::open(dir.path()).unwrap();
+        const PAIRS: u64 = 20_000;
+        const THREADS: u64 = 4;
+        std::thread::scope(|scope| {
+            for _ in 0..THREADS {
+                scope.spawn(|| {
+                    for _ in 0..PAIRS {
+                        store.record(true);
+                        store.record(false);
+                    }
+                });
+            }
+            // Every recorder counts a hit strictly before its matching
+            // miss, so any coherent snapshot satisfies
+            // `misses <= hits <= misses + THREADS` (at most one
+            // unmatched hit in flight per thread). The old two-load
+            // snapshot tears past the upper and lower bound alike.
+            for _ in 0..20_000 {
+                let s = store.stats();
+                assert!(
+                    s.misses <= s.hits && s.hits <= s.misses + THREADS,
+                    "torn snapshot: {s:?}"
+                );
+            }
+        });
+        let total = THREADS * PAIRS;
+        assert_eq!(
+            store.stats(),
+            StoreStats {
+                hits: total,
+                misses: total
+            }
+        );
+    }
+
+    #[test]
+    fn shard_run_ids_derive_from_and_sort_under_the_parent() {
+        assert_eq!(shard_run_id("00000000000000ab", 0, 3), "00000000000000ab.1of3");
+        assert_eq!(shard_run_id("00000000000000ab", 2, 3), "00000000000000ab.3of3");
+        // `.` < any hex digit, so shards group right after the parent id
+        // in the lexicographic `list_runs` order.
+        let mut ids = vec![
+            "00000000000000ac".to_string(),
+            shard_run_id("00000000000000ab", 1, 3),
+            "00000000000000ab".to_string(),
+        ];
+        ids.sort();
+        assert_eq!(
+            ids,
+            [
+                "00000000000000ab",
+                "00000000000000ab.2of3",
+                "00000000000000ac"
+            ]
+        );
     }
 
     #[test]

@@ -148,6 +148,7 @@ USAGE:
                  [--sim-seed LIST]
                  [--workers N | --serial] [--json OUT.json] [--csv] [--full]
                  [--lab [PATH]] [--resume] [--no-store] [--tolerance F]
+                 [--shard K/N | --shards N [--continue-on-failure]]
                  (LIST = comma items and/or inclusive ranges: 1,15,30 or 1..244 or 8..64..8)
                  (The --sim-* flags build an ablation axis over simulator
                   constants — the cross product of every given list; sim
@@ -155,6 +156,13 @@ USAGE:
                   warning. --lab persists every computed cell to a disk
                   store (bare --lab means ./result); --resume reports the
                   prior run being resumed; --no-store bypasses the store.
+                  --shard K/N evaluates only the scenarios with id % N ==
+                  K-1 through the shared lab store; --shards N spawns one
+                  child process per shard, retries failures with bounded
+                  backoff (--continue-on-failure: exit 1 with a per-shard
+                  report instead of aborting on the first permanently
+                  failed shard), then merges to output byte-identical to
+                  the unsharded run. Both require --lab.
                   See docs/SWEEP.md and docs/LAB.md.)
   repro sweep baseline write OUT.json      pin the swept grid as a golden baseline
   repro sweep baseline compare FILE.json   re-run and diff against a baseline
@@ -403,7 +411,7 @@ fn parse_images(text: &str) -> Result<Vec<(usize, usize)>> {
 /// One table drives both the missing-value check and the "did the user
 /// give an explicit grid" test, so the per-flag handlers in [`cmd_sweep`]
 /// cannot drift out of sync with either.
-const SWEEP_FLAGS: [(&str, bool, bool); 32] = [
+const SWEEP_FLAGS: [(&str, bool, bool); 35] = [
     ("spec", true, true),
     ("arch", true, true),
     ("threads", true, true),
@@ -438,6 +446,9 @@ const SWEEP_FLAGS: [(&str, bool, bool); 32] = [
     ("lab", false, false),
     ("resume", false, false),
     ("no-store", false, false),
+    ("shard", true, false),
+    ("shards", true, false),
+    ("continue-on-failure", false, false),
 ];
 
 /// Open the lab named by `--lab` (bare `--lab` means `./result`).
@@ -604,12 +615,184 @@ fn normalize_sweep_verbs(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse `--shard K/N` (1-based on the CLI: `1/3` .. `3/3`) into the
+/// 0-based `(k, n)` the library uses ([`GridSpec::shard`]).
+fn parse_shard(args: &Args) -> Result<Option<(usize, usize)>> {
+    let Some(text) = args.get("shard") else {
+        return Ok(None);
+    };
+    let (k, n) = text
+        .split_once('/')
+        .ok_or_else(|| err!("--shard wants K/N (e.g. 1/3), got {text:?}"))?;
+    let parse = |s: &str| -> Result<usize> {
+        s.trim()
+            .parse()
+            .map_err(|_| err!("--shard wants integers in K/N, got {text:?}"))
+    };
+    let (k, n) = (parse(k)?, parse(n)?);
+    if n == 0 {
+        bail!("--shard N must be >= 1, got {text:?}");
+    }
+    if k == 0 || k > n {
+        bail!("--shard K is 1-based (1 <= K <= N), got {text:?}");
+    }
+    Ok(Some((k - 1, n)))
+}
+
+/// The last interesting line of a failed shard child: its `error:` line
+/// when the run errored (the usage text that follows is noise here), or
+/// the last non-empty stderr line otherwise (e.g. nothing on a kill).
+fn shard_failure_detail(out: &std::process::Output) -> String {
+    let text = String::from_utf8_lossy(&out.stderr);
+    let detail = text
+        .lines()
+        .find(|l| l.starts_with("error: "))
+        .or_else(|| text.lines().rev().find(|l| !l.trim().is_empty()))
+        .unwrap_or("(no stderr)");
+    format!("{} — {detail}", out.status)
+}
+
+/// The `--shards N` driver: spawn one `repro sweep run --shard k/N`
+/// child process per shard, all against the shared lab store, retrying
+/// failed shards in up to 3 waves with linear backoff. Once every shard
+/// has persisted its cells, reassemble by running the full grid
+/// in-process — a pure-store-hit pass whose output is byte-identical to
+/// an unsharded run (docs/SWEEP.md, "Sharded execution").
+///
+/// Without `--continue-on-failure` the first shard to exhaust its
+/// retries aborts the grid (exit 1); with it, every shard gets its full
+/// retry budget and the driver exits 1 with a per-shard failure report
+/// on stderr.
+fn run_shard_driver(
+    lab: &Lab,
+    grid: &GridSpec,
+    n: usize,
+    workers: usize,
+    args: &Args,
+) -> Result<micdl::sweep::SweepResults> {
+    const ATTEMPTS: usize = 3;
+    /// Flags the driver owns: fan-out control plus every output/report
+    /// flag (the driver renders the merged results; children stay mute
+    /// on stdout).
+    const DRIVER_ONLY: [&str; 8] = [
+        "shards",
+        "continue-on-failure",
+        "json",
+        "csv",
+        "full",
+        "compare",
+        "write-baseline",
+        "tolerance",
+    ];
+    let exe = std::env::current_exe()?;
+    let mut base: Vec<String> = vec!["sweep".into(), "run".into()];
+    for (name, value) in &args.flags {
+        if DRIVER_ONLY.contains(&name.as_str()) {
+            continue;
+        }
+        base.push(format!("--{name}"));
+        if let Some(v) = value {
+            base.push(v.clone());
+        }
+    }
+    let mut pending: Vec<usize> = (0..n).collect();
+    let mut failures: Vec<(usize, String)> = Vec::new();
+    for attempt in 1..=ATTEMPTS {
+        let mut children = Vec::new();
+        for &k in &pending {
+            let mut argv = base.clone();
+            argv.push("--shard".into());
+            argv.push(format!("{}/{n}", k + 1));
+            let child = std::process::Command::new(&exe)
+                .args(&argv)
+                .stdout(std::process::Stdio::null())
+                .stderr(std::process::Stdio::piped())
+                .spawn()?;
+            children.push((k, child));
+        }
+        let mut still: Vec<(usize, String)> = Vec::new();
+        for (k, child) in children {
+            let out = child.wait_with_output()?;
+            if out.status.success() {
+                eprintln!("note: shard {}/{n} complete", k + 1);
+            } else {
+                let detail = shard_failure_detail(&out);
+                eprintln!(
+                    "warning: shard {}/{n} failed (attempt {attempt}/{ATTEMPTS}): {detail}",
+                    k + 1
+                );
+                still.push((k, detail));
+            }
+        }
+        if still.is_empty() {
+            failures.clear();
+            break;
+        }
+        if attempt == ATTEMPTS {
+            failures = still;
+        } else {
+            pending = still.into_iter().map(|(k, _)| k).collect();
+            std::thread::sleep(std::time::Duration::from_millis(250 * attempt as u64));
+        }
+    }
+    if !failures.is_empty() {
+        if args.has("continue-on-failure") {
+            eprintln!(
+                "shard failure report: {} of {n} shards failed after {ATTEMPTS} attempts each",
+                failures.len()
+            );
+            for (k, detail) in &failures {
+                eprintln!("  shard {}/{n}: {detail}", k + 1);
+            }
+            bail!("{} of {n} shards failed (report above)", failures.len());
+        }
+        let (k, detail) = &failures[0];
+        bail!("shard {}/{n} failed after {ATTEMPTS} attempts: {detail}", k + 1);
+    }
+    // Every shard persisted its cells under the keys an unsharded run
+    // uses, so this full pass is pure store hits and its payload is the
+    // canonical unsharded one (it also flips the parent manifest to
+    // `complete`).
+    lab.run(grid, workers)
+}
+
 fn cmd_sweep(args: &Args) -> Result<ExitCode> {
     let mut args = args.clone();
     normalize_sweep_verbs(&mut args)?;
     let args = &args;
     check_flags(args, &SWEEP_FLAGS.map(|(f, v, _)| (f, v)), "sweep")?;
     let lab = parse_lab(args)?;
+    let shard = parse_shard(args)?;
+    let shard_count = match args.get("shards") {
+        None => None,
+        Some(v) => {
+            let n: usize = v
+                .parse()
+                .map_err(|_| err!("--shards wants an integer, got {v:?}"))?;
+            if n == 0 {
+                bail!("--shards must be >= 1");
+            }
+            Some(n)
+        }
+    };
+    if shard.is_some() && shard_count.is_some() {
+        bail!("--shard and --shards are mutually exclusive (the driver assigns shards)");
+    }
+    if (shard.is_some() || shard_count.is_some()) && lab.is_none() {
+        bail!(
+            "--shard/--shards require --lab without --no-store \
+             (shards compose through a shared store)"
+        );
+    }
+    if shard.is_some() && (args.has("compare") || args.has("write-baseline")) {
+        bail!(
+            "--shard evaluates a partial grid; baseline write/compare need the \
+             full grid (run them on the driver via --shards, or unsharded)"
+        );
+    }
+    if args.has("continue-on-failure") && shard_count.is_none() {
+        bail!("--continue-on-failure only applies to the --shards driver");
+    }
     let baseline = args
         .get("compare")
         .map(|path| Baseline::load(std::path::Path::new(path)))
@@ -692,8 +875,25 @@ fn cmd_sweep(args: &Args) -> Result<ExitCode> {
     } else {
         args.get_usize("workers", 0)?
     };
-    let results = match &lab {
-        Some(lab) => {
+    let results = match (&lab, shard, shard_count) {
+        (Some(lab), Some((k, n)), _) => {
+            if args.has("resume") {
+                match lab.find_shard_run(&grid, k, n)? {
+                    Some(m) => eprintln!(
+                        "note: resuming shard run {} (was {}) — persisted cells serve \
+                         from the store",
+                        m.get("id").and_then(|j| j.as_str()).unwrap_or("?"),
+                        m.get("status").and_then(|j| j.as_str()).unwrap_or("?"),
+                    ),
+                    None => eprintln!(
+                        "note: no prior run of this shard in the lab — starting fresh"
+                    ),
+                }
+            }
+            lab.run_shard(&grid, k, n, workers)?
+        }
+        (Some(lab), None, Some(n)) => run_shard_driver(lab, &grid, n, workers, args)?,
+        (Some(lab), None, None) => {
             if args.has("resume") {
                 match lab.find_run(&grid)? {
                     Some(m) => eprintln!(
@@ -708,7 +908,7 @@ fn cmd_sweep(args: &Args) -> Result<ExitCode> {
             }
             lab.run(&grid, workers)?
         }
-        None => SweepRunner::new(workers).run(&grid)?,
+        (None, _, _) => SweepRunner::new(workers).run(&grid)?,
     };
     if let Some(path) = args.get("json") {
         std::fs::write(path, results.to_json().emit())?;
@@ -989,13 +1189,23 @@ fn cmd_lab(args: &Args, verb: Option<&str>) -> Result<ExitCode> {
     match verb {
         "list" => {
             let runs = lab.list_runs()?;
+            // Shard manifests (`{parent}.{k}of{n}`) sort directly under
+            // their parent run id — the `.` separator orders before
+            // every hex digit — so indenting them is all the grouping
+            // the id-sorted listing needs.
             let mut t = Table::new(
                 format!("lab runs — {}", runs.len()),
                 &["id", "status", "scenarios"],
             );
             for m in &runs {
+                let id = m.get("id").and_then(|j| j.as_str()).unwrap_or("?");
+                let id = if m.get("shard").is_some() {
+                    format!("  └ {id}")
+                } else {
+                    id.to_string()
+                };
                 t.row(vec![
-                    m.get("id").and_then(|j| j.as_str()).unwrap_or("?").to_string(),
+                    id,
                     m.get("status").and_then(|j| j.as_str()).unwrap_or("?").to_string(),
                     m.get("scenarios")
                         .and_then(|j| j.as_usize())

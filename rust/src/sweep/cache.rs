@@ -64,6 +64,16 @@ impl CacheStats {
             self.hits as f64 / self.lookups() as f64
         }
     }
+
+    /// Sum with another run's counters — how
+    /// [`crate::sweep::merge_shards`] folds per-shard memo traffic into
+    /// the merged run's accounting.
+    pub fn merged(&self, other: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits + other.hits,
+            misses: self.misses + other.misses,
+        }
+    }
 }
 
 /// The per-sweep memo: models, cost models, and micsim measurements.

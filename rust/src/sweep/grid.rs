@@ -699,6 +699,27 @@ impl GridSpec {
         out
     }
 
+    /// Scenarios of shard `k` of `n`: the enumeration filtered to ids
+    /// with `id % n == k`. Scenarios keep their **parent-grid** ids and
+    /// enumeration order, so shards are stable under re-enumeration,
+    /// pairwise disjoint, cover the grid exactly once, and merge back by
+    /// id ([`crate::sweep::merge_shards`]). The modulo split interleaves
+    /// neighbouring scenarios across shards, which balances work even
+    /// when one architecture is much more expensive than another.
+    ///
+    /// `n` may exceed [`GridSpec::len`]; the surplus shards are empty.
+    pub fn shard(&self, k: usize, n: usize) -> Result<Vec<Scenario>> {
+        if n == 0 {
+            return Err(Error::Config("shard count must be >= 1".into()));
+        }
+        if k >= n {
+            return Err(Error::Config(format!(
+                "shard index {k} is out of range for {n} shards (0..{n})"
+            )));
+        }
+        Ok(self.enumerate().into_iter().filter(|s| s.id % n == k).collect())
+    }
+
     /// The Table IX evaluation grid: the three paper architectures × the
     /// measured thread counts × both strategies, micsim measurement on
     /// (42 cells). The canonical measured domain — `repro exp table9`
@@ -1409,6 +1430,31 @@ mod tests {
         // It baselines: the spec document round-trips exactly.
         let back = GridSpec::from_json(&grid.to_spec_json().unwrap().emit()).unwrap();
         assert_eq!(back, grid);
+    }
+
+    #[test]
+    fn shards_partition_the_enumeration_by_id() {
+        let grid = GridSpec::default();
+        for n in [1usize, 2, 3, 7, 41, 42, 43] {
+            let mut ids = Vec::new();
+            for k in 0..n {
+                let shard = grid.shard(k, n).unwrap();
+                assert!(shard.iter().all(|s| s.id % n == k), "n={n} k={k}");
+                assert!(shard.windows(2).all(|w| w[0].id < w[1].id), "n={n} k={k}");
+                ids.extend(shard.iter().map(|s| s.id));
+            }
+            ids.sort_unstable();
+            assert_eq!(ids, (0..grid.len()).collect::<Vec<_>>(), "n={n}");
+        }
+        // The shard scenarios are the enumeration's, ids included.
+        let all = grid.enumerate();
+        for s in grid.shard(1, 3).unwrap() {
+            assert_eq!(all[s.id], s);
+        }
+        assert!(grid.shard(0, 0).is_err());
+        assert!(grid.shard(3, 3).is_err());
+        // More shards than cells: the surplus shards are empty.
+        assert!(grid.shard(43, 44).unwrap().is_empty());
     }
 
     #[test]

@@ -21,7 +21,12 @@
 //!   parallel results are bit-identical to a serial run, optionally
 //!   persisting every cell through a [`crate::lab`] disk store
 //!   ([`SweepRunner::with_store`]) so repeated runs are pure store hits
-//!   and interrupted sweeps resume from the last persisted cell;
+//!   and interrupted sweeps resume from the last persisted cell; grids
+//!   also split into deterministic shards ([`GridSpec::shard`],
+//!   [`SweepRunner::run_shard`]) that independent processes execute
+//!   against one shared store and [`merge_shards`] reassembles
+//!   byte-identically to the unsharded run (`repro sweep run
+//!   --shard k/n` / `--shards n`);
 //! * [`summary`] — [`SweepResults`], O(1) stride addressing, grid-level
 //!   accuracy aggregation (mean/max Δ per sim variant × architecture ×
 //!   strategy — the sweep-native Table IX), JSON dump, and paper-style
@@ -65,4 +70,4 @@ pub use runner::SweepRunner;
 pub use sensitivity::{
     RankedConstant, SensitivityEntry, SensitivityReport, SensitivitySpec, SimConstant,
 };
-pub use summary::{AccuracyAggregate, ScenarioResult, SweepResults};
+pub use summary::{merge_shards, AccuracyAggregate, ScenarioResult, SweepResults};

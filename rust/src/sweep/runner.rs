@@ -5,9 +5,11 @@
 //! matching the scenario id. Because every evaluation is a pure function
 //! of the scenario (the cache only memoizes deterministic values),
 //! results are **bit-identical** regardless of worker count or
-//! scheduling — asserted by `tests/sweep.rs`.
+//! scheduling — asserted by `tests/sweep.rs`. Error paths are
+//! deterministic too: the pool reports the lowest-id failure, which is
+//! exactly the error a serial run of the same grid surfaces.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
@@ -57,7 +59,17 @@ impl SweepRunner {
 
     /// Evaluate every scenario of `grid`.
     pub fn run(&self, grid: &GridSpec) -> Result<SweepResults> {
-        self.run_with_cache(grid, SweepCache::new())
+        self.run_with_cache(grid, SweepCache::new(), None)
+    }
+
+    /// Evaluate only shard `k` of `n` ([`GridSpec::shard`]). The results
+    /// keep their parent-grid scenario ids in enumeration order, so
+    /// per-shard outputs reassemble into the unsharded payload with
+    /// [`crate::sweep::merge_shards`]. Shard runs are how independent
+    /// worker processes split one grid over a shared [`crate::lab`]
+    /// store (`repro sweep run --shard k/n`).
+    pub fn run_shard(&self, grid: &GridSpec, k: usize, n: usize) -> Result<SweepResults> {
+        self.run_with_cache(grid, SweepCache::new(), Some((k, n)))
     }
 
     /// Evaluate with an explicit **base** simulator configuration — the
@@ -71,18 +83,26 @@ impl SweepRunner {
         grid: &GridSpec,
         sim: &crate::simulator::SimConfig,
     ) -> Result<SweepResults> {
-        self.run_with_cache(grid, SweepCache::with_sim(sim.clone()))
+        self.run_with_cache(grid, SweepCache::with_sim(sim.clone()), None)
     }
 
-    fn run_with_cache(&self, grid: &GridSpec, mut cache: SweepCache) -> Result<SweepResults> {
+    fn run_with_cache(
+        &self,
+        grid: &GridSpec,
+        mut cache: SweepCache,
+        shard: Option<(usize, usize)>,
+    ) -> Result<SweepResults> {
         grid.validate()?;
         if let Some(store) = &self.store {
             cache.set_store(Arc::clone(store));
         }
         // Store counters are store-lifetime monotonic; report this run's
-        // delta.
+        // delta (a coherent snapshot — see `Store::stats`).
         let store_before = self.store.as_ref().map(|s| s.stats());
-        let scenarios = grid.enumerate();
+        let scenarios = match shard {
+            None => grid.enumerate(),
+            Some((k, n)) => grid.shard(k, n)?,
+        };
         let started = Instant::now();
         let results = if self.workers <= 1 || scenarios.len() < 2 {
             let mut out = Vec::with_capacity(scenarios.len());
@@ -139,6 +159,15 @@ fn evaluate(grid: &GridSpec, cache: &SweepCache, scn: &Scenario) -> Result<Scena
 }
 
 /// Fan the scenario list over `workers` scoped threads.
+///
+/// Error determinism: workers claim indices from the cursor in order, a
+/// claimed index always evaluates to completion, and every failure is
+/// recorded as `(scenario.id, error)` with the lowest id winning. Since
+/// an index is only claimed after every lower index has been claimed,
+/// the lowest failing scenario is always claimed before the stop flag
+/// rises — so the pool returns exactly the error a serial run surfaces,
+/// under any scheduling. The stop flag is checked *before* claiming, so
+/// doomed iterations never burn the cursor.
 fn run_pool(
     grid: &GridSpec,
     cache: &SweepCache,
@@ -146,18 +175,19 @@ fn run_pool(
     workers: usize,
 ) -> Result<Vec<ScenarioResult>> {
     let cursor = AtomicUsize::new(0);
+    let stop = AtomicBool::new(false);
     let slots: Mutex<Vec<Option<ScenarioResult>>> =
         Mutex::new(scenarios.iter().map(|_| None).collect());
-    let failure: Mutex<Option<Error>> = Mutex::new(None);
+    let failure: Mutex<Option<(usize, Error)>> = Mutex::new(None);
 
     std::thread::scope(|scope| {
         for _ in 0..workers.min(scenarios.len()) {
             scope.spawn(|| loop {
-                let idx = cursor.fetch_add(1, Ordering::Relaxed);
-                if idx >= scenarios.len() {
+                if stop.load(Ordering::Acquire) {
                     break;
                 }
-                if failure.lock().unwrap().is_some() {
+                let idx = cursor.fetch_add(1, Ordering::Relaxed);
+                if idx >= scenarios.len() {
                     break;
                 }
                 match evaluate(grid, cache, &scenarios[idx]) {
@@ -165,7 +195,14 @@ fn run_pool(
                         slots.lock().unwrap()[idx] = Some(result);
                     }
                     Err(e) => {
-                        failure.lock().unwrap().get_or_insert(e);
+                        let id = scenarios[idx].id;
+                        let mut held = failure.lock().unwrap();
+                        match held.as_ref() {
+                            Some((lowest, _)) if *lowest <= id => {}
+                            _ => *held = Some((id, e)),
+                        }
+                        drop(held);
+                        stop.store(true, Ordering::Release);
                         break;
                     }
                 }
@@ -173,7 +210,7 @@ fn run_pool(
         }
     });
 
-    if let Some(e) = failure.into_inner().unwrap() {
+    if let Some((_, e)) = failure.into_inner().unwrap() {
         return Err(e);
     }
     Ok(slots
@@ -273,5 +310,64 @@ mod tests {
         };
         let err = SweepRunner::new(2).run(&grid);
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn parallel_error_matches_serial_under_multiple_failures() {
+        // Regression: the pool used to surface whichever worker's error
+        // won the mutex race. With several distinct failing scenarios on
+        // the grid, the parallel run must still report the error of the
+        // lowest-id failure — the one the serial reference stops at.
+        let mut bad_z = ArchSpec::small();
+        bad_z.name = "zzz-not-in-the-paper".into();
+        let mut bad_a = ArchSpec::medium();
+        bad_a.name = "aaa-not-in-the-paper".into();
+        let grid = GridSpec {
+            // A healthy arch first, then two distinct failing ones: the
+            // lowest failing id belongs to bad_z, not to whichever fails
+            // fastest.
+            archs: vec![ArchSpec::small(), bad_z, bad_a],
+            threads: vec![1, 2, 3, 4],
+            strategies: vec![Strategy::A, Strategy::B],
+            ..GridSpec::default()
+        };
+        let serial = SweepRunner::serial().run(&grid).unwrap_err().to_string();
+        assert!(serial.contains("zzz-not-in-the-paper"), "{serial}");
+        for workers in [2, 4, 8] {
+            for _ in 0..5 {
+                let parallel =
+                    SweepRunner::new(workers).run(&grid).unwrap_err().to_string();
+                assert_eq!(parallel, serial, "{workers} workers");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_runs_carry_parent_ids_and_cover_the_grid() {
+        let grid = GridSpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![1, 15, 61, 240],
+            strategies: vec![Strategy::A, Strategy::B],
+            ..GridSpec::default()
+        };
+        let full = SweepRunner::serial().run(&grid).unwrap();
+        let mut seen = vec![false; grid.len()];
+        for k in 0..3 {
+            let shard = SweepRunner::serial().run_shard(&grid, k, 3).unwrap();
+            for r in &shard.results {
+                assert_eq!(r.scenario.id % 3, k);
+                assert!(!seen[r.scenario.id], "id {} twice", r.scenario.id);
+                seen[r.scenario.id] = true;
+                // Bit-identical to the unsharded evaluation of the same id.
+                let reference = &full.results[r.scenario.id];
+                assert_eq!(r.scenario, reference.scenario);
+                assert_eq!(
+                    r.prediction.total_s.to_bits(),
+                    reference.prediction.total_s.to_bits()
+                );
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "shards must cover every scenario");
+        assert!(SweepRunner::serial().run_shard(&grid, 3, 3).is_err());
     }
 }

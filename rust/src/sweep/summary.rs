@@ -1,6 +1,8 @@
 //! Sweep results: O(1) addressing, accuracy aggregation, JSON emission,
 //! paper-style tables.
 
+use crate::error::{Error, Result};
+use crate::lab::StoreStats;
 use crate::perfmodel::{DeltaAccumulator, Prediction};
 use crate::report::Table;
 use crate::sweep::cache::CacheStats;
@@ -552,6 +554,80 @@ impl SweepResults {
     }
 }
 
+/// Reassemble per-shard results (from
+/// [`crate::sweep::SweepRunner::run_shard`] over [`GridSpec::shard`])
+/// into one [`SweepResults`] for the whole grid.
+///
+/// Scenarios slot back by their parent-grid ids, so the merged
+/// `results` vector, accuracy aggregation, tables, and JSON dump are
+/// byte-identical to what an unsharded run of `grid` produces — shard
+/// evaluation is deterministic per scenario, and every downstream
+/// surface is a pure function of the ordered results. Telemetry is
+/// folded, not recomputed: cache and store counters sum across shards
+/// ([`CacheStats::merged`] / [`StoreStats::merged`]), `wall_s` is the
+/// slowest shard (shards run concurrently under `--shards n`), and
+/// `workers` sums.
+///
+/// Errors if a shard was run against a different grid, or if the
+/// shards do not partition the grid exactly (a missing, duplicate, or
+/// out-of-range scenario id) — e.g. merging `k of n` shards from
+/// mismatched `n`s.
+pub fn merge_shards(grid: &GridSpec, shards: Vec<SweepResults>) -> Result<SweepResults> {
+    let spec = grid.to_spec_json()?.emit();
+    let mut slots: Vec<Option<ScenarioResult>> = (0..grid.len()).map(|_| None).collect();
+    let mut cache = CacheStats::default();
+    let mut store: Option<StoreStats> = None;
+    let mut wall_s = 0.0_f64;
+    let mut workers = 0;
+    for shard in shards {
+        if shard.grid.to_spec_json()?.emit() != spec {
+            return Err(Error::Config(
+                "cannot merge shards: shard was run against a different grid".into(),
+            ));
+        }
+        cache = cache.merged(&shard.cache);
+        if let Some(s) = &shard.store {
+            store = Some(store.unwrap_or_default().merged(s));
+        }
+        wall_s = wall_s.max(shard.wall_s);
+        workers += shard.workers;
+        for result in shard.results {
+            let id = result.scenario.id;
+            let slot = slots.get_mut(id).ok_or_else(|| {
+                Error::Config(format!(
+                    "cannot merge shards: scenario id {id} is outside the {}-cell grid",
+                    grid.len()
+                ))
+            })?;
+            if slot.is_some() {
+                return Err(Error::Config(format!(
+                    "cannot merge shards: scenario id {id} appears in more than one shard"
+                )));
+            }
+            *slot = Some(result);
+        }
+    }
+    let results = slots
+        .into_iter()
+        .enumerate()
+        .map(|(id, slot)| {
+            slot.ok_or_else(|| {
+                Error::Config(format!(
+                    "cannot merge shards: no shard covered scenario id {id}"
+                ))
+            })
+        })
+        .collect::<Result<Vec<ScenarioResult>>>()?;
+    Ok(SweepResults {
+        grid: grid.clone(),
+        results,
+        cache,
+        store,
+        wall_s,
+        workers,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -776,5 +852,69 @@ mod tests {
         let summary = res.render(false);
         assert!(summary.contains("best total"));
         assert!(summary.contains("hit rate"));
+    }
+
+    fn measured_grid() -> GridSpec {
+        GridSpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![1, 15, 240],
+            strategies: vec![Strategy::A, Strategy::B],
+            measure: true,
+            ..GridSpec::default()
+        }
+    }
+
+    #[test]
+    fn merged_shards_match_the_unsharded_run_byte_for_byte() {
+        let grid = measured_grid();
+        let whole = SweepRunner::serial().run(&grid).unwrap();
+        for n in [1, 2, 3, 6] {
+            let shards: Vec<SweepResults> = (0..n)
+                .map(|k| SweepRunner::serial().run_shard(&grid, k, n).unwrap())
+                .collect();
+            let merged = merge_shards(&grid, shards).unwrap();
+            // Stable payload (grid, scenario rows, accuracy) is
+            // byte-identical; wall/cache/workers are per-run telemetry.
+            let m = Json::parse(&merged.to_json().emit()).unwrap();
+            let w = Json::parse(&whole.to_json().emit()).unwrap();
+            for key in ["grid", "scenarios", "accuracy", "results"] {
+                assert_eq!(
+                    m.get(key).unwrap().emit(),
+                    w.get(key).unwrap().emit(),
+                    "{key}, n = {n}"
+                );
+            }
+            assert_eq!(merged.table(true).render(), whole.table(true).render());
+            // Telemetry folds: each scenario makes a fixed number of
+            // counted probes, so summed lookups are conserved even
+            // though cold shard memos turn some cross-scenario hits
+            // into misses.
+            assert_eq!(merged.cache.lookups(), whole.cache.lookups(), "n = {n}");
+            assert_eq!(merged.workers, n);
+        }
+    }
+
+    #[test]
+    fn merge_rejects_incomplete_overlapping_or_foreign_shards() {
+        let grid = measured_grid();
+        let s0 = || SweepRunner::serial().run_shard(&grid, 0, 2).unwrap();
+        let s1 = || SweepRunner::serial().run_shard(&grid, 1, 2).unwrap();
+        // Missing shard.
+        let err = merge_shards(&grid, vec![s0()]).unwrap_err();
+        assert!(err.to_string().contains("no shard covered"), "{err}");
+        // Duplicate shard.
+        let err = merge_shards(&grid, vec![s0(), s0(), s1()]).unwrap_err();
+        assert!(err.to_string().contains("more than one shard"), "{err}");
+        // Shard of some other grid.
+        let other = GridSpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![1, 15, 240, 244],
+            strategies: vec![Strategy::A, Strategy::B],
+            measure: true,
+            ..GridSpec::default()
+        };
+        let foreign = SweepRunner::serial().run_shard(&other, 0, 2).unwrap();
+        let err = merge_shards(&grid, vec![foreign, s1()]).unwrap_err();
+        assert!(err.to_string().contains("different grid"), "{err}");
     }
 }

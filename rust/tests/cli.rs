@@ -415,6 +415,184 @@ fn lab_verbs_list_gc_trace_params() {
 }
 
 #[test]
+fn sweep_shard_flag_validation() {
+    let dir = micdl::util::tmp::TempDir::new("cli-shard-flags").unwrap();
+    let lab = dir.path().join("lab");
+    let lab_s = lab.to_str().unwrap();
+    let base = ["--arch", "small", "--threads", "15", "--strategy", "a", "--serial"];
+    let run = |extra: &[&str]| {
+        let mut args = vec!["sweep", "run"];
+        args.extend_from_slice(extra);
+        args.extend_from_slice(&base);
+        repro(&args)
+    };
+    // Shards compose through a shared store, so --lab is mandatory…
+    let out = run(&["--shard", "1/2"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("require --lab"), "{}", stderr(&out));
+    // …and --no-store (which drops the store) is as bad as no --lab.
+    let out = run(&["--shard", "1/2", "--lab", lab_s, "--no-store"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("require --lab"), "{}", stderr(&out));
+    // Shard grammar: K/N, integers, 1-based K in range.
+    let out = run(&["--shard", "2", "--lab", lab_s]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("wants K/N"), "{}", stderr(&out));
+    let out = run(&["--shard", "x/y", "--lab", lab_s]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("wants integers"), "{}", stderr(&out));
+    for bad in ["0/2", "3/2"] {
+        let out = run(&["--shard", bad, "--lab", lab_s]);
+        assert!(!out.status.success());
+        assert!(stderr(&out).contains("1-based"), "{bad}: {}", stderr(&out));
+    }
+    // A worker is one shard xor the driver; partial grids cannot pin or
+    // check baselines; --continue-on-failure is driver-only.
+    let out = run(&["--shard", "1/2", "--shards", "2", "--lab", lab_s]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("mutually exclusive"), "{}", stderr(&out));
+    let out = run(&["--shard", "1/2", "--lab", lab_s, "--write-baseline", "b.json"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("partial grid"), "{}", stderr(&out));
+    let out = run(&["--continue-on-failure"]);
+    assert!(!out.status.success());
+    assert!(stderr(&out).contains("only applies"), "{}", stderr(&out));
+}
+
+#[test]
+fn sweep_shard_children_compose_and_lab_list_groups_them() {
+    let dir = micdl::util::tmp::TempDir::new("cli-shard-child").unwrap();
+    let lab = dir.path().join("lab");
+    let lab_s = lab.to_str().unwrap();
+    let grid = ["--arch", "small", "--threads", "1,15,61", "--strategy", "both",
+                "--serial", "--lab"];
+    let shard = |spec: &str, resume: bool| {
+        let mut args = vec!["sweep", "run", "--shard", spec];
+        if resume {
+            args.push("--resume");
+        }
+        args.extend_from_slice(&grid);
+        args.push(lab_s);
+        repro(&args)
+    };
+    // Two shards of the 6-cell grid: 3 scenarios each, disjoint.
+    let out = shard("1/2", false);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stdout(&out).contains("3 scenarios"), "{}", stdout(&out));
+    let out = shard("2/2", false);
+    assert!(out.status.success(), "{}", stderr(&out));
+    // --resume composes with --shard via the derived manifest id.
+    let out = shard("1/2", true);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stderr(&out).contains("resuming shard run"), "{}", stderr(&out));
+    assert!(stderr(&out).contains(".1of2"), "{}", stderr(&out));
+    // The listing groups shard manifests (indented) under the parent id.
+    let out = repro(&["lab", "list", "--lab", lab_s]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.contains("lab runs — 2"), "{s}");
+    assert!(s.contains("└") && s.contains(".1of2") && s.contains(".2of2"), "{s}");
+    // The shards covered the whole grid: a full run over the same lab
+    // is pure store hits.
+    let json = dir.path().join("full.json");
+    let mut args = vec!["sweep", "run", "--json", json.to_str().unwrap()];
+    args.extend_from_slice(&grid);
+    args.push(lab_s);
+    let out = repro(&args);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let doc = micdl::util::json::Json::parse(&std::fs::read_to_string(&json).unwrap()).unwrap();
+    assert_eq!(doc.get("scenarios").unwrap().as_usize(), Some(6));
+    let store = doc.get("store").unwrap();
+    assert_eq!(store.get("misses").unwrap().as_usize(), Some(0), "{store:?}");
+}
+
+#[test]
+fn sweep_shards_driver_output_matches_unsharded() {
+    // The acceptance criterion: the --shards driver's stdout and stable
+    // JSON payload are byte-identical to the unsharded run's.
+    let dir = micdl::util::tmp::TempDir::new("cli-shard-driver").unwrap();
+    let grid = ["--arch", "small", "--threads", "1,15,61", "--strategy", "both",
+                "--serial", "--csv"];
+    let run = |extra: &[&str], lab: &str, json: &std::path::Path| {
+        let mut args = vec!["sweep", "run"];
+        args.extend_from_slice(extra);
+        args.extend_from_slice(&grid);
+        args.extend_from_slice(&["--json", json.to_str().unwrap(), "--lab", lab]);
+        repro(&args)
+    };
+    let whole_json = dir.path().join("whole.json");
+    let whole_lab = dir.path().join("lab-whole");
+    let whole = run(&[], whole_lab.to_str().unwrap(), &whole_json);
+    assert!(whole.status.success(), "{}", stderr(&whole));
+    let sharded_json = dir.path().join("sharded.json");
+    let sharded_lab = dir.path().join("lab-sharded");
+    let sharded = run(&["--shards", "3"], sharded_lab.to_str().unwrap(), &sharded_json);
+    assert!(sharded.status.success(), "{}", stderr(&sharded));
+    for k in 1..=3 {
+        assert!(
+            stderr(&sharded).contains(&format!("shard {k}/3 complete")),
+            "{}",
+            stderr(&sharded)
+        );
+    }
+    // CSV table on stdout: byte-identical (it carries no telemetry).
+    assert_eq!(stdout(&whole), stdout(&sharded));
+    // JSON payload: stable keys byte-identical; wall/cache/store are
+    // per-run telemetry and excluded, as in the CI lab smoke.
+    let parse = |p: &std::path::Path| {
+        micdl::util::json::Json::parse(&std::fs::read_to_string(p).unwrap()).unwrap()
+    };
+    let (w, s) = (parse(&whole_json), parse(&sharded_json));
+    for key in ["grid", "results", "accuracy", "scenarios"] {
+        assert_eq!(
+            w.get(key).unwrap().emit(),
+            s.get(key).unwrap().emit(),
+            "{key} differs between unsharded and sharded driver run"
+        );
+    }
+    // The driver's lab holds the parent manifest (complete) plus one
+    // manifest per shard.
+    let out = repro(&["lab", "list", "--lab", sharded_lab.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let listing = stdout(&out);
+    assert!(listing.contains("lab runs — 4"), "{listing}");
+    assert!(listing.contains(".1of3") && listing.contains(".3of3"), "{listing}");
+}
+
+#[test]
+fn sweep_shards_driver_retries_and_reports_failures() {
+    // threads=0 parses in the driver but fails grid validation inside
+    // every child, so each shard exhausts its retry budget — the same
+    // observable path as a shard killed mid-run (the child exit status
+    // lands in the report either way).
+    let dir = micdl::util::tmp::TempDir::new("cli-shard-fail").unwrap();
+    let lab = dir.path().join("lab");
+    let run = |extra: &[&str]| {
+        let mut args = vec!["sweep", "run", "--shards", "2",
+                            "--arch", "small", "--threads", "0,15",
+                            "--strategy", "a", "--serial", "--lab",
+                            lab.to_str().unwrap()];
+        args.extend_from_slice(extra);
+        repro(&args)
+    };
+    // Fail-fast (default): exit 1 once the first shard exhausts its
+    // three attempts, with the child's error line in the message.
+    let out = run(&[]);
+    assert_eq!(out.status.code(), Some(1));
+    let e = stderr(&out);
+    assert!(e.contains("attempt 1/3") && e.contains("attempt 3/3"), "{e}");
+    assert!(e.contains("failed after 3 attempts"), "{e}");
+    assert!(e.contains("thread counts must be >= 1"), "{e}");
+    // --continue-on-failure: every shard is tried and the per-shard
+    // failure report covers them all; still exit 1.
+    let out = run(&["--continue-on-failure"]);
+    assert_eq!(out.status.code(), Some(1));
+    let e = stderr(&out);
+    assert!(e.contains("shard failure report"), "{e}");
+    assert!(e.contains("shard 1/2") && e.contains("shard 2/2"), "{e}");
+}
+
+#[test]
 fn selfcheck_passes() {
     let out = repro(&["selfcheck"]);
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));

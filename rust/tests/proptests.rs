@@ -845,3 +845,104 @@ fn prop_parallel_ablation_sweeps_bit_identical_to_serial() {
         }
     }
 }
+
+#[test]
+fn prop_merged_shards_bit_identical_to_unsharded_serial_run() {
+    use micdl::lab::Lab;
+    use micdl::sweep::{merge_shards, GridSpec, Strategy, SweepResults, SweepRunner};
+    use micdl::util::json::Json;
+    use micdl::util::tmp::TempDir;
+
+    // The stable payload: everything in the JSON dump that is a pure
+    // function of the evaluated grid (wall/cache/store/workers are
+    // per-run telemetry and legitimately differ across process shapes).
+    fn stable_payload(results: &SweepResults) -> String {
+        let doc = Json::parse(&results.to_json().emit()).unwrap();
+        ["grid", "scenarios", "accuracy", "results"]
+            .map(|key| doc.get(key).unwrap().emit())
+            .join("\n")
+    }
+
+    let mut rng = XorShift64::new(4242);
+    for case in 0..5 {
+        let sims = (0..1 + rng.next_below(2))
+            .map(|i| random_sim_variant(&mut rng, format!("v{i}")))
+            .collect::<Vec<_>>();
+        let mut grid = GridSpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![1 + rng.next_below(120), 121 + rng.next_below(240)],
+            strategies: vec![Strategy::A, Strategy::B],
+            sims,
+            measure: true,
+            ..GridSpec::default()
+        };
+        grid.normalize();
+        let serial = SweepRunner::serial().run(&grid).unwrap();
+        // Any shard count up to the cell count (the tentpole contract).
+        let n = 1 + rng.next_below(grid.len());
+
+        // Storeless shards merge bit-identically to the serial run:
+        // per-result float bits, accuracy aggregation, JSON payload.
+        let shards: Vec<SweepResults> = (0..n)
+            .map(|k| SweepRunner::serial().run_shard(&grid, k, n).unwrap())
+            .collect();
+        let merged = merge_shards(&grid, shards).unwrap();
+        assert_eq!(serial.len(), merged.len(), "case {case} n {n}");
+        for (s, m) in serial.results.iter().zip(merged.results.iter()) {
+            assert_eq!(s.scenario, m.scenario, "case {case} n {n}");
+            assert_eq!(
+                s.prediction.total_s.to_bits(),
+                m.prediction.total_s.to_bits(),
+                "case {case} n {n} id {}",
+                s.scenario.id
+            );
+            assert_eq!(
+                s.measured_s.unwrap().to_bits(),
+                m.measured_s.unwrap().to_bits(),
+                "case {case} n {n} id {}",
+                s.scenario.id
+            );
+        }
+        assert_eq!(
+            stable_payload(&merged),
+            stable_payload(&serial),
+            "case {case} n {n}"
+        );
+
+        // Store accounting. Shards run sequentially against one shared
+        // fresh store miss each unique key exactly once grid-wide —
+        // the same total an unsharded run against its own fresh store
+        // records — because whichever shard touches a key first
+        // persists it for the rest.
+        let shard_dir = TempDir::new("shard-prop").unwrap();
+        let shard_lab = Lab::open(shard_dir.path()).unwrap();
+        let mut shard_misses = 0;
+        for k in 0..n {
+            let before = shard_lab.store().stats();
+            shard_lab.run_shard(&grid, k, n, 0).unwrap();
+            shard_misses += shard_lab.store().stats().since(&before).misses;
+        }
+        let whole_dir = TempDir::new("shard-prop-whole").unwrap();
+        let whole_lab = Lab::open(whole_dir.path()).unwrap();
+        whole_lab.run(&grid, 0).unwrap();
+        assert_eq!(
+            shard_misses,
+            whole_lab.store().stats().misses,
+            "case {case} n {n}: sharding changed the store miss total"
+        );
+        // The driver's merge pass: a full run over the shard-warmed
+        // store is pure hits and reproduces the serial payload.
+        let before = shard_lab.store().stats();
+        let warm = shard_lab.run(&grid, 0).unwrap();
+        assert_eq!(
+            shard_lab.store().stats().since(&before).misses,
+            0,
+            "case {case} n {n}: warm merge pass missed"
+        );
+        assert_eq!(
+            stable_payload(&warm),
+            stable_payload(&serial),
+            "case {case} n {n}"
+        );
+    }
+}
