@@ -1,0 +1,93 @@
+//! Serve-engine benchmark: batched prediction throughput, cold vs hot.
+//!
+//! The ladder batch is ≈10⁶ cells (4,098 queries × the full 1..=244
+//! thread ladder, cycling the three paper architectures and both
+//! strategies); dividing a case's median by `batch_cells` gives the
+//! per-cell cost. Cold builds a fresh engine per iteration (parameter
+//! tables resolve from scratch — exactly once per distinct (arch, sim
+//! fingerprint) pair, asserted); hot times the steady-state memo-served
+//! path `repro serve` rides. Besides the stdout report, the run writes
+//! `BENCH_serve.json` with mandatory `generated_by`/`host` provenance,
+//! like bench_sweep — anonymous runs are refused:
+//! `MICDL_BENCH_GENERATED_BY=$(whoami) cargo bench --bench bench_serve`.
+
+use micdl::calibration::Calibration;
+use micdl::config::ArchSpec;
+use micdl::perfmodel::ParamSource;
+use micdl::serve::{PredictEngine, Query, QueryBatch};
+use micdl::simulator::SimConfig;
+use micdl::sweep::Strategy;
+use micdl::util::bench::Bench;
+use micdl::util::json::Json;
+
+/// `queries` ladder queries cycling the paper architectures and
+/// strategies: 4,098 × 244 = 999,912 cells ≈ 1e6.
+fn ladder_batch(queries: usize) -> QueryBatch {
+    let archs = ["small", "medium", "large"];
+    QueryBatch {
+        queries: (0..queries)
+            .map(|i| Query {
+                arch: archs[i % archs.len()].to_string(),
+                strategies: vec![if i % 2 == 0 { Strategy::A } else { Strategy::B }],
+                threads: (1..=244).collect(),
+                train_images: 60_000,
+                test_images: 10_000,
+                epochs: None,
+                sim: None,
+            })
+            .collect(),
+    }
+}
+
+fn main() {
+    let mut b = Bench::quick();
+
+    let big = ladder_batch(4_098);
+    let cells = big.cells() as u64;
+
+    b.case("serve/cold-batch/1e6", || {
+        let engine = PredictEngine::new(ParamSource::Simulator, 0);
+        let n = engine.drain_batch(&big).unwrap();
+        assert_eq!(n, cells);
+        assert_eq!(
+            engine.stats().calibration_resolutions,
+            3,
+            "one resolve per distinct (arch, sim fingerprint) pair"
+        );
+        n
+    });
+
+    // Hot: one shared engine across iterations — the memos stay warm,
+    // so this is the steady-state batched throughput.
+    let shared = PredictEngine::new(ParamSource::Simulator, 0);
+    shared.drain_batch(&big).unwrap();
+    b.case("serve/hot-batch/1e6", || shared.drain_batch(&big).unwrap());
+    assert_eq!(shared.stats().calibration_resolutions, 3);
+
+    // One 244-cell ladder query, hot: the smallest useful batch.
+    let single = ladder_batch(1);
+    b.case("serve/hot-batch/244", || shared.drain_batch(&single).unwrap());
+
+    // Reference: the raw hot-resolve cost the engine's per-batch
+    // resolve phase rides (compare the per-cell hot-batch cost to it).
+    let archs = ArchSpec::paper_archs();
+    let sim = SimConfig::default();
+    let cal = Calibration::new(ParamSource::Simulator);
+    b.case("calibration/resolve-hot/3archs", || {
+        for arch in &archs {
+            cal.resolve(arch, &sim).unwrap();
+        }
+        cal.resolutions()
+    });
+
+    b.print_report("serve engine (batched prediction)");
+
+    b.write_snapshot(
+        "BENCH_serve.json",
+        "serve",
+        vec![
+            ("batch_queries", Json::num(big.queries.len() as f64)),
+            ("batch_cells", Json::num(cells as f64)),
+        ],
+    );
+}

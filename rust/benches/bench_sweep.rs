@@ -3,8 +3,9 @@
 //! Cases cover grid enumeration, serial vs parallel evaluation of a
 //! mid-size grid, and a paper-scale 1,464-scenario run. Besides the
 //! stdout report, the run writes `BENCH_sweep.json` (median/mean/min per
-//! case) so the perf trajectory is diffable across PRs:
-//! `cargo bench --bench bench_sweep`.
+//! case, plus mandatory `generated_by`/`host` provenance — anonymous
+//! runs are refused) so the perf trajectory is diffable across CI runs:
+//! `MICDL_BENCH_GENERATED_BY=$(whoami) cargo bench --bench bench_sweep`.
 
 use micdl::calibration::Calibration;
 use micdl::config::ArchSpec;
@@ -102,26 +103,12 @@ fn main() {
 
     b.print_report("scenario sweep engine");
 
-    let cases: Vec<Json> = b
-        .results
-        .iter()
-        .map(|r| {
-            Json::obj(vec![
-                ("name", Json::str(r.name.clone())),
-                ("iters", Json::num(r.iters as f64)),
-                ("median_ns", Json::num(r.median.as_nanos() as f64)),
-                ("mean_ns", Json::num(r.mean.as_nanos() as f64)),
-                ("min_ns", Json::num(r.min.as_nanos() as f64)),
-                ("mad_ns", Json::num(r.mad.as_nanos() as f64)),
-            ])
-        })
-        .collect();
-    let doc = Json::obj(vec![
-        ("bench", Json::str("sweep")),
-        ("grid_mid", Json::num(mid_grid().len() as f64)),
-        ("grid_full", Json::num(full_grid().len() as f64)),
-        ("cases", Json::Arr(cases)),
-    ]);
-    std::fs::write("BENCH_sweep.json", doc.emit() + "\n").expect("write BENCH_sweep.json");
-    println!("\nwrote BENCH_sweep.json ({} cases)", b.results.len());
+    b.write_snapshot(
+        "BENCH_sweep.json",
+        "sweep",
+        vec![
+            ("grid_mid", Json::num(mid_grid().len() as f64)),
+            ("grid_full", Json::num(full_grid().len() as f64)),
+        ],
+    );
 }

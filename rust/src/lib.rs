@@ -36,6 +36,7 @@
 //! | [`report`] | Paper-style table/series rendering + embedded paper data |
 //! | [`sweep`] | Parallel scenario-sweep engine (grid × cache × worker pool) |
 //! | [`lab`] | Persistent experiment lab: content-addressed disk store + resumable runs |
+//! | [`serve`] | Batched what-if prediction engine + embedded HTTP server (`repro predict` / `repro serve`) |
 //! | [`experiments`] | One entry per paper table/figure (the reproduction index) |
 
 pub mod calibration;
@@ -50,6 +51,7 @@ pub mod nn;
 pub mod perfmodel;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod simulator;
 pub mod sweep;
 pub mod training;

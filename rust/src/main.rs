@@ -7,6 +7,8 @@
 //! repro arch [--name N | --json FILE]               architecture summary (Fig. 2)
 //! repro simulate --arch A --threads P [...]         run micsim on a workload
 //! repro predict --arch A --threads P [...]          run the performance models
+//! repro predict --batch FILE.json [...]             batched what-if queries
+//! repro serve [--addr HOST:PORT] [...]              embedded HTTP prediction server
 //! repro sweep run [--spec FILE | axis flags]        evaluate a whole scenario grid
 //! repro sweep baseline write|compare FILE           golden-baseline write / regression gate
 //! repro conformance [--baseline FILE]               measured-mode Δ-band conformance
@@ -47,12 +49,14 @@ use micdl::lab::Lab;
 use micdl::nn::opcount;
 use micdl::perfmodel::{both_models, ParamSource, PerfModel};
 use micdl::report::Table;
+use micdl::serve::{predict_doc, PredictEngine, QueryBatch, ServeStats, Server};
 use micdl::simulator::{probe, simulate_training, Fidelity, SimConfig};
 use micdl::sweep::baseline::DEFAULT_TOLERANCE;
 use micdl::sweep::{
-    conformance, parse_axis, sensitivity, Baseline, ConformanceBaseline, GridSpec,
-    SensitivitySpec, SimConstant, SimVariant, Strategy, SweepRunner,
+    conformance, parse_axis, sensitivity, Baseline, CacheStats, ConformanceBaseline, GridSpec,
+    SensitivitySpec, SimConstant, SimVariant, Strategy, SweepResults, SweepRunner,
 };
+use std::sync::Arc;
 
 /// `format!` into the crate's config error.
 macro_rules! err {
@@ -137,6 +141,23 @@ USAGE:
                  [--fidelity chunked|image]
   repro predict  --arch A [--threads P] [--epochs E] [--images I] [--test-images IT]
                  [--strategy a|b|both] [--params paper|sim]
+  repro predict  --batch FILE.json [--params paper|sim] [--json OUT.json | --csv]
+                 [--workers N | --serial] [--lab [PATH]] [--no-store]
+                 (batched what-if queries: FILE is a JSON array of
+                  {arch, strategy, threads | threads_range, train_images,
+                  test_images, epochs, sim} objects, or {\"queries\": [...]}.
+                  Result rows are bit-identical to the equivalent sweep
+                  cells; parameter tables resolve at most once per
+                  distinct (arch, sim) pair per batch; --lab serves
+                  previously swept cells straight from the store. See
+                  docs/SERVE.md.)
+  repro serve    [--addr HOST:PORT] [--workers N | --serial] [--params paper|sim]
+                 [--lab [PATH]] [--no-store]
+                 (embedded HTTP prediction server over the same engine:
+                  POST /predict evaluates a query batch, GET /healthz,
+                  GET /stats, POST /shutdown. Default address is
+                  127.0.0.1:8787; port 0 picks a free port — the resolved
+                  address is printed on stdout. See docs/SERVE.md.)
   repro sweep [run] [--spec FILE.json] [--arch all|NAME[,NAME...]] [--threads LIST]
                  [--images IxIT[,IxIT...]] [--epochs LIST] [--strategy a|b|both]
                  [--params paper|sim] [--clock-ghz F[,F...]] [--measure]
@@ -261,6 +282,7 @@ fn dispatch(argv: &[String]) -> Result<ExitCode> {
         "arch" => cmd_arch(&args),
         "simulate" => cmd_simulate(&args),
         "predict" => cmd_predict(&args),
+        "serve" => cmd_serve(&args),
         "sweep" => cmd_sweep(&args),
         "conformance" => cmd_conformance(&args),
         "sensitivity" => cmd_sensitivity(&args),
@@ -358,6 +380,9 @@ fn cmd_simulate(args: &Args) -> Result<ExitCode> {
 }
 
 fn cmd_predict(args: &Args) -> Result<ExitCode> {
+    if args.has("batch") {
+        return cmd_predict_batch(args);
+    }
     let arch = parse_arch(args)?;
     let run = parse_run(args, &arch.name)?;
     let (a, b) = both_models(&arch, parse_params(args)?)?;
@@ -385,6 +410,139 @@ fn cmd_predict(args: &Args) -> Result<ExitCode> {
         ]);
     }
     print!("{}", t.render());
+    Ok(ExitCode::Ok)
+}
+
+/// The `predict --batch` flag inventory: (name, takes a value) — one
+/// table drives both validation passes, like [`SWEEP_FLAGS`]. The
+/// single-point `repro predict` keeps its original free-form flags.
+const PREDICT_BATCH_FLAGS: [(&str, bool); 8] = [
+    ("batch", true),
+    ("params", true),
+    ("json", true),
+    ("csv", false),
+    ("workers", true),
+    ("serial", false),
+    ("lab", false),
+    ("no-store", false),
+];
+
+/// The `serve` flag inventory, same contract as [`PREDICT_BATCH_FLAGS`].
+const SERVE_FLAGS: [(&str, bool); 6] = [
+    ("addr", true),
+    ("workers", true),
+    ("serial", false),
+    ("params", true),
+    ("lab", false),
+    ("no-store", false),
+];
+
+/// Build the prediction engine shared by `repro predict --batch` and
+/// `repro serve`: parameter source, worker count, and the `--lab` store
+/// when one is configured (warm cells then serve straight from disk).
+fn build_engine(args: &Args) -> Result<PredictEngine> {
+    let workers = if args.has("serial") {
+        1
+    } else {
+        args.get_usize("workers", 0)?
+    };
+    let engine = PredictEngine::new(parse_params(args)?, workers);
+    Ok(match parse_lab(args)? {
+        Some(lab) => engine.with_store(Arc::clone(lab.store())),
+        None => engine,
+    })
+}
+
+/// One human-readable line of engine telemetry (the predict footer).
+fn serve_stats_line(stats: &ServeStats) -> String {
+    let mut line = format!(
+        "{} queries in {} batches, {} cells | calibration resolutions: {}",
+        stats.queries, stats.batches, stats.cells, stats.calibration_resolutions
+    );
+    if let Some(s) = &stats.store {
+        line.push_str(&format!(" | store: {} hits / {} misses", s.hits, s.misses));
+    }
+    line
+}
+
+/// Render one evaluated query with the sweep's own per-cell table so
+/// the human-readable predict output matches `repro sweep run --full`
+/// row for row (the footer telemetry is the engine's, printed once by
+/// the caller, so only the table is borrowed here).
+fn query_table(q: &micdl::serve::QueryResult) -> Table {
+    SweepResults {
+        grid: q.grid.clone(),
+        results: q.results.clone(),
+        cache: CacheStats::default(),
+        store: None,
+        wall_s: 0.0,
+        workers: 1,
+    }
+    .table(true)
+}
+
+/// `repro predict --batch FILE`: evaluate a query batch through the
+/// [`micdl::serve`] engine. `--json` writes the predict document (rows
+/// bit-identical to the equivalent sweep cells), `--csv` streams the
+/// cells as one CSV table, default prints per-query tables plus the
+/// engine-stats footer.
+fn cmd_predict_batch(args: &Args) -> Result<ExitCode> {
+    check_flags(args, &PREDICT_BATCH_FLAGS, "predict")?;
+    if args.has("json") && args.has("csv") {
+        bail!("--json and --csv are mutually exclusive");
+    }
+    let path = args
+        .get("batch")
+        .ok_or_else(|| err!("--batch needs a file path"))?;
+    let batch = QueryBatch::from_json(&std::fs::read_to_string(path)?)?;
+    let engine = build_engine(args)?;
+    let results = engine.eval_batch(&batch)?;
+    let stats = engine.stats();
+    if let Some(out) = args.get("json") {
+        std::fs::write(out, predict_doc(&results, &stats).emit())?;
+        eprintln!(
+            "wrote {} result rows ({} queries) to {out}",
+            stats.cells, stats.queries
+        );
+        eprintln!("{}", serve_stats_line(&stats));
+        return Ok(ExitCode::Ok);
+    }
+    if args.has("csv") {
+        // One CSV stream: first query's header line, then data rows only.
+        for (qi, q) in results.iter().enumerate() {
+            let csv = query_table(q).to_csv();
+            for line in csv.lines().skip(if qi == 0 { 0 } else { 1 }) {
+                println!("{line}");
+            }
+        }
+        return Ok(ExitCode::Ok);
+    }
+    for q in &results {
+        print!("{}", query_table(q).render());
+    }
+    println!("{}", serve_stats_line(&stats));
+    Ok(ExitCode::Ok)
+}
+
+/// `repro serve`: bind the embedded HTTP prediction server and block
+/// until a `POST /shutdown` arrives. The resolved address goes to
+/// stdout (port 0 picks a free port), so scripts can `--addr 127.0.0.1:0`
+/// and read the line back.
+fn cmd_serve(args: &Args) -> Result<ExitCode> {
+    check_flags(args, &SERVE_FLAGS, "serve")?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:8787");
+    let workers = if args.has("serial") {
+        1
+    } else {
+        args.get_usize("workers", 0)?
+    };
+    let engine = Arc::new(build_engine(args)?);
+    let server = Server::bind(engine, addr, workers)?;
+    println!("listening on {}", server.local_addr()?);
+    use std::io::Write;
+    std::io::stdout().flush()?;
+    server.run()?;
+    eprintln!("serve: shut down cleanly");
     Ok(ExitCode::Ok)
 }
 
@@ -652,6 +810,17 @@ fn shard_failure_detail(out: &std::process::Output) -> String {
     format!("{} — {detail}", out.status)
 }
 
+/// True when a failed shard child's failure detail is deterministic — a
+/// configuration or spec-parse error that every retry would reproduce
+/// byte for byte. The driver fails such shards immediately instead of
+/// burning the full retry budget (retries are for transient failures:
+/// I/O contention on the shared store, kills, flaky environments).
+/// Classified on the child's `error:` stderr line, which carries the
+/// [`Error`] display prefix (`config error:` / `json error:`).
+fn shard_error_is_config(detail: &str) -> bool {
+    detail.contains("error: config error:") || detail.contains("error: json error:")
+}
+
 /// The `--shards N` driver: spawn one `repro sweep run --shard k/N`
 /// child process per shard, all against the shared lab store, retrying
 /// failed shards in up to 3 waves with linear backoff. Once every shard
@@ -696,7 +865,12 @@ fn run_shard_driver(
         }
     }
     let mut pending: Vec<usize> = (0..n).collect();
-    let mut failures: Vec<(usize, String)> = Vec::new();
+    // Permanently failed shards: (shard, detail, retries exhausted?).
+    // Deterministic config/validation failures land here on first sight
+    // (retryable = false) — re-running them burns the budget to
+    // reproduce the same error; only transient failures get the
+    // remaining attempts.
+    let mut failures: Vec<(usize, String, bool)> = Vec::new();
     for attempt in 1..=ATTEMPTS {
         let mut children = Vec::new();
         for &k in &pending {
@@ -710,44 +884,69 @@ fn run_shard_driver(
                 .spawn()?;
             children.push((k, child));
         }
-        let mut still: Vec<(usize, String)> = Vec::new();
+        let mut still: Vec<usize> = Vec::new();
         for (k, child) in children {
             let out = child.wait_with_output()?;
             if out.status.success() {
                 eprintln!("note: shard {}/{n} complete", k + 1);
-            } else {
-                let detail = shard_failure_detail(&out);
+                continue;
+            }
+            let detail = shard_failure_detail(&out);
+            if shard_error_is_config(&detail) {
+                eprintln!(
+                    "warning: shard {}/{n} failed (non-retryable, attempt \
+                     {attempt}/{ATTEMPTS} is final): {detail}",
+                    k + 1
+                );
+                failures.push((k, detail, false));
+            } else if attempt == ATTEMPTS {
                 eprintln!(
                     "warning: shard {}/{n} failed (attempt {attempt}/{ATTEMPTS}): {detail}",
                     k + 1
                 );
-                still.push((k, detail));
+                failures.push((k, detail, true));
+            } else {
+                eprintln!(
+                    "warning: shard {}/{n} failed (attempt {attempt}/{ATTEMPTS}): {detail}",
+                    k + 1
+                );
+                still.push(k);
             }
         }
-        if still.is_empty() {
-            failures.clear();
+        // Fail-fast mode stops at the first permanent failure; with
+        // --continue-on-failure the transient shards keep their budget
+        // and every permanent failure is reported at the end.
+        if !failures.is_empty() && !args.has("continue-on-failure") {
             break;
         }
-        if attempt == ATTEMPTS {
-            failures = still;
-        } else {
-            pending = still.into_iter().map(|(k, _)| k).collect();
-            std::thread::sleep(std::time::Duration::from_millis(250 * attempt as u64));
+        if still.is_empty() {
+            break;
         }
+        pending = still;
+        std::thread::sleep(std::time::Duration::from_millis(250 * attempt as u64));
     }
     if !failures.is_empty() {
+        failures.sort_by_key(|&(k, _, _)| k);
         if args.has("continue-on-failure") {
             eprintln!(
-                "shard failure report: {} of {n} shards failed after {ATTEMPTS} attempts each",
+                "shard failure report: {} of {n} shards failed permanently",
                 failures.len()
             );
-            for (k, detail) in &failures {
-                eprintln!("  shard {}/{n}: {detail}", k + 1);
+            for (k, detail, retryable) in &failures {
+                let how = if *retryable {
+                    format!("after {ATTEMPTS} attempts")
+                } else {
+                    "non-retryable".to_string()
+                };
+                eprintln!("  shard {}/{n} ({how}): {detail}", k + 1);
             }
             bail!("{} of {n} shards failed (report above)", failures.len());
         }
-        let (k, detail) = &failures[0];
-        bail!("shard {}/{n} failed after {ATTEMPTS} attempts: {detail}", k + 1);
+        let (k, detail, retryable) = &failures[0];
+        if *retryable {
+            bail!("shard {}/{n} failed after {ATTEMPTS} attempts: {detail}", k + 1);
+        }
+        bail!("shard {}/{n} failed with a non-retryable error: {detail}", k + 1);
     }
     // Every shard persisted its cells under the keys an unsharded run
     // uses, so this full pass is pure store hits and its payload is the
@@ -1364,4 +1563,26 @@ fn cmd_selfcheck(args: &Args) -> Result<ExitCode> {
     }
     println!("selfcheck OK");
     Ok(ExitCode::Ok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_failure_classification_is_on_the_error_prefix() {
+        // Deterministic child failures — retrying reproduces them.
+        assert!(shard_error_is_config(
+            "exit status: 1 — error: config error: thread counts must be >= 1"
+        ));
+        assert!(shard_error_is_config(
+            "exit status: 1 — error: json error: expected ':' after object key"
+        ));
+        // Transient or unclassifiable failures keep the retry budget.
+        assert!(!shard_error_is_config(
+            "exit status: 1 — error: io error: permission denied"
+        ));
+        assert!(!shard_error_is_config("signal: 9 (SIGKILL) — (no stderr)"));
+        assert!(!shard_error_is_config("exit status: 101 — (no stderr)"));
+    }
 }

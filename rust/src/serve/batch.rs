@@ -1,0 +1,317 @@
+//! The query-batch schema: what `repro predict --batch` and
+//! `POST /predict` accept.
+//!
+//! A batch is a JSON array of query objects (or an object with a single
+//! `queries` array), each query naming one architecture, the strategies
+//! to evaluate, and a thread ladder — either an explicit `threads` list
+//! or a `threads_range` object in exactly the sweep-spec grammar
+//! ([`crate::sweep::threads_range_from_json`]):
+//!
+//! ```json
+//! [
+//!   {"arch": "small", "strategy": "both", "threads": [1, 15, 61, 240]},
+//!   {"arch": "large", "strategy": "b",
+//!    "threads_range": {"from": 1, "to": 244},
+//!    "train_images": 120000, "test_images": 20000, "epochs": 30,
+//!    "sim": {"name": "overclocked", "clock_ghz": 1.5}}
+//! ]
+//! ```
+//!
+//! Every query expands to a small [`GridSpec`] ([`Query::to_grid`]) and
+//! is evaluated through exactly the sweep engine's cell path, so predict
+//! results are bit-identical to the corresponding sweep cells.
+
+use crate::config::ArchSpec;
+use crate::error::{Error, Result};
+use crate::perfmodel::ParamSource;
+use crate::sweep::grid::{threads_range_from_json, GridSpec, SimVariant, Strategy};
+use crate::util::json::Json;
+
+/// One what-if query: an architecture × strategy set × thread ladder
+/// over a single workload (and optionally a simulator variant).
+#[derive(Debug, Clone)]
+pub struct Query {
+    /// Architecture name (`small` / `medium` / `large`).
+    pub arch: String,
+    /// Model strategies to evaluate (`"a"` / `"b"` / `"both"`;
+    /// default both).
+    pub strategies: Vec<Strategy>,
+    /// The thread ladder the query fans out over.
+    pub threads: Vec<usize>,
+    /// Training (and validation) image count (default 60,000 — the
+    /// paper workload).
+    pub train_images: usize,
+    /// Test image count (default 10,000).
+    pub test_images: usize,
+    /// Training epochs (`None` = the paper default for the
+    /// architecture, exactly like an empty sweep epoch axis).
+    pub epochs: Option<usize>,
+    /// Optional simulator-variant override set (the sweep sim axis,
+    /// one variant per query).
+    pub sim: Option<SimVariant>,
+}
+
+impl Query {
+    /// The JSON keys a query object may carry (unknown keys are
+    /// rejected — a typo must not silently predict the wrong scenario).
+    const KNOWN_KEYS: [&'static str; 8] = [
+        "arch",
+        "strategy",
+        "threads",
+        "threads_range",
+        "train_images",
+        "test_images",
+        "epochs",
+        "sim",
+    ];
+
+    /// Parse one query object.
+    pub fn from_json(node: &Json) -> Result<Query> {
+        let Some(pairs) = node.as_obj() else {
+            return Err(Error::Config("batch queries must be JSON objects".into()));
+        };
+        for (key, _) in pairs {
+            if !Self::KNOWN_KEYS.contains(&key.as_str()) {
+                return Err(Error::Config(format!(
+                    "unknown query key {key:?} (known keys: {:?})",
+                    Self::KNOWN_KEYS
+                )));
+            }
+        }
+        let arch = node
+            .get("arch")
+            .and_then(Json::as_str)
+            .ok_or_else(|| Error::Config("query needs an \"arch\" string".into()))?
+            .to_string();
+        let strategies = match node.get("strategy") {
+            None => vec![Strategy::A, Strategy::B],
+            Some(s) => {
+                let text = s.as_str().ok_or_else(|| {
+                    Error::Config("query strategy must be a string (a|b|both)".into())
+                })?;
+                Strategy::parse_list(text)?
+            }
+        };
+        if node.get("threads").is_some() && node.get("threads_range").is_some() {
+            return Err(Error::Config(
+                "query gives both \"threads\" and \"threads_range\" — pick one".into(),
+            ));
+        }
+        let threads = match (node.get("threads"), node.get("threads_range")) {
+            (Some(t), None) => match (t.as_arr(), t.as_usize()) {
+                (Some(arr), _) => arr
+                    .iter()
+                    .map(|v| {
+                        v.as_usize().ok_or_else(|| {
+                            Error::Config("query threads entries must be integers".into())
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+                (None, Some(p)) => vec![p],
+                (None, None) => {
+                    return Err(Error::Config(
+                        "query threads must be an integer or an integer array".into(),
+                    ))
+                }
+            },
+            (None, Some(range)) => threads_range_from_json(range, "threads_range")?,
+            (None, None) => {
+                return Err(Error::Config(
+                    "query needs \"threads\" or \"threads_range\"".into(),
+                ))
+            }
+            (Some(_), Some(_)) => unreachable!("rejected above"),
+        };
+        let int = |key: &str, default: usize| -> Result<usize> {
+            match node.get(key) {
+                None => Ok(default),
+                Some(v) => v.as_usize().ok_or_else(|| {
+                    Error::Config(format!("query {key} must be an integer"))
+                }),
+            }
+        };
+        let epochs = match node.get("epochs") {
+            None => None,
+            Some(v) => Some(v.as_usize().ok_or_else(|| {
+                Error::Config("query epochs must be an integer".into())
+            })?),
+        };
+        let sim = match node.get("sim") {
+            None => None,
+            Some(v) => Some(SimVariant::from_json(v)?),
+        };
+        Ok(Query {
+            arch,
+            strategies,
+            threads,
+            train_images: int("train_images", 60_000)?,
+            test_images: int("test_images", 10_000)?,
+            epochs,
+            sim,
+        })
+    }
+
+    /// Expand the query into the equivalent sweep grid (validated): one
+    /// architecture × the query's strategies × its thread ladder on the
+    /// default 7120P machine. Evaluating this grid cell-by-cell is what
+    /// makes predict output bit-identical to `repro sweep run`.
+    pub fn to_grid(&self, params: ParamSource) -> Result<GridSpec> {
+        let grid = GridSpec {
+            archs: vec![ArchSpec::by_name(&self.arch)?],
+            images: vec![(self.train_images, self.test_images)],
+            epochs: self.epochs.map(|e| vec![e]).unwrap_or_default(),
+            threads: self.threads.clone(),
+            strategies: self.strategies.clone(),
+            sims: self.sim.clone().map(|v| vec![v]).unwrap_or_default(),
+            params,
+            measure: false,
+            ..GridSpec::default()
+        };
+        grid.validate()?;
+        Ok(grid)
+    }
+}
+
+/// A parsed prediction batch: the unit `POST /predict` and
+/// `repro predict --batch` evaluate.
+#[derive(Debug, Clone)]
+pub struct QueryBatch {
+    /// The queries, in input order (results keep this order).
+    pub queries: Vec<Query>,
+}
+
+impl QueryBatch {
+    /// Parse a batch document: a JSON array of query objects, or an
+    /// object `{"queries": [...]}`. Empty batches are rejected.
+    pub fn from_json(text: &str) -> Result<QueryBatch> {
+        let doc = Json::parse(text)?;
+        let arr = match (doc.as_arr(), doc.as_obj()) {
+            (Some(arr), _) => arr,
+            (None, Some(pairs)) => {
+                for (key, _) in pairs {
+                    if key != "queries" {
+                        return Err(Error::Config(format!(
+                            "unknown batch key {key:?} (a batch is an array of \
+                             queries or {{\"queries\": [...]}})"
+                        )));
+                    }
+                }
+                doc.get("queries").and_then(Json::as_arr).ok_or_else(|| {
+                    Error::Config("batch \"queries\" must be an array".into())
+                })?
+            }
+            (None, None) => {
+                return Err(Error::Config(
+                    "a batch is a JSON array of queries or {\"queries\": [...]}".into(),
+                ))
+            }
+        };
+        let queries = arr.iter().map(Query::from_json).collect::<Result<Vec<_>>>()?;
+        if queries.is_empty() {
+            return Err(Error::Config("batch has no queries".into()));
+        }
+        Ok(QueryBatch { queries })
+    }
+
+    /// Total cells the batch expands to (sum of ladder × strategy sizes).
+    pub fn cells(&self) -> usize {
+        self.queries
+            .iter()
+            .map(|q| q.threads.len() * q.strategies.len())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_array_and_object_forms_with_defaults() {
+        let batch = QueryBatch::from_json(
+            r#"[{"arch": "small", "threads": [1, 15, 240]}]"#,
+        )
+        .unwrap();
+        assert_eq!(batch.queries.len(), 1);
+        let q = &batch.queries[0];
+        assert_eq!(q.arch, "small");
+        assert_eq!(q.strategies, vec![Strategy::A, Strategy::B]);
+        assert_eq!(q.threads, vec![1, 15, 240]);
+        assert_eq!((q.train_images, q.test_images), (60_000, 10_000));
+        assert_eq!(q.epochs, None);
+        assert!(q.sim.is_none());
+        assert_eq!(batch.cells(), 6);
+
+        let wrapped = QueryBatch::from_json(
+            r#"{"queries": [{"arch": "large", "strategy": "b", "threads": 240,
+                             "epochs": 5, "sim": {"clock_ghz": 1.5}}]}"#,
+        )
+        .unwrap();
+        let q = &wrapped.queries[0];
+        assert_eq!(q.strategies, vec![Strategy::B]);
+        assert_eq!(q.threads, vec![240]);
+        assert_eq!(q.epochs, Some(5));
+        assert_eq!(q.sim.as_ref().unwrap().clock_ghz, Some(1.5));
+        assert_eq!(wrapped.cells(), 1);
+    }
+
+    #[test]
+    fn threads_range_shares_the_sweep_grammar_and_rejects_reversal() {
+        let batch = QueryBatch::from_json(
+            r#"[{"arch": "small", "threads_range": {"from": 10, "to": 30, "step": 10}}]"#,
+        )
+        .unwrap();
+        assert_eq!(batch.queries[0].threads, vec![10, 20, 30]);
+        // The silent-empty-axis bugfix applies to serve queries too.
+        let err = QueryBatch::from_json(
+            r#"[{"arch": "small", "threads_range": {"from": 30, "to": 10}}]"#,
+        )
+        .expect_err("reversed range must be rejected");
+        assert!(err.to_string().contains("below range start"), "{err}");
+    }
+
+    #[test]
+    fn rejects_malformed_batches() {
+        assert!(QueryBatch::from_json("[]").is_err());
+        assert!(QueryBatch::from_json("{}").is_err());
+        assert!(QueryBatch::from_json(r#"[{"threads": [1]}]"#).is_err());
+        assert!(QueryBatch::from_json(r#"[{"arch": "small"}]"#).is_err());
+        assert!(QueryBatch::from_json(r#"[{"arch": "small", "thread": [1]}]"#).is_err());
+        assert!(QueryBatch::from_json(
+            r#"[{"arch": "small", "threads": [1], "threads_range": {"from": 1}}]"#
+        )
+        .is_err());
+        assert!(QueryBatch::from_json(r#"[{"arch": "small", "threads": [0]}]"#)
+            .unwrap()
+            .queries[0]
+            .to_grid(ParamSource::Paper)
+            .is_err());
+        assert!(QueryBatch::from_json(r#"{"batch": []}"#).is_err());
+    }
+
+    #[test]
+    fn to_grid_expands_to_the_equivalent_sweep_grid() {
+        let batch = QueryBatch::from_json(
+            r#"[{"arch": "medium", "strategy": "a", "threads": [15, 240],
+                 "train_images": 1000, "test_images": 100, "epochs": 2}]"#,
+        )
+        .unwrap();
+        let grid = batch.queries[0].to_grid(ParamSource::Simulator).unwrap();
+        assert_eq!(grid.archs[0].name, "medium");
+        assert_eq!(grid.strategies, vec![Strategy::A]);
+        assert_eq!(grid.threads, vec![15, 240]);
+        assert_eq!(grid.images, vec![(1000, 100)]);
+        assert_eq!(grid.epochs, vec![2]);
+        assert_eq!(grid.params, ParamSource::Simulator);
+        assert!(!grid.measure);
+        assert_eq!(grid.len(), 2);
+        // Omitted epochs leave the axis empty → paper default per arch.
+        let defaulted = QueryBatch::from_json(r#"[{"arch": "small", "threads": [1]}]"#)
+            .unwrap()
+            .queries[0]
+            .to_grid(ParamSource::Paper)
+            .unwrap();
+        assert!(defaulted.epochs.is_empty());
+        assert_eq!(defaulted.enumerate()[0].epochs, 70);
+    }
+}

@@ -1,0 +1,383 @@
+//! The batched prediction engine: evaluate [`QueryBatch`]es against
+//! precomputed parameter tables, bit-identically to the sweep engine.
+//!
+//! A [`PredictEngine`] owns one long-lived [`SweepCache`]. Each batch is
+//! evaluated in two phases:
+//!
+//! 1. **Resolve** — serially build the model for every distinct
+//!    (architecture, strategy, sim fingerprint) combination the batch
+//!    touches. Model construction is what triggers
+//!    [`crate::calibration::Calibration::resolve`], and both the model
+//!    memo and the calibration memo are keyed by exactly those axes, so
+//!    after this phase the batch has performed **at most one parameter
+//!    resolution per distinct (arch, sim fingerprint) pair** — the
+//!    engine asserts this invariant on every batch.
+//! 2. **Evaluate** — fan the queries out over a scoped-thread pool
+//!    (the [`crate::sweep::runner`] claim-by-cursor pattern) and run
+//!    every scenario through [`crate::sweep::runner::evaluate`] — the
+//!    single cell path shared with `repro sweep run`, which is what
+//!    makes predict rows bit-identical to the corresponding sweep
+//!    cells. Workers only ever hit the memos built in phase 1.
+//!
+//! With a lab store attached ([`PredictEngine::with_store`]), cells that
+//! a previous sweep or batch persisted short-circuit to store hits and a
+//! fully warm batch performs zero calibration resolutions.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::lab::{Store, StoreStats};
+use crate::perfmodel::ParamSource;
+use crate::serve::batch::QueryBatch;
+use crate::sweep::grid::{GridSpec, Scenario};
+use crate::sweep::summary::result_row_json;
+use crate::sweep::{runner, ScenarioResult, SweepCache};
+use crate::util::json::Json;
+
+/// One evaluated query: its expanded grid and the per-cell results in
+/// grid-enumeration order (the same order `repro sweep run` reports).
+#[derive(Debug)]
+pub struct QueryResult {
+    /// The grid the query expanded to ([`crate::serve::Query::to_grid`]).
+    pub grid: GridSpec,
+    /// One result per scenario, in enumeration order.
+    pub results: Vec<ScenarioResult>,
+}
+
+impl QueryResult {
+    /// The query's result rows in the sweep dump's `results[]` shape —
+    /// produced by the same [`result_row_json`] the sweep JSON dump
+    /// uses, so the bytes match cell for cell.
+    pub fn rows(&self) -> Vec<Json> {
+        self.results.iter().map(|r| result_row_json(&self.grid, r)).collect()
+    }
+}
+
+/// Cumulative engine telemetry, exported by `GET /stats` and the
+/// predict CLI footer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeStats {
+    /// Queries evaluated across all successful batches.
+    pub queries: u64,
+    /// Successful batches evaluated.
+    pub batches: u64,
+    /// Scenario cells evaluated across all successful batches.
+    pub cells: u64,
+    /// Parameter-table resolutions performed by the engine's cache
+    /// since construction ([`SweepCache::calibration_resolutions`]).
+    pub calibration_resolutions: u64,
+    /// Lab-store hit/miss counters, when a store is attached.
+    pub store: Option<StoreStats>,
+}
+
+impl ServeStats {
+    /// The machine-readable form (the `GET /stats` body and the
+    /// `"stats"` object of a predict document).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("queries", Json::num(self.queries as f64)),
+            ("batches", Json::num(self.batches as f64)),
+            ("cells", Json::num(self.cells as f64)),
+            (
+                "calibration_resolutions",
+                Json::num(self.calibration_resolutions as f64),
+            ),
+        ];
+        if let Some(s) = &self.store {
+            pairs.push((
+                "store",
+                Json::obj(vec![
+                    ("hits", Json::num(s.hits as f64)),
+                    ("misses", Json::num(s.misses as f64)),
+                ]),
+            ));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// The batched what-if query engine behind `repro predict --batch` and
+/// `repro serve`. Cheap to share (`&self` methods, internally
+/// synchronized); one engine instance serves any number of batches and
+/// keeps its calibration/model memos warm across them.
+pub struct PredictEngine {
+    cache: SweepCache,
+    params: ParamSource,
+    workers: usize,
+    queries: AtomicU64,
+    batches: AtomicU64,
+    cells: AtomicU64,
+}
+
+impl PredictEngine {
+    /// A fresh engine. `workers` bounds the per-batch evaluation pool
+    /// (0 = one per available CPU, like [`crate::sweep::SweepRunner`]).
+    pub fn new(params: ParamSource, workers: usize) -> PredictEngine {
+        PredictEngine {
+            cache: SweepCache::new(),
+            params,
+            workers,
+            queries: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            cells: AtomicU64::new(0),
+        }
+    }
+
+    /// Attach a lab store: previously persisted cells short-circuit to
+    /// store hits (a fully warm batch resolves zero parameter tables),
+    /// and nothing is written back — predict queries never measure.
+    pub fn with_store(mut self, store: Arc<Store>) -> PredictEngine {
+        self.cache.set_store(store);
+        self
+    }
+
+    /// The engine's parameter provenance.
+    pub fn params(&self) -> ParamSource {
+        self.params
+    }
+
+    /// Evaluate a batch, keeping every cell's result. Queries come back
+    /// in input order; within a query, cells in grid-enumeration order.
+    pub fn eval_batch(&self, batch: &QueryBatch) -> Result<Vec<QueryResult>> {
+        self.run(batch, true)
+    }
+
+    /// Evaluate a batch for effect only (throughput benches): every
+    /// cell is computed and counted, no result rows are kept.
+    pub fn drain_batch(&self, batch: &QueryBatch) -> Result<u64> {
+        let before = self.cells.load(Ordering::SeqCst);
+        self.run(batch, false)?;
+        Ok(self.cells.load(Ordering::SeqCst) - before)
+    }
+
+    /// Cumulative telemetry snapshot.
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            queries: self.queries.load(Ordering::SeqCst),
+            batches: self.batches.load(Ordering::SeqCst),
+            cells: self.cells.load(Ordering::SeqCst),
+            calibration_resolutions: self.cache.calibration_resolutions(),
+            store: self.cache.store().map(|s| s.stats()),
+        }
+    }
+
+    /// Resolved worker count for a batch of `n` queries.
+    fn workers_for(&self, n: usize) -> usize {
+        let requested = if self.workers == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            self.workers
+        };
+        requested.min(n).max(1)
+    }
+
+    /// Phase 1: serially resolve every distinct (arch, strategy, sim
+    /// fingerprint) model the batch touches. Returns the number of
+    /// distinct (arch, fingerprint) pairs — the ceiling on calibration
+    /// resolutions this batch may perform.
+    fn resolve_tables(&self, grids: &[GridSpec]) -> Result<usize> {
+        let mut pairs: Vec<(String, u64)> = Vec::new();
+        let mut models: Vec<(String, u8, u64)> = Vec::new();
+        for grid in grids {
+            // Queries expand to single-arch/machine/image grids, so one
+            // probe scenario per strategy covers the whole grid: the
+            // model memo ignores the workload axes.
+            let probe = Scenario {
+                id: 0,
+                sim: 0,
+                arch: 0,
+                machine: 0,
+                train_images: grid.images[0].0,
+                test_images: grid.images[0].1,
+                epochs: grid.epochs.first().copied().unwrap_or(1),
+                threads: grid.threads[0],
+                strategy: grid.strategies[0],
+            };
+            let fp = grid.resolved_sim(self.cache.sim(), &probe).fingerprint();
+            let pair = (grid.archs[0].name.clone(), fp);
+            if !pairs.contains(&pair) {
+                pairs.push(pair);
+            }
+            for &strategy in &grid.strategies {
+                let key = (grid.archs[0].name.clone(), strategy as u8, fp);
+                if models.contains(&key) {
+                    continue;
+                }
+                models.push(key);
+                self.cache.model(grid, &Scenario { strategy, ..probe.clone() })?;
+            }
+        }
+        Ok(pairs.len())
+    }
+
+    /// Shared batch path: expand + validate every query, resolve the
+    /// parameter tables, then evaluate the cells (parallel over
+    /// queries). Counters only advance for batches that succeed.
+    fn run(&self, batch: &QueryBatch, keep: bool) -> Result<Vec<QueryResult>> {
+        let grids: Vec<GridSpec> = batch
+            .queries
+            .iter()
+            .map(|q| q.to_grid(self.params))
+            .collect::<Result<Vec<_>>>()?;
+        let before = self.cache.calibration_resolutions();
+        let pairs = self.resolve_tables(&grids)?;
+        let resolved = self.cache.calibration_resolutions() - before;
+        assert!(
+            resolved <= pairs as u64,
+            "batch resolved {resolved} parameter tables for {pairs} distinct \
+             (arch, sim fingerprint) pairs"
+        );
+
+        let cells = AtomicU64::new(0);
+        let workers = self.workers_for(grids.len());
+        let out: Vec<QueryResult> = if workers <= 1 {
+            let mut out = Vec::with_capacity(grids.len());
+            for grid in &grids {
+                out.push(self.eval_query(grid, keep, &cells)?);
+            }
+            out
+        } else {
+            let cursor = AtomicUsize::new(0);
+            let stop = AtomicBool::new(false);
+            let failure: Mutex<Option<(usize, Error)>> = Mutex::new(None);
+            let slots: Vec<Mutex<Option<QueryResult>>> =
+                grids.iter().map(|_| Mutex::new(None)).collect();
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    scope.spawn(|| loop {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let i = cursor.fetch_add(1, Ordering::SeqCst);
+                        if i >= grids.len() {
+                            break;
+                        }
+                        match self.eval_query(&grids[i], keep, &cells) {
+                            Ok(res) => *slots[i].lock().unwrap() = Some(res),
+                            Err(e) => {
+                                let mut slot = failure.lock().unwrap();
+                                if slot.as_ref().map(|(j, _)| i < *j).unwrap_or(true) {
+                                    *slot = Some((i, e));
+                                }
+                                stop.store(true, Ordering::SeqCst);
+                            }
+                        }
+                    });
+                }
+            });
+            if let Some((_, e)) = failure.into_inner().unwrap() {
+                return Err(e);
+            }
+            slots
+                .into_iter()
+                .map(|s| s.into_inner().unwrap().expect("every slot filled"))
+                .collect()
+        };
+
+        self.queries.fetch_add(grids.len() as u64, Ordering::SeqCst);
+        self.batches.fetch_add(1, Ordering::SeqCst);
+        self.cells.fetch_add(cells.load(Ordering::SeqCst), Ordering::SeqCst);
+        Ok(out)
+    }
+
+    /// Evaluate one query's scenarios through the sweep cell path.
+    fn eval_query(&self, grid: &GridSpec, keep: bool, cells: &AtomicU64) -> Result<QueryResult> {
+        let scenarios = grid.enumerate();
+        let mut results = Vec::with_capacity(if keep { scenarios.len() } else { 0 });
+        for scn in &scenarios {
+            let r = runner::evaluate(grid, &self.cache, scn)?;
+            cells.fetch_add(1, Ordering::Relaxed);
+            if keep {
+                results.push(r);
+            }
+        }
+        Ok(QueryResult { grid: grid.clone(), results })
+    }
+}
+
+/// The predict response document — shared by `repro predict --batch`
+/// and `POST /predict` so both paths emit identical bytes for identical
+/// batches (modulo the stats object, which is cumulative). `results[]`
+/// concatenates every query's rows in batch order, each row in the
+/// sweep dump's exact shape.
+pub fn predict_doc(results: &[QueryResult], stats: &ServeStats) -> Json {
+    let rows: Vec<Json> = results.iter().flat_map(QueryResult::rows).collect();
+    Json::obj(vec![
+        ("queries", Json::num(results.len() as f64)),
+        ("cells", Json::num(rows.len() as f64)),
+        ("stats", stats.to_json()),
+        ("results", Json::Arr(rows)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sweep::SweepRunner;
+
+    fn batch(text: &str) -> QueryBatch {
+        QueryBatch::from_json(text).unwrap()
+    }
+
+    #[test]
+    fn batch_rows_are_bit_identical_to_sweep_cells() {
+        let engine = PredictEngine::new(ParamSource::Paper, 2);
+        let b = batch(
+            r#"[{"arch": "small", "threads": [1, 15, 240]},
+                {"arch": "large", "strategy": "b", "threads_range": {"from": 60, "to": 240, "step": 60}},
+                {"arch": "small", "threads": [15], "sim": {"clock_ghz": 1.5}}]"#,
+        );
+        let results = engine.eval_batch(&b).unwrap();
+        assert_eq!(results.len(), 3);
+        for (q, res) in b.queries.iter().zip(&results) {
+            let grid = q.to_grid(ParamSource::Paper).unwrap();
+            let sweep = SweepRunner::serial().run(&grid).unwrap();
+            let sweep_rows: Vec<String> =
+                sweep.results.iter().map(|r| result_row_json(&grid, r).emit()).collect();
+            let serve_rows: Vec<String> = res.rows().iter().map(Json::emit).collect();
+            assert_eq!(serve_rows, sweep_rows, "arch {}", q.arch);
+        }
+    }
+
+    #[test]
+    fn one_resolution_per_distinct_arch_sim_pair() {
+        let engine = PredictEngine::new(ParamSource::Paper, 1);
+        // 4 queries, but only 3 distinct (arch, sim fingerprint) pairs:
+        // small/default appears twice.
+        let b = batch(
+            r#"[{"arch": "small", "threads": [1, 15]},
+                {"arch": "small", "threads": [240], "epochs": 3},
+                {"arch": "medium", "threads": [15]},
+                {"arch": "small", "threads": [15], "sim": {"clock_ghz": 1.5}}]"#,
+        );
+        engine.eval_batch(&b).unwrap();
+        let stats = engine.stats();
+        assert_eq!(stats.queries, 4);
+        assert_eq!(stats.batches, 1);
+        assert_eq!(stats.cells, b.cells() as u64);
+        assert_eq!(stats.calibration_resolutions, 3, "{stats:?}");
+        // A second identical batch hits the memos: zero new resolutions.
+        engine.eval_batch(&b).unwrap();
+        assert_eq!(engine.stats().calibration_resolutions, 3);
+        assert_eq!(engine.stats().batches, 2);
+    }
+
+    #[test]
+    fn drain_counts_cells_without_keeping_rows() {
+        let engine = PredictEngine::new(ParamSource::Paper, 0);
+        let b = batch(r#"[{"arch": "small", "threads_range": {"from": 1, "to": 61, "step": 10}}]"#);
+        let cells = engine.drain_batch(&b).unwrap();
+        assert_eq!(cells, b.cells() as u64);
+        assert_eq!(engine.stats().cells, cells);
+    }
+
+    #[test]
+    fn failed_batches_do_not_advance_counters() {
+        let engine = PredictEngine::new(ParamSource::Paper, 1);
+        let b = batch(r#"[{"arch": "nope", "threads": [1]}]"#);
+        assert!(engine.eval_batch(&b).is_err());
+        let stats = engine.stats();
+        assert_eq!((stats.queries, stats.batches, stats.cells), (0, 0, 0));
+    }
+}

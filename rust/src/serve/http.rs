@@ -1,0 +1,240 @@
+//! The embedded prediction server: a zero-dependency HTTP/1.1 front end
+//! over [`PredictEngine`], built on `std::net::TcpListener` and the
+//! scoped-thread pool pattern the sweep runner uses.
+//!
+//! Endpoints:
+//!
+//! * `GET /healthz` — liveness: `{"ok": true}`;
+//! * `GET /stats` — cumulative [`crate::serve::ServeStats`] JSON;
+//! * `POST /predict` — evaluate a query batch (the body is the
+//!   [`crate::serve::QueryBatch`] JSON); 200 with the predict document
+//!   on success, 400 with `{"error": "..."}` on a malformed batch;
+//! * `POST /shutdown` — acknowledge, then stop accepting and drain the
+//!   worker pool (used by tests and the CI smoke for a clean exit).
+//!
+//! Every response closes its connection (`Connection: close`) — the
+//! protocol surface is deliberately minimal; batching amortizes the
+//! per-connection cost, not keep-alive.
+
+use std::io::{Read, Write};
+use std::net::{IpAddr, Ipv4Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::serve::batch::QueryBatch;
+use crate::serve::engine::{predict_doc, PredictEngine};
+use crate::util::json::Json;
+
+/// Per-connection I/O deadline: a stalled client must not pin a worker.
+const IO_TIMEOUT: Duration = Duration::from_secs(30);
+/// Request head (request line + headers) size cap.
+const MAX_HEAD: usize = 64 * 1024;
+/// Request body size cap (a million-query ladder batch is ~100 MB).
+const MAX_BODY: usize = 256 * 1024 * 1024;
+
+/// A parsed (enough) HTTP/1.1 request.
+struct Request {
+    method: String,
+    path: String,
+    body: String,
+}
+
+/// The prediction server. Bind, then [`Server::run`] — which blocks
+/// until a `POST /shutdown` arrives.
+pub struct Server {
+    listener: TcpListener,
+    engine: Arc<PredictEngine>,
+    workers: usize,
+    stop: AtomicBool,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:8787`; port 0 picks a free port —
+    /// read it back with [`Server::local_addr`]). `workers` accept
+    /// loops share the listener (0 = one per available CPU).
+    pub fn bind(engine: Arc<PredictEngine>, addr: &str, workers: usize) -> Result<Server> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::Config(format!("cannot bind {addr}: {e}")))?;
+        let workers = if workers == 0 {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        } else {
+            workers
+        };
+        Ok(Server { listener, engine, workers, stop: AtomicBool::new(false) })
+    }
+
+    /// The bound address (resolves `:0` to the actual port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().map_err(Error::Io)
+    }
+
+    /// Accept and serve until shut down. Blocks the calling thread;
+    /// the worker pool lives in a [`std::thread::scope`], so a clean
+    /// return means every worker has drained.
+    pub fn run(&self) -> Result<()> {
+        let mut listeners = Vec::with_capacity(self.workers);
+        for _ in 0..self.workers {
+            listeners.push(self.listener.try_clone().map_err(Error::Io)?);
+        }
+        std::thread::scope(|scope| {
+            for listener in listeners {
+                scope.spawn(move || self.worker(listener));
+            }
+        });
+        Ok(())
+    }
+
+    /// One accept loop. Wake connections sent by [`Server::shutdown`]
+    /// are never parsed: the stop flag is checked right after accept.
+    fn worker(&self, listener: TcpListener) {
+        loop {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let _ = self.handle(stream);
+                    if self.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                }
+                Err(_) => {
+                    if self.stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            }
+        }
+    }
+
+    /// Flip the stop flag and wake every worker blocked in `accept` by
+    /// self-connecting once per worker (the `/shutdown` handler's other
+    /// half; also usable directly by an embedding test).
+    fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        let Ok(mut addr) = self.listener.local_addr() else { return };
+        if addr.ip().is_unspecified() {
+            addr.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
+        }
+        for _ in 0..self.workers {
+            let _ = TcpStream::connect_timeout(&addr, Duration::from_millis(250));
+        }
+    }
+
+    /// Serve one connection.
+    fn handle(&self, mut stream: TcpStream) -> std::io::Result<()> {
+        stream.set_read_timeout(Some(IO_TIMEOUT))?;
+        stream.set_write_timeout(Some(IO_TIMEOUT))?;
+        let Some(req) = read_request(&mut stream)? else {
+            return Ok(()); // closed early or oversized — nothing to answer
+        };
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => respond(&mut stream, 200, "OK", "{\"ok\": true}"),
+            ("GET", "/stats") => {
+                respond(&mut stream, 200, "OK", &self.engine.stats().to_json().emit())
+            }
+            ("POST", "/predict") => {
+                let reply = QueryBatch::from_json(&req.body)
+                    .and_then(|batch| self.engine.eval_batch(&batch));
+                match reply {
+                    Ok(results) => {
+                        let doc = predict_doc(&results, &self.engine.stats());
+                        respond(&mut stream, 200, "OK", &doc.emit())
+                    }
+                    Err(e) => {
+                        let doc = Json::obj(vec![("error", Json::str(e.to_string()))]);
+                        respond(&mut stream, 400, "Bad Request", &doc.emit())
+                    }
+                }
+            }
+            ("POST", "/shutdown") => {
+                let out = respond(&mut stream, 200, "OK", "{\"ok\": true}");
+                self.shutdown();
+                out
+            }
+            _ => respond(&mut stream, 404, "Not Found", "{\"error\": \"not found\"}"),
+        }
+    }
+}
+
+/// First index of `needle` in `haystack`.
+fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Read one request: head up to the blank line, then exactly
+/// `Content-Length` body bytes. `None` = connection closed before a
+/// full head arrived (shutdown wake connections land here) or caps hit.
+fn read_request(stream: &mut TcpStream) -> std::io::Result<Option<Request>> {
+    let mut buf: Vec<u8> = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 16 * 1024];
+    let head_end = loop {
+        if let Some(pos) = find(&buf, b"\r\n\r\n") {
+            break pos;
+        }
+        if buf.len() > MAX_HEAD {
+            return Ok(None);
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Ok(None);
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let mut lines = head.split("\r\n");
+    let mut request_line = lines.next().unwrap_or("").split_whitespace();
+    let method = request_line.next().unwrap_or("").to_string();
+    let path = request_line.next().unwrap_or("").to_string();
+    let mut content_length = 0usize;
+    for line in lines {
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+    if content_length > MAX_BODY {
+        return Ok(None);
+    }
+    let mut body: Vec<u8> = buf[head_end + 4..].to_vec();
+    while body.len() < content_length {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+    body.truncate(content_length);
+    Ok(Some(Request {
+        method,
+        path,
+        body: String::from_utf8_lossy(&body).into_owned(),
+    }))
+}
+
+/// Write one `Connection: close` JSON response.
+fn respond(stream: &mut TcpStream, status: u16, reason: &str, body: &str) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn find_locates_the_head_terminator() {
+        assert_eq!(find(b"GET / HTTP/1.1\r\n\r\nbody", b"\r\n\r\n"), Some(14));
+        assert_eq!(find(b"partial\r\n", b"\r\n\r\n"), None);
+    }
+}

@@ -1,0 +1,36 @@
+//! Prediction-as-a-service: the batched what-if query engine behind
+//! `repro predict --batch` and the embedded `repro serve` HTTP server.
+//!
+//! The sweep engine answers "evaluate this grid"; this module answers
+//! "evaluate these *questions*" — a [`QueryBatch`] of heterogeneous
+//! (architecture, strategy, thread-ladder, workload, sim-variant)
+//! queries — without giving up any of the sweep's guarantees:
+//!
+//! * **Bit-identity** — every query expands to a [`Query::to_grid`]
+//!   sweep grid and every cell runs through the sweep runner's single
+//!   evaluation path and the sweep dump's single row serializer, so a
+//!   predict row is byte-for-byte the row `repro sweep run` would emit
+//!   for the same cell.
+//! * **Bounded resolution** — a batch resolves parameter tables at
+//!   most once per distinct (architecture, sim fingerprint) pair, no
+//!   matter how many queries or cells reference the pair
+//!   ([`PredictEngine`] resolves serially up front, then fans out).
+//! * **Warm starts** — pointing the engine at a lab store
+//!   ([`PredictEngine::with_store`], `--lab`) turns previously swept
+//!   cells into store hits; a fully warm batch performs zero
+//!   calibration resolutions.
+//!
+//! [`Server`] wraps the engine in a zero-dependency HTTP/1.1 front end
+//! (`POST /predict`, `GET /healthz`, `GET /stats`, `POST /shutdown`).
+//! See `docs/SERVE.md` for the batch schema, endpoint reference, and
+//! throughput methodology.
+
+#![warn(missing_docs)]
+
+pub mod batch;
+pub mod engine;
+pub mod http;
+
+pub use batch::{Query, QueryBatch};
+pub use engine::{predict_doc, PredictEngine, QueryResult, ServeStats};
+pub use http::Server;

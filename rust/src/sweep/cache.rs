@@ -406,6 +406,20 @@ impl SweepCache {
         )
     }
 
+    /// Total `Calibration::resolve` parameter resolutions performed so
+    /// far, summed over every parameter source this cache has touched.
+    /// The serve engine's core invariant rides on this: a batch must
+    /// resolve at most once per distinct (arch, sim fingerprint) pair,
+    /// and a warm-store batch must resolve zero times.
+    pub fn calibration_resolutions(&self) -> u64 {
+        self.calibrations
+            .lock()
+            .unwrap()
+            .values()
+            .map(|cal| cal.resolutions())
+            .sum()
+    }
+
     /// Hit/miss counters accumulated so far.
     pub fn stats(&self) -> CacheStats {
         CacheStats {

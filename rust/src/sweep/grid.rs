@@ -827,16 +827,7 @@ impl GridSpec {
             grid.threads = usize_list(threads, "threads")?;
         }
         if let Some(range) = doc.get("threads_range") {
-            let field = |key: &str, default: usize| -> Result<usize> {
-                match range.get(key) {
-                    None => Ok(default),
-                    Some(v) => v.as_usize().ok_or_else(|| {
-                        Error::Config(format!("threads_range.{key} must be an integer"))
-                    }),
-                }
-            };
-            let (from, to, step) = (field("from", 1)?, field("to", 244)?, field("step", 1)?);
-            grid.threads = expand_range(from, to, step)?;
+            grid.threads = threads_range_from_json(range, "threads_range")?;
         }
         if let Some(images) = doc.get("images").and_then(Json::as_arr) {
             grid.images = images
@@ -997,12 +988,38 @@ fn expand_range(from: usize, to: usize, step: usize) -> Result<Vec<usize>> {
     if step == 0 {
         return Err(Error::Config("range step must be >= 1".into()));
     }
+    // A reversed range must error, never quietly expand to an empty
+    // axis: an empty `threads` list would otherwise enumerate a 0-cell
+    // grid that "succeeds" while sweeping nothing.
     if to < from {
         return Err(Error::Config(format!(
-            "range end {to} is below range start {from}"
+            "range end {to} is below range start {from} (an empty axis sweeps nothing)"
         )));
     }
     Ok((from..=to).step_by(step).collect())
+}
+
+/// Parse a `{"from": a, "to": b, "step": s}` JSON range object into a
+/// thread ladder (defaults: `from` 1, `to` 244, `step` 1 — the paper's
+/// full hardware-thread range). `axis` names the owning key in error
+/// messages, so a reversed range in a sweep spec reports
+/// `threads_range: ...` while a serve query reports the query's field.
+/// Shared by [`GridSpec::from_json`] and the serve batch parser
+/// ([`crate::serve`]) — one grammar, one validation path.
+pub fn threads_range_from_json(range: &Json, axis: &str) -> Result<Vec<usize>> {
+    let field = |key: &str, default: usize| -> Result<usize> {
+        match range.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .as_usize()
+                .ok_or_else(|| Error::Config(format!("{axis}.{key} must be an integer"))),
+        }
+    };
+    let (from, to, step) = (field("from", 1)?, field("to", 244)?, field("step", 1)?);
+    expand_range(from, to, step).map_err(|e| match e {
+        Error::Config(m) => Error::Config(format!("{axis}: {m}")),
+        other => other,
+    })
 }
 
 /// Parse one integer-axis value: comma-separated items, each a single
@@ -1471,5 +1488,34 @@ mod tests {
             r#"{"threads": [1], "threads_range": {"from": 1, "to": 2}}"#
         )
         .is_err());
+    }
+
+    #[test]
+    fn reversed_or_degenerate_ranges_error_instead_of_emptying_the_axis() {
+        // The silent-empty-grid bugfix: a reversed range must be a
+        // config error naming the axis, not a 0-cell sweep.
+        let err = GridSpec::from_json(r#"{"threads_range": {"from": 30, "to": 10}}"#)
+            .expect_err("reversed threads_range must be rejected");
+        let msg = err.to_string();
+        assert!(msg.contains("threads_range"), "{msg}");
+        assert!(msg.contains("below range start"), "{msg}");
+        // Same guard through the CLI axis grammar (`--threads 30..10`).
+        let err = parse_axis("30..10").expect_err("reversed CLI range must be rejected");
+        assert!(err.to_string().contains("below range start"), "{err}");
+        // Zero step errors with the axis context too.
+        let err = GridSpec::from_json(
+            r#"{"threads_range": {"from": 1, "to": 10, "step": 0}}"#,
+        )
+        .expect_err("zero step must be rejected");
+        assert!(err.to_string().contains("threads_range"), "{err}");
+        // The shared helper applies defaults and validates types.
+        let range = Json::parse(r#"{"from": 10, "to": 30, "step": 10}"#).unwrap();
+        assert_eq!(
+            threads_range_from_json(&range, "threads_range").unwrap(),
+            vec![10, 20, 30]
+        );
+        let bad = Json::parse(r#"{"from": "x"}"#).unwrap();
+        let err = threads_range_from_json(&bad, "threads").unwrap_err();
+        assert!(err.to_string().contains("threads.from"), "{err}");
     }
 }

@@ -65,7 +65,7 @@ pub use crate::lab::StoreStats;
 pub use conformance::{
     BandCheck, BandSpec, ClaimCheck, ClaimSpec, ConformanceBaseline, ConformanceReport,
 };
-pub use grid::{parse_axis, GridSpec, Scenario, SimVariant, Strategy};
+pub use grid::{parse_axis, threads_range_from_json, GridSpec, Scenario, SimVariant, Strategy};
 pub use runner::SweepRunner;
 pub use sensitivity::{
     RankedConstant, SensitivityEntry, SensitivityReport, SensitivitySpec, SimConstant,

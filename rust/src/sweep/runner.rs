@@ -132,7 +132,7 @@ impl SweepRunner {
 /// (store attached, entry present and — on measuring grids — carrying a
 /// measurement) short-circuits the whole evaluation: no model build, no
 /// cost model, no simulation.
-fn evaluate(grid: &GridSpec, cache: &SweepCache, scn: &Scenario) -> Result<ScenarioResult> {
+pub(crate) fn evaluate(grid: &GridSpec, cache: &SweepCache, scn: &Scenario) -> Result<ScenarioResult> {
     if let Some((prediction, measured_s, delta)) = cache.stored_cell(grid, scn) {
         return Ok(ScenarioResult {
             scenario: scn.clone(),

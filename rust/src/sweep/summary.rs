@@ -273,35 +273,7 @@ impl SweepResults {
         let rows: Vec<Json> = self
             .results
             .iter()
-            .map(|r| {
-                let s = &r.scenario;
-                let mut pairs = Vec::with_capacity(16);
-                if let Some(sim) = g.sim_name(s) {
-                    pairs.push(("sim", Json::str(sim.to_string())));
-                }
-                pairs.extend([
-                    ("arch", Json::str(g.archs[s.arch].name.clone())),
-                    ("machine", Json::str(g.machines[s.machine].name.clone())),
-                    ("threads", Json::num(s.threads as f64)),
-                    ("train_images", Json::num(s.train_images as f64)),
-                    ("test_images", Json::num(s.test_images as f64)),
-                    ("epochs", Json::num(s.epochs as f64)),
-                    ("strategy", Json::str(s.strategy.as_str())),
-                    ("prep_s", Json::num(r.prediction.prep_s)),
-                    ("train_s", Json::num(r.prediction.train_s)),
-                    ("test_s", Json::num(r.prediction.test_s)),
-                    ("mem_s", Json::num(r.prediction.mem_s)),
-                    ("total_s", Json::num(r.prediction.total_s)),
-                    ("total_min", Json::num(r.prediction.total_s / 60.0)),
-                ]);
-                if let Some(m) = r.measured_s {
-                    pairs.push(("measured_s", Json::num(m)));
-                }
-                if let Some(d) = r.delta_pct {
-                    pairs.push(("delta_pct", Json::num(d)));
-                }
-                Json::obj(pairs)
-            })
+            .map(|r| result_row_json(g, r))
             .collect();
         let mut grid_pairs = vec![
             (
@@ -552,6 +524,40 @@ impl SweepResults {
         out.push('\n');
         out
     }
+}
+
+/// One `results[]` row of the machine-readable dump. Shared with the
+/// serve engine ([`crate::serve`]) so `repro predict` rows are
+/// bit-identical to the corresponding sweep cells — there is exactly
+/// one place that turns a [`ScenarioResult`] into JSON.
+pub(crate) fn result_row_json(g: &GridSpec, r: &ScenarioResult) -> Json {
+    let s = &r.scenario;
+    let mut pairs = Vec::with_capacity(16);
+    if let Some(sim) = g.sim_name(s) {
+        pairs.push(("sim", Json::str(sim.to_string())));
+    }
+    pairs.extend([
+        ("arch", Json::str(g.archs[s.arch].name.clone())),
+        ("machine", Json::str(g.machines[s.machine].name.clone())),
+        ("threads", Json::num(s.threads as f64)),
+        ("train_images", Json::num(s.train_images as f64)),
+        ("test_images", Json::num(s.test_images as f64)),
+        ("epochs", Json::num(s.epochs as f64)),
+        ("strategy", Json::str(s.strategy.as_str())),
+        ("prep_s", Json::num(r.prediction.prep_s)),
+        ("train_s", Json::num(r.prediction.train_s)),
+        ("test_s", Json::num(r.prediction.test_s)),
+        ("mem_s", Json::num(r.prediction.mem_s)),
+        ("total_s", Json::num(r.prediction.total_s)),
+        ("total_min", Json::num(r.prediction.total_s / 60.0)),
+    ]);
+    if let Some(m) = r.measured_s {
+        pairs.push(("measured_s", Json::num(m)));
+    }
+    if let Some(d) = r.delta_pct {
+        pairs.push(("delta_pct", Json::num(d)));
+    }
+    Json::obj(pairs)
 }
 
 /// Reassemble per-shard results (from

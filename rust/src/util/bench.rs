@@ -3,8 +3,54 @@
 //! `cargo bench` targets use `harness = false` and drive this runner:
 //! warmup, timed iterations until a minimum wall budget, and robust stats
 //! (median + MAD) so the §Perf pass has stable numbers to compare.
+//!
+//! Snapshot files (`BENCH_*.json`) are written only through
+//! [`Bench::write_snapshot`], which requires [`Provenance`]: every
+//! snapshot names who generated it and on which host, and the writer
+//! refuses to emit anonymous numbers. CI identifies itself
+//! automatically; locally, set `MICDL_BENCH_GENERATED_BY=$(whoami)`
+//! (and optionally `MICDL_BENCH_HOST=$(hostname)`).
 
+use crate::util::json::Json;
 use std::time::{Duration, Instant};
+
+/// Who produced a benchmark snapshot, recorded in the snapshot itself
+/// (`generated_by` / `host` fields). Mandatory: a `BENCH_*.json`
+/// without provenance cannot be told apart from hand-written numbers,
+/// so [`Bench::write_snapshot`] refuses to write without one.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Provenance {
+    /// Who ran the bench: `MICDL_BENCH_GENERATED_BY` when set, else
+    /// `github-actions` on a CI runner (`GITHUB_ACTIONS=true`).
+    pub generated_by: String,
+    /// The machine it ran on: first non-empty of `MICDL_BENCH_HOST`,
+    /// `RUNNER_NAME`, `HOSTNAME`; `unknown` otherwise.
+    pub host: String,
+}
+
+impl Provenance {
+    /// Detect provenance from the environment; `None` means the run is
+    /// anonymous and no snapshot may be written.
+    pub fn detect() -> Option<Provenance> {
+        let generated_by = match std::env::var("MICDL_BENCH_GENERATED_BY") {
+            Ok(v) if !v.trim().is_empty() => v.trim().to_string(),
+            _ if std::env::var("GITHUB_ACTIONS").as_deref() == Ok("true") => {
+                "github-actions".to_string()
+            }
+            _ => return None,
+        };
+        let host = ["MICDL_BENCH_HOST", "RUNNER_NAME", "HOSTNAME"]
+            .iter()
+            .find_map(|k| {
+                std::env::var(k)
+                    .ok()
+                    .map(|v| v.trim().to_string())
+                    .filter(|v| !v.is_empty())
+            })
+            .unwrap_or_else(|| "unknown".to_string());
+        Some(Provenance { generated_by, host })
+    }
+}
 
 /// Result of one benchmark case.
 #[derive(Debug, Clone)]
@@ -116,6 +162,49 @@ impl Bench {
         for r in &self.results {
             println!("{}", r.report());
         }
+    }
+
+    /// Write the collected results as a `BENCH_*.json` snapshot — but
+    /// only with [`Provenance`]: an anonymous run prints how to
+    /// identify itself and writes nothing (CI's `if-no-files-found:
+    /// error` artifact gate then keeps the breakage visible). `extra`
+    /// carries bench-specific scalar fields. Returns whether the file
+    /// was written.
+    pub fn write_snapshot(&self, path: &str, bench: &str, extra: Vec<(&str, Json)>) -> bool {
+        let Some(prov) = Provenance::detect() else {
+            eprintln!(
+                "refusing to write {path}: anonymous run — set \
+                 MICDL_BENCH_GENERATED_BY=$(whoami) (and optionally \
+                 MICDL_BENCH_HOST=$(hostname)) to record provenance; \
+                 CI runners identify themselves automatically"
+            );
+            return false;
+        };
+        let cases: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("name", Json::str(r.name.clone())),
+                    ("iters", Json::num(r.iters as f64)),
+                    ("median_ns", Json::num(r.median.as_nanos() as f64)),
+                    ("mean_ns", Json::num(r.mean.as_nanos() as f64)),
+                    ("min_ns", Json::num(r.min.as_nanos() as f64)),
+                    ("mad_ns", Json::num(r.mad.as_nanos() as f64)),
+                ])
+            })
+            .collect();
+        let mut pairs = vec![
+            ("bench", Json::str(bench.to_string())),
+            ("generated_by", Json::str(prov.generated_by)),
+            ("host", Json::str(prov.host)),
+        ];
+        pairs.extend(extra);
+        pairs.push(("cases", Json::Arr(cases)));
+        std::fs::write(path, Json::obj(pairs).emit() + "\n")
+            .unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("\nwrote {path} ({} cases)", self.results.len());
+        true
     }
 }
 

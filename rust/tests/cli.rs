@@ -248,9 +248,13 @@ fn sweep_rejects_bad_sim_flags() {
 
 #[test]
 fn sweep_rejects_bad_axis() {
+    // A reversed range is a config error naming the problem — never a
+    // silent 0-cell grid that "succeeds" while sweeping nothing.
     let out = repro(&["sweep", "--threads", "240..1"]);
-    assert!(!out.status.success());
-    assert!(String::from_utf8_lossy(&out.stderr).contains("range"));
+    assert_eq!(out.status.code(), Some(1));
+    let e = String::from_utf8_lossy(&out.stderr).to_string();
+    assert!(e.contains("config error"), "{e}");
+    assert!(e.contains("below range start"), "{e}");
 }
 
 fn stderr(out: &Output) -> String {
@@ -562,9 +566,10 @@ fn sweep_shards_driver_output_matches_unsharded() {
 #[test]
 fn sweep_shards_driver_retries_and_reports_failures() {
     // threads=0 parses in the driver but fails grid validation inside
-    // every child, so each shard exhausts its retry budget — the same
-    // observable path as a shard killed mid-run (the child exit status
-    // lands in the report either way).
+    // every child with a config error — a deterministic failure, so the
+    // driver must classify it non-retryable and burn exactly ONE
+    // attempt per shard instead of exhausting the 3-attempt budget on
+    // an outcome that cannot change.
     let dir = micdl::util::tmp::TempDir::new("cli-shard-fail").unwrap();
     let lab = dir.path().join("lab");
     let run = |extra: &[&str]| {
@@ -575,21 +580,108 @@ fn sweep_shards_driver_retries_and_reports_failures() {
         args.extend_from_slice(extra);
         repro(&args)
     };
-    // Fail-fast (default): exit 1 once the first shard exhausts its
-    // three attempts, with the child's error line in the message.
+    // Fail-fast (default): exit 1 on the first wave, attempt counts
+    // pinned — attempt 1 is announced as final, attempts 2 and 3 never
+    // happen, and the child's error line is in the message.
     let out = run(&[]);
     assert_eq!(out.status.code(), Some(1));
     let e = stderr(&out);
-    assert!(e.contains("attempt 1/3") && e.contains("attempt 3/3"), "{e}");
-    assert!(e.contains("failed after 3 attempts"), "{e}");
+    assert!(e.contains("attempt 1/3") && e.contains("non-retryable"), "{e}");
+    assert!(!e.contains("attempt 2/3") && !e.contains("attempt 3/3"), "{e}");
+    assert!(e.contains("failed with a non-retryable error"), "{e}");
     assert!(e.contains("thread counts must be >= 1"), "{e}");
-    // --continue-on-failure: every shard is tried and the per-shard
-    // failure report covers them all; still exit 1.
+    // --continue-on-failure: every shard is tried (once each — still no
+    // retries) and the per-shard failure report covers them all,
+    // classified; still exit 1.
     let out = run(&["--continue-on-failure"]);
     assert_eq!(out.status.code(), Some(1));
     let e = stderr(&out);
     assert!(e.contains("shard failure report"), "{e}");
     assert!(e.contains("shard 1/2") && e.contains("shard 2/2"), "{e}");
+    assert!(e.contains("non-retryable"), "{e}");
+    assert!(!e.contains("attempt 2/3"), "{e}");
+}
+
+#[test]
+fn predict_batch_json_matches_sweep_dump_rows() {
+    let dir = micdl::util::tmp::TempDir::new("cli-predict").unwrap();
+    let batch = dir.path().join("batch.json");
+    std::fs::write(
+        &batch,
+        r#"[{"arch": "small", "strategy": "a", "threads": [1, 15, 61, 240]}]"#,
+    )
+    .unwrap();
+    let out_path = dir.path().join("predict.json");
+    let out = repro(&["predict", "--batch", batch.to_str().unwrap(),
+                      "--json", out_path.to_str().unwrap(), "--serial"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert!(stderr(&out).contains("calibration resolutions: 1"), "{}", stderr(&out));
+    let doc = micdl::util::json::Json::parse(&std::fs::read_to_string(&out_path).unwrap())
+        .unwrap();
+    assert_eq!(doc.get("queries").and_then(|j| j.as_f64()), Some(1.0));
+    assert_eq!(doc.get("cells").and_then(|j| j.as_f64()), Some(4.0));
+    let rows = doc.get("results").and_then(|j| j.as_arr()).unwrap();
+    assert_eq!(rows.len(), 4);
+
+    // The predict rows are byte-identical to the dump of the sweep the
+    // batch abbreviates.
+    let sweep_json = dir.path().join("sweep.json");
+    let out = repro(&["sweep", "run", "--arch", "small", "--strategy", "a",
+                      "--threads", "1,15,61,240", "--serial",
+                      "--json", sweep_json.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let sweep = micdl::util::json::Json::parse(&std::fs::read_to_string(&sweep_json).unwrap())
+        .unwrap();
+    let sweep_rows = sweep.get("results").and_then(|j| j.as_arr()).unwrap();
+    let emit = |rs: &[micdl::util::json::Json]| -> Vec<String> {
+        rs.iter().map(|r| r.emit()).collect()
+    };
+    assert_eq!(emit(rows), emit(sweep_rows));
+}
+
+#[test]
+fn predict_batch_csv_and_table_modes() {
+    let dir = micdl::util::tmp::TempDir::new("cli-predict-csv").unwrap();
+    let batch = dir.path().join("batch.json");
+    std::fs::write(
+        &batch,
+        r#"{"queries": [{"arch": "small", "threads": [15, 240]},
+                        {"arch": "medium", "strategy": "b", "threads": [61]}]}"#,
+    )
+    .unwrap();
+    let bp = batch.to_str().unwrap();
+    // CSV: one header line, then 2×2 + 1 data rows across both queries.
+    let out = repro(&["predict", "--batch", bp, "--csv", "--serial"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let csv = stdout(&out);
+    assert_eq!(csv.lines().count(), 1 + 5, "{csv}");
+    assert!(csv.lines().next().unwrap().contains(','), "{csv}");
+    // Default: human tables plus the engine-stats footer.
+    let out = repro(&["predict", "--batch", bp, "--serial"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let s = stdout(&out);
+    assert!(s.contains("2 queries in 1 batches, 5 cells"), "{s}");
+    // --json and --csv together are rejected.
+    let out = repro(&["predict", "--batch", bp, "--csv", "--json", "x.json"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains("mutually exclusive"), "{}", stderr(&out));
+}
+
+#[test]
+fn predict_batch_rejects_reversed_thread_ranges() {
+    // The silent-empty-axis bugfix, through the predict surface.
+    let dir = micdl::util::tmp::TempDir::new("cli-predict-bad").unwrap();
+    let batch = dir.path().join("batch.json");
+    std::fs::write(
+        &batch,
+        r#"[{"arch": "small", "threads_range": {"from": 30, "to": 10}}]"#,
+    )
+    .unwrap();
+    let out = repro(&["predict", "--batch", batch.to_str().unwrap()]);
+    assert_eq!(out.status.code(), Some(1));
+    let e = stderr(&out);
+    assert!(e.contains("config error"), "{e}");
+    assert!(e.contains("below range start"), "{e}");
 }
 
 #[test]

@@ -946,3 +946,103 @@ fn prop_merged_shards_bit_identical_to_unsharded_serial_run() {
         );
     }
 }
+
+// ---------------------------------------------------------------------------
+// Serve engine: batched prediction ≡ the sweep it abbreviates
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_predict_batch_bit_identical_to_sweep_cells() {
+    use micdl::lab::Lab;
+    use micdl::serve::{PredictEngine, Query, QueryBatch};
+    use micdl::sweep::{Strategy, SweepResults, SweepRunner};
+    use micdl::util::tmp::TempDir;
+    use std::sync::Arc;
+
+    fn sweep_rows(results: &SweepResults) -> Vec<String> {
+        results
+            .to_json()
+            .get("results")
+            .and_then(Json::as_arr)
+            .unwrap()
+            .iter()
+            .map(Json::emit)
+            .collect()
+    }
+
+    let archs = ["small", "medium", "large"];
+    let mut rng = XorShift64::new(9090);
+    for case in 0..6 {
+        // A random batch: 1–4 queries, each with its own architecture,
+        // strategy subset, thread ladder, workload, and (sometimes) a
+        // random sim-axis variant.
+        let queries: Vec<Query> = (0..1 + rng.next_below(4))
+            .map(|qi| {
+                let mut threads: Vec<usize> =
+                    (0..1 + rng.next_below(4)).map(|_| 1 + rng.next_below(244)).collect();
+                threads.sort();
+                threads.dedup();
+                Query {
+                    arch: archs[rng.next_below(archs.len())].to_string(),
+                    strategies: match rng.next_below(3) {
+                        0 => vec![Strategy::A],
+                        1 => vec![Strategy::B],
+                        _ => vec![Strategy::A, Strategy::B],
+                    },
+                    threads,
+                    train_images: 1_000 + rng.next_below(100_000),
+                    test_images: rng.next_below(20_000),
+                    epochs: if rng.next_below(2) == 0 {
+                        Some(1 + rng.next_below(100))
+                    } else {
+                        None
+                    },
+                    sim: if rng.next_below(2) == 0 {
+                        Some(random_sim_variant(&mut rng, format!("v{case}_{qi}")))
+                    } else {
+                        None
+                    },
+                }
+            })
+            .collect();
+        let batch = QueryBatch { queries };
+
+        // A parallel engine's per-query rows are byte-identical to a
+        // serial reference sweep of that query's expanded grid.
+        let engine = PredictEngine::new(ParamSource::Paper, 4);
+        let results = engine.eval_batch(&batch).unwrap();
+        for (q, res) in batch.queries.iter().zip(&results) {
+            let grid = q.to_grid(ParamSource::Paper).unwrap();
+            let reference = SweepRunner::serial().run(&grid).unwrap();
+            let rows: Vec<String> = res.rows().iter().map(Json::emit).collect();
+            assert_eq!(rows, sweep_rows(&reference), "case {case} arch {}", q.arch);
+        }
+
+        // Warm-store replay: a fresh engine over the store the first
+        // pass populated serves the whole batch from disk — identical
+        // bytes, zero calibration resolutions, zero store misses.
+        let tmp = TempDir::new("predict-prop").unwrap();
+        let lab = Lab::open(tmp.path()).unwrap();
+        let cold = PredictEngine::new(ParamSource::Paper, 1).with_store(Arc::clone(lab.store()));
+        let rows_cold: Vec<String> = cold
+            .eval_batch(&batch)
+            .unwrap()
+            .iter()
+            .flat_map(|q| q.rows())
+            .map(|r| r.emit())
+            .collect();
+        let lab2 = Lab::open(tmp.path()).unwrap();
+        let warm = PredictEngine::new(ParamSource::Paper, 1).with_store(Arc::clone(lab2.store()));
+        let rows_warm: Vec<String> = warm
+            .eval_batch(&batch)
+            .unwrap()
+            .iter()
+            .flat_map(|q| q.rows())
+            .map(|r| r.emit())
+            .collect();
+        assert_eq!(rows_warm, rows_cold, "case {case}");
+        let stats = warm.stats();
+        assert_eq!(stats.calibration_resolutions, 0, "case {case}: {stats:?}");
+        assert_eq!(stats.store.unwrap().misses, 0, "case {case}: {stats:?}");
+    }
+}

@@ -1,0 +1,161 @@
+//! Integration tests for the serve subsystem: engine-vs-sweep
+//! bit-identity, warm-store behaviour, and the embedded HTTP server
+//! end-to-end over a real TCP socket.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+use micdl::lab::Lab;
+use micdl::perfmodel::ParamSource;
+use micdl::serve::{predict_doc, PredictEngine, QueryBatch, Server};
+use micdl::sweep::{SweepResults, SweepRunner};
+use micdl::util::json::Json;
+use micdl::util::tmp::TempDir;
+
+/// The sweep dump's `results[]` rows, as emitted bytes.
+fn sweep_rows(results: &SweepResults) -> Vec<String> {
+    results
+        .to_json()
+        .get("results")
+        .and_then(Json::as_arr)
+        .expect("sweep dump has results[]")
+        .iter()
+        .map(Json::emit)
+        .collect()
+}
+
+#[test]
+fn predict_rows_are_bit_identical_to_the_sweep_dump() {
+    let text = r#"[
+        {"arch": "small", "threads": [1, 15, 61, 240]},
+        {"arch": "medium", "strategy": "a",
+         "threads_range": {"from": 30, "to": 240, "step": 30},
+         "train_images": 30000, "test_images": 5000, "epochs": 10},
+        {"arch": "large", "strategy": "b", "threads": [240],
+         "sim": {"name": "fast", "clock_ghz": 1.5}}
+    ]"#;
+    let batch = QueryBatch::from_json(text).unwrap();
+    let engine = PredictEngine::new(ParamSource::Paper, 0);
+    let results = engine.eval_batch(&batch).unwrap();
+    for (q, res) in batch.queries.iter().zip(&results) {
+        let grid = q.to_grid(ParamSource::Paper).unwrap();
+        let sweep = SweepRunner::serial().run(&grid).unwrap();
+        let serve_rows: Vec<String> = res.rows().iter().map(Json::emit).collect();
+        assert_eq!(serve_rows, sweep_rows(&sweep), "arch {}", q.arch);
+    }
+}
+
+#[test]
+fn warm_store_batch_serves_cells_with_zero_resolutions() {
+    let tmp = TempDir::new("serve-warm").unwrap();
+    let batch = QueryBatch::from_json(
+        r#"[{"arch": "small", "threads": [1, 15, 61]},
+            {"arch": "medium", "strategy": "b", "threads": [15, 240]}]"#,
+    )
+    .unwrap();
+
+    // Pass 1: a store-backed engine computes and persists every cell
+    // (and its calibration entries).
+    let lab = Lab::open(tmp.path()).unwrap();
+    let first = PredictEngine::new(ParamSource::Paper, 1).with_store(Arc::clone(lab.store()));
+    let rows_cold: Vec<String> = first
+        .eval_batch(&batch)
+        .unwrap()
+        .iter()
+        .flat_map(|q| q.rows())
+        .map(|r| r.emit())
+        .collect();
+    assert!(first.stats().calibration_resolutions > 0);
+
+    // Pass 2: a fresh engine over the same store — every cell is a
+    // store hit, zero calibration resolutions, identical bytes.
+    let lab2 = Lab::open(tmp.path()).unwrap();
+    let second = PredictEngine::new(ParamSource::Paper, 1).with_store(Arc::clone(lab2.store()));
+    let rows_warm: Vec<String> = second
+        .eval_batch(&batch)
+        .unwrap()
+        .iter()
+        .flat_map(|q| q.rows())
+        .map(|r| r.emit())
+        .collect();
+    assert_eq!(rows_warm, rows_cold);
+    let stats = second.stats();
+    assert_eq!(
+        stats.calibration_resolutions, 0,
+        "warm store must serve every parameter table: {stats:?}"
+    );
+    let store = stats.store.expect("store attached");
+    assert_eq!(store.misses, 0, "warm store must not miss: {store:?}");
+    assert!(store.hits > 0);
+}
+
+/// Minimal HTTP/1.1 client: one request, read to EOF (the server
+/// closes every connection), split off the body.
+fn http(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> (String, String) {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let req = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {addr}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(req.as_bytes()).unwrap();
+    let mut reply = String::new();
+    stream.read_to_string(&mut reply).unwrap();
+    let (head, body) = reply.split_once("\r\n\r\n").expect("full response");
+    (head.to_string(), body.to_string())
+}
+
+#[test]
+fn server_end_to_end_over_a_real_socket() {
+    let engine = Arc::new(PredictEngine::new(ParamSource::Paper, 1));
+    let server = Arc::new(Server::bind(Arc::clone(&engine), "127.0.0.1:0", 2).unwrap());
+    let addr = server.local_addr().unwrap();
+    let running = {
+        let server = Arc::clone(&server);
+        std::thread::spawn(move || server.run())
+    };
+
+    // Liveness.
+    let (head, body) = http(addr, "GET", "/healthz", "");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    assert_eq!(body, "{\"ok\": true}");
+
+    // Unknown path → 404.
+    let (head, _) = http(addr, "GET", "/nope", "");
+    assert!(head.starts_with("HTTP/1.1 404"), "{head}");
+
+    // Malformed batch → 400 with an error body.
+    let (head, body) = http(addr, "POST", "/predict", "{\"not\": \"a batch\"}");
+    assert!(head.starts_with("HTTP/1.1 400"), "{head}");
+    assert!(body.contains("\"error\""), "{body}");
+
+    // A real batch → 200 with the same document the engine produces.
+    let batch_text = r#"[{"arch": "small", "threads": [1, 15, 240]},
+                         {"arch": "medium", "strategy": "a", "threads": [61]}]"#;
+    let (head, body) = http(addr, "POST", "/predict", batch_text);
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    let batch = QueryBatch::from_json(batch_text).unwrap();
+    let expected = predict_doc(&engine.eval_batch(&batch).unwrap(), &engine.stats()).emit();
+    let got = Json::parse(&body).unwrap();
+    let want = Json::parse(&expected).unwrap();
+    assert_eq!(
+        got.get("results").map(Json::emit),
+        want.get("results").map(Json::emit),
+        "served rows must be bit-identical to the engine's"
+    );
+    assert_eq!(got.get("cells").map(Json::emit), want.get("cells").map(Json::emit));
+
+    // Stats accounting: the server served one batch (7 cells), the
+    // direct eval_batch above added another on the shared engine.
+    let (_, body) = http(addr, "GET", "/stats", "");
+    let stats = Json::parse(&body).unwrap();
+    assert_eq!(stats.get("batches").and_then(Json::as_usize), Some(2));
+    assert_eq!(stats.get("queries").and_then(Json::as_usize), Some(4));
+    assert_eq!(stats.get("cells").and_then(Json::as_usize), Some(14));
+
+    // Graceful shutdown: acknowledged, then run() returns.
+    let (head, _) = http(addr, "POST", "/shutdown", "");
+    assert!(head.starts_with("HTTP/1.1 200"), "{head}");
+    running.join().unwrap().unwrap();
+}
