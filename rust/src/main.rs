@@ -508,10 +508,20 @@ fn cmd_predict_batch(args: &Args) -> Result<ExitCode> {
         return Ok(ExitCode::Ok);
     }
     if args.has("csv") {
-        // One CSV stream: first query's header line, then data rows only.
-        for (qi, q) in results.iter().enumerate() {
+        // One CSV stream. The column set depends on the query — a sim
+        // variant adds a leading `sim` column — so the header line is
+        // re-emitted whenever it changes (and skipped while it repeats):
+        // every data row always aligns with the nearest header above it.
+        let mut last_header: Option<String> = None;
+        for q in &results {
             let csv = query_table(q).to_csv();
-            for line in csv.lines().skip(if qi == 0 { 0 } else { 1 }) {
+            let mut lines = csv.lines();
+            let Some(header) = lines.next() else { continue };
+            if last_header.as_deref() != Some(header) {
+                println!("{header}");
+                last_header = Some(header.to_string());
+            }
+            for line in lines {
                 println!("{line}");
             }
         }
@@ -797,9 +807,18 @@ fn parse_shard(args: &Args) -> Result<Option<(usize, usize)>> {
     Ok(Some((k - 1, n)))
 }
 
+/// The failed shard child's `error:` stderr line, when the run errored
+/// (the usage text that follows is noise here).
+fn shard_error_line(out: &std::process::Output) -> Option<String> {
+    String::from_utf8_lossy(&out.stderr)
+        .lines()
+        .find(|l| l.starts_with("error: "))
+        .map(str::to_string)
+}
+
 /// The last interesting line of a failed shard child: its `error:` line
-/// when the run errored (the usage text that follows is noise here), or
-/// the last non-empty stderr line otherwise (e.g. nothing on a kill).
+/// when the run errored, or the last non-empty stderr line otherwise
+/// (e.g. nothing on a kill).
 fn shard_failure_detail(out: &std::process::Output) -> String {
     let text = String::from_utf8_lossy(&out.stderr);
     let detail = text
@@ -810,15 +829,19 @@ fn shard_failure_detail(out: &std::process::Output) -> String {
     format!("{} — {detail}", out.status)
 }
 
-/// True when a failed shard child's failure detail is deterministic — a
-/// configuration or spec-parse error that every retry would reproduce
-/// byte for byte. The driver fails such shards immediately instead of
-/// burning the full retry budget (retries are for transient failures:
-/// I/O contention on the shared store, kills, flaky environments).
-/// Classified on the child's `error:` stderr line, which carries the
-/// [`Error`] display prefix (`config error:` / `json error:`).
-fn shard_error_is_config(detail: &str) -> bool {
-    detail.contains("error: config error:") || detail.contains("error: json error:")
+/// True when a failed shard child's `error:` line ([`shard_error_line`])
+/// is deterministic — a configuration or spec-parse error that every
+/// retry would reproduce byte for byte. The driver fails such shards
+/// immediately instead of burning the full retry budget (retries are
+/// for transient failures: I/O contention on the shared store, kills,
+/// flaky environments). The match is anchored to the start of the line,
+/// where the [`Error`] display prefix lands (`config error:` / `json
+/// error:`) — a transient failure that merely *quotes* a config-error
+/// string deeper in its message keeps its retry budget.
+fn shard_error_is_config(error_line: Option<&str>) -> bool {
+    error_line.is_some_and(|l| {
+        l.starts_with("error: config error:") || l.starts_with("error: json error:")
+    })
 }
 
 /// The `--shards N` driver: spawn one `repro sweep run --shard k/N`
@@ -892,7 +915,7 @@ fn run_shard_driver(
                 continue;
             }
             let detail = shard_failure_detail(&out);
-            if shard_error_is_config(&detail) {
+            if shard_error_is_config(shard_error_line(&out).as_deref()) {
                 eprintln!(
                     "warning: shard {}/{n} failed (non-retryable, attempt \
                      {attempt}/{ATTEMPTS} is final): {detail}",
@@ -1572,17 +1595,39 @@ mod tests {
     #[test]
     fn shard_failure_classification_is_on_the_error_prefix() {
         // Deterministic child failures — retrying reproduces them.
-        assert!(shard_error_is_config(
-            "exit status: 1 — error: config error: thread counts must be >= 1"
-        ));
-        assert!(shard_error_is_config(
-            "exit status: 1 — error: json error: expected ':' after object key"
-        ));
+        assert!(shard_error_is_config(Some(
+            "error: config error: thread counts must be >= 1"
+        )));
+        assert!(shard_error_is_config(Some(
+            "error: json error: expected ':' after object key"
+        )));
         // Transient or unclassifiable failures keep the retry budget.
-        assert!(!shard_error_is_config(
-            "exit status: 1 — error: io error: permission denied"
-        ));
-        assert!(!shard_error_is_config("signal: 9 (SIGKILL) — (no stderr)"));
-        assert!(!shard_error_is_config("exit status: 101 — (no stderr)"));
+        assert!(!shard_error_is_config(Some(
+            "error: io error: permission denied"
+        )));
+        assert!(!shard_error_is_config(None)); // e.g. a kill: no stderr
+        // Anchored at the start of the line: a transient failure that
+        // merely quotes a config-error string stays retryable.
+        assert!(!shard_error_is_config(Some(
+            "error: io error: cannot persist \"error: config error: x\": disk full"
+        )));
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn shard_error_line_extraction() {
+        use std::os::unix::process::ExitStatusExt;
+        let out = |stderr: &str| std::process::Output {
+            status: std::process::ExitStatus::from_raw(1 << 8),
+            stdout: Vec::new(),
+            stderr: stderr.as_bytes().to_vec(),
+        };
+        let failed = out("note: probing\nerror: config error: bad axis\nusage: repro ...");
+        assert_eq!(
+            shard_error_line(&failed).as_deref(),
+            Some("error: config error: bad axis")
+        );
+        assert!(shard_error_is_config(shard_error_line(&failed).as_deref()));
+        assert_eq!(shard_error_line(&out("")), None);
     }
 }

@@ -10,8 +10,11 @@
 //!    [`crate::calibration::Calibration::resolve`], and both the model
 //!    memo and the calibration memo are keyed by exactly those axes, so
 //!    after this phase the batch has performed **at most one parameter
-//!    resolution per distinct (arch, sim fingerprint) pair** — the
-//!    engine asserts this invariant on every batch.
+//!    resolution per distinct (arch, sim fingerprint) pair**. Resolve
+//!    windows are serialized across batches (the engine is shared by
+//!    every HTTP worker), which makes the resolution delta attributable
+//!    to one batch; the invariant is checked by a debug assertion, so a
+//!    release server can never panic on it.
 //! 2. **Evaluate** — fan the queries out over a scoped-thread pool
 //!    (the [`crate::sweep::runner`] claim-by-cursor pattern) and run
 //!    every scenario through [`crate::sweep::runner::evaluate`] — the
@@ -105,6 +108,11 @@ pub struct PredictEngine {
     cache: SweepCache,
     params: ParamSource,
     workers: usize,
+    // Serializes phase 1 across concurrent batches: the calibration
+    // counter is cache-global, so a batch's before/after delta is only
+    // attributable to that batch while no other batch can resolve
+    // tables (phase-2 workers only ever hit memos built in phase 1).
+    resolve: Mutex<()>,
     queries: AtomicU64,
     batches: AtomicU64,
     cells: AtomicU64,
@@ -118,6 +126,7 @@ impl PredictEngine {
             cache: SweepCache::new(),
             params,
             workers,
+            resolve: Mutex::new(()),
             queries: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             cells: AtomicU64::new(0),
@@ -140,15 +149,15 @@ impl PredictEngine {
     /// Evaluate a batch, keeping every cell's result. Queries come back
     /// in input order; within a query, cells in grid-enumeration order.
     pub fn eval_batch(&self, batch: &QueryBatch) -> Result<Vec<QueryResult>> {
-        self.run(batch, true)
+        Ok(self.run(batch, true)?.0)
     }
 
     /// Evaluate a batch for effect only (throughput benches): every
-    /// cell is computed and counted, no result rows are kept.
+    /// cell is computed and counted, no result rows are kept. Returns
+    /// *this* batch's cell count — not a delta of the cumulative
+    /// counter, which concurrent batches advance too.
     pub fn drain_batch(&self, batch: &QueryBatch) -> Result<u64> {
-        let before = self.cells.load(Ordering::SeqCst);
-        self.run(batch, false)?;
-        Ok(self.cells.load(Ordering::SeqCst) - before)
+        Ok(self.run(batch, false)?.1)
     }
 
     /// Cumulative telemetry snapshot.
@@ -212,18 +221,22 @@ impl PredictEngine {
     }
 
     /// Shared batch path: expand + validate every query, resolve the
-    /// parameter tables, then evaluate the cells (parallel over
-    /// queries). Counters only advance for batches that succeed.
-    fn run(&self, batch: &QueryBatch, keep: bool) -> Result<Vec<QueryResult>> {
+    /// parameter tables (serialized across batches), then evaluate the
+    /// cells (parallel over queries). Counters only advance for batches
+    /// that succeed. Returns the results plus this batch's cell count.
+    fn run(&self, batch: &QueryBatch, keep: bool) -> Result<(Vec<QueryResult>, u64)> {
         let grids: Vec<GridSpec> = batch
             .queries
             .iter()
             .map(|q| q.to_grid(self.params))
             .collect::<Result<Vec<_>>>()?;
-        let before = self.cache.calibration_resolutions();
-        let pairs = self.resolve_tables(&grids)?;
-        let resolved = self.cache.calibration_resolutions() - before;
-        assert!(
+        let (pairs, resolved) = {
+            let _window = self.resolve.lock().unwrap();
+            let before = self.cache.calibration_resolutions();
+            let pairs = self.resolve_tables(&grids)?;
+            (pairs, self.cache.calibration_resolutions() - before)
+        };
+        debug_assert!(
             resolved <= pairs as u64,
             "batch resolved {resolved} parameter tables for {pairs} distinct \
              (arch, sim fingerprint) pairs"
@@ -275,10 +288,11 @@ impl PredictEngine {
                 .collect()
         };
 
+        let batch_cells = cells.load(Ordering::SeqCst);
         self.queries.fetch_add(grids.len() as u64, Ordering::SeqCst);
         self.batches.fetch_add(1, Ordering::SeqCst);
-        self.cells.fetch_add(cells.load(Ordering::SeqCst), Ordering::SeqCst);
-        Ok(out)
+        self.cells.fetch_add(batch_cells, Ordering::SeqCst);
+        Ok((out, batch_cells))
     }
 
     /// Evaluate one query's scenarios through the sweep cell path.
@@ -370,6 +384,32 @@ mod tests {
         let cells = engine.drain_batch(&b).unwrap();
         assert_eq!(cells, b.cells() as u64);
         assert_eq!(engine.stats().cells, cells);
+    }
+
+    #[test]
+    fn concurrent_batches_share_the_engine_safely() {
+        // Regression: the resolution-ceiling check used to diff the
+        // cache-global calibration counter without serializing the
+        // resolve window, so two batches resolving different archs
+        // concurrently could inflate each other's delta and panic; the
+        // cumulative-counter diff in drain_batch had the same race.
+        let engine = PredictEngine::new(ParamSource::Paper, 2);
+        let a = batch(r#"[{"arch": "small", "threads": [1, 15, 61, 240]}]"#);
+        let b = batch(r#"[{"arch": "medium", "strategy": "b", "threads": [15, 240]}]"#);
+        for _ in 0..4 {
+            std::thread::scope(|scope| {
+                let ha = scope.spawn(|| engine.drain_batch(&a).unwrap());
+                let hb = scope.spawn(|| engine.drain_batch(&b).unwrap());
+                // Per-batch cell counts, not deltas of the shared counter.
+                assert_eq!(ha.join().unwrap(), a.cells() as u64);
+                assert_eq!(hb.join().unwrap(), b.cells() as u64);
+            });
+        }
+        let stats = engine.stats();
+        assert_eq!(stats.batches, 8);
+        assert_eq!(stats.cells, 4 * (a.cells() + b.cells()) as u64);
+        // One resolution per distinct (arch, sim fingerprint), ever.
+        assert_eq!(stats.calibration_resolutions, 2, "{stats:?}");
     }
 
     #[test]

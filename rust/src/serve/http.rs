@@ -12,6 +12,11 @@
 //! * `POST /shutdown` — acknowledge, then stop accepting and drain the
 //!   worker pool (used by tests and the CI smoke for a clean exit).
 //!
+//! Protocol-level problems get explicit `{"error": ...}` responses
+//! rather than a dropped connection: 411 for a POST without a
+//! `Content-Length`, 400 for an unparseable one, 413 for a body over
+//! the cap, 431 for an oversized request head.
+//!
 //! Every response closes its connection (`Connection: close`) — the
 //! protocol surface is deliberately minimal; batching amortizes the
 //! per-connection cost, not keep-alive.
@@ -128,8 +133,13 @@ impl Server {
     fn handle(&self, mut stream: TcpStream) -> std::io::Result<()> {
         stream.set_read_timeout(Some(IO_TIMEOUT))?;
         stream.set_write_timeout(Some(IO_TIMEOUT))?;
-        let Some(req) = read_request(&mut stream)? else {
-            return Ok(()); // closed early or oversized — nothing to answer
+        let req = match read_request(&mut stream)? {
+            Parsed::Request(req) => req,
+            Parsed::Closed => return Ok(()), // nothing arrived — nothing to answer
+            Parsed::Reject(status, reason, msg) => {
+                let doc = Json::obj(vec![("error", Json::str(msg))]);
+                return respond(&mut stream, status, reason, &doc.emit());
+            }
         };
         match (req.method.as_str(), req.path.as_str()) {
             ("GET", "/healthz") => respond(&mut stream, 200, "OK", "{\"ok\": true}"),
@@ -165,10 +175,23 @@ fn find(haystack: &[u8], needle: &[u8]) -> Option<usize> {
     haystack.windows(needle.len()).position(|w| w == needle)
 }
 
+/// What one connection's request parse produced.
+enum Parsed {
+    /// A complete request, ready to route.
+    Request(Request),
+    /// Connection closed before a full head arrived — nothing to
+    /// answer (shutdown wake connections land here).
+    Closed,
+    /// A protocol-level reject: answer `(status, reason)` with an
+    /// `{"error": message}` body, then close.
+    Reject(u16, &'static str, String),
+}
+
 /// Read one request: head up to the blank line, then exactly
-/// `Content-Length` body bytes. `None` = connection closed before a
-/// full head arrived (shutdown wake connections land here) or caps hit.
-fn read_request(stream: &mut TcpStream) -> std::io::Result<Option<Request>> {
+/// `Content-Length` body bytes. Cap breaches and missing/unparseable
+/// lengths come back as [`Parsed::Reject`] so the client gets an
+/// explicit 4xx instead of a silently dropped connection.
+fn read_request(stream: &mut TcpStream) -> std::io::Result<Parsed> {
     let mut buf: Vec<u8> = Vec::with_capacity(1024);
     let mut chunk = [0u8; 16 * 1024];
     let head_end = loop {
@@ -176,11 +199,15 @@ fn read_request(stream: &mut TcpStream) -> std::io::Result<Option<Request>> {
             break pos;
         }
         if buf.len() > MAX_HEAD {
-            return Ok(None);
+            return Ok(Parsed::Reject(
+                431,
+                "Request Header Fields Too Large",
+                format!("request head exceeds {MAX_HEAD} bytes"),
+            ));
         }
         let n = stream.read(&mut chunk)?;
         if n == 0 {
-            return Ok(None);
+            return Ok(Parsed::Closed);
         }
         buf.extend_from_slice(&chunk[..n]);
     };
@@ -189,17 +216,43 @@ fn read_request(stream: &mut TcpStream) -> std::io::Result<Option<Request>> {
     let mut request_line = lines.next().unwrap_or("").split_whitespace();
     let method = request_line.next().unwrap_or("").to_string();
     let path = request_line.next().unwrap_or("").to_string();
-    let mut content_length = 0usize;
+    let mut content_length: Option<usize> = None;
     for line in lines {
         if let Some((name, value)) = line.split_once(':') {
             if name.trim().eq_ignore_ascii_case("content-length") {
-                content_length = value.trim().parse().unwrap_or(0);
+                match value.trim().parse() {
+                    Ok(len) => content_length = Some(len),
+                    Err(_) => {
+                        return Ok(Parsed::Reject(
+                            400,
+                            "Bad Request",
+                            format!("unparseable Content-Length {:?}", value.trim()),
+                        ))
+                    }
+                }
             }
         }
     }
-    if content_length > MAX_BODY {
-        return Ok(None);
-    }
+    let content_length = match content_length {
+        Some(len) if len > MAX_BODY => {
+            return Ok(Parsed::Reject(
+                413,
+                "Payload Too Large",
+                format!("body of {len} bytes exceeds the {MAX_BODY}-byte cap"),
+            ))
+        }
+        Some(len) => len,
+        // A POST carries its batch in the body; without a length the
+        // server would parse an empty batch and emit a confusing 400.
+        None if method == "POST" => {
+            return Ok(Parsed::Reject(
+                411,
+                "Length Required",
+                "POST requests need a Content-Length header".to_string(),
+            ))
+        }
+        None => 0,
+    };
     let mut body: Vec<u8> = buf[head_end + 4..].to_vec();
     while body.len() < content_length {
         let n = stream.read(&mut chunk)?;
@@ -209,7 +262,7 @@ fn read_request(stream: &mut TcpStream) -> std::io::Result<Option<Request>> {
         body.extend_from_slice(&chunk[..n]);
     }
     body.truncate(content_length);
-    Ok(Some(Request {
+    Ok(Parsed::Request(Request {
         method,
         path,
         body: String::from_utf8_lossy(&body).into_owned(),

@@ -661,6 +661,30 @@ fn predict_batch_csv_and_table_modes() {
     assert!(out.status.success(), "{}", stderr(&out));
     let s = stdout(&out);
     assert!(s.contains("2 queries in 1 batches, 5 cells"), "{s}");
+    // A batch mixing sim and non-sim queries has two column sets (the
+    // sim query gains a leading `sim` column): the stream re-emits the
+    // header at the switch so every row aligns with its header.
+    let mixed = dir.path().join("mixed.json");
+    std::fs::write(
+        &mixed,
+        r#"[{"arch": "small", "strategy": "a", "threads": [15]},
+            {"arch": "small", "strategy": "a", "threads": [15], "sim": {"clock_ghz": 1.5}},
+            {"arch": "small", "strategy": "a", "threads": [61], "sim": {"clock_ghz": 1.5}}]"#,
+    )
+    .unwrap();
+    let out = repro(&["predict", "--batch", mixed.to_str().unwrap(), "--csv", "--serial"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let csv = stdout(&out);
+    let lines: Vec<&str> = csv.lines().collect();
+    // header, row, sim header, sim row, sim row (repeat header skipped).
+    assert_eq!(lines.len(), 5, "{csv}");
+    let cols = |l: &str| l.split(',').count();
+    assert!(lines[0].starts_with("arch"), "{csv}");
+    assert!(lines[2].starts_with("sim"), "{csv}");
+    assert_eq!(cols(lines[0]), cols(lines[1]), "{csv}");
+    assert_eq!(cols(lines[2]), cols(lines[0]) + 1, "{csv}");
+    assert_eq!(cols(lines[3]), cols(lines[2]), "{csv}");
+    assert_eq!(cols(lines[4]), cols(lines[2]), "{csv}");
     // --json and --csv together are rejected.
     let out = repro(&["predict", "--batch", bp, "--csv", "--json", "x.json"]);
     assert_eq!(out.status.code(), Some(1));

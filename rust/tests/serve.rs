@@ -125,6 +125,30 @@ fn server_end_to_end_over_a_real_socket() {
     let (head, _) = http(addr, "GET", "/nope", "");
     assert!(head.starts_with("HTTP/1.1 404"), "{head}");
 
+    // Protocol-level problems get explicit 4xx responses with an error
+    // body, not a silently dropped connection.
+    let raw = |req: String| -> String {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(req.as_bytes()).unwrap();
+        let mut reply = String::new();
+        stream.read_to_string(&mut reply).unwrap();
+        reply
+    };
+    // POST without a Content-Length → 411.
+    let reply = raw(format!("POST /predict HTTP/1.1\r\nHost: {addr}\r\n\r\n"));
+    assert!(reply.starts_with("HTTP/1.1 411"), "{reply}");
+    assert!(reply.contains("\"error\""), "{reply}");
+    // Unparseable Content-Length → 400.
+    let reply = raw(format!(
+        "POST /predict HTTP/1.1\r\nHost: {addr}\r\nContent-Length: nope\r\n\r\n"
+    ));
+    assert!(reply.starts_with("HTTP/1.1 400"), "{reply}");
+    // Body over the cap → 413 (nothing is read past the head).
+    let reply = raw(format!(
+        "POST /predict HTTP/1.1\r\nHost: {addr}\r\nContent-Length: 999999999999\r\n\r\n"
+    ));
+    assert!(reply.starts_with("HTTP/1.1 413"), "{reply}");
+
     // Malformed batch → 400 with an error body.
     let (head, body) = http(addr, "POST", "/predict", "{\"not\": \"a batch\"}");
     assert!(head.starts_with("HTTP/1.1 400"), "{head}");
