@@ -1,0 +1,463 @@
+#!/usr/bin/env python3
+"""One-time bootstrap for baselines/residual_smoke.json.
+
+The canonical way to (re)generate the residual conformance baseline is
+the binary itself:
+
+    cd rust && cargo run --release -- \
+        conformance --write-residual ../baselines/residual_smoke.json
+
+This script exists because the baseline was first seeded in an
+environment without a Rust toolchain (the same situation that produced
+generate_ci_smoke.py and generate_measured_smoke.py). It replicates,
+operation for operation, the strategy (c) residual regressor
+(rust/src/calibration/residual.rs + rust/src/perfmodel/strategy_c.rs):
+
+  * the seeded training grid — the Table IV thread ladder crossed with
+    four deterministic workload variants (the paper workload, its
+    2x/4x Table XI scalings, and one XorShift64-jittered variant seeded
+    from SimConfig::seed ^ fnv1a(arch));
+  * the residual target z = ln(measured execution / strategy-(b)
+    predicted total) over that grid, with the measured side replicated
+    by generate_measured_smoke.py's micsim port;
+  * the ridge fit (X^T X + lambda I) w = X^T z solved by Gaussian
+    elimination with partial pivoting, strictly in training-grid order;
+  * the (c) prediction: strategy (b)'s total scaled by exp(w . x).
+
+Grids: the Tables IX-XI domains with strategies (b, c) so every band
+file pins the ordering claim — (c)'s mean Δ strictly below (b)'s on the
+same cells. Self-checks assert that ordering with margin, the k-fold
+held-out gate the Rust tests pin (held-out mean Δ of (c) within
+tolerance of in-sample and below (b)'s band), and determinism of the
+seeded grid. Band tolerances are the measured-smoke ones: ±max(1 pp,
+2 % relative) on the mean, ±max(2 pp, 2 % relative) on the max — far
+above the Python-vs-Rust libm replication noise, far below a genuine
+model change.
+"""
+
+import json
+import math
+import os
+
+from generate_ci_smoke import (
+    ARCHS, CONTENTION_THREADS as LADDER_THREADS,  # Table IV thread ladder
+    EPOCHS, MEASURED_THREADS, TEST_IMAGES, TRAIN_IMAGES,
+    CORES, THREADS_PER_CORE,
+    predict_b,
+)
+from generate_measured_smoke import (
+    CLAIM_HEADROOM_PP, PAPER_DELTA_PCT,
+    TABLE10_THREADS, TABLE11_EPOCHS, TABLE11_IMAGES, TABLE11_THREADS,
+    bands_of, delta_pct, measured_execution_s, overall_mean,
+    build as measured_build,
+)
+
+# SimConfig::default().seed and the residual grid salt
+# (rust/src/calibration/residual.rs RESIDUAL_SALT).
+SIM_SEED = 0x5EED
+RESIDUAL_SALT = 0xC0DE_F17  # "code fit"
+
+# Ridge regularizer (residual.rs LAMBDA).
+LAMBDA = 1e-3
+
+# SimConfig::default() constants folded in as (per-fit constant)
+# features — the sensitivity report's top-ranked simulator knobs.
+FWD_CYCLES_PER_OP = 31.0
+EXEC_FRACTION = 0.75
+OVERSUB_OVERHEAD = 0.05
+
+# ArchSpec::total_weights() per paper architecture.
+TOTAL_WEIGHTS = {"small": 8_545, "medium": 76_040, "large": 363_960}
+
+MASK64 = (1 << 64) - 1
+
+RESIDUAL_GRID_IDS = ["table9_residual", "table10_residual", "table11_residual"]
+RESIDUAL_CLAIM_GRID = "table9_residual"
+
+
+# ---------------------------------------------------------------------------
+# Deterministic primitives (bit-exact ports of the Rust ones)
+# ---------------------------------------------------------------------------
+
+def fnv1a(data):
+    """util-wide FNV-1a over bytes (rust/src/lab/store.rs)."""
+    h = 0xCBF2_9CE4_8422_2325
+    for b in data:
+        h ^= b
+        h = (h * 0x0000_0100_0000_01B3) & MASK64
+    return h
+
+
+class XorShift64:
+    """nn::init::XorShift64, bit for bit (splitmix64 seed finalizer,
+    xorshift64* stream)."""
+
+    def __init__(self, seed):
+        z = (seed + 0x9E37_79B9_7F4A_7C15) & MASK64
+        z = ((z ^ (z >> 30)) * 0xBF58_476D_1CE4_E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D0_49BB_1331_11EB) & MASK64
+        z ^= z >> 31
+        self.state = z | 1
+
+    def next_u64(self):
+        x = self.state
+        x ^= x >> 12
+        x = (x ^ (x << 25)) & MASK64
+        x ^= x >> 27
+        self.state = x
+        return (x * 0x2545_F491_4F6C_DD1D) & MASK64
+
+    def next_below(self, n):
+        return self.next_u64() % n
+
+
+# ---------------------------------------------------------------------------
+# The seeded training grid (residual.rs::training_runs)
+# ---------------------------------------------------------------------------
+
+def training_runs(arch, seed=SIM_SEED):
+    """Workload variants x the Table IV thread ladder, in fit order
+    (workload-outer, threads-inner so k-fold index splits mix both
+    axes). Variants: the paper workload, its 2x and 4x Table XI
+    scalings, and one jittered draw from the seeded stream."""
+    ep = EPOCHS[arch]
+    rng = XorShift64((seed ^ fnv1a(arch.encode())) ^ RESIDUAL_SALT)
+    jitter = (
+        15_000 + rng.next_below(45_001),
+        2_500 + rng.next_below(7_501),
+        5 + rng.next_below(ep),
+    )
+    workloads = [
+        (TRAIN_IMAGES, TEST_IMAGES, ep),
+        (2 * TRAIN_IMAGES, 2 * TEST_IMAGES, 2 * ep),
+        (4 * TRAIN_IMAGES, 4 * TEST_IMAGES, 4 * ep),
+        jitter,
+    ]
+    return [(i, it, e, p) for (i, it, e) in workloads for p in LADDER_THREADS]
+
+
+# ---------------------------------------------------------------------------
+# Features (strategy_c.rs FEATURES / feature vector)
+# ---------------------------------------------------------------------------
+
+FEATURE_NAMES = [
+    "intercept",
+    "ln_threads",
+    "ln_threads_sq",
+    "occupancy",
+    "cpi",
+    "oversub_flag",
+    "ln_oversub",
+    "ln_train_images",
+    "ln_test_images_p1",
+    "ln_epochs",
+    "ln_total_weights",
+    "fwd_cycles_per_op",
+    "exec_fraction",
+    "oversub_overhead",
+]
+
+CPI_LADDER = [1.0, 1.0, 1.5, 2.0]
+
+
+def features(arch, i, it, ep, p):
+    lp = math.log(float(p))
+    occ = min(-(-p // CORES), THREADS_PER_CORE)
+    cpi = CPI_LADDER[min(occ, len(CPI_LADDER)) - 1]
+    hw = float(CORES * THREADS_PER_CORE)
+    ln_oversub = max(math.log(float(p) / hw), 0.0) if p > CORES * THREADS_PER_CORE else 0.0
+    return [
+        1.0,
+        lp,
+        lp * lp,
+        float(occ),
+        cpi,
+        1.0 if p > CORES * THREADS_PER_CORE else 0.0,
+        ln_oversub,
+        math.log(float(i)),
+        math.log(float(it) + 1.0),
+        math.log(float(ep)),
+        math.log(float(TOTAL_WEIGHTS[arch])),
+        FWD_CYCLES_PER_OP,
+        EXEC_FRACTION,
+        OVERSUB_OVERHEAD,
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Ridge fit (residual.rs::fit): normal equations + Gaussian elimination
+# with partial pivoting, accumulation strictly in point order
+# ---------------------------------------------------------------------------
+
+def fit(points, lam=LAMBDA):
+    """points: [(x: [f64], z: f64)] -> weights [f64]."""
+    d = len(points[0][0])
+    xtx = [[0.0] * d for _ in range(d)]
+    xtz = [0.0] * d
+    for (x, z) in points:
+        for r in range(d):
+            xr = x[r]
+            row = xtx[r]
+            for c in range(d):
+                row[c] += xr * x[c]
+            xtz[r] += xr * z
+    for r in range(d):
+        xtx[r][r] += lam
+    # Gaussian elimination with partial pivoting.
+    a = [xtx[r] + [xtz[r]] for r in range(d)]
+    for col in range(d):
+        piv = col
+        for r in range(col + 1, d):
+            if abs(a[r][col]) > abs(a[piv][col]):
+                piv = r
+        a[col], a[piv] = a[piv], a[col]
+        pivval = a[col][col]
+        for r in range(col + 1, d):
+            f = a[r][col] / pivval
+            if f == 0.0:
+                continue
+            for c in range(col, d + 1):
+                a[r][c] -= f * a[col][c]
+    w = [0.0] * d
+    for r in range(d - 1, -1, -1):
+        acc = a[r][d]
+        for c in range(r + 1, d):
+            acc -= a[r][c] * w[c]
+        w[r] = acc / a[r][r]
+    return w
+
+
+def training_points(arch, seed=SIM_SEED):
+    pts = []
+    for (i, it, ep, p) in training_runs(arch, seed):
+        measured = measured_execution_s(arch, i, it, ep, p)
+        predicted = predict_b(arch, i, it, ep, p)
+        pts.append((features(arch, i, it, ep, p),
+                    math.log(measured / predicted)))
+    return pts
+
+
+def fit_arch(arch, seed=SIM_SEED):
+    return fit(training_points(arch, seed))
+
+
+def predict_c(weights, arch, i, it, ep, p):
+    """StrategyC::predict: the (b) total scaled by exp(w . x)."""
+    x = features(arch, i, it, ep, p)
+    ratio = math.exp(sum(wi * xi for (wi, xi) in zip(weights, x)))
+    return predict_b(arch, i, it, ep, p) * ratio
+
+
+# ---------------------------------------------------------------------------
+# The residual conformance grids (conformance::residual_grids):
+# Tables IX-XI domains, strategies (b, c)
+# ---------------------------------------------------------------------------
+
+def grid_defs():
+    def spec(archs, images, epochs, threads):
+        doc = {
+            "archs": archs,
+            "threads": threads,
+            "images": [list(pair) for pair in images],
+        }
+        if epochs:
+            doc["epochs"] = epochs
+        doc["strategies"] = ["b", "c"]
+        doc["params"] = "paper"
+        doc["measure"] = True
+        return doc
+
+    def enumerate_grid(archs, images, epochs, threads):
+        out = []
+        for arch in archs:
+            eps = epochs if epochs else [EPOCHS[arch]]
+            for (i, it) in images:
+                for ep in eps:
+                    for p in threads:
+                        for s in ("b", "c"):
+                            out.append((arch, i, it, ep, p, s))
+        return out
+
+    grids = []
+    grids.append((
+        "table9_residual",
+        spec(ARCHS, [(TRAIN_IMAGES, TEST_IMAGES)], [], MEASURED_THREADS),
+        enumerate_grid(ARCHS, [(TRAIN_IMAGES, TEST_IMAGES)], [],
+                       MEASURED_THREADS),
+    ))
+    grids.append((
+        "table10_residual",
+        spec(ARCHS, [(TRAIN_IMAGES, TEST_IMAGES)], [], TABLE10_THREADS),
+        enumerate_grid(ARCHS, [(TRAIN_IMAGES, TEST_IMAGES)], [],
+                       TABLE10_THREADS),
+    ))
+    grids.append((
+        "table11_residual",
+        spec(["small"], TABLE11_IMAGES, TABLE11_EPOCHS, TABLE11_THREADS),
+        enumerate_grid(["small"], TABLE11_IMAGES, TABLE11_EPOCHS,
+                       TABLE11_THREADS),
+    ))
+    return grids
+
+
+def evaluate(scenarios, weights_by_arch):
+    rows = []
+    for (arch, i, it, ep, p, s) in scenarios:
+        if s == "b":
+            predicted = predict_b(arch, i, it, ep, p)
+        else:
+            predicted = predict_c(weights_by_arch[arch], arch, i, it, ep, p)
+        measured = measured_execution_s(arch, i, it, ep, p)
+        rows.append((arch, i, it, ep, p, s, measured, predicted,
+                     delta_pct(measured, predicted)))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Self-checks: ordering with margin, k-fold generalization, determinism
+# ---------------------------------------------------------------------------
+
+K_FOLDS = 4
+KFOLD_TOL_PP = 3.0  # tests/calibration.rs kfold gate tolerance
+
+
+def kfold_deltas(arch, k=K_FOLDS, seed=SIM_SEED):
+    """(in-sample mean Δ%, held-out mean Δ%) of (c) over the training
+    grid under an index-mod-k split — the Rust kfold gate, mirrored."""
+    runs = training_runs(arch, seed)
+    pts = training_points(arch, seed)
+    full_w = fit(pts)
+    in_sample, held_out = [], []
+    for fold in range(k):
+        train = [pt for (j, pt) in enumerate(pts) if j % k != fold]
+        w = fit(train)
+        for (j, (i, it, ep, p)) in enumerate(runs):
+            measured = measured_execution_s(arch, i, it, ep, p)
+            if j % k == fold:
+                held_out.append(
+                    delta_pct(measured, predict_c(w, arch, i, it, ep, p)))
+    for (i, it, ep, p) in runs:
+        measured = measured_execution_s(arch, i, it, ep, p)
+        in_sample.append(
+            delta_pct(measured, predict_c(full_w, arch, i, it, ep, p)))
+    return (sum(in_sample) / len(in_sample), sum(held_out) / len(held_out))
+
+
+def self_check(results, weights_by_arch):
+    # The measured replication's own anchor suite first (it underlies
+    # every residual target).
+    _measured_results()
+    # Determinism: refitting from the same seed is bit-identical;
+    # another seed produces a different training grid.
+    for arch in ARCHS:
+        again = fit_arch(arch)
+        assert weights_by_arch[arch] == again, arch
+        assert training_runs(arch) == training_runs(arch), arch
+        assert training_runs(arch, SIM_SEED ^ 0xBEEF) != training_runs(arch)
+    # Ordering with margin: on every grid, each (arch, c) band mean sits
+    # strictly below the (arch, b) band mean — with >= 20 % relative
+    # headroom so libm replication noise can never flip the runtime
+    # strict check.
+    for gid, rows in results.items():
+        means = {(b["arch"], b["strategy"]): b["mean_delta_pct"]
+                 for b in bands_of(rows)}
+        for arch in {r[0] for r in rows}:
+            b_mean, c_mean = means[(arch, "b")], means[(arch, "c")]
+            assert c_mean < 0.8 * b_mean, (gid, arch, c_mean, b_mean)
+    # The claim: (c)'s overall Table IX mean beats (b)'s.
+    b_overall = overall_mean(results[RESIDUAL_CLAIM_GRID], "b")
+    c_overall = overall_mean(results[RESIDUAL_CLAIM_GRID], "c")
+    assert c_overall < 0.8 * b_overall, (c_overall, b_overall)
+    # k-fold held-out gate (tests/calibration.rs): held-out mean within
+    # tolerance of in-sample, and below (b)'s Table IX band mean.
+    t9_b = {b["arch"]: b["mean_delta_pct"]
+            for b in bands_of(results[RESIDUAL_CLAIM_GRID])
+            if b["strategy"] == "b"}
+    for arch in ARCHS:
+        ins, out = kfold_deltas(arch)
+        assert out <= ins + KFOLD_TOL_PP, (arch, ins, out)
+        assert out < t9_b[arch], (arch, out, t9_b[arch])
+
+
+_MEASURED_CACHE = None
+
+
+def _measured_results():
+    """The measured-smoke replication's own self-check inputs (runs the
+    anchor suite of generate_measured_smoke once)."""
+    global _MEASURED_CACHE
+    if _MEASURED_CACHE is None:
+        _, res = measured_build()
+        _MEASURED_CACHE = res
+    return _MEASURED_CACHE
+
+
+# ---------------------------------------------------------------------------
+# Build
+# ---------------------------------------------------------------------------
+
+def build():
+    weights = {arch: fit_arch(arch) for arch in ARCHS}
+    results = {}
+    grids_out = []
+    for (gid, spec, scenarios) in grid_defs():
+        rows = evaluate(scenarios, weights)
+        results[gid] = rows
+        grids_out.append({"id": gid, "spec": spec, "bands": bands_of(rows)})
+    self_check(results, weights)
+    claims = []
+    # The (b) paper mean is the bar for both strategies: (b) must hold
+    # its own claim on this domain, (c) must do at least as well.
+    paper_b = sum(v[1] for v in PAPER_DELTA_PCT.values()) / 3.0
+    for strategy in ("b", "c"):
+        observed = overall_mean(results[RESIDUAL_CLAIM_GRID], strategy)
+        claims.append({
+            "strategy": strategy,
+            "grid": RESIDUAL_CLAIM_GRID,
+            "paper_mean_pct": paper_b,
+            "ceiling_pct": max(paper_b, observed + CLAIM_HEADROOM_PP),
+        })
+    return {
+        "kind": "micdl-conformance-baseline",
+        "version": 1,
+        "claims": claims,
+        "grids": grids_out,
+    }, results, weights
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--write", action="store_true",
+                    help="overwrite baselines/residual_smoke.json "
+                         "(default: self-check + print the bands only)")
+    args = ap.parse_args()
+    doc, results, weights = build()
+    for arch in ARCHS:
+        ins, out = kfold_deltas(arch)
+        print(f"{arch}: weights {['%.4f' % w for w in weights[arch]]}")
+        print(f"  kfold in-sample {ins:.3f}%  held-out {out:.3f}%")
+    for grid in doc["grids"]:
+        print(f"{grid['id']}: {len(results[grid['id']])} cells")
+        for band in grid["bands"]:
+            print(f"  {band['arch']}/{band['strategy']}: "
+                  f"mean Δ {band['mean_delta_pct']:.3f}%  "
+                  f"max Δ {band['max_delta_pct']:.3f}% "
+                  f"@ p={band['max_at_threads']} "
+                  f"({band['points']} points)")
+    for claim in doc["claims"]:
+        print(f"claim {claim['strategy']}: paper {claim['paper_mean_pct']:.2f}% "
+              f"ceiling {claim['ceiling_pct']:.2f}%")
+    if not args.write:
+        print("self-check OK; pass --write to overwrite residual_smoke.json")
+        return
+    out = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "residual_smoke.json")
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -47,9 +47,11 @@
 #![warn(missing_docs)]
 
 pub mod contention;
+pub mod residual;
 pub mod source;
 
 pub use contention::ContentionSource;
+pub use residual::{ResidualModel, ResidualSource};
 pub use source::{ComputedSource, PaperSource, ProbeSource};
 
 use std::collections::HashMap;
@@ -59,7 +61,7 @@ use std::sync::{Arc, Mutex};
 use crate::config::{ArchSpec, MachineConfig};
 use crate::error::{Error, Result};
 use crate::lab::{self, Store};
-use crate::perfmodel::{ParamSource, PerfModel, StrategyA, StrategyB};
+use crate::perfmodel::{ParamSource, PerfModel, StrategyA, StrategyB, StrategyC};
 use crate::simulator::SimConfig;
 use crate::sweep::Strategy;
 use crate::util::json::Json;
@@ -162,6 +164,7 @@ pub struct Calibration {
     calibrator: Box<dyn Calibrator>,
     memo: Mutex<HashMap<(String, u64), Arc<ModelParams>>>,
     resolutions: AtomicU64,
+    residual: ResidualSource,
     store: Option<Arc<Store>>,
 }
 
@@ -187,14 +190,17 @@ impl Calibration {
             calibrator,
             memo: Mutex::new(HashMap::new()),
             resolutions: AtomicU64::new(0),
+            residual: ResidualSource::new(source),
             store: None,
         }
     }
 
-    /// Attach a lab store: resolutions are served from disk when
-    /// persisted (without counting as calibrator runs) and written
-    /// through — with their provenance — when computed.
+    /// Attach a lab store: resolutions (and residual fits) are served
+    /// from disk when persisted (without counting as calibrator runs /
+    /// fits) and written through — with their provenance — when
+    /// computed.
     pub fn with_store(mut self, store: Arc<Store>) -> Calibration {
+        self.residual.set_store(Arc::clone(&store));
         self.store = Some(store);
         self
     }
@@ -267,6 +273,11 @@ impl Calibration {
         Ok(match kind {
             Strategy::A => Box::new(StrategyA::from_params(&params)?),
             Strategy::B => Box::new(StrategyB::from_params(&params)?),
+            Strategy::C => {
+                let b = StrategyB::from_params(&params)?;
+                let model = self.residual.resolve(arch, sim, &b)?;
+                Box::new(StrategyC::new(b, model))
+            }
         })
     }
 
@@ -357,6 +368,14 @@ impl Calibration {
     /// pin.
     pub fn resolutions(&self) -> u64 {
         self.resolutions.load(Ordering::Relaxed)
+    }
+
+    /// How many strategy-(c) residual fits actually ran — a separate
+    /// counter from [`Calibration::resolutions`], so the existing
+    /// resolution pins are untouched by (c) traffic and warm-store
+    /// reruns can assert zero refits.
+    pub fn residual_fits(&self) -> u64 {
+        self.residual.fits()
     }
 }
 

@@ -1,0 +1,694 @@
+//! The strategy-(c) residual regressor: a sweep-trained correction on
+//! top of strategy (b).
+//!
+//! The paper's measurement-based model (b) still carries a systematic
+//! residual against the measuring simulator — fractional-vs-ceiling
+//! chunking, the L2/ring memory effects the closed form lacks, and the
+//! oversubscription regime beyond 244 threads. Following the ResPerfNet
+//! observation (learn the *residual* of an analytic predictor rather
+//! than the time itself), this module fits a small ridge regressor on
+//! the log-residual
+//!
+//! ```text
+//! z = ln( measured_execution_s / predicted_b_total_s )
+//! ```
+//!
+//! over a **seeded training grid** ([`training_runs`]): four workload
+//! variants (the paper workload, its 2×/4× Table XI scalings, and one
+//! [`XorShift64`]-jittered variant) crossed with the Table IV thread
+//! ladder. Strategy (c) then predicts `(b)'s total × exp(w · x)`
+//! ([`crate::perfmodel::StrategyC`]).
+//!
+//! Everything is deterministic from `(arch, SimConfig::fingerprint())`:
+//! the grid derives from `SimConfig::seed ^ fnv1a(arch) ^` a fixed
+//! salt, the normal equations accumulate strictly in training-grid
+//! order, and the solver is plain Gaussian elimination with partial
+//! pivoting — so serial, parallel, and store-round-tripped fits are
+//! bit-identical (pinned by `tests/proptests.rs`).
+//!
+//! [`ResidualSource`] is the facade mirror of [`super::Calibration`]:
+//! memoized per (arch, fingerprint), lab-store persisted under
+//! `residual:v1:...` keys with full provenance (training-grid hash,
+//! feature list, seed), counting only real fits ([`ResidualSource::fits`]).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::{ArchSpec, MachineConfig, RunConfig};
+use crate::error::{Error, Result};
+use crate::lab::{self, Store};
+use crate::nn::init::XorShift64;
+use crate::perfmodel::{ParamSource, PerfModel, StrategyB};
+use crate::report::paper;
+use crate::simulator::{simulate_training_with, CostModel, SimConfig};
+use crate::util::json::Json;
+
+/// Salt folded into the training-grid RNG seed ("code fit"), so the
+/// residual grid never aliases another consumer of `SimConfig::seed`.
+pub const RESIDUAL_SALT: u64 = 0xC0DE_F17;
+
+/// Ridge regularizer λ on the normal-equation diagonal.
+pub const LAMBDA: f64 = 1e-3;
+
+/// The feature vector, in fit order. The last three entries are per-fit
+/// constants — the sensitivity report's top-ranked simulator knobs —
+/// folded in so the persisted provenance names everything the fit saw.
+pub const FEATURE_NAMES: [&str; 14] = [
+    "intercept",
+    "ln_threads",
+    "ln_threads_sq",
+    "occupancy",
+    "cpi",
+    "oversub_flag",
+    "ln_oversub",
+    "ln_train_images",
+    "ln_test_images_p1",
+    "ln_epochs",
+    "ln_total_weights",
+    "fwd_cycles_per_op",
+    "exec_fraction",
+    "oversub_overhead",
+];
+
+/// The seeded training grid: workload variants × the Table IV thread
+/// ladder, in fit order (workload-outer, threads-inner, so index-mod-k
+/// folds mix both axes). Variants: the paper workload, its 2× and 4×
+/// Table XI scalings, and one jittered draw from the seeded stream.
+pub fn training_runs(arch: &ArchSpec, seed: u64) -> Vec<RunConfig> {
+    let base = RunConfig::paper_default(&arch.name, 1);
+    let ep = base.epochs;
+    let mut rng =
+        XorShift64::new((seed ^ lab::fnv1a(arch.name.as_bytes())) ^ RESIDUAL_SALT);
+    let jitter = (
+        15_000 + rng.next_below(45_001),
+        2_500 + rng.next_below(7_501),
+        5 + rng.next_below(ep),
+    );
+    let workloads = [
+        (base.train_images, base.test_images, ep),
+        (2 * base.train_images, 2 * base.test_images, 2 * ep),
+        (4 * base.train_images, 4 * base.test_images, 4 * ep),
+        jitter,
+    ];
+    let mut runs = Vec::with_capacity(workloads.len() * paper::CONTENTION_THREADS.len());
+    for (i, it, e) in workloads {
+        for &p in paper::CONTENTION_THREADS.iter() {
+            runs.push(RunConfig {
+                train_images: i,
+                test_images: it,
+                epochs: e,
+                threads: p,
+            });
+        }
+    }
+    runs
+}
+
+/// The feature vector for one run (order: [`FEATURE_NAMES`]).
+pub fn feature_vector(
+    machine: &MachineConfig,
+    total_weights: f64,
+    fwd_cycles_per_op: f64,
+    exec_fraction: f64,
+    oversub_overhead: f64,
+    run: &RunConfig,
+) -> Vec<f64> {
+    let p = run.threads;
+    let lp = (p as f64).ln();
+    let occ = machine.occupancy(p);
+    let cpi = machine.cpi(occ);
+    let hw = machine.max_hw_threads();
+    let oversub = p > hw;
+    let ln_oversub = if oversub {
+        (p as f64 / hw as f64).ln().max(0.0)
+    } else {
+        0.0
+    };
+    vec![
+        1.0,
+        lp,
+        lp * lp,
+        occ as f64,
+        cpi,
+        if oversub { 1.0 } else { 0.0 },
+        ln_oversub,
+        (run.train_images as f64).ln(),
+        (run.test_images as f64 + 1.0).ln(),
+        (run.epochs as f64).ln(),
+        total_weights.ln(),
+        fwd_cycles_per_op,
+        exec_fraction,
+        oversub_overhead,
+    ]
+}
+
+/// One training point: the run, both sides of the residual, and the
+/// assembled feature vector.
+#[derive(Debug, Clone)]
+pub struct TrainSample {
+    /// The training-grid run.
+    pub run: RunConfig,
+    /// micsim's measured execution time, seconds.
+    pub measured_s: f64,
+    /// Feature vector in [`FEATURE_NAMES`] order.
+    pub features: Vec<f64>,
+    /// The fit target `ln(measured / predicted_b)`.
+    pub z: f64,
+}
+
+/// Evaluate the training grid: one measured/predicted pair per run, in
+/// grid order, sharing one [`CostModel`] (the sweep-cache policy).
+pub fn training_samples(
+    arch: &ArchSpec,
+    b: &StrategyB,
+    sim: &SimConfig,
+) -> Result<Vec<TrainSample>> {
+    let cost = CostModel::new(arch, sim)?;
+    let total_weights = arch.total_weights()? as f64;
+    let runs = training_runs(arch, sim.seed);
+    let mut out = Vec::with_capacity(runs.len());
+    for run in runs {
+        let measured_s = simulate_training_with(&cost, &run, sim)?.execution_s;
+        let predicted_s = b.predict(&run)?.total_s;
+        if !(measured_s > 0.0 && measured_s.is_finite())
+            || !(predicted_s > 0.0 && predicted_s.is_finite())
+        {
+            return Err(Error::Config(format!(
+                "residual training point {}@p={} is degenerate \
+                 (measured {measured_s}, predicted {predicted_s})",
+                arch.name, run.threads
+            )));
+        }
+        let features = feature_vector(
+            &sim.machine,
+            total_weights,
+            sim.fwd_cycles_per_op,
+            sim.exec_fraction,
+            sim.oversub_overhead,
+            &run,
+        );
+        out.push(TrainSample {
+            run,
+            measured_s,
+            features,
+            z: (measured_s / predicted_s).ln(),
+        });
+    }
+    Ok(out)
+}
+
+/// Solve the ridge normal equations `(XᵀX + λI) w = Xᵀz` by Gaussian
+/// elimination with partial pivoting. Accumulation runs strictly in
+/// point order — the determinism contract the property tests pin — so
+/// callers must not reorder `points`. Public so the k-fold test can fit
+/// training subsets without building a full [`ResidualModel`].
+pub fn solve(points: &[(Vec<f64>, f64)], lambda: f64) -> Result<Vec<f64>> {
+    let Some(first) = points.first() else {
+        return Err(Error::Config(
+            "residual fit needs at least one training point".into(),
+        ));
+    };
+    let d = first.0.len();
+    let mut xtx = vec![vec![0.0f64; d]; d];
+    let mut xtz = vec![0.0f64; d];
+    for (x, z) in points {
+        if x.len() != d {
+            return Err(Error::Config(format!(
+                "residual fit: ragged feature vector ({} vs {d})",
+                x.len()
+            )));
+        }
+        for r in 0..d {
+            let xr = x[r];
+            let row = &mut xtx[r];
+            for c in 0..d {
+                row[c] += xr * x[c];
+            }
+            xtz[r] += xr * z;
+        }
+    }
+    for r in 0..d {
+        xtx[r][r] += lambda;
+    }
+    // Augmented system [XᵀX + λI | Xᵀz].
+    let mut a: Vec<Vec<f64>> = (0..d)
+        .map(|r| {
+            let mut row = xtx[r].clone();
+            row.push(xtz[r]);
+            row
+        })
+        .collect();
+    for col in 0..d {
+        let mut piv = col;
+        for r in col + 1..d {
+            if a[r][col].abs() > a[piv][col].abs() {
+                piv = r;
+            }
+        }
+        a.swap(col, piv);
+        let pivval = a[col][col];
+        if pivval == 0.0 || !pivval.is_finite() {
+            return Err(Error::Config(
+                "residual fit: singular normal equations (λ should prevent this)"
+                    .into(),
+            ));
+        }
+        let pivrow = a[col].clone();
+        for r in col + 1..d {
+            let f = a[r][col] / pivval;
+            if f == 0.0 {
+                continue;
+            }
+            let row = &mut a[r];
+            for c in col..=d {
+                row[c] -= f * pivrow[c];
+            }
+        }
+    }
+    let mut w = vec![0.0f64; d];
+    for r in (0..d).rev() {
+        let mut acc = a[r][d];
+        for c in r + 1..d {
+            acc -= a[r][c] * w[c];
+        }
+        w[r] = acc / a[r][r];
+    }
+    Ok(w)
+}
+
+/// The canonical training-set fingerprint: FNV-1a over a string naming
+/// the architecture, parameter source, simulator fingerprint, seed,
+/// regularizer bits, feature list, and every training run in order —
+/// recomputable at load time without re-running the simulator, which is
+/// how store-loaded models are verified against the grid they claim.
+pub fn train_hash(
+    arch: &ArchSpec,
+    source: ParamSource,
+    sim: &SimConfig,
+    runs: &[RunConfig],
+) -> u64 {
+    let mut text = format!(
+        "residual:v1:{}:{}:{:016x}:seed={}:lambda={:016x}:features=",
+        arch.name,
+        lab::source_tag(source),
+        sim.fingerprint(),
+        sim.seed,
+        LAMBDA.to_bits(),
+    );
+    for name in FEATURE_NAMES {
+        text.push_str(name);
+        text.push(',');
+    }
+    for run in runs {
+        text.push_str(&format!(
+            ":{}/{}/{}/{}",
+            run.train_images, run.test_images, run.epochs, run.threads
+        ));
+    }
+    lab::fnv1a(text.as_bytes())
+}
+
+/// A fitted residual model: the ridge weights plus everything needed to
+/// rebuild the feature vector at prediction time and to verify
+/// provenance at load time.
+#[derive(Debug, Clone)]
+pub struct ResidualModel {
+    /// Architecture the model corrects.
+    pub arch: String,
+    /// Machine the occupancy/CPI features evaluate against.
+    pub machine: MachineConfig,
+    /// `ArchSpec::total_weights()` as f64 (the `ln_total_weights` base).
+    pub total_weights: f64,
+    /// Per-fit constant feature (the resolved simulator's value).
+    pub fwd_cycles_per_op: f64,
+    /// Per-fit constant feature.
+    pub exec_fraction: f64,
+    /// Per-fit constant feature.
+    pub oversub_overhead: f64,
+    /// `SimConfig::seed` the training grid derived from.
+    pub seed: u64,
+    /// Ridge regularizer the fit used.
+    pub lambda: f64,
+    /// Fitted weights, one per [`FEATURE_NAMES`] entry.
+    pub weights: Vec<f64>,
+    /// Training points the fit consumed.
+    pub train_points: usize,
+    /// Canonical training-set fingerprint ([`train_hash`]).
+    pub train_hash: u64,
+}
+
+impl ResidualModel {
+    /// Fit the residual of `b` against micsim over the seeded training
+    /// grid — deterministic from `(arch, sim.fingerprint())`.
+    pub fn fit(
+        arch: &ArchSpec,
+        b: &StrategyB,
+        sim: &SimConfig,
+        source: ParamSource,
+    ) -> Result<ResidualModel> {
+        let samples = training_samples(arch, b, sim)?;
+        let points: Vec<(Vec<f64>, f64)> =
+            samples.iter().map(|s| (s.features.clone(), s.z)).collect();
+        let weights = solve(&points, LAMBDA)?;
+        let runs: Vec<RunConfig> = samples.iter().map(|s| s.run).collect();
+        Ok(ResidualModel {
+            arch: arch.name.clone(),
+            machine: sim.machine.clone(),
+            total_weights: arch.total_weights()? as f64,
+            fwd_cycles_per_op: sim.fwd_cycles_per_op,
+            exec_fraction: sim.exec_fraction,
+            oversub_overhead: sim.oversub_overhead,
+            seed: sim.seed,
+            lambda: LAMBDA,
+            weights,
+            train_points: runs.len(),
+            train_hash: train_hash(arch, source, sim, &runs),
+        })
+    }
+
+    /// The feature vector this model evaluates for one run.
+    pub fn features(&self, run: &RunConfig) -> Vec<f64> {
+        feature_vector(
+            &self.machine,
+            self.total_weights,
+            self.fwd_cycles_per_op,
+            self.exec_fraction,
+            self.oversub_overhead,
+            run,
+        )
+    }
+
+    /// The multiplicative correction `exp(w · x)` strategy (c) applies
+    /// to strategy (b)'s prediction.
+    pub fn ratio(&self, run: &RunConfig) -> f64 {
+        let x = self.features(run);
+        self.weights
+            .iter()
+            .zip(&x)
+            .map(|(w, xi)| w * xi)
+            .sum::<f64>()
+            .exp()
+    }
+}
+
+/// The residual-model facade: memoized per (architecture, simulator
+/// fingerprint), optionally lab-store backed — the [`super::Calibration`]
+/// policy, with its own fit counter so calibrator-resolution pins stay
+/// untouched.
+pub struct ResidualSource {
+    source: ParamSource,
+    memo: Mutex<HashMap<(String, u64), Arc<ResidualModel>>>,
+    fits: AtomicU64,
+    store: Option<Arc<Store>>,
+}
+
+impl std::fmt::Debug for ResidualSource {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ResidualSource")
+            .field("source", &self.source)
+            .field("fits", &self.fits())
+            .finish()
+    }
+}
+
+impl ResidualSource {
+    /// The residual source for one parameter source.
+    pub fn new(source: ParamSource) -> ResidualSource {
+        ResidualSource {
+            source,
+            memo: Mutex::new(HashMap::new()),
+            fits: AtomicU64::new(0),
+            store: None,
+        }
+    }
+
+    /// Attach a lab store: fits are served from disk when persisted
+    /// (without counting) and written through — with provenance — when
+    /// computed. Called by [`super::Calibration::with_store`].
+    pub fn set_store(&mut self, store: Arc<Store>) {
+        self.store = Some(store);
+    }
+
+    /// Resolve (memoized) the fitted model for one architecture against
+    /// one simulator configuration. Same lock-drop-compute-insert policy
+    /// as [`super::Calibration::resolve`]: concurrent cold misses may
+    /// both fit, fits are deterministic, the first insert wins.
+    pub fn resolve(
+        &self,
+        arch: &ArchSpec,
+        sim: &SimConfig,
+        b: &StrategyB,
+    ) -> Result<Arc<ResidualModel>> {
+        let key = (arch.name.clone(), sim.fingerprint());
+        if let Some(model) = self.memo.lock().unwrap().get(&key) {
+            return Ok(Arc::clone(model));
+        }
+        if let Some(store) = &self.store {
+            let skey = lab::residual_key(&arch.name, self.source, sim.fingerprint());
+            if let Some(model) = store
+                .get(lab::Kind::Residual, &skey)
+                .and_then(|payload| self.model_from_payload(&payload, arch, sim))
+            {
+                let built = Arc::new(model);
+                return Ok(Arc::clone(
+                    self.memo.lock().unwrap().entry(key).or_insert(built),
+                ));
+            }
+        }
+        let built = Arc::new(ResidualModel::fit(arch, b, sim, self.source)?);
+        self.fits.fetch_add(1, Ordering::Relaxed);
+        if let Some(store) = &self.store {
+            let skey = lab::residual_key(&arch.name, self.source, sim.fingerprint());
+            store.put(lab::Kind::Residual, &skey, self.model_payload(&built))?;
+        }
+        Ok(Arc::clone(
+            self.memo.lock().unwrap().entry(key).or_insert(built),
+        ))
+    }
+
+    /// How many fits actually ran (memo+store misses) — the warm-rerun
+    /// observability hook `tests/lab.rs` pins to zero.
+    pub fn fits(&self) -> u64 {
+        self.fits.load(Ordering::Relaxed)
+    }
+
+    /// The store payload: weights plus full provenance (training-grid
+    /// hash, feature list, seed, per-fit constants).
+    fn model_payload(&self, m: &ResidualModel) -> Json {
+        Json::obj(vec![
+            ("arch", Json::str(m.arch.clone())),
+            ("source", Json::str(lab::source_tag(self.source))),
+            ("seed", Json::str(format!("{:016x}", m.seed))),
+            ("lambda", Json::num(m.lambda)),
+            ("train_hash", Json::str(format!("{:016x}", m.train_hash))),
+            ("train_points", Json::num(m.train_points as f64)),
+            (
+                "features",
+                Json::Arr(FEATURE_NAMES.iter().map(|n| Json::str(*n)).collect()),
+            ),
+            (
+                "weights",
+                Json::Arr(m.weights.iter().map(|w| Json::num(*w)).collect()),
+            ),
+            (
+                "consts",
+                Json::obj(vec![
+                    ("fwd_cycles_per_op", Json::num(m.fwd_cycles_per_op)),
+                    ("exec_fraction", Json::num(m.exec_fraction)),
+                    ("oversub_overhead", Json::num(m.oversub_overhead)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Rebuild a [`ResidualModel`] from a store payload. `None` (forcing
+    /// a fresh fit) on any mismatch: wrong arch/source/seed/λ, a
+    /// training-grid hash that no longer matches the grid this
+    /// (arch, sim) would generate, or a malformed weight vector. The
+    /// hash recomputation needs only [`training_runs`] — no simulation —
+    /// so warm loads stay cheap.
+    fn model_from_payload(
+        &self,
+        payload: &Json,
+        arch: &ArchSpec,
+        sim: &SimConfig,
+    ) -> Option<ResidualModel> {
+        if payload.get("arch")?.as_str()? != arch.name {
+            return None;
+        }
+        if payload.get("source")?.as_str()? != lab::source_tag(self.source) {
+            return None;
+        }
+        let seed = u64::from_str_radix(payload.get("seed")?.as_str()?, 16).ok()?;
+        if seed != sim.seed {
+            return None;
+        }
+        let lambda = payload.get("lambda")?.as_f64()?;
+        if lambda.to_bits() != LAMBDA.to_bits() {
+            return None;
+        }
+        let runs = training_runs(arch, sim.seed);
+        let expect = train_hash(arch, self.source, sim, &runs);
+        if payload.get("train_hash")?.as_str()? != format!("{expect:016x}") {
+            return None;
+        }
+        if payload.get("train_points")?.as_usize()? != runs.len() {
+            return None;
+        }
+        let weights: Vec<f64> = payload
+            .get("weights")?
+            .as_arr()?
+            .iter()
+            .map(Json::as_f64)
+            .collect::<Option<Vec<_>>>()?;
+        if weights.len() != FEATURE_NAMES.len() {
+            return None;
+        }
+        Some(ResidualModel {
+            arch: arch.name.clone(),
+            machine: sim.machine.clone(),
+            total_weights: arch.total_weights().ok()? as f64,
+            fwd_cycles_per_op: sim.fwd_cycles_per_op,
+            exec_fraction: sim.exec_fraction,
+            oversub_overhead: sim.oversub_overhead,
+            seed,
+            lambda,
+            weights,
+            train_points: runs.len(),
+            train_hash: expect,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibration::Calibration;
+
+    fn fitted(arch: &ArchSpec) -> ResidualModel {
+        let sim = SimConfig::default();
+        let params = Calibration::new(ParamSource::Paper)
+            .resolve(arch, &sim)
+            .unwrap();
+        let b = StrategyB::from_params(&params).unwrap();
+        ResidualModel::fit(arch, &b, &sim, ParamSource::Paper).unwrap()
+    }
+
+    #[test]
+    fn training_grid_is_seeded_and_deterministic() {
+        let arch = ArchSpec::small();
+        let runs = training_runs(&arch, 0x5EED);
+        assert_eq!(runs.len(), 4 * paper::CONTENTION_THREADS.len());
+        assert_eq!(runs, training_runs(&arch, 0x5EED), "same seed, same grid");
+        assert_ne!(
+            runs,
+            training_runs(&arch, 0x5EED ^ 0xBEEF),
+            "the jittered variant must follow the seed"
+        );
+        // Workload-outer, threads-inner: the first ladder is the paper
+        // workload, the second its 2x scaling.
+        assert_eq!(runs[0].train_images, 60_000);
+        assert_eq!(runs[0].threads, paper::CONTENTION_THREADS[0]);
+        let n = paper::CONTENTION_THREADS.len();
+        assert_eq!(runs[n].train_images, 120_000);
+        // The jittered variant stays inside its documented ranges.
+        let j = &runs[3 * n];
+        assert!((15_000..60_001).contains(&j.train_images), "{j:?}");
+        assert!((2_500..10_001).contains(&j.test_images), "{j:?}");
+        assert!((5..75).contains(&j.epochs), "{j:?}");
+        for run in &runs {
+            assert!(run.validate().is_ok(), "{run:?}");
+        }
+    }
+
+    #[test]
+    fn refit_is_bit_identical() {
+        let arch = ArchSpec::small();
+        let first = fitted(&arch);
+        let second = fitted(&arch);
+        assert_eq!(first.weights.len(), FEATURE_NAMES.len());
+        for (a, b) in first.weights.iter().zip(&second.weights) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(first.train_hash, second.train_hash);
+        assert_eq!(first.train_points, 44);
+    }
+
+    #[test]
+    fn residual_correction_beats_b_in_sample() {
+        // The fit's raison d'être: mean |Δ| of (c) over the training
+        // grid sits well below (b)'s on the same points.
+        let arch = ArchSpec::medium();
+        let sim = SimConfig::default();
+        let params = Calibration::new(ParamSource::Paper)
+            .resolve(&arch, &sim)
+            .unwrap();
+        let b = StrategyB::from_params(&params).unwrap();
+        let model = ResidualModel::fit(&arch, &b, &sim, ParamSource::Paper).unwrap();
+        let samples = training_samples(&arch, &b, &sim).unwrap();
+        let (mut db, mut dc) = (0.0, 0.0);
+        for s in &samples {
+            let pb = b.predict(&s.run).unwrap().total_s;
+            let pc = pb * model.ratio(&s.run);
+            db += (s.measured_s - pb).abs() / pb * 100.0;
+            dc += (s.measured_s - pc).abs() / pc * 100.0;
+        }
+        let (db, dc) = (db / samples.len() as f64, dc / samples.len() as f64);
+        assert!(dc < 0.5 * db, "(c) {dc:.3}% vs (b) {db:.3}%");
+    }
+
+    #[test]
+    fn solve_recovers_exact_linear_data() {
+        // z = 2 - 3·x1 + 0.5·x2 on a full-rank design.
+        let truth = [2.0, -3.0, 0.5];
+        let points: Vec<(Vec<f64>, f64)> = (0..12)
+            .map(|i| {
+                let x = vec![1.0, i as f64, (i * i) as f64 * 0.1];
+                let z = truth[0] * x[0] + truth[1] * x[1] + truth[2] * x[2];
+                (x, z)
+            })
+            .collect();
+        let w = solve(&points, 1e-9).unwrap();
+        for (got, want) in w.iter().zip(&truth) {
+            assert!((got - want).abs() < 1e-5, "{w:?}");
+        }
+        assert!(solve(&[], LAMBDA).is_err());
+    }
+
+    #[test]
+    fn store_round_trip_is_bit_identical_and_uncounted() {
+        let dir = crate::util::tmp::TempDir::new("residual-store").unwrap();
+        let store = Arc::new(Store::open(dir.path()).unwrap());
+        let arch = ArchSpec::small();
+        let sim = SimConfig::default();
+        let params = Calibration::new(ParamSource::Paper)
+            .resolve(&arch, &sim)
+            .unwrap();
+        let b = StrategyB::from_params(&params).unwrap();
+
+        let mut writer = ResidualSource::new(ParamSource::Paper);
+        writer.set_store(Arc::clone(&store));
+        let fresh = writer.resolve(&arch, &sim, &b).unwrap();
+        assert_eq!(writer.fits(), 1);
+        assert!(Arc::ptr_eq(&fresh, &writer.resolve(&arch, &sim, &b).unwrap()));
+        assert_eq!(writer.fits(), 1, "memo hits are not fits");
+
+        let mut reader = ResidualSource::new(ParamSource::Paper);
+        reader.set_store(Arc::clone(&store));
+        let served = reader.resolve(&arch, &sim, &b).unwrap();
+        assert_eq!(reader.fits(), 0, "store hits are not fits");
+        for (a, s) in fresh.weights.iter().zip(&served.weights) {
+            assert_eq!(a.to_bits(), s.to_bits());
+        }
+        assert_eq!(fresh.train_hash, served.train_hash);
+
+        // A different seed invalidates the persisted grid hash — the
+        // loader refits rather than serving a stale model.
+        let reseeded = SimConfig { seed: 0xFEED, ..SimConfig::default() };
+        let mut other = ResidualSource::new(ParamSource::Paper);
+        other.set_store(Arc::clone(&store));
+        other.resolve(&arch, &reseeded, &b).unwrap();
+        assert_eq!(other.fits(), 1, "seed change must refit");
+    }
+}

@@ -34,8 +34,8 @@
 pub mod store;
 
 pub use store::{
-    cell_key, fnv1a, measured_key, params_key, run_id, shard_run_id, source_tag, GcReport,
-    Kind, Store, StoreStats, ENTRY_KIND, RUN_KIND, STORE_VERSION,
+    cell_key, fnv1a, measured_key, params_key, residual_key, run_id, shard_run_id,
+    source_tag, GcReport, Kind, Store, StoreStats, ENTRY_KIND, RUN_KIND, STORE_VERSION,
 };
 
 use std::path::Path;
@@ -193,15 +193,26 @@ impl Lab {
 
     /// The persisted calibration entry for (`arch`, `source`, `sim`):
     /// the canonical key plus the stored payload with its resolution
-    /// provenance, or `None` when nothing has been persisted yet. Does
-    /// not perturb store hit/miss accounting.
+    /// provenance, or `None` when nothing has been persisted yet. When a
+    /// strategy-(c) residual model is persisted for the same coordinates
+    /// its provenance (training-grid hash, feature list, seed) rides
+    /// along under `"residual"`. Does not perturb store hit/miss
+    /// accounting.
     pub fn trace_params(&self, arch: &str, source: ParamSource, sim: &SimConfig) -> Option<Json> {
         let key = store::params_key(arch, source, sim.fingerprint());
         let payload = self.store.peek(Kind::Params, &key)?;
-        Some(Json::obj(vec![
+        let mut pairs = vec![
             ("key", Json::str(key)),
             ("entry", payload),
-        ]))
+        ];
+        let rkey = store::residual_key(arch, source, sim.fingerprint());
+        if let Some(residual) = self.store.peek(Kind::Residual, &rkey) {
+            pairs.push((
+                "residual",
+                Json::obj(vec![("key", Json::str(rkey)), ("entry", residual)]),
+            ));
+        }
+        Some(Json::obj(pairs))
     }
 }
 

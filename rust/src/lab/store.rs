@@ -72,6 +72,13 @@ pub fn params_key(arch: &str, source: ParamSource, fingerprint: u64) -> String {
     format!("params:v1:{arch}:{}:{fingerprint:016x}", source_tag(source))
 }
 
+/// Canonical key for a fitted strategy-(c) residual model
+/// ([`crate::calibration::ResidualModel`]) — same addressing scheme as
+/// [`params_key`], in its own namespace.
+pub fn residual_key(arch: &str, source: ParamSource, fingerprint: u64) -> String {
+    format!("residual:v1:{arch}:{}:{fingerprint:016x}", source_tag(source))
+}
+
 /// Canonical key for a fully evaluated sweep cell (prediction plus
 /// optional measurement) — the scenario axes crossed with parameter
 /// provenance and the simulator fingerprint.
@@ -122,7 +129,7 @@ pub fn shard_run_id(parent: &str, k: usize, n: usize) -> String {
     format!("{parent}.{}of{n}", k + 1)
 }
 
-/// The three content-addressed entry namespaces.
+/// The content-addressed entry namespaces.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Kind {
     /// Resolved `ModelParams` (calibration results, with provenance).
@@ -131,11 +138,13 @@ pub enum Kind {
     Cells,
     /// Simulator measurements keyed independently of strategy.
     Measured,
+    /// Fitted strategy-(c) residual models (weights + provenance).
+    Residual,
 }
 
 impl Kind {
     /// All entry namespaces, in directory order.
-    pub const ALL: [Kind; 3] = [Kind::Params, Kind::Cells, Kind::Measured];
+    pub const ALL: [Kind; 4] = [Kind::Params, Kind::Cells, Kind::Measured, Kind::Residual];
 
     /// Directory name under the store root.
     pub fn dir(self) -> &'static str {
@@ -143,6 +152,7 @@ impl Kind {
             Kind::Params => "params",
             Kind::Cells => "cells",
             Kind::Measured => "measured",
+            Kind::Residual => "residual",
         }
     }
 }

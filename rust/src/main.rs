@@ -39,6 +39,7 @@
 //! regression (the machine-readable report goes to stdout, the findings
 //! to stderr).
 
+use micdl::calibration::Calibration;
 use micdl::config::{ArchSpec, MachineConfig, RunConfig};
 use micdl::coordinator::leader::{LeaderConfig, PjrtTrainer};
 use micdl::coordinator::pool::{DataParallelTrainer, PoolConfig};
@@ -140,7 +141,7 @@ USAGE:
   repro simulate --arch A [--threads P] [--epochs E] [--images I] [--test-images IT]
                  [--fidelity chunked|image]
   repro predict  --arch A [--threads P] [--epochs E] [--images I] [--test-images IT]
-                 [--strategy a|b|both] [--params paper|sim]
+                 [--strategy a|b|c|both|all] [--params paper|sim]
   repro predict  --batch FILE.json [--params paper|sim] [--json OUT.json | --csv]
                  [--workers N | --serial] [--lab [PATH]] [--no-store]
                  (batched what-if queries: FILE is a JSON array of
@@ -159,7 +160,7 @@ USAGE:
                   127.0.0.1:8787; port 0 picks a free port — the resolved
                   address is printed on stdout. See docs/SERVE.md.)
   repro sweep [run] [--spec FILE.json] [--arch all|NAME[,NAME...]] [--threads LIST]
-                 [--images IxIT[,IxIT...]] [--epochs LIST] [--strategy a|b|both]
+                 [--images IxIT[,IxIT...]] [--epochs LIST] [--strategy a|b|c|both|all]
                  [--params paper|sim] [--clock-ghz F[,F...]] [--measure]
                  [--sim-clock-ghz F[,F...]] [--sim-cores LIST] [--sim-threads LIST]
                  [--sim-fwd-cycles F[,F...]] [--sim-bwd-cycles F[,F...]]
@@ -193,7 +194,9 @@ USAGE:
                   deprecated aliases.)
   repro conformance [--baseline FILE | --write-baseline FILE] [--report OUT.json]
                  [--closed-loop FILE | --write-closed-loop FILE]
-                 [--closed-loop-report OUT.json] [--workers N | --serial]
+                 [--closed-loop-report OUT.json]
+                 [--residual FILE | --write-residual FILE]
+                 [--residual-report OUT.json] [--workers N | --serial]
                  [--lab [PATH]] [--resume] [--no-store]
                  (measured-mode Δ-band conformance over the Tables IX-XI
                   grids. --baseline re-runs the file's grids and checks its
@@ -201,15 +204,19 @@ USAGE:
                   baseline pins the observed bands. --closed-loop does the
                   same for the closed-loop grid — Table IX under --params
                   sim, model parameters probed from the measuring
-                  simulator — against baselines/closed_loop_smoke.json;
-                  both checks may run in one invocation. With no check or
+                  simulator — against baselines/closed_loop_smoke.json.
+                  --residual checks the residual-regressor grids — Tables
+                  IX-XI under strategies b and c, where every pinned (c)
+                  band must also stay strictly below its (b) band —
+                  against baselines/residual_smoke.json; any subset of the
+                  checks may run in one invocation. With no check or
                   write flag the observed bands are printed, nothing
                   asserted. Check mode puts the report JSON on stdout,
                   findings on stderr; --report FILE additionally writes
-                  the stdout payload — the combined document when both
+                  the stdout payload — the combined document when several
                   checks run — to a path for CI artifacts.)
   repro sensitivity [--arch all|NAME[,NAME...]] [--threads LIST]
-                 [--strategy a|b|both] [--params paper|sim] [--step F]
+                 [--strategy a|b|c|both|all] [--params paper|sim] [--step F]
                  [--constants LIST] [--json OUT.json] [--workers N | --serial]
                  [--lab [PATH]] [--resume] [--no-store]
                  (one-at-a-time ablation over the simulator constants:
@@ -385,8 +392,12 @@ fn cmd_predict(args: &Args) -> Result<ExitCode> {
     }
     let arch = parse_arch(args)?;
     let run = parse_run(args, &arch.name)?;
-    let (a, b) = both_models(&arch, parse_params(args)?)?;
-    let which = args.get("strategy").unwrap_or("both");
+    // The Calibration facade resolves (a)/(b) parameters once and fits
+    // the (c) residual model on demand, so `--strategy c` works here
+    // exactly as it does in sweeps and serve batches.
+    let cal = Calibration::new(parse_params(args)?);
+    let sim = SimConfig::default();
+    let strategies = Strategy::parse_list(args.get("strategy").unwrap_or("both"))?;
     let mut t = Table::new(
         format!(
             "prediction: arch={} threads={} epochs={}",
@@ -394,10 +405,8 @@ fn cmd_predict(args: &Args) -> Result<ExitCode> {
         ),
         &["strategy", "prep s", "train+val s", "test s", "T_mem s", "total s", "minutes"],
     );
-    for model in [&a as &dyn PerfModel, &b as &dyn PerfModel] {
-        if which != "both" && model.name() != which {
-            continue;
-        }
+    for &s in &strategies {
+        let model = cal.strategy(&arch, s, &sim)?;
         let p = model.predict(&run)?;
         t.row(vec![
             model.name().into(),
@@ -1163,13 +1172,16 @@ fn cmd_sweep(args: &Args) -> Result<ExitCode> {
 
 /// The conformance flag inventory: (name, takes a value). One table
 /// drives both validation passes, like [`SWEEP_FLAGS`].
-const CONFORMANCE_FLAGS: [(&str, bool); 11] = [
+const CONFORMANCE_FLAGS: [(&str, bool); 14] = [
     ("baseline", true),
     ("write-baseline", true),
     ("report", true),
     ("closed-loop", true),
     ("write-closed-loop", true),
     ("closed-loop-report", true),
+    ("residual", true),
+    ("write-residual", true),
+    ("residual-report", true),
     ("workers", true),
     ("serial", false),
     ("lab", false),
@@ -1186,8 +1198,13 @@ fn cmd_conformance(args: &Args) -> Result<ExitCode> {
     if args.has("closed-loop") && args.has("write-closed-loop") {
         bail!("--closed-loop and --write-closed-loop are mutually exclusive");
     }
-    let writes = args.has("write-baseline") || args.has("write-closed-loop");
-    let checks = args.has("baseline") || args.has("closed-loop");
+    if args.has("residual") && args.has("write-residual") {
+        bail!("--residual and --write-residual are mutually exclusive");
+    }
+    let writes = args.has("write-baseline")
+        || args.has("write-closed-loop")
+        || args.has("write-residual");
+    let checks = args.has("baseline") || args.has("closed-loop") || args.has("residual");
     if writes && checks {
         bail!("write and check modes are mutually exclusive in one invocation");
     }
@@ -1195,12 +1212,15 @@ fn cmd_conformance(args: &Args) -> Result<ExitCode> {
     // would silently no-op and leave a script reading a stale file.
     if args.has("report") && !checks {
         bail!(
-            "--report requires a check flag (--baseline or --closed-loop; \
-             only check mode writes a report)"
+            "--report requires a check flag (--baseline, --closed-loop or \
+             --residual; only check mode writes a report)"
         );
     }
     if args.has("closed-loop-report") && !args.has("closed-loop") {
         bail!("--closed-loop-report requires --closed-loop");
+    }
+    if args.has("residual-report") && !args.has("residual") {
+        bail!("--residual-report requires --residual");
     }
     let workers = if args.has("serial") {
         1
@@ -1232,14 +1252,25 @@ fn cmd_conformance(args: &Args) -> Result<ExitCode> {
                 base.claims.len()
             );
         }
+        if let Some(path) = args.get("write-residual") {
+            let base = ConformanceBaseline::capture_residual(&runner)?;
+            std::fs::write(path, base.to_json().emit())?;
+            eprintln!(
+                "wrote residual baseline ({} grids, {} bands, {} claims) to {path}",
+                base.grids.len(),
+                base.grids.iter().map(|g| g.bands.len()).sum::<usize>(),
+                base.claims.len()
+            );
+        }
         return Ok(ExitCode::Ok);
     }
     if !checks {
         // Observational mode: run the Tables IX-XI grids plus the
-        // closed-loop grid and print the observed Δ bands without
-        // asserting anything.
+        // closed-loop and residual grids and print the observed Δ bands
+        // without asserting anything.
         let mut runs = conformance::run_paper_grids(&runner)?;
         runs.extend(conformance::run_closed_loop_grids(&runner)?);
+        runs.extend(conformance::run_residual_grids(&runner)?);
         let mut t = Table::new(
             "measured-mode Δ bands (observed; nothing asserted)",
             &["grid", "arch", "strat", "points", "mean Δ %", "max Δ %", "at p"],
@@ -1296,9 +1327,20 @@ fn cmd_conformance(args: &Args) -> Result<ExitCode> {
         clean &= report.is_clean();
         payloads.push(("closed_loop", json));
     }
+    if let Some(path) = args.get("residual") {
+        let base = ConformanceBaseline::load(std::path::Path::new(path))?;
+        let report = base.check(&runner)?;
+        let json = report.to_json().emit();
+        if let Some(out) = args.get("residual-report") {
+            std::fs::write(out, &json)?;
+        }
+        eprint!("{}", report.render());
+        clean &= report.is_clean();
+        payloads.push(("residual", json));
+    }
     // The stdout payload: one report object, or the combined document
-    // when both baselines were checked. `--report` mirrors exactly this
-    // payload to a file (the CI artifact path), whatever the mode.
+    // when several baselines were checked. `--report` mirrors exactly
+    // this payload to a file (the CI artifact path), whatever the mode.
     let payload = match payloads.as_slice() {
         [(_, json)] => json.clone(),
         _ => {

@@ -34,6 +34,7 @@ pub mod accuracy;
 pub mod cluster;
 pub mod strategy_a;
 pub mod strategy_b;
+pub mod strategy_c;
 
 // Migrated to the calibration subsystem; re-exported so existing
 // `perfmodel::contention` / `perfmodel::ContentionSource` paths hold.
@@ -43,6 +44,7 @@ pub use crate::calibration::ContentionSource;
 pub use accuracy::{average_delta, delta_pct, Band, DeltaAccumulator};
 pub use strategy_a::StrategyA;
 pub use strategy_b::StrategyB;
+pub use strategy_c::StrategyC;
 
 use crate::config::{ArchSpec, MachineConfig, RunConfig};
 use crate::error::Result;
@@ -87,11 +89,11 @@ pub struct Prediction {
     pub total_s: f64,
 }
 
-/// Common interface over both strategies.
+/// Common interface over the strategies.
 pub trait PerfModel {
     /// Predict execution time for a workload.
     fn predict(&self, run: &RunConfig) -> Result<Prediction>;
-    /// Model name for reports ("a" / "b").
+    /// Model name for reports ("a" / "b" / "c").
     fn name(&self) -> &'static str;
 }
 

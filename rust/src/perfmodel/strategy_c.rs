@@ -1,0 +1,133 @@
+//! Strategy (c) — strategy (b) corrected by the sweep-trained residual
+//! regressor ([`crate::calibration::ResidualModel`]).
+//!
+//! ```text
+//! T_c(i, it, ep, p) = T_b(i, it, ep, p) · exp(w · x(i, it, ep, p))
+//! ```
+//!
+//! where `w` is the ridge fit of `ln(measured / T_b)` over the seeded
+//! training grid and `x` the scenario feature vector
+//! ([`crate::calibration::residual::FEATURE_NAMES`]). The correction is
+//! a single multiplicative ratio, applied to every term of the
+//! breakdown, so the Table V/VI structure of the prediction survives
+//! and `total_s` remains exactly the (b) total times the ratio.
+//!
+//! Build through the facade — `Calibration::strategy(arch, Strategy::C,
+//! sim)` — which resolves the (b) parameters and the fitted residual
+//! model from one shared, store-backed calibration.
+
+use std::sync::Arc;
+
+use crate::calibration::ResidualModel;
+use crate::config::RunConfig;
+use crate::error::Result;
+use crate::perfmodel::{PerfModel, Prediction, StrategyB};
+
+/// Strategy (c): a [`StrategyB`] inner model plus a fitted residual
+/// correction.
+#[derive(Debug, Clone)]
+pub struct StrategyC {
+    inner: StrategyB,
+    residual: Arc<ResidualModel>,
+}
+
+impl StrategyC {
+    /// Wrap a resolved (b) model with its fitted residual.
+    pub fn new(inner: StrategyB, residual: Arc<ResidualModel>) -> StrategyC {
+        StrategyC { inner, residual }
+    }
+
+    /// The fitted residual model (provenance, weights, ratio).
+    pub fn residual(&self) -> &ResidualModel {
+        &self.residual
+    }
+
+    /// The uncorrected inner (b) model.
+    pub fn inner(&self) -> &StrategyB {
+        &self.inner
+    }
+}
+
+impl PerfModel for StrategyC {
+    fn predict(&self, run: &RunConfig) -> Result<Prediction> {
+        let base = self.inner.predict(run)?;
+        let ratio = self.residual.ratio(run);
+        Ok(Prediction {
+            prep_s: base.prep_s * ratio,
+            train_s: base.train_s * ratio,
+            test_s: base.test_s * ratio,
+            mem_s: base.mem_s * ratio,
+            total_s: base.total_s * ratio,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "c"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::calibration::Calibration;
+    use crate::config::ArchSpec;
+    use crate::perfmodel::ParamSource;
+    use crate::simulator::SimConfig;
+    use crate::sweep::Strategy;
+
+    #[test]
+    fn facade_builds_c_and_scales_every_term() {
+        let cal = Calibration::new(ParamSource::Paper);
+        let arch = ArchSpec::small();
+        let sim = SimConfig::default();
+        let c = cal.strategy(&arch, Strategy::C, &sim).unwrap();
+        let b = cal.strategy(&arch, Strategy::B, &sim).unwrap();
+        assert_eq!(c.name(), "c");
+        assert_eq!(cal.resolutions(), 1, "(b) and (c) share one resolution");
+        assert_eq!(cal.residual_fits(), 1, "one fit for the pair");
+        let run = RunConfig::paper_default("small", 240);
+        let pb = b.predict(&run).unwrap();
+        let pc = c.predict(&run).unwrap();
+        let ratio = pc.total_s / pb.total_s;
+        assert!(ratio.is_finite() && ratio > 0.0);
+        for (term_c, term_b) in [
+            (pc.prep_s, pb.prep_s),
+            (pc.train_s, pb.train_s),
+            (pc.test_s, pb.test_s),
+            (pc.mem_s, pb.mem_s),
+        ] {
+            assert_eq!((term_b * ratio).to_bits(), term_c.to_bits());
+        }
+    }
+
+    #[test]
+    fn c_beats_b_on_the_paper_workload() {
+        // The measured-accuracy ordering the conformance baseline pins,
+        // spot-checked at model level on the Table IX thread set.
+        let cal = Calibration::new(ParamSource::Paper);
+        let sim = SimConfig::default();
+        for arch in ArchSpec::paper_archs() {
+            let b = cal.strategy(&arch, Strategy::B, &sim).unwrap();
+            let c = cal.strategy(&arch, Strategy::C, &sim).unwrap();
+            let (mut db, mut dc) = (0.0, 0.0);
+            for &p in RunConfig::MEASURED_THREADS.iter() {
+                let run = RunConfig::paper_default(&arch.name, p);
+                let measured =
+                    crate::simulator::simulate_training(&arch, &run, &sim)
+                        .unwrap()
+                        .execution_s;
+                let pb = b.predict(&run).unwrap().total_s;
+                let pc = c.predict(&run).unwrap().total_s;
+                db += (measured - pb).abs() / pb * 100.0;
+                dc += (measured - pc).abs() / pc * 100.0;
+            }
+            assert!(
+                dc < db,
+                "{}: (c) {:.3}% must beat (b) {:.3}%",
+                arch.name,
+                dc / 7.0,
+                db / 7.0
+            );
+        }
+    }
+}

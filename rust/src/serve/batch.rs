@@ -87,7 +87,7 @@ impl Query {
             None => vec![Strategy::A, Strategy::B],
             Some(s) => {
                 let text = s.as_str().ok_or_else(|| {
-                    Error::Config("query strategy must be a string (a|b|both)".into())
+                    Error::Config("query strategy must be a string (a|b|c|both)".into())
                 })?;
                 Strategy::parse_list(text)?
             }

@@ -123,15 +123,13 @@ impl BaselineCell {
                 .as_f64()
                 .ok_or_else(|| Error::Json(format!("baseline cell {key} must be a number")))
         };
-        let strategy = match node.expect("strategy")?.as_str() {
-            Some("a") => Strategy::A,
-            Some("b") => Strategy::B,
-            other => {
-                return Err(Error::Json(format!(
-                    "baseline cell strategy must be \"a\" or \"b\", got {other:?}"
-                )))
-            }
-        };
+        // The shared strategy grammar (Strategy::parse_token), so a
+        // pinned strategy-(c) sweep round-trips like any other.
+        let strategy = Strategy::parse_token(
+            node.expect("strategy")?
+                .as_str()
+                .ok_or_else(|| Error::Json("baseline cell strategy must be a string".into()))?,
+        )?;
         let sim = match node.get("sim") {
             None => None,
             Some(v) => Some(

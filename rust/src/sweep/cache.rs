@@ -420,6 +420,18 @@ impl SweepCache {
             .sum()
     }
 
+    /// Total strategy-(c) residual fits performed so far, summed over
+    /// every parameter source — the warm-lab invariant's (c) half: a
+    /// warm rerun of a (c) grid must fit zero times.
+    pub fn residual_fits(&self) -> u64 {
+        self.calibrations
+            .lock()
+            .unwrap()
+            .values()
+            .map(|cal| cal.residual_fits())
+            .sum()
+    }
+
     /// Hit/miss counters accumulated so far.
     pub fn stats(&self) -> CacheStats {
         CacheStats {

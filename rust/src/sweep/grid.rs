@@ -31,26 +31,44 @@ pub enum Strategy {
     A,
     /// Strategy (b): measured per-image times.
     B,
+    /// Strategy (c): strategy (b) corrected by a sweep-trained residual
+    /// regressor ([`crate::calibration::ResidualModel`]).
+    C,
 }
 
 impl Strategy {
-    /// Lower-case paper label ("a" / "b") — the JSON/CSV encoding.
+    /// Lower-case paper label ("a" / "b" / "c") — the JSON/CSV encoding.
     pub fn as_str(self) -> &'static str {
         match self {
             Strategy::A => "a",
             Strategy::B => "b",
+            Strategy::C => "c",
         }
     }
 
-    /// Parse a `--strategy` value: `a`, `b`, or `both`.
+    /// Parse one strategy token. The **single** strategy-name grammar:
+    /// CLI flags, JSON sweep specs, and serve batch queries all route
+    /// here, so the three surfaces accept and reject identically with
+    /// one error message.
+    pub fn parse_token(token: &str) -> Result<Strategy> {
+        match token {
+            "a" => Ok(Strategy::A),
+            "b" => Ok(Strategy::B),
+            "c" => Ok(Strategy::C),
+            other => Err(Error::Config(format!(
+                "strategy must be a|b|c|both, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Parse a `--strategy` value: a comma-separated token list
+    /// ([`Strategy::parse_token`]), or the shorthands `both`/`ab` (= a,b)
+    /// and `all`/`abc` (= a,b,c).
     pub fn parse_list(text: &str) -> Result<Vec<Strategy>> {
         match text {
-            "a" => Ok(vec![Strategy::A]),
-            "b" => Ok(vec![Strategy::B]),
-            "both" | "ab" | "a,b" => Ok(vec![Strategy::A, Strategy::B]),
-            other => Err(Error::Config(format!(
-                "strategy must be a|b|both, got {other:?}"
-            ))),
+            "both" | "ab" => Ok(vec![Strategy::A, Strategy::B]),
+            "all" | "abc" => Ok(vec![Strategy::A, Strategy::B, Strategy::C]),
+            list => list.split(',').map(|t| Strategy::parse_token(t.trim())).collect(),
         }
     }
 }
@@ -852,15 +870,10 @@ impl GridSpec {
         if let Some(strategies) = doc.get("strategies").and_then(Json::as_arr) {
             let mut out = Vec::new();
             for s in strategies {
-                match s.as_str() {
-                    Some("a") => out.push(Strategy::A),
-                    Some("b") => out.push(Strategy::B),
-                    other => {
-                        return Err(Error::Config(format!(
-                            "strategies entries must be \"a\" or \"b\", got {other:?}"
-                        )))
-                    }
-                }
+                let token = s.as_str().ok_or_else(|| {
+                    Error::Config("strategies entries must be strings".into())
+                })?;
+                out.push(Strategy::parse_token(token)?);
             }
             grid.strategies = out;
         }
@@ -1152,11 +1165,25 @@ mod tests {
     #[test]
     fn strategy_parse_list() {
         assert_eq!(Strategy::parse_list("a").unwrap(), vec![Strategy::A]);
+        assert_eq!(Strategy::parse_list("c").unwrap(), vec![Strategy::C]);
         assert_eq!(
             Strategy::parse_list("both").unwrap(),
             vec![Strategy::A, Strategy::B]
         );
-        assert!(Strategy::parse_list("c").is_err());
+        assert_eq!(
+            Strategy::parse_list("all").unwrap(),
+            vec![Strategy::A, Strategy::B, Strategy::C]
+        );
+        assert_eq!(
+            Strategy::parse_list("b,c").unwrap(),
+            vec![Strategy::B, Strategy::C]
+        );
+        // One grammar, one message — CLI, JSON specs, and serve queries
+        // all report the offending token the same way.
+        let err = Strategy::parse_list("z").unwrap_err().to_string();
+        assert!(err.contains("a|b|c|both") && err.contains("\"z\""), "{err}");
+        let err = Strategy::parse_token("z").unwrap_err().to_string();
+        assert!(err.contains("a|b|c|both") && err.contains("\"z\""), "{err}");
     }
 
     #[test]

@@ -235,3 +235,77 @@ fn param_source_op_source_routing_matches_resolved_counts() {
     assert_eq!(paper_params.fprop_ops, paper_counts.fprop.total() as f64);
     assert_ne!(computed.fprop_ops, paper_params.fprop_ops);
 }
+
+#[test]
+fn kfold_held_out_residual_gate() {
+    // The cross-validation gate on strategy (c): the ridge fit must
+    // generalise, not memorise its 44-point training grid. For every
+    // paper architecture, the k-fold held-out mean Δ stays within a
+    // tolerance of the in-sample mean Δ, and both stay below the raw
+    // strategy-(b) band on the same grid.
+    //
+    // Because the training target is z = ln(measured / predicted_b),
+    // measured = pred_b·e^z, so the per-point deltas fall out of the
+    // samples alone: Δ_b = |e^z − 1| and Δ_c = |e^(z − w·x) − 1| — no
+    // re-simulation needed.
+    use micdl::calibration::residual;
+    const K: usize = 4;
+    const KFOLD_TOL_PP: f64 = 3.0;
+    let mean = |ds: &[f64]| ds.iter().sum::<f64>() / ds.len() as f64;
+    let delta_c = |s: &residual::TrainSample, w: &[f64]| {
+        let wx: f64 = s.features.iter().zip(w).map(|(x, wi)| x * wi).sum();
+        ((s.z - wx).exp() - 1.0).abs() * 100.0
+    };
+    for arch in ArchSpec::paper_archs() {
+        let b = StrategyB::new(&arch, ParamSource::Paper).unwrap();
+        let samples = residual::training_samples(&arch, &b, &SimConfig::default()).unwrap();
+        assert_eq!(samples.len(), 44, "{}: training grid size", arch.name);
+        let b_mean = mean(
+            &samples
+                .iter()
+                .map(|s| (s.z.exp() - 1.0).abs() * 100.0)
+                .collect::<Vec<_>>(),
+        );
+        // In-sample: fit on the whole grid, score the whole grid.
+        let all: Vec<(Vec<f64>, f64)> =
+            samples.iter().map(|s| (s.features.clone(), s.z)).collect();
+        let w = residual::solve(&all, residual::LAMBDA).unwrap();
+        let in_sample = mean(&samples.iter().map(|s| delta_c(s, &w)).collect::<Vec<_>>());
+        // Held-out: fold i holds out every sample with index ≡ i (mod K)
+        // and scores it with the model fitted on the rest.
+        let mut held = Vec::new();
+        for fold in 0..K {
+            let train: Vec<(Vec<f64>, f64)> = samples
+                .iter()
+                .enumerate()
+                .filter(|(i, _)| i % K != fold)
+                .map(|(_, s)| (s.features.clone(), s.z))
+                .collect();
+            let wf = residual::solve(&train, residual::LAMBDA).unwrap();
+            held.extend(
+                samples
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| i % K == fold)
+                    .map(|(_, s)| delta_c(s, &wf)),
+            );
+        }
+        assert_eq!(held.len(), samples.len(), "{}: every point held out once", arch.name);
+        let held_out = mean(&held);
+        assert!(
+            held_out <= in_sample + KFOLD_TOL_PP,
+            "{}: held-out mean Δ {held_out:.3}% exceeds in-sample {in_sample:.3}% + {KFOLD_TOL_PP} pp",
+            arch.name
+        );
+        assert!(
+            held_out < b_mean,
+            "{}: held-out (c) mean Δ {held_out:.3}% must beat raw (b) {b_mean:.3}%",
+            arch.name
+        );
+        assert!(
+            in_sample < b_mean,
+            "{}: in-sample (c) mean Δ {in_sample:.3}% must beat raw (b) {b_mean:.3}%",
+            arch.name
+        );
+    }
+}

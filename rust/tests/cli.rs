@@ -709,6 +709,83 @@ fn predict_batch_rejects_reversed_thread_ranges() {
 }
 
 #[test]
+fn sweep_and_predict_accept_strategy_c() {
+    // `--strategy c` (and the a,b,c shorthands) sweep the residual
+    // regressor end-to-end through the ordinary grid machinery.
+    let dir = micdl::util::tmp::TempDir::new("cli-strategy-c").unwrap();
+    let json_path = dir.path().join("c.json");
+    let out = repro(&["sweep", "run", "--arch", "small", "--threads", "15,240",
+                      "--strategy", "all", "--serial", "--json",
+                      json_path.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let doc = micdl::util::json::Json::parse(
+        &std::fs::read_to_string(&json_path).unwrap(),
+    )
+    .unwrap();
+    // 2 thread counts × 3 strategies.
+    assert_eq!(doc.get("scenarios").unwrap().as_usize(), Some(6));
+    let rows = doc.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 6);
+    assert!(
+        rows.iter().any(|r| r.get("strategy").map(|s| s.emit()) == Some("\"c\"".into())),
+        "{}",
+        doc.emit()
+    );
+    // Single-point predict renders one row per strategy, (c) included.
+    let out = repro(&["predict", "--arch", "small", "--threads", "240",
+                      "--strategy", "all"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    let s = stdout(&out);
+    let rows = s
+        .lines()
+        .filter(|l| l.starts_with("a ") || l.starts_with("b ") || l.starts_with("c "))
+        .count();
+    assert_eq!(rows, 3, "{s}");
+}
+
+#[test]
+fn strategy_grammar_is_shared_across_all_three_surfaces() {
+    // One grammar, one message: CLI flags, JSON sweep specs, and predict
+    // batch queries accept and reject strategy tokens identically.
+    let dir = micdl::util::tmp::TempDir::new("cli-strategy-grammar").unwrap();
+    let want = "strategy must be a|b|c|both, got \"z\"";
+    // 1. The CLI flag.
+    let out = repro(&["sweep", "run", "--arch", "small", "--threads", "15",
+                      "--strategy", "z", "--serial"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains(want), "{}", stderr(&out));
+    // 2. The JSON sweep spec.
+    let spec = dir.path().join("spec.json");
+    std::fs::write(
+        &spec,
+        r#"{"archs": ["small"], "threads": [15], "strategies": ["z"]}"#,
+    )
+    .unwrap();
+    let out = repro(&["sweep", "run", "--spec", spec.to_str().unwrap(), "--serial"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains(want), "{}", stderr(&out));
+    std::fs::write(
+        &spec,
+        r#"{"archs": ["small"], "threads": [15], "strategies": ["b", "c"]}"#,
+    )
+    .unwrap();
+    let out = repro(&["sweep", "run", "--spec", spec.to_str().unwrap(), "--serial"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    // 3. The predict batch schema (shared with POST /predict).
+    let batch = dir.path().join("batch.json");
+    std::fs::write(&batch, r#"[{"arch": "small", "strategy": "z", "threads": [15]}]"#)
+        .unwrap();
+    let out = repro(&["predict", "--batch", batch.to_str().unwrap(), "--serial"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(stderr(&out).contains(want), "{}", stderr(&out));
+    std::fs::write(&batch, r#"[{"arch": "small", "strategy": "c", "threads": [15]}]"#)
+        .unwrap();
+    let out = repro(&["predict", "--batch", batch.to_str().unwrap(), "--serial", "--csv"]);
+    assert!(out.status.success(), "{}", stderr(&out));
+    assert_eq!(stdout(&out).lines().count(), 2, "{}", stdout(&out)); // header + (c) row
+}
+
+#[test]
 fn selfcheck_passes() {
     let out = repro(&["selfcheck"]);
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));

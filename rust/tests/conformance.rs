@@ -25,6 +25,10 @@ fn committed_closed_loop_path() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../baselines/closed_loop_smoke.json")
 }
 
+fn committed_residual_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../baselines/residual_smoke.json")
+}
+
 // ---------------------------------------------------------------------------
 // Library level
 // ---------------------------------------------------------------------------
@@ -201,6 +205,99 @@ fn committed_closed_loop_matches_capture_within_tolerance() {
 }
 
 // ---------------------------------------------------------------------------
+// The committed residual golden baseline (strategy (c))
+// ---------------------------------------------------------------------------
+
+#[test]
+fn committed_residual_baseline_is_clean_and_orders_c_below_b() {
+    // The tentpole pin: baselines/residual_smoke.json holds the Tables
+    // IX-XI grids under strategies (b) and (c), and every (c) band —
+    // the sweep-trained residual regressor stacked on (b) — must sit
+    // strictly below its (b) partner.
+    let base = ConformanceBaseline::load(&committed_residual_path())
+        .expect("load baselines/residual_smoke.json");
+    assert_eq!(base.grids.len(), 3);
+    let ids: Vec<&str> = base.grids.iter().map(|g| g.id.as_str()).collect();
+    assert_eq!(ids, vec!["table9_residual", "table10_residual", "table11_residual"]);
+    assert_eq!(base.grids[0].id, conformance::RESIDUAL_CLAIM_GRID);
+    // The pinned bands already encode the ordering.
+    for grid in &base.grids {
+        for cb in grid.bands.iter().filter(|b| b.strategy == micdl::sweep::Strategy::C) {
+            let bb = grid
+                .bands
+                .iter()
+                .find(|b| b.strategy == micdl::sweep::Strategy::B && b.arch == cb.arch)
+                .expect("every (c) band has a (b) partner");
+            assert!(
+                cb.mean_delta_pct < bb.mean_delta_pct,
+                "{}/{}: pinned (c) {} !< (b) {}",
+                grid.id,
+                cb.arch,
+                cb.mean_delta_pct,
+                bb.mean_delta_pct
+            );
+        }
+    }
+    // A fresh run holds the bands, the claims, and the ordering.
+    let report = base.check(&SweepRunner::serial()).unwrap();
+    assert!(report.is_clean(), "{}", report.render());
+    assert_eq!(report.scenarios, 42 + 24 + 36);
+    assert_eq!(report.bands.len(), 14);
+    // Both claims bound against strategy (b)'s Table IX paper bar…
+    assert_eq!(report.claims.len(), 2);
+    for claim in &report.claims {
+        assert!(claim.pass);
+        assert!(
+            (claim.claim.band.paper_pct - 11.35).abs() < 0.01,
+            "claim bar {}",
+            claim.claim.band.paper_pct
+        );
+    }
+    // …and observed (c) lands far below observed (b) on the claim grid.
+    let b = report
+        .claims
+        .iter()
+        .find(|c| c.claim.strategy == micdl::sweep::Strategy::B)
+        .unwrap();
+    let c = report
+        .claims
+        .iter()
+        .find(|c| c.claim.strategy == micdl::sweep::Strategy::C)
+        .unwrap();
+    assert!(
+        c.observed_mean_pct < b.observed_mean_pct,
+        "(c) {} !< (b) {}",
+        c.observed_mean_pct,
+        b.observed_mean_pct
+    );
+    assert!(c.observed_mean_pct < 2.0, "(c) mean Δ {}", c.observed_mean_pct);
+}
+
+#[test]
+fn committed_residual_matches_capture_within_tolerance() {
+    let committed = ConformanceBaseline::load(&committed_residual_path()).unwrap();
+    let captured = ConformanceBaseline::capture_residual(&SweepRunner::serial()).unwrap();
+    assert_eq!(committed.grids.len(), captured.grids.len());
+    for (want, got) in committed.grids.iter().zip(captured.grids.iter()) {
+        assert_eq!(want.id, got.id);
+        assert_eq!(want.bands.len(), got.bands.len(), "{}", want.id);
+        for (wb, gb) in want.bands.iter().zip(got.bands.iter()) {
+            assert_eq!((wb.arch.as_str(), wb.strategy), (gb.arch.as_str(), gb.strategy));
+            assert_eq!(wb.points, gb.points);
+            assert!(
+                (wb.mean_delta_pct - gb.mean_delta_pct).abs() <= wb.mean_tol_pp,
+                "{}/{}/{}: committed mean {} vs captured {}",
+                want.id,
+                wb.arch,
+                wb.strategy,
+                wb.mean_delta_pct,
+                gb.mean_delta_pct
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // CLI level (the acceptance path)
 // ---------------------------------------------------------------------------
 
@@ -266,7 +363,17 @@ fn cli_observational_mode_prints_bands() {
     let out = repro(&["conformance", "--serial"]);
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let stdout = String::from_utf8_lossy(&out.stdout);
-    for needle in ["table9", "table10", "table11", "table9_closed_loop", "mean Δ %", "all"] {
+    for needle in [
+        "table9",
+        "table10",
+        "table11",
+        "table9_closed_loop",
+        "table9_residual",
+        "table10_residual",
+        "table11_residual",
+        "mean Δ %",
+        "all",
+    ] {
         assert!(stdout.contains(needle), "missing {needle:?} in {stdout}");
     }
 }
@@ -387,6 +494,97 @@ fn cli_write_closed_loop_then_check_round_trips() {
 }
 
 #[test]
+fn cli_residual_check_writes_report_and_exits_zero() {
+    let dir = TempDir::new("conformance-cli-res").unwrap();
+    let report_path = dir.path().join("residual_smoke_report.json");
+    let out = repro(&[
+        "conformance",
+        "--residual",
+        committed_residual_path().to_str().unwrap(),
+        "--serial",
+        "--residual-report",
+        report_path.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let doc = Json::parse(stdout.trim()).unwrap();
+    assert_eq!(doc.get("clean").unwrap().as_bool(), Some(true));
+    assert_eq!(doc.get("scenarios").unwrap().as_usize(), Some(102));
+    assert_eq!(doc.get("bands").unwrap().as_arr().unwrap().len(), 14);
+    // The --residual-report artifact is byte-identical to stdout.
+    let file = std::fs::read_to_string(&report_path).unwrap();
+    assert_eq!(file, stdout.trim());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("PASS"));
+}
+
+#[test]
+fn cli_perturbed_residual_baseline_exits_two() {
+    let dir = TempDir::new("conformance-cli-res-fail").unwrap();
+    let path = dir.path().join("perturbed.json");
+    let mut base = ConformanceBaseline::load(&committed_residual_path()).unwrap();
+    // A shifted band and an impossible claim ceiling for strategy (c).
+    base.grids[0].bands[0].mean_delta_pct += 50.0;
+    let c_claim = base
+        .claims
+        .iter_mut()
+        .find(|c| c.strategy == micdl::sweep::Strategy::C)
+        .unwrap();
+    c_claim.band.ceiling_pct = 0.01;
+    std::fs::write(&path, base.to_json().emit()).unwrap();
+    let out = repro(&["conformance", "--residual", path.to_str().unwrap(), "--serial"]);
+    assert_eq!(out.status.code(), Some(2), "regression must exit 2");
+    let doc = Json::parse(String::from_utf8_lossy(&out.stdout).trim()).unwrap();
+    assert_eq!(doc.get("clean").unwrap().as_bool(), Some(false));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("BAND REGRESSION"), "{stderr}");
+    assert!(stderr.contains("CLAIM REGRESSION"), "{stderr}");
+    assert!(stderr.contains("FAIL"), "{stderr}");
+}
+
+#[test]
+fn cli_write_residual_then_check_round_trips() {
+    let dir = TempDir::new("conformance-cli-res-write").unwrap();
+    let path = dir.path().join("golden.json");
+    let out = repro(&["conformance", "--write-residual", path.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("residual baseline"));
+    let out = repro(&["conformance", "--residual", path.to_str().unwrap()]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let doc = Json::parse(String::from_utf8_lossy(&out.stdout).trim()).unwrap();
+    assert_eq!(doc.get("clean").unwrap().as_bool(), Some(true));
+}
+
+#[test]
+fn cli_checks_all_three_baselines_in_one_invocation() {
+    let out = repro(&[
+        "conformance",
+        "--baseline",
+        committed_baseline_path().to_str().unwrap(),
+        "--closed-loop",
+        committed_closed_loop_path().to_str().unwrap(),
+        "--residual",
+        committed_residual_path().to_str().unwrap(),
+        "--serial",
+    ]);
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let doc = Json::parse(String::from_utf8_lossy(&out.stdout).trim()).unwrap();
+    assert_eq!(doc.get("kind").unwrap().as_str(), Some("micdl-conformance-run"));
+    assert_eq!(doc.get("clean").unwrap().as_bool(), Some(true));
+    assert_eq!(
+        doc.get("measured").unwrap().get("scenarios").unwrap().as_usize(),
+        Some(84)
+    );
+    assert_eq!(
+        doc.get("closed_loop").unwrap().get("scenarios").unwrap().as_usize(),
+        Some(42)
+    );
+    assert_eq!(
+        doc.get("residual").unwrap().get("scenarios").unwrap().as_usize(),
+        Some(102)
+    );
+}
+
+#[test]
 fn cli_rejects_unknown_and_conflicting_flags() {
     let out = repro(&["conformance", "--basline", "x.json"]);
     assert_eq!(out.status.code(), Some(1));
@@ -408,8 +606,18 @@ fn cli_rejects_unknown_and_conflicting_flags() {
     let out = repro(&["conformance", "--closed-loop-report", "out.json"]);
     assert_eq!(out.status.code(), Some(1));
     assert!(String::from_utf8_lossy(&out.stderr).contains("--closed-loop-report requires"));
+    // The residual flags follow the same rules.
+    let out = repro(&["conformance", "--residual", "a.json", "--write-residual", "b.json"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("mutually exclusive"));
+    let out = repro(&["conformance", "--residual-report", "out.json"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--residual-report requires"));
     // Mixing a write mode with a check mode is ambiguous.
     let out = repro(&["conformance", "--baseline", "a.json", "--write-closed-loop", "b.json"]);
+    assert_eq!(out.status.code(), Some(1));
+    assert!(String::from_utf8_lossy(&out.stderr).contains("mutually exclusive"));
+    let out = repro(&["conformance", "--residual", "a.json", "--write-baseline", "b.json"]);
     assert_eq!(out.status.code(), Some(1));
     assert!(String::from_utf8_lossy(&out.stderr).contains("mutually exclusive"));
 }

@@ -11,7 +11,7 @@
 
 use micdl::config::ArchSpec;
 use micdl::lab::Lab;
-use micdl::sweep::{GridSpec, ScenarioResult, Strategy, StoreStats, SweepRunner};
+use micdl::sweep::{GridSpec, ScenarioResult, Strategy, StoreStats, SweepCache, SweepRunner};
 use micdl::util::tmp::TempDir;
 
 fn measured_grid(threads: Vec<usize>) -> GridSpec {
@@ -157,4 +157,97 @@ fn measuring_grid_rejects_prediction_only_cells_then_upgrades_them() {
     assert_eq!(warm_predict.store, Some(StoreStats { hits: 1, misses: 0 }));
     assert!(warm_predict.results[0].measured_s.is_none());
     assert_bit_identical(&predicted.results, &warm_predict.results, "predict flavours");
+}
+
+/// A strategy-(b)+(c) measuring grid over the small CNN: the residual
+/// round-trip fixture.
+fn residual_grid() -> GridSpec {
+    GridSpec {
+        archs: vec![ArchSpec::small()],
+        threads: vec![1, 15],
+        strategies: vec![Strategy::B, Strategy::C],
+        measure: true,
+        ..GridSpec::default()
+    }
+}
+
+#[test]
+fn warm_residual_rerun_is_pure_store_hits_with_zero_refits() {
+    use micdl::simulator::SimConfig;
+    use std::sync::Arc;
+    let dir = TempDir::new("lab-residual").unwrap();
+    let grid = residual_grid();
+    let cold = Lab::open(dir.path()).unwrap().run(&grid, 1).unwrap();
+    // Cold: 4 cells + 1 shared param set + 1 fitted residual model + 2
+    // strategy-independent measurements, all misses.
+    assert_eq!(cold.store, Some(StoreStats { hits: 0, misses: 8 }), "{:?}", cold.store);
+    // Warm: every cell serves from disk before any model (and therefore
+    // any residual fit) is even constructed.
+    let warm = Lab::open(dir.path()).unwrap().run(&grid, 1).unwrap();
+    assert_eq!(warm.store, Some(StoreStats { hits: 4, misses: 0 }), "{:?}", warm.store);
+    assert_eq!(warm.cache.misses, 0, "{:?}", warm.cache);
+    assert_bit_identical(&cold.results, &warm.results, "cold vs warm residual");
+    // Forcing model construction against the warm store loads the
+    // persisted coefficients instead of refitting: zero fits.
+    let lab = Lab::open(dir.path()).unwrap();
+    let cache = SweepCache::new().with_store(Arc::clone(lab.store()));
+    for scn in grid.enumerate() {
+        cache.model(&grid, &scn).unwrap();
+    }
+    assert_eq!(cache.residual_fits(), 0, "warm store must serve the fit");
+    // The storeless control: the same models without a store fit exactly
+    // once (one arch × one sim fingerprint).
+    let storeless = SweepCache::new();
+    for scn in grid.enumerate() {
+        storeless.model(&grid, &scn).unwrap();
+    }
+    assert_eq!(storeless.residual_fits(), 1, "storeless control refits once");
+    // The persisted payload round-trips the exact training seed.
+    let sim = SimConfig::default();
+    let doc = lab
+        .trace_params("small", micdl::perfmodel::ParamSource::Paper, &sim)
+        .expect("params persisted");
+    let residual = doc.get("residual").expect("residual provenance persisted");
+    let entry = residual.get("entry").unwrap();
+    assert_eq!(
+        entry.get("seed").unwrap().as_str(),
+        Some(format!("{:016x}", sim.seed).as_str())
+    );
+}
+
+#[test]
+fn trace_params_carries_residual_provenance() {
+    use micdl::calibration::residual;
+    use micdl::perfmodel::ParamSource;
+    use micdl::simulator::SimConfig;
+    let dir = TempDir::new("lab-residual-trace").unwrap();
+    let lab = Lab::open(dir.path()).unwrap();
+    lab.run(&residual_grid(), 1).unwrap();
+    let doc = lab
+        .trace_params("small", ParamSource::Paper, &SimConfig::default())
+        .expect("params persisted");
+    // The base calibration entry is untouched…
+    assert!(doc.get("key").unwrap().as_str().unwrap().starts_with("params:v1:small:paper:"));
+    // …and the residual provenance rides along: canonical key, training-
+    // grid hash, fit size and the full feature list.
+    let res = doc.get("residual").expect("residual section");
+    let key = res.get("key").unwrap().as_str().unwrap();
+    assert!(key.starts_with("residual:v1:small:paper:"), "{key}");
+    let entry = res.get("entry").unwrap();
+    let train_hash = entry.get("train_hash").unwrap().as_str().unwrap();
+    assert_eq!(train_hash.len(), 16, "{train_hash}");
+    assert!(train_hash.chars().all(|c| c.is_ascii_hexdigit()), "{train_hash}");
+    assert_eq!(entry.get("train_points").unwrap().as_usize(), Some(44));
+    let features = entry.get("features").unwrap().as_arr().unwrap();
+    assert_eq!(features.len(), residual::FEATURE_NAMES.len());
+    for (got, want) in features.iter().zip(residual::FEATURE_NAMES.iter()) {
+        assert_eq!(got.as_str(), Some(*want));
+    }
+    let weights = entry.get("weights").unwrap().as_arr().unwrap();
+    assert_eq!(weights.len(), residual::FEATURE_NAMES.len());
+    // A sim variant that never ran strategy (c) has no residual section.
+    let other = SimConfig { seed: 7, ..SimConfig::default() };
+    assert!(lab
+        .trace_params("small", ParamSource::Paper, &other)
+        .is_none());
 }

@@ -1046,3 +1046,113 @@ fn prop_predict_batch_bit_identical_to_sweep_cells() {
         assert_eq!(stats.store.unwrap().misses, 0, "case {case}: {stats:?}");
     }
 }
+
+// ---------------------------------------------------------------------------
+// Strategy (c): residual-fit determinism & fingerprint isolation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_residual_fit_deterministic_and_fingerprint_isolated() {
+    use micdl::calibration::{residual, Calibration, ResidualSource};
+    use micdl::perfmodel::StrategyB;
+
+    let archs = ArchSpec::paper_archs();
+    let mut rng = XorShift64::new(0xC0DE);
+    for case in 0..16 {
+        let arch = &archs[rng.next_below(archs.len())];
+        let sim = SimConfig { seed: rng.next_u64(), ..SimConfig::default() };
+        let cal = Calibration::new(ParamSource::Paper);
+        let params = cal.resolve(arch, &sim).unwrap();
+        let b = StrategyB::from_params(&params).unwrap();
+        // Determinism: refitting from the same coordinates reproduces
+        // the coefficients bit for bit, under the same training hash.
+        let m1 = residual::ResidualModel::fit(arch, &b, &sim, ParamSource::Paper).unwrap();
+        let m2 = residual::ResidualModel::fit(arch, &b, &sim, ParamSource::Paper).unwrap();
+        assert_eq!(m1.weights.len(), residual::FEATURE_NAMES.len(), "case {case}");
+        for (i, (w1, w2)) in m1.weights.iter().zip(m2.weights.iter()).enumerate() {
+            assert_eq!(w1.to_bits(), w2.to_bits(), "case {case} weight {i}");
+        }
+        assert_eq!(m1.train_hash, m2.train_hash, "case {case}");
+        assert_eq!(m1.seed, sim.seed, "case {case}");
+        // A reseeded configuration is a different training grid (the
+        // jittered workload moves), hence a different fingerprint.
+        let other = SimConfig { seed: sim.seed ^ 0x5A5A, ..sim.clone() };
+        assert_ne!(
+            residual::training_runs(arch, sim.seed),
+            residual::training_runs(arch, other.seed),
+            "case {case}: jittered workload must move with the seed"
+        );
+        let m3 = residual::ResidualModel::fit(arch, &b, &other, ParamSource::Paper).unwrap();
+        assert_ne!(m1.train_hash, m3.train_hash, "case {case}");
+        // The memoizing source: one fit per (arch, fingerprint), never a
+        // leak across fingerprints.
+        let src = ResidualSource::new(ParamSource::Paper);
+        let r1 = src.resolve(arch, &sim, &b).unwrap();
+        let r1_again = src.resolve(arch, &sim, &b).unwrap();
+        assert_eq!(src.fits(), 1, "case {case}: same coordinates memoize");
+        assert_eq!(r1.train_hash, r1_again.train_hash, "case {case}");
+        let r3 = src.resolve(arch, &other, &b).unwrap();
+        assert_eq!(src.fits(), 2, "case {case}: reseeded sim refits");
+        assert_ne!(r1.train_hash, r3.train_hash, "case {case}");
+        assert_eq!(r1.train_hash, m1.train_hash, "case {case}");
+        assert_eq!(r3.train_hash, m3.train_hash, "case {case}");
+    }
+}
+
+#[test]
+fn prop_residual_sweeps_bit_identical_serial_vs_parallel() {
+    use micdl::sweep::{GridSpec, Strategy, SweepResults, SweepRunner};
+
+    fn stable_payload(results: &SweepResults) -> String {
+        let doc = Json::parse(&results.to_json().emit()).unwrap();
+        ["grid", "scenarios", "accuracy", "results"]
+            .map(|key| doc.get(key).unwrap().emit())
+            .join("\n")
+    }
+
+    // Random measured [b, c] grids: the residual fit runs inside the
+    // sweep engine, and its training must be bit-identical whatever the
+    // worker count — coefficients, (c)-row payloads, everything.
+    let all = ArchSpec::paper_archs();
+    let mut rng = XorShift64::new(0xCAB1E);
+    for case in 0..4 {
+        let mut picked = vec![
+            all[rng.next_below(all.len())].clone(),
+            all[rng.next_below(all.len())].clone(),
+        ];
+        picked.dedup_by(|a, b| a.name == b.name);
+        let mut grid = GridSpec {
+            archs: picked,
+            threads: vec![1 + rng.next_below(240), 241 + rng.next_below(3600)],
+            strategies: vec![Strategy::B, Strategy::C],
+            measure: true,
+            ..GridSpec::default()
+        };
+        grid.normalize();
+        let serial = SweepRunner::serial().run(&grid).unwrap();
+        for workers in [2usize, 4] {
+            let parallel = SweepRunner::new(workers).run(&grid).unwrap();
+            assert_eq!(serial.len(), parallel.len(), "case {case} workers {workers}");
+            for (s, p) in serial.results.iter().zip(parallel.results.iter()) {
+                assert_eq!(s.scenario, p.scenario, "case {case} workers {workers}");
+                assert_eq!(
+                    s.prediction.total_s.to_bits(),
+                    p.prediction.total_s.to_bits(),
+                    "case {case} workers {workers} id {}",
+                    s.scenario.id
+                );
+                assert_eq!(
+                    s.measured_s.map(f64::to_bits),
+                    p.measured_s.map(f64::to_bits),
+                    "case {case} workers {workers} id {}",
+                    s.scenario.id
+                );
+            }
+            assert_eq!(
+                stable_payload(&parallel),
+                stable_payload(&serial),
+                "case {case} workers {workers}"
+            );
+        }
+    }
+}

@@ -9,7 +9,7 @@ use std::sync::Arc;
 use micdl::lab::Lab;
 use micdl::perfmodel::ParamSource;
 use micdl::serve::{predict_doc, PredictEngine, QueryBatch, Server};
-use micdl::sweep::{SweepResults, SweepRunner};
+use micdl::sweep::{Strategy, SweepResults, SweepRunner};
 use micdl::util::json::Json;
 use micdl::util::tmp::TempDir;
 
@@ -88,6 +88,82 @@ fn warm_store_batch_serves_cells_with_zero_resolutions() {
     let store = stats.store.expect("store attached");
     assert_eq!(store.misses, 0, "warm store must not miss: {store:?}");
     assert!(store.hits > 0);
+}
+
+#[test]
+fn batch_strategy_grammar_matches_the_sweep_surfaces() {
+    // The serve schema routes through Strategy::parse_list, so it
+    // accepts and rejects exactly what CLI flags and sweep specs do —
+    // same tokens, same error message.
+    let err = QueryBatch::from_json(
+        r#"[{"arch": "small", "strategy": "z", "threads": [1]}]"#,
+    )
+    .unwrap_err();
+    assert!(
+        err.to_string().contains("strategy must be a|b|c|both, got \"z\""),
+        "{err}"
+    );
+    let batch = QueryBatch::from_json(
+        r#"[{"arch": "small", "strategy": "all", "threads": [1]}]"#,
+    )
+    .unwrap();
+    assert_eq!(
+        batch.queries[0].strategies,
+        vec![Strategy::A, Strategy::B, Strategy::C]
+    );
+    let batch = QueryBatch::from_json(
+        r#"[{"arch": "small", "strategy": "b,c", "threads": [1]}]"#,
+    )
+    .unwrap();
+    assert_eq!(batch.queries[0].strategies, vec![Strategy::B, Strategy::C]);
+}
+
+#[test]
+fn strategy_c_batch_round_trips_warm_with_zero_resolutions() {
+    // Strategy (c) through the serve engine: the cold pass fits the
+    // residual model and persists it; a fresh engine over the same
+    // store serves every (c) cell from disk — identical bytes, zero
+    // calibration resolutions, zero store misses.
+    let tmp = TempDir::new("serve-warm-c").unwrap();
+    let batch = QueryBatch::from_json(
+        r#"[{"arch": "small", "strategy": "b,c", "threads": [1, 15, 240]}]"#,
+    )
+    .unwrap();
+    assert_eq!(batch.cells(), 6);
+
+    let lab = Lab::open(tmp.path()).unwrap();
+    let first = PredictEngine::new(ParamSource::Paper, 1).with_store(Arc::clone(lab.store()));
+    let rows_cold: Vec<String> = first
+        .eval_batch(&batch)
+        .unwrap()
+        .iter()
+        .flat_map(|q| q.rows())
+        .map(|r| r.emit())
+        .collect();
+    assert_eq!(rows_cold.len(), 6);
+    assert!(first.stats().calibration_resolutions > 0);
+    // The engine rows match a serial reference sweep of the same grid.
+    let grid = batch.queries[0].to_grid(ParamSource::Paper).unwrap();
+    let reference = SweepRunner::serial().run(&grid).unwrap();
+    assert_eq!(rows_cold, sweep_rows(&reference));
+
+    let lab2 = Lab::open(tmp.path()).unwrap();
+    let second = PredictEngine::new(ParamSource::Paper, 1).with_store(Arc::clone(lab2.store()));
+    let rows_warm: Vec<String> = second
+        .eval_batch(&batch)
+        .unwrap()
+        .iter()
+        .flat_map(|q| q.rows())
+        .map(|r| r.emit())
+        .collect();
+    assert_eq!(rows_warm, rows_cold);
+    let stats = second.stats();
+    assert_eq!(
+        stats.calibration_resolutions, 0,
+        "warm store must serve the (c) cells without refitting: {stats:?}"
+    );
+    let store = stats.store.expect("store attached");
+    assert_eq!(store.misses, 0, "warm store must not miss: {store:?}");
 }
 
 /// Minimal HTTP/1.1 client: one request, read to EOF (the server
