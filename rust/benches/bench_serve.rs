@@ -68,6 +68,28 @@ fn main() {
     let single = ladder_batch(1);
     b.case("serve/hot-batch/244", || shared.drain_batch(&single).unwrap());
 
+    // Parallel resolve under contention: 8 threads fire the same
+    // 6-query ladder batch at a *fresh* engine, all racing on the same
+    // three (arch, sim fingerprint) pairs. With single-flight memos the
+    // racers coalesce — the engine still performs exactly 3 calibration
+    // resolutions (asserted), and the case times how fast concurrent
+    // batches get through a cold engine with no resolve serialization.
+    let small = ladder_batch(6);
+    b.case("serve/parallel-resolve-cold/8x6", || {
+        let engine = PredictEngine::new(ParamSource::Simulator, 2);
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| engine.drain_batch(&small).unwrap());
+            }
+        });
+        let stats = engine.stats();
+        assert_eq!(
+            stats.calibration_resolutions, 3,
+            "concurrent batches must coalesce onto one resolve per pair"
+        );
+        stats.batches
+    });
+
     // Reference: the raw hot-resolve cost the engine's per-batch
     // resolve phase rides (compare the per-cell hot-batch cost to it).
     let archs = ArchSpec::paper_archs();

@@ -57,6 +57,24 @@ fn main() {
         SweepRunner::new(0).run(&measured).unwrap().len()
     });
 
+    // Contended cold sweep: 16 workers race a fresh cache whose
+    // distinct-key census is tiny relative to the scenario count (1
+    // arch × 244 ladder points × 2 strategies over 2 model keys, 1
+    // cost table, 244 measurements). Every first touch contends on the
+    // single-flight memos; the miss pin asserts the duplicate-work
+    // contract inside the timed loop.
+    let contended = GridSpec {
+        archs: vec![ArchSpec::small()],
+        threads: (1..=244).collect(),
+        measure: true,
+        ..GridSpec::default()
+    };
+    b.case("sweep/contended-cold+measure/488", || {
+        let res = SweepRunner::new(16).run(&contended).unwrap();
+        assert_eq!(res.cache.misses, 2 + 1 + 244, "{:?}", res.cache);
+        res.len()
+    });
+
     let big = full_grid();
     b.case("sweep/parallel/1464", || {
         SweepRunner::new(0).run(&big).unwrap().len()

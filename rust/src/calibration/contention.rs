@@ -23,7 +23,6 @@
 //! *shared* source per (architecture, simulator) so the probe
 //! calibration runs once for the (a, b) pair instead of once per model.
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -32,15 +31,18 @@ use crate::error::{Error, Result};
 use crate::perfmodel::ParamSource;
 use crate::report::paper;
 use crate::simulator::{probe, CostModel, SimConfig};
+use crate::util::memo::Memo;
 
 /// Lazily-built probe state shared by clones of one source. Values are
 /// deterministic, so memoized results are bit-identical to fresh probes.
 #[derive(Debug, Default)]
 struct ProbeMemo {
-    /// The calibrated cost model, built at most once per source.
+    /// The calibrated cost model, built at most once per source (the
+    /// build runs under this lock, so it is already single-flight).
     cost: Mutex<Option<Arc<CostModel>>>,
-    /// Probe results per thread count.
-    values: Mutex<HashMap<usize, f64>>,
+    /// Probe results per thread count — single-flight, so concurrent
+    /// strategy models sharing one source probe each `p` exactly once.
+    values: Memo<usize, f64>,
     /// How many times the probe calibration (cost-model build) ran.
     calibrations: AtomicU64,
 }
@@ -104,14 +106,10 @@ impl ContentionSource {
                     ))
                 })
             }
-            ParamSource::Simulator => {
-                if let Some(v) = self.memo.values.lock().unwrap().get(&p) {
-                    return Ok(*v);
-                }
+            ParamSource::Simulator => self.memo.values.get_or_try_insert_with(p, || {
                 let cost = self.cost_model()?;
-                let v = probe::contention_probe_with(&cost, p, &self.sim_cfg);
-                Ok(*self.memo.values.lock().unwrap().entry(p).or_insert(v))
-            }
+                Ok(probe::contention_probe_with(&cost, p, &self.sim_cfg))
+            }),
         }
     }
 

@@ -54,9 +54,8 @@ pub use contention::ContentionSource;
 pub use residual::{ResidualModel, ResidualSource};
 pub use source::{ComputedSource, PaperSource, ProbeSource};
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::config::{ArchSpec, MachineConfig};
 use crate::error::{Error, Result};
@@ -65,6 +64,7 @@ use crate::perfmodel::{ParamSource, PerfModel, StrategyA, StrategyB, StrategyC};
 use crate::simulator::SimConfig;
 use crate::sweep::Strategy;
 use crate::util::json::Json;
+use crate::util::memo::Memo;
 
 /// Strategy (a)'s resolved operands — the Table V terms
 /// (see [`crate::perfmodel::StrategyA`] for the formula they feed).
@@ -162,7 +162,7 @@ pub trait Calibrator: Send + Sync {
 pub struct Calibration {
     source: ParamSource,
     calibrator: Box<dyn Calibrator>,
-    memo: Mutex<HashMap<(String, u64), Arc<ModelParams>>>,
+    memo: Memo<(String, u64), Arc<ModelParams>>,
     resolutions: AtomicU64,
     residual: ResidualSource,
     store: Option<Arc<Store>>,
@@ -188,7 +188,7 @@ impl Calibration {
         Calibration {
             source,
             calibrator,
-            memo: Mutex::new(HashMap::new()),
+            memo: Memo::new(),
             resolutions: AtomicU64::new(0),
             residual: ResidualSource::new(source),
             store: None,
@@ -221,42 +221,38 @@ impl Calibration {
     /// fresh resolution and equal configurations share one — including
     /// between the (a) and (b) models of a sweep cell.
     ///
-    /// Lookups are lock-drop-compute-insert (the sweep-cache policy):
-    /// two workers missing the same key concurrently may both run the
-    /// calibrator — every resolution is deterministic and the first
-    /// insert wins, so results stay bit-identical;
-    /// [`Calibration::resolutions`] counts actual runs, which is
-    /// exactly one per key only without concurrent cold misses.
+    /// The memo is single-flight ([`crate::util::memo::Memo`]): a
+    /// concurrent cold miss runs the calibrator **exactly once** — the
+    /// other workers block on the in-flight resolution and share its
+    /// result — so [`Calibration::resolutions`] counts exactly one run
+    /// per distinct key on any error-free run, whatever the concurrency.
+    /// The store probe and write-through sit inside the same slot:
+    /// persisted resolutions rebuild bit-identically without counting as
+    /// calibrator runs, and each key is written at most once.
     pub fn resolve(&self, arch: &ArchSpec, sim: &SimConfig) -> Result<Arc<ModelParams>> {
         let key = (arch.name.clone(), sim.fingerprint());
-        if let Some(params) = self.memo.lock().unwrap().get(&key) {
-            return Ok(Arc::clone(params));
-        }
-        // Disk next: a persisted resolution rebuilds bit-identically
-        // (parameters are plain f64s that round-trip exactly; machine and
-        // contention are derived from the same `sim`) and does not count
-        // as a calibrator run.
-        if let Some(store) = &self.store {
-            let skey = lab::params_key(&arch.name, self.source, sim.fingerprint());
-            if let Some(rebuilt) = store
-                .get(lab::Kind::Params, &skey)
-                .and_then(|payload| self.params_from_payload(&payload, arch, sim))
-            {
-                let built = Arc::new(rebuilt);
-                return Ok(Arc::clone(
-                    self.memo.lock().unwrap().entry(key).or_insert(built),
-                ));
+        self.memo.get_or_try_insert_with(key, || {
+            // Disk first: a persisted resolution rebuilds bit-identically
+            // (parameters are plain f64s that round-trip exactly; machine
+            // and contention are derived from the same `sim`) and does
+            // not count as a calibrator run.
+            if let Some(store) = &self.store {
+                let skey = lab::params_key(&arch.name, self.source, sim.fingerprint());
+                if let Some(rebuilt) = store
+                    .get(lab::Kind::Params, &skey)
+                    .and_then(|payload| self.params_from_payload(&payload, arch, sim))
+                {
+                    return Ok(Arc::new(rebuilt));
+                }
             }
-        }
-        let built = Arc::new(self.calibrator.resolve(arch, sim)?);
-        self.resolutions.fetch_add(1, Ordering::Relaxed);
-        if let Some(store) = &self.store {
-            let skey = lab::params_key(&arch.name, self.source, sim.fingerprint());
-            store.put(lab::Kind::Params, &skey, self.params_payload(&built))?;
-        }
-        Ok(Arc::clone(
-            self.memo.lock().unwrap().entry(key).or_insert(built),
-        ))
+            let built = Arc::new(self.calibrator.resolve(arch, sim)?);
+            self.resolutions.fetch_add(1, Ordering::Relaxed);
+            if let Some(store) = &self.store {
+                let skey = lab::params_key(&arch.name, self.source, sim.fingerprint());
+                store.put(lab::Kind::Params, &skey, self.params_payload(&built))?;
+            }
+            Ok(built)
+        })
     }
 
     /// Build a strategy model from this calibration's resolved (and,

@@ -31,9 +31,8 @@
 //! `residual:v1:...` keys with full provenance (training-grid hash,
 //! feature list, seed), counting only real fits ([`ResidualSource::fits`]).
 
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::config::{ArchSpec, MachineConfig, RunConfig};
 use crate::error::{Error, Result};
@@ -41,8 +40,9 @@ use crate::lab::{self, Store};
 use crate::nn::init::XorShift64;
 use crate::perfmodel::{ParamSource, PerfModel, StrategyB};
 use crate::report::paper;
-use crate::simulator::{simulate_training_with, CostModel, SimConfig};
+use crate::simulator::{simulate_training_shared, CostModel, CostTable, SimConfig};
 use crate::util::json::Json;
+use crate::util::memo::Memo;
 
 /// Salt folded into the training-grid RNG seed ("code fit"), so the
 /// residual grid never aliases another consumer of `SimConfig::seed`.
@@ -158,18 +158,21 @@ pub struct TrainSample {
 }
 
 /// Evaluate the training grid: one measured/predicted pair per run, in
-/// grid order, sharing one [`CostModel`] (the sweep-cache policy).
+/// grid order, sharing one [`CostTable`] over one [`CostModel`] — the
+/// thread-ladder fast path: the grid is 4 workload variants × the full
+/// thread ladder, so the per-occupancy-class cost terms are computed
+/// once and reused across all 44 points, bit-identically.
 pub fn training_samples(
     arch: &ArchSpec,
     b: &StrategyB,
     sim: &SimConfig,
 ) -> Result<Vec<TrainSample>> {
-    let cost = CostModel::new(arch, sim)?;
+    let cost = CostTable::new(Arc::new(CostModel::new(arch, sim)?));
     let total_weights = arch.total_weights()? as f64;
     let runs = training_runs(arch, sim.seed);
     let mut out = Vec::with_capacity(runs.len());
     for run in runs {
-        let measured_s = simulate_training_with(&cost, &run, sim)?.execution_s;
+        let measured_s = simulate_training_shared(&cost, &run, sim)?.execution_s;
         let predicted_s = b.predict(&run)?.total_s;
         if !(measured_s > 0.0 && measured_s.is_finite())
             || !(predicted_s > 0.0 && predicted_s.is_finite())
@@ -398,7 +401,7 @@ impl ResidualModel {
 /// untouched.
 pub struct ResidualSource {
     source: ParamSource,
-    memo: Mutex<HashMap<(String, u64), Arc<ResidualModel>>>,
+    memo: Memo<(String, u64), Arc<ResidualModel>>,
     fits: AtomicU64,
     store: Option<Arc<Store>>,
 }
@@ -417,7 +420,7 @@ impl ResidualSource {
     pub fn new(source: ParamSource) -> ResidualSource {
         ResidualSource {
             source,
-            memo: Mutex::new(HashMap::new()),
+            memo: Memo::new(),
             fits: AtomicU64::new(0),
             store: None,
         }
@@ -431,9 +434,13 @@ impl ResidualSource {
     }
 
     /// Resolve (memoized) the fitted model for one architecture against
-    /// one simulator configuration. Same lock-drop-compute-insert policy
-    /// as [`super::Calibration::resolve`]: concurrent cold misses may
-    /// both fit, fits are deterministic, the first insert wins.
+    /// one simulator configuration. Same single-flight policy as
+    /// [`super::Calibration::resolve`]: a concurrent cold miss runs the
+    /// (expensive, 44-point) fit exactly once — latecomers block on the
+    /// in-flight fit and share its model — so [`ResidualSource::fits`]
+    /// counts exactly one fit per distinct (arch, fingerprint) key on
+    /// any error-free run. Store probe and write-through sit inside the
+    /// same slot.
     pub fn resolve(
         &self,
         arch: &ArchSpec,
@@ -441,30 +448,24 @@ impl ResidualSource {
         b: &StrategyB,
     ) -> Result<Arc<ResidualModel>> {
         let key = (arch.name.clone(), sim.fingerprint());
-        if let Some(model) = self.memo.lock().unwrap().get(&key) {
-            return Ok(Arc::clone(model));
-        }
-        if let Some(store) = &self.store {
-            let skey = lab::residual_key(&arch.name, self.source, sim.fingerprint());
-            if let Some(model) = store
-                .get(lab::Kind::Residual, &skey)
-                .and_then(|payload| self.model_from_payload(&payload, arch, sim))
-            {
-                let built = Arc::new(model);
-                return Ok(Arc::clone(
-                    self.memo.lock().unwrap().entry(key).or_insert(built),
-                ));
+        self.memo.get_or_try_insert_with(key, || {
+            if let Some(store) = &self.store {
+                let skey = lab::residual_key(&arch.name, self.source, sim.fingerprint());
+                if let Some(model) = store
+                    .get(lab::Kind::Residual, &skey)
+                    .and_then(|payload| self.model_from_payload(&payload, arch, sim))
+                {
+                    return Ok(Arc::new(model));
+                }
             }
-        }
-        let built = Arc::new(ResidualModel::fit(arch, b, sim, self.source)?);
-        self.fits.fetch_add(1, Ordering::Relaxed);
-        if let Some(store) = &self.store {
-            let skey = lab::residual_key(&arch.name, self.source, sim.fingerprint());
-            store.put(lab::Kind::Residual, &skey, self.model_payload(&built))?;
-        }
-        Ok(Arc::clone(
-            self.memo.lock().unwrap().entry(key).or_insert(built),
-        ))
+            let built = Arc::new(ResidualModel::fit(arch, b, sim, self.source)?);
+            self.fits.fetch_add(1, Ordering::Relaxed);
+            if let Some(store) = &self.store {
+                let skey = lab::residual_key(&arch.name, self.source, sim.fingerprint());
+                store.put(lab::Kind::Residual, &skey, self.model_payload(&built))?;
+            }
+            Ok(built)
+        })
     }
 
     /// How many fits actually ran (memo+store misses) — the warm-rerun

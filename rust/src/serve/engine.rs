@@ -4,17 +4,18 @@
 //! A [`PredictEngine`] owns one long-lived [`SweepCache`]. Each batch is
 //! evaluated in two phases:
 //!
-//! 1. **Resolve** — serially build the model for every distinct
-//!    (architecture, strategy, sim fingerprint) combination the batch
-//!    touches. Model construction is what triggers
+//! 1. **Resolve** — build the model for every distinct (architecture,
+//!    strategy, sim fingerprint) combination the batch touches. Model
+//!    construction is what triggers
 //!    [`crate::calibration::Calibration::resolve`], and both the model
-//!    memo and the calibration memo are keyed by exactly those axes, so
-//!    after this phase the batch has performed **at most one parameter
-//!    resolution per distinct (arch, sim fingerprint) pair**. Resolve
-//!    windows are serialized across batches (the engine is shared by
-//!    every HTTP worker), which makes the resolution delta attributable
-//!    to one batch; the invariant is checked by a debug assertion, so a
-//!    release server can never panic on it.
+//!    memo and the calibration memo are single-flight
+//!    ([`crate::util::memo::Memo`]) keyed by exactly those axes, so
+//!    across the whole engine **each distinct (arch, sim fingerprint)
+//!    pair resolves at most once, ever** — concurrent batches racing on
+//!    the same pair coalesce onto one in-flight resolution instead of
+//!    duplicating it. The resolutions ≤ pairs invariant therefore holds
+//!    structurally, with no cross-batch serialization: batches resolve
+//!    in parallel (the PR-8-era engine-level resolve mutex is gone).
 //! 2. **Evaluate** — fan the queries out over a scoped-thread pool
 //!    (the [`crate::sweep::runner`] claim-by-cursor pattern) and run
 //!    every scenario through [`crate::sweep::runner::evaluate`] — the
@@ -108,11 +109,6 @@ pub struct PredictEngine {
     cache: SweepCache,
     params: ParamSource,
     workers: usize,
-    // Serializes phase 1 across concurrent batches: the calibration
-    // counter is cache-global, so a batch's before/after delta is only
-    // attributable to that batch while no other batch can resolve
-    // tables (phase-2 workers only ever hit memos built in phase 1).
-    resolve: Mutex<()>,
     queries: AtomicU64,
     batches: AtomicU64,
     cells: AtomicU64,
@@ -126,7 +122,6 @@ impl PredictEngine {
             cache: SweepCache::new(),
             params,
             workers,
-            resolve: Mutex::new(()),
             queries: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             cells: AtomicU64::new(0),
@@ -181,10 +176,11 @@ impl PredictEngine {
         requested.min(n).max(1)
     }
 
-    /// Phase 1: serially resolve every distinct (arch, strategy, sim
-    /// fingerprint) model the batch touches. Returns the number of
-    /// distinct (arch, fingerprint) pairs — the ceiling on calibration
-    /// resolutions this batch may perform.
+    /// Phase 1: resolve every distinct (arch, strategy, sim
+    /// fingerprint) model the batch touches. The model memo underneath
+    /// is single-flight, so concurrent batches resolving the same pair
+    /// coalesce onto one computation. Returns the number of distinct
+    /// (arch, fingerprint) pairs in this batch.
     fn resolve_tables(&self, grids: &[GridSpec]) -> Result<usize> {
         let mut pairs: Vec<(String, u64)> = Vec::new();
         let mut models: Vec<(String, u8, u64)> = Vec::new();
@@ -221,26 +217,17 @@ impl PredictEngine {
     }
 
     /// Shared batch path: expand + validate every query, resolve the
-    /// parameter tables (serialized across batches), then evaluate the
-    /// cells (parallel over queries). Counters only advance for batches
-    /// that succeed. Returns the results plus this batch's cell count.
+    /// parameter tables (single-flight across batches), then evaluate
+    /// the cells (parallel over queries). Counters only advance for
+    /// batches that succeed. Returns the results plus this batch's cell
+    /// count.
     fn run(&self, batch: &QueryBatch, keep: bool) -> Result<(Vec<QueryResult>, u64)> {
         let grids: Vec<GridSpec> = batch
             .queries
             .iter()
             .map(|q| q.to_grid(self.params))
             .collect::<Result<Vec<_>>>()?;
-        let (pairs, resolved) = {
-            let _window = self.resolve.lock().unwrap();
-            let before = self.cache.calibration_resolutions();
-            let pairs = self.resolve_tables(&grids)?;
-            (pairs, self.cache.calibration_resolutions() - before)
-        };
-        debug_assert!(
-            resolved <= pairs as u64,
-            "batch resolved {resolved} parameter tables for {pairs} distinct \
-             (arch, sim fingerprint) pairs"
-        );
+        self.resolve_tables(&grids)?;
 
         let cells = AtomicU64::new(0);
         let workers = self.workers_for(grids.len());
@@ -388,11 +375,13 @@ mod tests {
 
     #[test]
     fn concurrent_batches_share_the_engine_safely() {
-        // Regression: the resolution-ceiling check used to diff the
-        // cache-global calibration counter without serializing the
-        // resolve window, so two batches resolving different archs
-        // concurrently could inflate each other's delta and panic; the
-        // cumulative-counter diff in drain_batch had the same race.
+        // Batches resolve in parallel — no engine-level resolve mutex.
+        // The model and calibration memos underneath are single-flight,
+        // so even batches racing on the same (arch, fingerprint) pair
+        // resolve it exactly once; the resolutions == pairs pin below
+        // holds structurally, not because batches are serialized.
+        // (Also a regression guard: the per-batch cell counts must come
+        // from per-batch counters, not deltas of the shared counter.)
         let engine = PredictEngine::new(ParamSource::Paper, 2);
         let a = batch(r#"[{"arch": "small", "threads": [1, 15, 61, 240]}]"#);
         let b = batch(r#"[{"arch": "medium", "strategy": "b", "threads": [15, 240]}]"#);

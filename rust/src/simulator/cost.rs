@@ -28,12 +28,32 @@
 //! threads divide their hardware context round-robin and pay a switch
 //! overhead.
 
+use std::sync::Arc;
+
 use crate::config::arch::ArchSpec;
 use crate::error::Result;
 use crate::nn::opcount;
 use crate::simulator::machine::PhiMachine;
 use crate::simulator::memory::{l2_pressure, ring_factor, ContentionParams};
 use crate::simulator::SimConfig;
+use crate::util::memo::Memo;
+
+/// Per-image cost evaluation, abstracted over where the numbers come
+/// from: a bare [`CostModel`] computes each call from scratch; a
+/// [`CostTable`] serves the same values from a shared
+/// per-occupancy-class memo (the thread-ladder fast path). Both produce
+/// bit-identical seconds — the table runs the model's exact f64
+/// operations, just once per class instead of once per call.
+pub trait PerImageCost {
+    /// Seconds for one forward pass on software thread `t`.
+    fn fwd_image_s(&self, cfg: &SimConfig, machine: &PhiMachine, t: usize) -> f64;
+    /// Seconds for one training image (forward + backward + contention).
+    fn train_image_s(&self, cfg: &SimConfig, machine: &PhiMachine, t: usize) -> f64;
+    /// Serial preparation seconds for `instances` network instances.
+    fn prep_s(&self, cfg: &SimConfig, instances: usize) -> f64;
+    /// Serial per-epoch bookkeeping seconds.
+    fn epoch_serial_s(&self, cfg: &SimConfig, train_images: usize, test_images: usize) -> f64;
+}
 
 /// Resolved per-architecture cost inputs.
 #[derive(Debug, Clone)]
@@ -102,19 +122,37 @@ impl CostModel {
         updates_weights: bool,
     ) -> f64 {
         let occ = machine.occupancy_of(t);
-        let cpi = cfg.machine.cpi(occ);
         let oversub = machine.oversub_of(t);
-        let exec = cycles * cfg.exec_fraction * cpi;
-        let mem = cycles
-            * (1.0 - cfg.exec_fraction)
-            * l2_pressure(cfg, self.working_set_bytes, occ)
-            * ring_factor(cfg, machine.active_cores());
-        let switch_penalty = 1.0 + cfg.oversub_overhead * (oversub - 1.0);
-        let mut s = (exec + mem) * oversub * switch_penalty / cfg.machine.clock_hz;
+        let mut s = self.class_image_s(cfg, occ, oversub, machine.active_cores(), cycles);
         if updates_weights {
             s += self.contention.contention_s(machine.threads, &cfg.machine);
         }
         s
+    }
+
+    /// The occupancy-class core of [`CostModel::image_s`]: per-image
+    /// seconds as a function of (SMT occupancy, oversubscription ratio,
+    /// active cores) alone — the full scenario does not appear. This is
+    /// what makes the thread-ladder fast path sound: every software
+    /// thread of every ladder point with the same class gets the same
+    /// value, so [`CostTable`] computes it once per class and the f64
+    /// operation sequence (and hence the bits) is identical either way.
+    fn class_image_s(
+        &self,
+        cfg: &SimConfig,
+        occ: usize,
+        oversub: f64,
+        active_cores: usize,
+        cycles: f64,
+    ) -> f64 {
+        let cpi = cfg.machine.cpi(occ);
+        let exec = cycles * cfg.exec_fraction * cpi;
+        let mem = cycles
+            * (1.0 - cfg.exec_fraction)
+            * l2_pressure(cfg, self.working_set_bytes, occ)
+            * ring_factor(cfg, active_cores);
+        let switch_penalty = 1.0 + cfg.oversub_overhead * (oversub - 1.0);
+        (exec + mem) * oversub * switch_penalty / cfg.machine.clock_hz
     }
 
     /// Serial preparation seconds for `p` network instances (Fig. 4: not
@@ -131,6 +169,107 @@ impl CostModel {
             + test_images as f64 * 2.0
             + 10.0)
             / cfg.machine.clock_hz
+    }
+}
+
+impl PerImageCost for CostModel {
+    fn fwd_image_s(&self, cfg: &SimConfig, machine: &PhiMachine, t: usize) -> f64 {
+        CostModel::fwd_image_s(self, cfg, machine, t)
+    }
+
+    fn train_image_s(&self, cfg: &SimConfig, machine: &PhiMachine, t: usize) -> f64 {
+        CostModel::train_image_s(self, cfg, machine, t)
+    }
+
+    fn prep_s(&self, cfg: &SimConfig, instances: usize) -> f64 {
+        CostModel::prep_s(self, cfg, instances)
+    }
+
+    fn epoch_serial_s(&self, cfg: &SimConfig, train_images: usize, test_images: usize) -> f64 {
+        CostModel::epoch_serial_s(self, cfg, train_images, test_images)
+    }
+}
+
+/// A [`CostModel`] fronted by shared per-occupancy-class memo tables —
+/// the thread-ladder fast path.
+///
+/// `fwd_image_s`/`train_image_s` depend on the software thread only
+/// through its *class* — (SMT occupancy, oversubscription ratio, active
+/// cores) — and the contention term only through the machine's total
+/// thread count `p`. A thread ladder over one (arch, fingerprint)
+/// therefore touches a handful of classes (at most `threads_per_core ×`
+/// distinct oversubscription ratios `× distinct core counts`, in
+/// practice single digits) while evaluating thousands of per-image
+/// calls; the table computes each class once, via
+/// [`CostModel::class_image_s`]'s exact f64 sequence, and serves every
+/// later call from the memo — bit-identical, single-flight under
+/// concurrency (ladder points evaluated by different sweep workers
+/// share the same table through the sweep cache).
+///
+/// One table is valid for **one** [`SimConfig`]: the class key does not
+/// cover the config, because the sweep cache already keys tables by
+/// [`SimConfig::fingerprint`]. Callers that change the config must use
+/// a fresh table (as the cache does by construction).
+#[derive(Debug)]
+pub struct CostTable {
+    model: Arc<CostModel>,
+    /// (occupancy, oversub bits, active cores) → (fwd_s, fwd+bwd_s
+    /// before contention).
+    classes: Memo<(usize, u64, usize), (f64, f64)>,
+    /// machine threads → contention seconds.
+    contention: Memo<usize, f64>,
+}
+
+impl CostTable {
+    /// Wrap a cost model in fresh (empty) class tables.
+    pub fn new(model: Arc<CostModel>) -> CostTable {
+        CostTable { model, classes: Memo::new(), contention: Memo::new() }
+    }
+
+    /// The wrapped cost model.
+    pub fn model(&self) -> &Arc<CostModel> {
+        &self.model
+    }
+
+    /// Both per-image class values for thread `t`, computed once per
+    /// class.
+    fn class(&self, cfg: &SimConfig, machine: &PhiMachine, t: usize) -> (f64, f64) {
+        let occ = machine.occupancy_of(t);
+        let oversub = machine.oversub_of(t);
+        let active = machine.active_cores();
+        self.classes.get_or_insert_with((occ, oversub.to_bits(), active), || {
+            let fwd = self.model.class_image_s(cfg, occ, oversub, active, self.model.fwd_cycles);
+            let train = self.model.class_image_s(
+                cfg,
+                occ,
+                oversub,
+                active,
+                self.model.fwd_cycles + self.model.bwd_cycles,
+            );
+            (fwd, train)
+        })
+    }
+}
+
+impl PerImageCost for CostTable {
+    fn fwd_image_s(&self, cfg: &SimConfig, machine: &PhiMachine, t: usize) -> f64 {
+        self.class(cfg, machine, t).0
+    }
+
+    fn train_image_s(&self, cfg: &SimConfig, machine: &PhiMachine, t: usize) -> f64 {
+        let base = self.class(cfg, machine, t).1;
+        let contention = self.contention.get_or_insert_with(machine.threads, || {
+            self.model.contention.contention_s(machine.threads, &cfg.machine)
+        });
+        base + contention
+    }
+
+    fn prep_s(&self, cfg: &SimConfig, instances: usize) -> f64 {
+        self.model.prep_s(cfg, instances)
+    }
+
+    fn epoch_serial_s(&self, cfg: &SimConfig, train_images: usize, test_images: usize) -> f64 {
+        self.model.epoch_serial_s(cfg, train_images, test_images)
     }
 }
 

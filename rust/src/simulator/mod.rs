@@ -47,10 +47,12 @@ pub mod probe;
 pub mod stats;
 pub mod workload;
 
-pub use cost::CostModel;
+pub use cost::{CostModel, CostTable, PerImageCost};
 pub use machine::PhiMachine;
 pub use stats::{PhaseTimes, SimResult};
-pub use workload::{simulate_training, simulate_training_with, Fidelity};
+pub use workload::{
+    simulate_training, simulate_training_shared, simulate_training_with, Fidelity,
+};
 
 use crate::config::MachineConfig;
 use crate::nn::OpSource;

@@ -11,7 +11,7 @@
 use crate::config::arch::ArchSpec;
 use crate::config::RunConfig;
 use crate::error::Result;
-use crate::simulator::cost::CostModel;
+use crate::simulator::cost::{CostModel, CostTable, PerImageCost};
 use crate::simulator::event::Engine;
 use crate::simulator::machine::PhiMachine;
 use crate::simulator::stats::{PhaseTimes, SimResult};
@@ -81,6 +81,28 @@ pub fn simulate_training_with(
     run: &RunConfig,
     cfg: &SimConfig,
 ) -> Result<SimResult> {
+    simulate_with_cost(cost, run, cfg)
+}
+
+/// Simulate over a shared [`CostTable`] — the thread-ladder fast path.
+/// Every per-image cost comes out of the table's per-occupancy-class
+/// memo, so a ladder of runs over one (arch, fingerprint) computes each
+/// class once across *all* its points (and all sweep workers), yet the
+/// result is bit-identical to [`simulate_training_with`] on the wrapped
+/// model (asserted in this module's tests).
+pub fn simulate_training_shared(
+    table: &CostTable,
+    run: &RunConfig,
+    cfg: &SimConfig,
+) -> Result<SimResult> {
+    simulate_with_cost(table, run, cfg)
+}
+
+fn simulate_with_cost<C: PerImageCost>(
+    cost: &C,
+    run: &RunConfig,
+    cfg: &SimConfig,
+) -> Result<SimResult> {
     run.validate()?;
     let machine = PhiMachine::new(cfg.machine.clone(), run.threads);
     match cfg.fidelity {
@@ -91,9 +113,9 @@ pub fn simulate_training_with(
 
 /// Closed-form evaluation: per-phase time = max over threads of
 /// (chunk × per-image cost); identical semantics to the DES.
-fn simulate_chunked(
+fn simulate_chunked<C: PerImageCost>(
     machine: &PhiMachine,
-    cost: &CostModel,
+    cost: &C,
     run: &RunConfig,
     cfg: &SimConfig,
 ) -> SimResult {
@@ -157,9 +179,9 @@ fn simulate_chunked(
 
 /// Per-image DES: each thread is an event chain processing its chunk one
 /// image at a time; phases are separated by barriers.
-fn simulate_per_image(
+fn simulate_per_image<C: PerImageCost>(
     machine: &PhiMachine,
-    cost: &CostModel,
+    cost: &C,
     run: &RunConfig,
     cfg: &SimConfig,
 ) -> SimResult {
@@ -342,5 +364,39 @@ mod tests {
         let run = RunConfig { train_images: 3840, test_images: 640, epochs: 1, threads: 3840 };
         let r = simulate_training(&arch, &run, &cfg).unwrap();
         assert!(r.total_s.is_finite() && r.total_s > 0.0);
+    }
+
+    #[test]
+    fn shared_cost_table_is_bit_identical_across_a_thread_ladder() {
+        // The ladder fast path: one CostTable shared across every point
+        // of a threads ladder (including oversubscription) must produce
+        // exactly the bits of a fresh CostModel evaluation per point —
+        // chunked and per-image fidelity alike.
+        let arch = ArchSpec::small();
+        let mut cfg = SimConfig::default();
+        let base_run =
+            RunConfig { train_images: 600, test_images: 100, epochs: 2, threads: 1 };
+        for fidelity in [Fidelity::Chunked, Fidelity::PerImage] {
+            cfg.fidelity = fidelity;
+            let model = std::sync::Arc::new(CostModel::new(&arch, &cfg).unwrap());
+            let table = CostTable::new(std::sync::Arc::clone(&model));
+            for p in [1, 3, 15, 61, 240, 488] {
+                let run = RunConfig { threads: p, ..base_run };
+                let fresh = simulate_training_with(&model, &run, &cfg).unwrap();
+                let shared = simulate_training_shared(&table, &run, &cfg).unwrap();
+                assert_eq!(
+                    fresh.total_s.to_bits(),
+                    shared.total_s.to_bits(),
+                    "p={p} {fidelity:?}"
+                );
+                assert_eq!(fresh.execution_s.to_bits(), shared.execution_s.to_bits());
+                assert_eq!(fresh.phases.train_s.to_bits(), shared.phases.train_s.to_bits());
+                assert_eq!(fresh.phases.test_s.to_bits(), shared.phases.test_s.to_bits());
+                assert_eq!(
+                    fresh.slowest_busy_s.to_bits(),
+                    shared.slowest_busy_s.to_bits()
+                );
+            }
+        }
     }
 }

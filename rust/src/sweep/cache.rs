@@ -8,7 +8,10 @@
 //!   (architecture, strategy, resolved simulator configuration) — not on
 //!   threads/images/epochs;
 //! * the micsim cost model ([`crate::simulator::cost`]) depends only on
-//!   (architecture, resolved simulator configuration);
+//!   (architecture, resolved simulator configuration) — and is held as a
+//!   shared [`CostTable`], so the per-occupancy-class cost terms of a
+//!   thread ladder are computed once per (arch, fingerprint) across all
+//!   of its points and workers (the ladder fast path, docs/PERF.md);
 //! * a micsim "measurement" depends on the workload but not the strategy.
 //!
 //! "Resolved" means the base [`SimConfig`] with the scenario's machine
@@ -20,23 +23,25 @@
 //!
 //! The cache keys each by exactly its inputs, so a 10k-scenario sweep
 //! builds each model once and spends the rest of its time in the cheap
-//! closed-form `predict`. All maps are `Mutex`-guarded: lookups are
-//! lock-drop-compute-insert, so a concurrent miss may compute a value
-//! twice, but every computation is deterministic and the first insert
-//! wins — parallel sweeps stay bit-identical to serial ones.
+//! closed-form `predict`. Every map is a single-flight
+//! [`crate::util::memo::Memo`]: concurrent misses on one key compute
+//! **exactly once** — latecomers block on the in-flight computation and
+//! share its result instead of redoing a probe pass or residual fit.
+//! That makes [`CacheStats`] exact: `misses` equals the number of
+//! distinct computed keys on any error-free run, whatever the worker
+//! count, and `coalesced` counts the duplicate computations the
+//! single-flight layer absorbed (always 0 in serial runs).
 
-use std::collections::HashMap;
-use std::hash::Hash;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::calibration::Calibration;
 use crate::error::Result;
 use crate::lab::{self, Store};
 use crate::perfmodel::{ParamSource, PerfModel, Prediction};
-use crate::simulator::{simulate_training_with, CostModel, SimConfig};
+use crate::simulator::{simulate_training_shared, CostModel, CostTable, SimConfig};
 use crate::sweep::grid::{GridSpec, Scenario, Strategy};
 use crate::util::json::Json;
+use crate::util::memo::Memo;
 
 /// A model usable from any sweep worker.
 pub type SharedModel = Arc<dyn PerfModel + Send + Sync>;
@@ -46,8 +51,17 @@ pub type SharedModel = Arc<dyn PerfModel + Send + Sync>;
 pub struct CacheStats {
     /// Lookups served from a memoized entry.
     pub hits: u64,
-    /// Lookups that had to compute.
+    /// Lookups that computed. Exact under the single-flight memo: equal
+    /// to the number of distinct computed keys on any error-free run,
+    /// for any worker count.
     pub misses: u64,
+    /// Lookups that blocked on another worker's in-flight computation
+    /// instead of duplicating it — the waits the single-flight layer
+    /// turned into shared results. Always 0 in serial runs. Counted
+    /// *inside* `hits`/`misses` (a coalesced lookup still resolves as
+    /// one or the other), so [`CacheStats::lookups`] stays
+    /// `hits + misses`.
+    pub coalesced: u64,
 }
 
 impl CacheStats {
@@ -72,18 +86,19 @@ impl CacheStats {
         CacheStats {
             hits: self.hits + other.hits,
             misses: self.misses + other.misses,
+            coalesced: self.coalesced + other.coalesced,
         }
     }
 }
 
-/// The per-sweep memo: models, cost models, and micsim measurements.
+/// The per-sweep memo: models, cost tables, and micsim measurements.
 ///
 /// Every entry that depends on the simulator is keyed by the
 /// [`SimConfig::fingerprint`] of the scenario's **resolved** simulator
 /// configuration — the cache's base `sim` with the scenario's machine
 /// substituted and its sim-axis variant ([`crate::sweep::SimVariant`])
 /// applied on top. Cells sharing a (machine, variant) pair therefore
-/// share cost-model and measurement entries, while [`SweepCache::set_sim`]
+/// share cost-table and measurement entries, while [`SweepCache::set_sim`]
 /// and differing variants can never serve each other stale values — a
 /// changed simulator is a changed key.
 pub struct SweepCache {
@@ -92,18 +107,16 @@ pub struct SweepCache {
     sim: SimConfig,
     /// Resolved (config, fingerprint) per (machine, sim) axis pair —
     /// internal plumbing, not counted in the hit/miss telemetry.
-    resolved: Mutex<HashMap<(usize, usize), (Arc<SimConfig>, u64)>>,
+    resolved: Memo<(usize, usize), (Arc<SimConfig>, u64)>,
     /// One [`Calibration`] per parameter source (grids carry one source,
     /// but the cache does not assume it): parameter resolution is
     /// memoized per (arch, fingerprint), so the (a) and (b) models of a
     /// cell share one probe/fit pass — internal plumbing, like
     /// `resolved`, not counted in the hit/miss telemetry.
-    calibrations: Mutex<HashMap<u8, Arc<Calibration>>>,
-    models: Mutex<HashMap<(String, Strategy, u64), SharedModel>>,
-    costs: Mutex<HashMap<(String, u64), Arc<CostModel>>>,
-    measured: Mutex<HashMap<(String, usize, usize, usize, usize, u64), f64>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    calibrations: Memo<u8, Arc<Calibration>>,
+    models: Memo<(String, Strategy, u64), SharedModel>,
+    costs: Memo<(String, u64), Arc<CostTable>>,
+    measured: Memo<(String, usize, usize, usize, usize, u64), f64>,
     /// Optional disk layer ([`crate::lab`]): evaluated cells, resolved
     /// parameters and measurements are served from it on in-process
     /// misses and written through on compute. Disk traffic is counted in
@@ -123,13 +136,11 @@ impl SweepCache {
     pub fn with_sim(sim: SimConfig) -> SweepCache {
         SweepCache {
             sim,
-            resolved: Mutex::new(HashMap::new()),
-            calibrations: Mutex::new(HashMap::new()),
-            models: Mutex::new(HashMap::new()),
-            costs: Mutex::new(HashMap::new()),
-            measured: Mutex::new(HashMap::new()),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            resolved: Memo::new(),
+            calibrations: Memo::new(),
+            models: Memo::new(),
+            costs: Memo::new(),
+            measured: Memo::new(),
             store: None,
         }
     }
@@ -144,7 +155,7 @@ impl SweepCache {
     /// no store, so the (lazily built) per-source entries are reset.
     pub fn set_store(&mut self, store: Arc<Store>) {
         self.store = Some(store);
-        self.calibrations.lock().unwrap().clear();
+        self.calibrations.clear();
     }
 
     /// The attached disk store, if any.
@@ -157,40 +168,24 @@ impl SweepCache {
         &self.sim
     }
 
-    /// Swap the base simulator configuration. Memoized cost models and
+    /// Swap the base simulator configuration. Memoized cost tables and
     /// measurements keyed under the old fingerprints become unreachable
     /// (but are retained: switching back re-hits them).
     pub fn set_sim(&mut self, sim: SimConfig) {
         self.sim = sim;
-        self.resolved.lock().unwrap().clear();
+        self.resolved.clear();
     }
 
     /// The resolved simulator configuration (+ fingerprint) for one
-    /// scenario, memoized per (machine, sim) axis pair.
-    fn resolved_sim(&self, grid: &GridSpec, scn: &Scenario) -> (Arc<SimConfig>, u64) {
-        let key = (scn.machine, scn.sim);
-        if let Some(entry) = self.resolved.lock().unwrap().get(&key) {
-            return entry.clone();
-        }
-        let sim = Arc::new(grid.resolved_sim(&self.sim, scn));
-        let fp = sim.fingerprint();
-        self.resolved
-            .lock()
-            .unwrap()
-            .entry(key)
-            .or_insert((sim, fp))
-            .clone()
-    }
-
-    /// Counted map probe (any table).
-    fn probe<K: Eq + Hash, V: Clone>(&self, map: &Mutex<HashMap<K, V>>, key: &K) -> Option<V> {
-        let got = map.lock().unwrap().get(key).cloned();
-        if got.is_some() {
-            self.hits.fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.misses.fetch_add(1, Ordering::Relaxed);
-        }
-        got
+    /// scenario, memoized per (machine, sim) axis pair. `pub(crate)` so
+    /// the runner's cost-aware scheduler can read a scenario's fidelity
+    /// without re-resolving.
+    pub(crate) fn resolved_sim(&self, grid: &GridSpec, scn: &Scenario) -> (Arc<SimConfig>, u64) {
+        self.resolved.get_or_insert_with((scn.machine, scn.sim), || {
+            let sim = Arc::new(grid.resolved_sim(&self.sim, scn));
+            let fp = sim.fingerprint();
+            (sim, fp)
+        })
     }
 
     /// The shared [`Calibration`] for one parameter source (lazily
@@ -200,26 +195,21 @@ impl SweepCache {
             ParamSource::Paper => 0u8,
             ParamSource::Simulator => 1u8,
         };
-        Arc::clone(
-            self.calibrations
-                .lock()
-                .unwrap()
-                .entry(key)
-                .or_insert_with(|| {
-                    let mut cal = Calibration::new(source);
-                    if let Some(store) = &self.store {
-                        cal = cal.with_store(Arc::clone(store));
-                    }
-                    Arc::new(cal)
-                }),
-        )
+        self.calibrations.get_or_insert_with(key, || {
+            let mut cal = Calibration::new(source);
+            if let Some(store) = &self.store {
+                cal = cal.with_store(Arc::clone(store));
+            }
+            Arc::new(cal)
+        })
     }
 
     /// The performance model for a scenario, built at most once per
     /// (architecture, strategy, resolved sim config) — the fingerprint
-    /// covers the machine, like the cost/measured keys. Models are
-    /// constructed from the scenario's [`Calibration`] resolution
-    /// against the resolved simulator — under
+    /// covers the machine, like the cost/measured keys, and the
+    /// single-flight memo makes "at most once" hold under any worker
+    /// count. Models are constructed from the scenario's [`Calibration`]
+    /// resolution against the resolved simulator — under
     /// [`crate::perfmodel::ParamSource::Simulator`] every parameter is
     /// estimated from exactly the configuration that produces the
     /// measurements (the closed loop), and the (a)/(b) rows of a cell
@@ -228,44 +218,36 @@ impl SweepCache {
         let arch = &grid.archs[scn.arch];
         let (sim, fp) = self.resolved_sim(grid, scn);
         let key = (arch.name.clone(), scn.strategy, fp);
-        if let Some(model) = self.probe(&self.models, &key) {
-            return Ok(model);
-        }
-        let built: SharedModel = Arc::from(
-            self.calibration(grid.params)
-                .strategy(arch, scn.strategy, &sim)?,
-        );
-        Ok(self
-            .models
-            .lock()
-            .unwrap()
-            .entry(key)
-            .or_insert(built)
-            .clone())
+        self.models.get_or_try_insert_with(key, || {
+            Ok(Arc::from(
+                self.calibration(grid.params)
+                    .strategy(arch, scn.strategy, &sim)?,
+            ))
+        })
     }
 
-    /// The micsim cost model for (architecture, resolved sim config),
-    /// shared by every measured workload on that pair — the fingerprint
-    /// covers the machine, so cells sharing a sim variant share entries.
-    pub fn cost(&self, grid: &GridSpec, scn: &Scenario) -> Result<Arc<CostModel>> {
+    /// The shared micsim cost table for (architecture, resolved sim
+    /// config) — one [`CostTable`] per pair, so every measured workload
+    /// on that pair (and every point of a thread ladder) shares both the
+    /// resolved [`CostModel`] and the per-occupancy-class memo. The
+    /// fingerprint covers the machine, so cells sharing a sim variant
+    /// share entries.
+    pub fn cost(&self, grid: &GridSpec, scn: &Scenario) -> Result<Arc<CostTable>> {
         let arch = &grid.archs[scn.arch];
         let (sim, fp) = self.resolved_sim(grid, scn);
         let key = (arch.name.clone(), fp);
-        if let Some(cost) = self.probe(&self.costs, &key) {
-            return Ok(cost);
-        }
-        let built = Arc::new(CostModel::new(arch, &sim)?);
-        Ok(self
-            .costs
-            .lock()
-            .unwrap()
-            .entry(key)
-            .or_insert(built)
-            .clone())
+        self.costs.get_or_try_insert_with(key, || {
+            Ok(Arc::new(CostTable::new(Arc::new(CostModel::new(arch, &sim)?))))
+        })
     }
 
     /// Micsim execution seconds for a scenario's workload (strategy-
     /// independent: the (a) and (b) rows of one point share it).
+    ///
+    /// The whole resolution — store probe, cost-table build, simulation,
+    /// write-through — runs inside the single-flight slot, so concurrent
+    /// workers asking for one workload perform it exactly once (and the
+    /// store is written exactly once per key).
     pub fn measured_s(&self, grid: &GridSpec, scn: &Scenario) -> Result<f64> {
         let arch = &grid.archs[scn.arch];
         let (sim, fp) = self.resolved_sim(grid, scn);
@@ -277,37 +259,37 @@ impl SweepCache {
             scn.epochs,
             fp,
         );
-        if let Some(v) = self.probe(&self.measured, &key) {
-            return Ok(v);
-        }
-        // Disk next: a persisted measurement skips the cost-model build
-        // entirely (f64s round-trip bit-exactly through the store).
-        let skey = lab::measured_key(
-            &arch.name,
-            scn.threads,
-            scn.train_images,
-            scn.test_images,
-            scn.epochs,
-            fp,
-        );
-        if let Some(store) = &self.store {
-            if let Some(v) = store
-                .get(lab::Kind::Measured, &skey)
-                .and_then(|p| p.get("execution_s").and_then(Json::as_f64))
-            {
-                return Ok(*self.measured.lock().unwrap().entry(key).or_insert(v));
+        self.measured.get_or_try_insert_with(key, || {
+            // Disk first: a persisted measurement skips the cost-table
+            // build entirely (f64s round-trip bit-exactly through the
+            // store).
+            let skey = lab::measured_key(
+                &arch.name,
+                scn.threads,
+                scn.train_images,
+                scn.test_images,
+                scn.epochs,
+                fp,
+            );
+            if let Some(store) = &self.store {
+                if let Some(v) = store
+                    .get(lab::Kind::Measured, &skey)
+                    .and_then(|p| p.get("execution_s").and_then(Json::as_f64))
+                {
+                    return Ok(v);
+                }
             }
-        }
-        let cost = self.cost(grid, scn)?;
-        let v = simulate_training_with(&cost, &scn.run(), &sim)?.execution_s;
-        if let Some(store) = &self.store {
-            store.put(
-                lab::Kind::Measured,
-                &skey,
-                Json::obj(vec![("execution_s", Json::num(v))]),
-            )?;
-        }
-        Ok(*self.measured.lock().unwrap().entry(key).or_insert(v))
+            let table = self.cost(grid, scn)?;
+            let v = simulate_training_shared(&table, &scn.run(), &sim)?.execution_s;
+            if let Some(store) = &self.store {
+                store.put(
+                    lab::Kind::Measured,
+                    &skey,
+                    Json::obj(vec![("execution_s", Json::num(v))]),
+                )?;
+            }
+            Ok(v)
+        })
     }
 
     /// The persisted evaluation of a whole cell, when a store is
@@ -412,32 +394,28 @@ impl SweepCache {
     /// resolve at most once per distinct (arch, sim fingerprint) pair,
     /// and a warm-store batch must resolve zero times.
     pub fn calibration_resolutions(&self) -> u64 {
-        self.calibrations
-            .lock()
-            .unwrap()
-            .values()
-            .map(|cal| cal.resolutions())
-            .sum()
+        self.calibrations.values().iter().map(|cal| cal.resolutions()).sum()
     }
 
     /// Total strategy-(c) residual fits performed so far, summed over
     /// every parameter source — the warm-lab invariant's (c) half: a
     /// warm rerun of a (c) grid must fit zero times.
     pub fn residual_fits(&self) -> u64 {
-        self.calibrations
-            .lock()
-            .unwrap()
-            .values()
-            .map(|cal| cal.residual_fits())
-            .sum()
+        self.calibrations.values().iter().map(|cal| cal.residual_fits()).sum()
     }
 
-    /// Hit/miss counters accumulated so far.
+    /// Hit/miss counters accumulated so far: the sum over the three
+    /// counted memo tables (models, cost tables, measurements). The
+    /// `resolved`/`calibrations` plumbing tables are deliberately
+    /// uncounted, as before the single-flight rework.
     pub fn stats(&self) -> CacheStats {
-        CacheStats {
-            hits: self.hits.load(Ordering::Relaxed),
-            misses: self.misses.load(Ordering::Relaxed),
+        let mut out = CacheStats::default();
+        for s in [self.models.stats(), self.costs.stats(), self.measured.stats()] {
+            out.hits += s.hits;
+            out.misses += s.misses;
+            out.coalesced += s.coalesced;
         }
+        out
     }
 }
 
@@ -498,7 +476,7 @@ mod tests {
     #[test]
     fn measured_hit_miss_accounting_across_cells_sharing_workload() {
         // 2 thread counts × 2 strategies: 4 cells, but only 2 distinct
-        // (arch, machine, workload) measurement keys and 1 cost model.
+        // (arch, machine, workload) measurement keys and 1 cost table.
         let grid = GridSpec {
             strategies: vec![Strategy::A, Strategy::B],
             measure: true,
@@ -510,13 +488,14 @@ mod tests {
         for scn in &scenarios {
             cache.measured_s(&grid, scn).unwrap();
         }
-        // Lookups: 4 measured probes + 2 cost probes (only on the two
-        // measured misses). Misses: 2 measured + 1 cost; hits: 2 measured
-        // (strategy b re-reads strategy a's workload) + 1 cost.
+        // Lookups: 4 measured probes + 2 cost probes (only inside the two
+        // measured-miss computations). Misses: 2 measured + 1 cost; hits:
+        // 2 measured (strategy b re-reads strategy a's workload) + 1 cost.
         let stats = cache.stats();
         assert_eq!(stats.lookups(), 6);
         assert_eq!(stats.misses, 3);
         assert_eq!(stats.hits, 3);
+        assert_eq!(stats.coalesced, 0, "serial runs never wait");
         // Same workload key → bit-identical value, across strategies.
         let a = cache.measured_s(&grid, &scenarios[0]).unwrap();
         let b = cache.measured_s(&grid, &scenarios[1]).unwrap();
@@ -533,7 +512,7 @@ mod tests {
         let base = cache.measured_s(&grid, scn).unwrap();
         cache.measured_s(&grid, scn).unwrap();
         // Miss (measured + cost) then one measured hit.
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 2 });
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 2, coalesced: 0 });
 
         // A doubled per-op cost is a different simulator: stale entries
         // must not serve it.
@@ -543,13 +522,13 @@ mod tests {
         cache.set_sim(slower);
         let slow = cache.measured_s(&grid, scn).unwrap();
         assert!(slow > base, "{slow} !> {base}");
-        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 4 });
+        assert_eq!(cache.stats(), CacheStats { hits: 1, misses: 4, coalesced: 0 });
 
         // Switching back re-hits the original entries bit-for-bit.
         cache.set_sim(SimConfig::default());
         let back = cache.measured_s(&grid, scn).unwrap();
         assert_eq!(back.to_bits(), base.to_bits());
-        assert_eq!(cache.stats(), CacheStats { hits: 2, misses: 4 });
+        assert_eq!(cache.stats(), CacheStats { hits: 2, misses: 4, coalesced: 0 });
     }
 
     #[test]
@@ -557,7 +536,7 @@ mod tests {
         use crate::sweep::grid::SimVariant;
         // 2 variants × 2 threads × 2 strategies, measured: within each
         // variant the (a, b) rows share the measurement and all cells
-        // share one cost model; across variants nothing is shared.
+        // share one cost table; across variants nothing is shared.
         let grid = GridSpec {
             strategies: vec![Strategy::A, Strategy::B],
             sims: vec![
@@ -681,5 +660,47 @@ mod tests {
         assert_eq!(a.to_bits(), b.to_bits());
         // Both were misses on their own key.
         assert_eq!(cache.stats().misses, 4);
+    }
+
+    #[test]
+    fn concurrent_workers_compute_each_key_exactly_once() {
+        // The tentpole invariant at the cache level: W workers hammering
+        // the same tiny measured grid perform exactly D expensive
+        // computations — D_model + D_cost + D_measured misses — for any
+        // W, with the duplicates absorbed as coalesced waits or plain
+        // hits.
+        let grid = GridSpec {
+            strategies: vec![Strategy::A, Strategy::B],
+            measure: true,
+            ..tiny_grid()
+        };
+        let scenarios = grid.enumerate();
+        assert_eq!(scenarios.len(), 4);
+        for workers in [2usize, 4, 8] {
+            let cache = SweepCache::new();
+            let barrier = std::sync::Barrier::new(workers);
+            std::thread::scope(|scope| {
+                for _ in 0..workers {
+                    scope.spawn(|| {
+                        barrier.wait();
+                        for scn in &scenarios {
+                            cache.model(&grid, scn).unwrap();
+                            cache.measured_s(&grid, scn).unwrap();
+                        }
+                    });
+                }
+            });
+            let stats = cache.stats();
+            // Distinct keys: 2 models (a, b) + 1 cost + 2 measured = 5.
+            assert_eq!(stats.misses, 5, "workers={workers}: {stats:?}");
+            // Every lookup is a hit or a miss: workers × 8 model/measured
+            // calls, plus exactly 2 cost lookups (one inside each of the
+            // two measured-miss computations — never more).
+            assert_eq!(
+                stats.lookups(),
+                (workers * 2 * scenarios.len() + 2) as u64,
+                "workers={workers}: {stats:?}"
+            );
+        }
     }
 }

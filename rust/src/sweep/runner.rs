@@ -1,13 +1,17 @@
 //! The sweep worker pool: evaluate a scenario grid concurrently.
 //!
-//! Workers pull scenario indices from a shared atomic cursor (work
-//! stealing over a pre-enumerated list) and write results into the slot
-//! matching the scenario id. Because every evaluation is a pure function
-//! of the scenario (the cache only memoizes deterministic values),
-//! results are **bit-identical** regardless of worker count or
-//! scheduling — asserted by `tests/sweep.rs`. Error paths are
-//! deterministic too: the pool reports the lowest-id failure, which is
-//! exactly the error a serial run of the same grid surfaces.
+//! Workers pull claims from a shared atomic cursor over a **cost-sorted
+//! claim order** — heaviest cells first (a longest-processing-time
+//! heuristic over images × epochs × fidelity, see [`claim_weight`]) —
+//! and write results into the slot matching the scenario id, so output
+//! order never depends on claim order. Because every evaluation is a
+//! pure function of the scenario (the cache only memoizes deterministic
+//! values, single-flight), results are **bit-identical** regardless of
+//! worker count, claim order, or scheduling — asserted by
+//! `tests/sweep.rs`. Error paths are deterministic too: on any failure
+//! the pool re-derives the error a serial run of the same grid
+//! surfaces (the lowest-id failure) by walking the scenarios in id
+//! order over the now-warm cache — see [`canonical_error`].
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
@@ -16,6 +20,7 @@ use std::time::Instant;
 use crate::error::{Error, Result};
 use crate::lab::Store;
 use crate::perfmodel::delta_pct;
+use crate::simulator::Fidelity;
 use crate::sweep::cache::SweepCache;
 use crate::sweep::grid::{GridSpec, Scenario};
 use crate::sweep::summary::{ScenarioResult, SweepResults};
@@ -104,14 +109,18 @@ impl SweepRunner {
             Some((k, n)) => grid.shard(k, n)?,
         };
         let started = Instant::now();
-        let results = if self.workers <= 1 || scenarios.len() < 2 {
+        // `workers` below is the *effective* count — what actually ran,
+        // not what was requested: the serial fallback is 1 worker and
+        // the pool never spawns more threads than scenarios.
+        let (results, workers) = if self.workers <= 1 || scenarios.len() < 2 {
             let mut out = Vec::with_capacity(scenarios.len());
             for scn in &scenarios {
                 out.push(evaluate(grid, &cache, scn)?);
             }
-            out
+            (out, 1)
         } else {
-            run_pool(grid, &cache, &scenarios, self.workers)?
+            let workers = self.workers.min(scenarios.len());
+            (run_pool(grid, &cache, &scenarios, workers)?, workers)
         };
         Ok(SweepResults {
             grid: grid.clone(),
@@ -123,7 +132,7 @@ impl SweepRunner {
                 .zip(store_before)
                 .map(|(s, before)| s.stats().since(&before)),
             wall_s: started.elapsed().as_secs_f64(),
-            workers: self.workers,
+            workers,
         })
     }
 }
@@ -158,27 +167,84 @@ pub(crate) fn evaluate(grid: &GridSpec, cache: &SweepCache, scn: &Scenario) -> R
     })
 }
 
+/// Relative evaluation cost of one scenario, used only to **order**
+/// worker claims (heaviest first — the classic longest-processing-time
+/// heuristic, which keeps the pool's tail short when a grid mixes
+/// cheap chunked cells with expensive per-image micsim cells). On
+/// measuring grids the micsim run dominates: per-image fidelity costs
+/// O(images · epochs) simulated events where chunked fidelity is
+/// near-constant per epoch, so per-image cells are weighted far
+/// heavier. The weight never affects results or errors — output is
+/// slotted by scenario id and the error contract is re-derived
+/// serially ([`canonical_error`]).
+fn claim_weight(grid: &GridSpec, cache: &SweepCache, scn: &Scenario) -> f64 {
+    let images = (scn.train_images + scn.test_images) as f64;
+    let fidelity_w = if grid.measure {
+        // `resolved_sim` is memoized per (machine, sim) axis pair, so
+        // this probe is free for every scenario after the first.
+        match cache.resolved_sim(grid, scn).0.fidelity {
+            Fidelity::PerImage => 64.0,
+            Fidelity::Chunked => 8.0,
+        }
+    } else {
+        1.0
+    };
+    images * scn.epochs as f64 * fidelity_w
+}
+
+/// Re-derive the error a serial run of this grid surfaces: the failure
+/// with the lowest scenario id. Heavy-first claiming means the failure
+/// the pool recorded is whichever doomed cell happened to be claimed,
+/// not necessarily the lowest-id one — so walk the scenarios in id
+/// order over the now-warm cache (completed cells are memo hits; the
+/// failing computation re-runs because errors are never cached) and
+/// return the first error. Evaluations are deterministic, so the walk
+/// must fail; `recorded` is a defensive fallback only.
+fn canonical_error(
+    grid: &GridSpec,
+    cache: &SweepCache,
+    scenarios: &[Scenario],
+    recorded: Error,
+) -> Error {
+    for scn in scenarios {
+        if let Err(e) = evaluate(grid, cache, scn) {
+            return e;
+        }
+    }
+    recorded
+}
+
 /// Fan the scenario list over `workers` scoped threads.
 ///
-/// Error determinism: workers claim indices from the cursor in order, a
-/// claimed index always evaluates to completion, and every failure is
-/// recorded as `(scenario.id, error)` with the lowest id winning. Since
-/// an index is only claimed after every lower index has been claimed,
-/// the lowest failing scenario is always claimed before the stop flag
-/// rises — so the pool returns exactly the error a serial run surfaces,
-/// under any scheduling. The stop flag is checked *before* claiming, so
-/// doomed iterations never burn the cursor.
+/// Workers claim from a shared cursor over the cost-sorted order
+/// ([`claim_weight`], heaviest first, ties by ascending index so the
+/// order is deterministic). Results are slotted by the original index,
+/// so output order is independent of claim order. On failure the pool
+/// raises the stop flag (checked *before* claiming, so doomed
+/// iterations never burn the cursor), then reports the canonical
+/// serial error via [`canonical_error`] — under any scheduling, the
+/// pool returns exactly the error a serial run surfaces.
 fn run_pool(
     grid: &GridSpec,
     cache: &SweepCache,
     scenarios: &[Scenario],
     workers: usize,
 ) -> Result<Vec<ScenarioResult>> {
+    let weights: Vec<f64> =
+        scenarios.iter().map(|scn| claim_weight(grid, cache, scn)).collect();
+    let mut order: Vec<usize> = (0..scenarios.len()).collect();
+    order.sort_by(|&a, &b| {
+        weights[b]
+            .partial_cmp(&weights[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+
     let cursor = AtomicUsize::new(0);
     let stop = AtomicBool::new(false);
     let slots: Mutex<Vec<Option<ScenarioResult>>> =
         Mutex::new(scenarios.iter().map(|_| None).collect());
-    let failure: Mutex<Option<(usize, Error)>> = Mutex::new(None);
+    let failure: Mutex<Option<Error>> = Mutex::new(None);
 
     std::thread::scope(|scope| {
         for _ in 0..workers.min(scenarios.len()) {
@@ -186,20 +252,19 @@ fn run_pool(
                 if stop.load(Ordering::Acquire) {
                     break;
                 }
-                let idx = cursor.fetch_add(1, Ordering::Relaxed);
-                if idx >= scenarios.len() {
+                let at = cursor.fetch_add(1, Ordering::Relaxed);
+                if at >= order.len() {
                     break;
                 }
+                let idx = order[at];
                 match evaluate(grid, cache, &scenarios[idx]) {
                     Ok(result) => {
                         slots.lock().unwrap()[idx] = Some(result);
                     }
                     Err(e) => {
-                        let id = scenarios[idx].id;
                         let mut held = failure.lock().unwrap();
-                        match held.as_ref() {
-                            Some((lowest, _)) if *lowest <= id => {}
-                            _ => *held = Some((id, e)),
+                        if held.is_none() {
+                            *held = Some(e);
                         }
                         drop(held);
                         stop.store(true, Ordering::Release);
@@ -210,8 +275,8 @@ fn run_pool(
         }
     });
 
-    if let Some((_, e)) = failure.into_inner().unwrap() {
-        return Err(e);
+    if let Some(recorded) = failure.into_inner().unwrap() {
+        return Err(canonical_error(grid, cache, scenarios, recorded));
     }
     Ok(slots
         .into_inner()
@@ -245,6 +310,65 @@ mod tests {
         // 6 model lookups over 2 distinct (arch, strategy, machine) keys.
         assert_eq!(res.cache.misses, 2);
         assert_eq!(res.cache.hits, 4);
+    }
+
+    #[test]
+    fn reported_workers_reflect_what_actually_ran() {
+        // Regression: a single-scenario grid under `--workers 8` used to
+        // report `workers: 8` even though the serial fallback ran it on
+        // one thread. The telemetry must report the effective count.
+        let tiny = GridSpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![240],
+            strategies: vec![Strategy::A],
+            ..GridSpec::default()
+        };
+        let res = SweepRunner::new(8).run(&tiny).unwrap();
+        assert_eq!(res.workers, 1, "serial fallback must report 1 worker");
+        // The pool caps spawned threads at the scenario count.
+        let pair = GridSpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![1, 240],
+            strategies: vec![Strategy::A],
+            ..GridSpec::default()
+        };
+        let res = SweepRunner::new(8).run(&pair).unwrap();
+        assert_eq!(res.workers, 2, "pool must report min(workers, scenarios)");
+        let res = SweepRunner::new(2).run(&pair).unwrap();
+        assert_eq!(res.workers, 2);
+        assert_eq!(SweepRunner::serial().run(&pair).unwrap().workers, 1);
+    }
+
+    #[test]
+    fn claim_weights_order_heavy_cells_first() {
+        // The cost-sorted claim order ranks heavy measured cells ahead
+        // of cheap predict-only ones, with ties broken by ascending
+        // index so the order stays deterministic.
+        let grid = GridSpec {
+            archs: vec![ArchSpec::small()],
+            threads: vec![1, 61, 240],
+            strategies: vec![Strategy::A, Strategy::B],
+            measure: true,
+            ..GridSpec::default()
+        };
+        let cache = SweepCache::new();
+        let scenarios = grid.enumerate();
+        let weights: Vec<f64> = scenarios
+            .iter()
+            .map(|scn| claim_weight(&grid, &cache, scn))
+            .collect();
+        // Same workload everywhere on this grid → all weights equal →
+        // the tie-break keeps the order the identity permutation.
+        assert!(weights.windows(2).all(|w| w[0] == w[1]));
+        assert!(weights[0] > 0.0);
+        // A bigger workload must weigh more than a smaller one.
+        let mut big = scenarios[0].clone();
+        big.train_images *= 10;
+        assert!(claim_weight(&grid, &cache, &big) > weights[0]);
+        // Non-measuring grids weigh by workload only.
+        let predict_only = GridSpec { measure: false, ..grid.clone() };
+        let w = claim_weight(&predict_only, &cache, &scenarios[0]);
+        assert!(w > 0.0 && w < weights[0]);
     }
 
     #[test]

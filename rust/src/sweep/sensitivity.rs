@@ -285,8 +285,9 @@ pub struct SensitivityReport {
     pub params: ParamSource,
     /// Scenarios evaluated across the whole ablation grid.
     pub scenarios: usize,
-    /// Sweep-cache telemetry (not serialized: parallel runs may count
-    /// concurrent misses differently; the numeric payload is
+    /// Sweep-cache telemetry (not serialized: hits/misses are exact —
+    /// single-flight memos compute each distinct key once — but
+    /// `coalesced` varies with scheduling; the numeric payload is
     /// bit-identical regardless).
     pub cache: CacheStats,
     /// Per-group entries, sorted by |gradient| within each

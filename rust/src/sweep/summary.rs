@@ -57,10 +57,14 @@ pub struct SweepResults {
     /// Disk-store hit/miss telemetry for the run (`None` unless the
     /// runner had a [`crate::lab`] store attached).
     pub store: Option<crate::lab::StoreStats>,
+    /// Worker threads the sweep *actually* ran on — the effective
+    /// count, not the requested one: 1 on the serial fallback (a
+    /// single-scenario grid under `--workers 8` reports 1), and at most
+    /// one per scenario on pool runs. [`merge_shards`] sums this across
+    /// shards.
+    pub workers: usize,
     /// Wall-clock seconds the sweep took.
     pub wall_s: f64,
-    /// Worker threads the sweep ran on.
-    pub workers: usize,
 }
 
 impl SweepResults {
@@ -317,6 +321,7 @@ impl SweepResults {
                 Json::obj(vec![
                     ("hits", Json::num(self.cache.hits as f64)),
                     ("misses", Json::num(self.cache.misses as f64)),
+                    ("coalesced", Json::num(self.cache.coalesced as f64)),
                 ]),
             ),
         ];
@@ -507,13 +512,14 @@ impl SweepResults {
         let mut out = self.table(full).render();
         out.push_str(&format!(
             "{} scenarios in {:.3}s ({} workers) | cache: {} hits / {} misses \
-             ({:.0}% hit rate)",
+             ({:.0}% hit rate, {} coalesced)",
             self.len(),
             self.wall_s,
             self.workers,
             self.cache.hits,
             self.cache.misses,
             self.cache.hit_rate() * 100.0,
+            self.cache.coalesced,
         ));
         if let Some(store) = &self.store {
             out.push_str(&format!(

@@ -1,0 +1,390 @@
+//! Single-flight, sharded memoization — the concurrency primitive under
+//! every sweep/serve hot path.
+//!
+//! The old cache policy was lock-drop-compute-insert: a lookup dropped
+//! the map lock before computing, so two workers missing the same key
+//! concurrently both computed it (deterministically — the first insert
+//! won and results stayed bit-identical), and a miss here is not cheap:
+//! it is a probe pass, a 16-round contention calibration, or strategy
+//! (c)'s 44-point micsim residual fit. [`Memo`] replaces that policy
+//! with **single-flight** semantics:
+//!
+//! * the key space is split over `N` lock shards (contention on one key
+//!   never serializes unrelated keys);
+//! * a miss installs a per-key *in-flight* slot before computing, and
+//!   runs the closure with **no shard lock held** (nested memo calls —
+//!   `measured_s` → `cost` — cannot deadlock);
+//! * latecomers that find an in-flight slot block on the shard's condvar
+//!   until the leader publishes, then read the shared value instead of
+//!   recomputing — so concurrent misses on one key compute **exactly
+//!   once** and `misses` counts distinct computed keys exactly;
+//! * a leader whose closure fails removes the in-flight slot and wakes
+//!   the waiters, which retry (each becoming leader at most once per
+//!   attempt). Errors are not cached: every caller either gets a value
+//!   or its own deterministic error, and nothing poisons the key. A
+//!   leader that *panics* also clears the slot (an RAII guard), so
+//!   waiters never hang on a dead computation.
+//!
+//! Counting contract ([`MemoStats`]): every lookup is exactly one hit
+//! (value served, freshly computed by someone else or long since
+//! cached) or one miss (this caller computed it). `coalesced` counts
+//! the lookups that waited on another worker's in-flight computation —
+//! the duplicated work the single-flight layer eliminated. Serial use
+//! never waits, so `coalesced == 0` and `hits + misses` equals the
+//! lookup count, shard-merge accounting included.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasher, Hash, RandomState};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use crate::error::Result;
+
+/// Lock shards per [`Memo`]. Sixteen keeps worst-case memory trivial
+/// while exceeding the worker counts the sweep pool and serve engine
+/// actually run.
+const SHARDS: usize = 16;
+
+/// Hit/miss/coalesced counters for one memo table.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoStats {
+    /// Lookups served from a published entry.
+    pub hits: u64,
+    /// Lookups that computed — exactly one per distinct key on any
+    /// error-free run, whatever the concurrency.
+    pub misses: u64,
+    /// Lookups that blocked on another worker's in-flight computation
+    /// instead of duplicating it (always 0 in serial use).
+    pub coalesced: u64,
+}
+
+/// One key's state: published value, or a computation in flight.
+enum Slot<V> {
+    Ready(V),
+    InFlight,
+}
+
+struct Shard<K, V> {
+    map: Mutex<HashMap<K, Slot<V>>>,
+    cv: Condvar,
+}
+
+impl<K, V> Default for Shard<K, V> {
+    fn default() -> Self {
+        Shard { map: Mutex::new(HashMap::new()), cv: Condvar::new() }
+    }
+}
+
+/// A sharded single-flight memo table. Cheap to share (`&self` methods,
+/// internally synchronized); values must be `Clone` (in practice `Arc`s
+/// or `f64`s, so clones are free).
+pub struct Memo<K, V> {
+    shards: Box<[Shard<K, V>]>,
+    hasher: RandomState,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    coalesced: AtomicU64,
+}
+
+impl<K, V> Default for Memo<K, V> {
+    fn default() -> Self {
+        Memo::new()
+    }
+}
+
+impl<K, V> std::fmt::Debug for Memo<K, V> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Memo").field("stats", &self.stats()).finish()
+    }
+}
+
+/// Clears the in-flight slot if the leader unwinds before publishing,
+/// so waiters retry instead of blocking forever.
+struct InFlight<'a, K: Eq + Hash, V> {
+    shard: &'a Shard<K, V>,
+    key: Option<K>,
+}
+
+impl<K: Eq + Hash, V> InFlight<'_, K, V> {
+    fn take(&mut self) -> K {
+        self.key.take().expect("in-flight slot resolved twice")
+    }
+}
+
+impl<K: Eq + Hash, V> Drop for InFlight<'_, K, V> {
+    fn drop(&mut self) {
+        if let Some(key) = self.key.take() {
+            self.shard.map.lock().unwrap().remove(&key);
+            self.shard.cv.notify_all();
+        }
+    }
+}
+
+impl<K: Eq + Hash + Clone, V: Clone> Memo<K, V> {
+    /// An empty table.
+    pub fn new() -> Memo<K, V> {
+        Memo {
+            shards: (0..SHARDS).map(|_| Shard::default()).collect(),
+            hasher: RandomState::new(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+        }
+    }
+
+    fn shard_of(&self, key: &K) -> &Shard<K, V> {
+        let h = self.hasher.hash_one(key) as usize;
+        &self.shards[h % self.shards.len()]
+    }
+
+    /// The single-flight lookup: return the published value for `key`,
+    /// or compute it via `f` — exactly once per key across any number of
+    /// concurrent callers. `f` runs with no lock held, so it may
+    /// re-enter this or another memo. On `Err` the slot is cleared
+    /// (errors are never cached) and waiting callers retry.
+    pub fn get_or_try_insert_with<F>(&self, key: K, f: F) -> Result<V>
+    where
+        F: FnOnce() -> Result<V>,
+    {
+        let shard = self.shard_of(&key);
+        let mut waited = false;
+        {
+            let mut map = shard.map.lock().unwrap();
+            loop {
+                match map.get(&key) {
+                    Some(Slot::Ready(v)) => {
+                        self.hits.fetch_add(1, Ordering::Relaxed);
+                        if waited {
+                            self.coalesced.fetch_add(1, Ordering::Relaxed);
+                        }
+                        return Ok(v.clone());
+                    }
+                    Some(Slot::InFlight) => {
+                        waited = true;
+                        map = shard.cv.wait(map).unwrap();
+                    }
+                    None => {
+                        map.insert(key.clone(), Slot::InFlight);
+                        break;
+                    }
+                }
+            }
+        }
+        // This caller is the leader for `key`: compute outside the lock.
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        if waited {
+            // A previous leader failed and this waiter took over.
+            self.coalesced.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut guard = InFlight { shard, key: Some(key) };
+        match f() {
+            Ok(v) => {
+                let key = guard.take();
+                let mut map = shard.map.lock().unwrap();
+                map.insert(key, Slot::Ready(v.clone()));
+                drop(map);
+                shard.cv.notify_all();
+                Ok(v)
+            }
+            Err(e) => {
+                drop(guard); // clears the slot + wakes waiters to retry
+                Err(e)
+            }
+        }
+    }
+
+    /// Infallible form of [`Memo::get_or_try_insert_with`].
+    pub fn get_or_insert_with<F>(&self, key: K, f: F) -> V
+    where
+        F: FnOnce() -> V,
+    {
+        match self.get_or_try_insert_with(key, || Ok(f())) {
+            Ok(v) => v,
+            Err(_) => unreachable!("infallible memo closure"),
+        }
+    }
+
+    /// Snapshot of every published value, in unspecified order
+    /// (in-flight slots are skipped — their values don't exist yet).
+    pub fn values(&self) -> Vec<V> {
+        let mut out = Vec::new();
+        for shard in self.shards.iter() {
+            out.extend(shard.map.lock().unwrap().values().filter_map(|slot| match slot {
+                Slot::Ready(v) => Some(v.clone()),
+                Slot::InFlight => None,
+            }));
+        }
+        out
+    }
+
+    /// Drop every entry (published and — there can be none without a
+    /// concurrent leader — in-flight). Counters are retained: stats
+    /// describe traffic, not contents.
+    pub fn clear(&self) {
+        for shard in self.shards.iter() {
+            shard.map.lock().unwrap().clear();
+            shard.cv.notify_all();
+        }
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> MemoStats {
+        MemoStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            coalesced: self.coalesced.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Barrier;
+
+    #[test]
+    fn serial_lookups_compute_once_per_key() {
+        let memo: Memo<u32, u32> = Memo::new();
+        let computed = AtomicUsize::new(0);
+        for _ in 0..3 {
+            for k in 0..4 {
+                let v = memo
+                    .get_or_try_insert_with(k, || {
+                        computed.fetch_add(1, Ordering::Relaxed);
+                        Ok(k * 10)
+                    })
+                    .unwrap();
+                assert_eq!(v, k * 10);
+            }
+        }
+        assert_eq!(computed.load(Ordering::Relaxed), 4);
+        let stats = memo.stats();
+        assert_eq!(stats, MemoStats { hits: 8, misses: 4, coalesced: 0 });
+    }
+
+    #[test]
+    fn concurrent_misses_on_one_key_compute_exactly_once() {
+        const WORKERS: usize = 8;
+        for round in 0..20 {
+            let memo: Memo<u64, u64> = Memo::new();
+            let computed = AtomicUsize::new(0);
+            let barrier = Barrier::new(WORKERS);
+            std::thread::scope(|scope| {
+                for _ in 0..WORKERS {
+                    scope.spawn(|| {
+                        barrier.wait();
+                        let v = memo
+                            .get_or_try_insert_with(round, || {
+                                computed.fetch_add(1, Ordering::Relaxed);
+                                // Widen the race window.
+                                std::thread::yield_now();
+                                Ok(round * 3)
+                            })
+                            .unwrap();
+                        assert_eq!(v, round * 3);
+                    });
+                }
+            });
+            assert_eq!(computed.load(Ordering::Relaxed), 1, "round {round}");
+            let stats = memo.stats();
+            assert_eq!(stats.misses, 1, "round {round}: {stats:?}");
+            assert_eq!(stats.hits, WORKERS as u64 - 1, "round {round}");
+            assert_eq!(
+                stats.hits + stats.misses,
+                WORKERS as u64,
+                "round {round}: every lookup is a hit or a miss"
+            );
+        }
+    }
+
+    #[test]
+    fn errors_are_not_cached_and_waiters_retry() {
+        let memo: Memo<u8, u8> = Memo::new();
+        let attempts = AtomicUsize::new(0);
+        for _ in 0..2 {
+            let err = memo
+                .get_or_try_insert_with(7, || {
+                    attempts.fetch_add(1, Ordering::Relaxed);
+                    Err(Error::Config("boom".into()))
+                })
+                .unwrap_err();
+            assert!(err.to_string().contains("boom"));
+        }
+        assert_eq!(attempts.load(Ordering::Relaxed), 2, "errors must not stick");
+        // After a failure the key computes fresh — and then hits.
+        let v = memo.get_or_try_insert_with(7, || Ok(42)).unwrap();
+        assert_eq!(v, 42);
+        assert_eq!(memo.get_or_try_insert_with(7, || Ok(0)).unwrap(), 42);
+    }
+
+    #[test]
+    fn concurrent_error_leaders_are_bounded_by_worker_count() {
+        const WORKERS: usize = 6;
+        let memo: Memo<u8, u8> = Memo::new();
+        let attempts = AtomicUsize::new(0);
+        let barrier = Barrier::new(WORKERS);
+        std::thread::scope(|scope| {
+            for _ in 0..WORKERS {
+                scope.spawn(|| {
+                    barrier.wait();
+                    let err = memo
+                        .get_or_try_insert_with(1, || {
+                            attempts.fetch_add(1, Ordering::Relaxed);
+                            std::thread::yield_now();
+                            Err(Error::Config("deterministic failure".into()))
+                        })
+                        .unwrap_err();
+                    assert!(err.to_string().contains("deterministic"));
+                });
+            }
+        });
+        // Every caller got its own error; nobody looped more than once.
+        let n = attempts.load(Ordering::Relaxed);
+        assert!((1..=WORKERS).contains(&n), "{n} attempts");
+        assert!(
+            memo.shards.iter().all(|s| s.map.lock().unwrap().is_empty()),
+            "failed computations must leave no slot behind"
+        );
+    }
+
+    #[test]
+    fn nested_lookups_do_not_deadlock() {
+        // `measured_s` computes by calling `cost` — model that shape:
+        // the outer closure re-enters the memo (possibly the same shard).
+        let memo: Memo<u32, u32> = Memo::new();
+        let v = memo
+            .get_or_try_insert_with(0, || {
+                let inner = memo.get_or_try_insert_with(16, || Ok(5))?;
+                Ok(inner + 1)
+            })
+            .unwrap();
+        assert_eq!(v, 6);
+        assert_eq!(memo.stats().misses, 2);
+    }
+
+    #[test]
+    fn clear_drops_entries_but_keeps_counters() {
+        let memo: Memo<u8, u8> = Memo::new();
+        memo.get_or_insert_with(1, || 10);
+        memo.get_or_insert_with(1, || 99);
+        memo.clear();
+        assert_eq!(memo.get_or_insert_with(1, || 20), 20, "cleared key recomputes");
+        let stats = memo.stats();
+        assert_eq!((stats.hits, stats.misses), (1, 2));
+    }
+
+    #[test]
+    fn panicking_leader_does_not_strand_waiters() {
+        let memo: std::sync::Arc<Memo<u8, u8>> = std::sync::Arc::new(Memo::new());
+        let m = std::sync::Arc::clone(&memo);
+        let panicker = std::thread::spawn(move || {
+            let _ = m.get_or_try_insert_with(3, || panic!("leader died"));
+        });
+        assert!(panicker.join().is_err());
+        // The slot was cleared on unwind: a later caller computes fresh
+        // instead of waiting forever.
+        assert_eq!(memo.get_or_try_insert_with(3, || Ok(9)).unwrap(), 9);
+    }
+}

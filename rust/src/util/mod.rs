@@ -5,8 +5,11 @@
 //! would pull in are implemented here: a JSON parser/emitter ([`json`],
 //! for `artifacts/meta.json` and custom architecture files), a
 //! micro-benchmark harness ([`bench`], the criterion stand-in driving
-//! `cargo bench`), and temp-dir helpers for tests ([`tmp`]).
+//! `cargo bench`), a sharded single-flight memo table ([`memo`], the
+//! concurrency primitive under the sweep cache and calibration facade),
+//! and temp-dir helpers for tests ([`tmp`]).
 
 pub mod bench;
 pub mod json;
+pub mod memo;
 pub mod tmp;

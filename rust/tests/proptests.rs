@@ -1156,3 +1156,107 @@ fn prop_residual_sweeps_bit_identical_serial_vs_parallel() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// Single-flight cache: exactly one computation per distinct key, any W
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_single_flight_sweeps_compute_each_distinct_key_exactly_once() {
+    use micdl::sweep::{GridSpec, Strategy, SweepCache, SweepResults, SweepRunner};
+
+    fn stable_payload(results: &SweepResults) -> String {
+        let doc = Json::parse(&results.to_json().emit()).unwrap();
+        ["grid", "scenarios", "accuracy", "results"]
+            .map(|key| doc.get(key).unwrap().emit())
+            .join("\n")
+    }
+
+    // The duplicate-work contract, property-tested: for random grids
+    // (strategy (c) included) and any worker count, the sweep performs
+    // exactly one expensive computation per distinct key — model builds
+    // per (arch, strategy, fingerprint), cost tables and calibration
+    // resolutions and residual fits per (arch, fingerprint), workload
+    // measurements per (arch, workload, fingerprint) — and the parallel
+    // payload stays byte-identical to the serial reference.
+    let all = ArchSpec::paper_archs();
+    let mut rng = XorShift64::new(0x51F1);
+    for case in 0..4 {
+        let mut archs = vec![
+            all[rng.next_below(all.len())].clone(),
+            all[rng.next_below(all.len())].clone(),
+        ];
+        archs.dedup_by(|a, b| a.name == b.name);
+        let strategies = match rng.next_below(4) {
+            0 => vec![Strategy::A, Strategy::B],
+            1 => vec![Strategy::B, Strategy::C],
+            2 => vec![Strategy::A, Strategy::B, Strategy::C],
+            _ => vec![Strategy::B],
+        };
+        let measure = rng.next_below(2) == 0;
+        let mut grid = GridSpec {
+            archs,
+            threads: vec![1 + rng.next_below(240), 241 + rng.next_below(3600)],
+            strategies,
+            measure,
+            ..GridSpec::default()
+        };
+        grid.normalize();
+
+        // Distinct-key census for this grid (single machine, single
+        // workload point, no sim axis → one fingerprint).
+        let archs_n = grid.archs.len() as u64;
+        let d_models = archs_n * grid.strategies.len() as u64;
+        let d_costs = if measure { archs_n } else { 0 };
+        let d_measured = if measure { archs_n * grid.threads.len() as u64 } else { 0 };
+        let with_c = grid.strategies.contains(&Strategy::C);
+
+        let serial = SweepRunner::serial().run(&grid).unwrap();
+        for workers in [1usize, 2, 4, 8] {
+            let res = SweepRunner::new(workers).run(&grid).unwrap();
+            assert_eq!(
+                res.cache.misses,
+                d_models + d_costs + d_measured,
+                "case {case} workers {workers}: {:?}",
+                res.cache
+            );
+            assert_eq!(
+                stable_payload(&res),
+                stable_payload(&serial),
+                "case {case} workers {workers}"
+            );
+        }
+
+        // Resolution/fit counters under raw contention: 8 threads race
+        // the same probe pattern the runner issues over one shared
+        // cache — still one calibration resolution per (arch,
+        // fingerprint), one residual fit per (arch, fingerprint) when
+        // (c) is on the grid, and the per-memo miss census is exact.
+        let cache = SweepCache::new();
+        let scenarios = grid.enumerate();
+        std::thread::scope(|scope| {
+            for _ in 0..8 {
+                scope.spawn(|| {
+                    for scn in &scenarios {
+                        cache.model(&grid, scn).unwrap();
+                        if grid.measure {
+                            cache.measured_s(&grid, scn).unwrap();
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(cache.calibration_resolutions(), archs_n, "case {case}");
+        assert_eq!(
+            cache.residual_fits(),
+            if with_c { archs_n } else { 0 },
+            "case {case}"
+        );
+        let stats = cache.stats();
+        assert_eq!(
+            stats.misses,
+            d_models + d_costs + d_measured,
+            "case {case}: {stats:?}"
+        );
+    }
+}

@@ -166,6 +166,44 @@ fn strategy_c_batch_round_trips_warm_with_zero_resolutions() {
     assert_eq!(store.misses, 0, "warm store must not miss: {store:?}");
 }
 
+#[test]
+fn concurrent_identical_batches_resolve_each_pair_exactly_once() {
+    // The single-flight contract on the serve hot path: N threads
+    // firing the *same* batch at a cold engine race on identical
+    // (arch, sim fingerprint) pairs, and every racer must coalesce
+    // onto one in-flight resolution — the engine performs exactly D
+    // calibration resolutions for D distinct pairs, not up to N × D.
+    let text = r#"[{"arch": "small", "strategy": "both", "threads": [1, 15, 61, 240]},
+                   {"arch": "medium", "strategy": "a", "threads": [15, 240]}]"#;
+    let batch = QueryBatch::from_json(text).unwrap();
+    let engine = PredictEngine::new(ParamSource::Paper, 2);
+    let rows: Vec<Vec<String>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                scope.spawn(|| {
+                    engine
+                        .eval_batch(&batch)
+                        .unwrap()
+                        .iter()
+                        .flat_map(|q| q.rows())
+                        .map(|r| r.emit())
+                        .collect::<Vec<String>>()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    // Every concurrent caller got byte-identical rows.
+    for r in &rows[1..] {
+        assert_eq!(r, &rows[0]);
+    }
+    let stats = engine.stats();
+    assert_eq!(stats.batches, 8);
+    // Two distinct (arch, fingerprint) pairs → exactly two resolutions,
+    // no matter that 8 batches raced on them concurrently.
+    assert_eq!(stats.calibration_resolutions, 2, "{stats:?}");
+}
+
 /// Minimal HTTP/1.1 client: one request, read to EOF (the server
 /// closes every connection), split off the body.
 fn http(addr: std::net::SocketAddr, method: &str, path: &str, body: &str) -> (String, String) {

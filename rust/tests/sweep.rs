@@ -101,6 +101,26 @@ fn measured_grid_shares_workload_measurements_across_strategies() {
     }
 }
 
+#[test]
+fn any_worker_count_performs_exactly_d_expensive_computations() {
+    // The duplicate-work contract of the single-flight cache: a grid
+    // with D distinct expensive keys performs exactly D computations
+    // for ANY worker count — concurrent misses on one key coalesce.
+    // On this measured grid D = 4 model keys + 2 cost tables + 8
+    // workload measurements = 14, and every scenario makes exactly one
+    // model probe and one measurement probe, plus one cost probe per
+    // measurement computed (16 + 16 + 8 = 40 lookups).
+    let grid = GridSpec { measure: true, ..mid_grid() };
+    for workers in [1, 2, 4, 8, 16] {
+        let res = SweepRunner::new(workers).run(&grid).unwrap();
+        assert_eq!(res.cache.misses, 14, "workers = {workers}: {:?}", res.cache);
+        assert_eq!(res.cache.lookups(), 40, "workers = {workers}: {:?}", res.cache);
+        if workers == 1 {
+            assert_eq!(res.cache.coalesced, 0, "serial runs never wait");
+        }
+    }
+}
+
 // ---------------------------------------------------------------------------
 // Parallel vs serial equivalence
 // ---------------------------------------------------------------------------
@@ -155,11 +175,12 @@ fn thousand_scenario_grid_evaluates_in_one_run() {
         );
     }
     // The cache keeps model construction sublinear in grid size: 3 archs
-    // × 2 strategies = 6 distinct keys over 1080 lookups. Concurrent
-    // first-misses on one key may each count (compute-outside-lock), so
-    // bound rather than pin the parallel-run miss count.
-    assert!(res.cache.misses >= 6, "misses = {}", res.cache.misses);
-    assert!(res.cache.misses <= 6 * res.workers as u64, "misses = {}", res.cache.misses);
+    // × 2 strategies = 6 distinct keys over 1080 lookups. The memos are
+    // single-flight, so even under a full parallel pool concurrent
+    // first-misses on one key coalesce onto one computation — the miss
+    // count is exact, not bounded.
+    assert_eq!(res.cache.misses, 6, "{:?}", res.cache);
+    assert_eq!(res.cache.hits, 1080 - 6, "{:?}", res.cache);
     assert!(res.cache.hit_rate() > 0.9);
 }
 
